@@ -1,0 +1,62 @@
+//! Run the cycle-accurate SAU-array simulator (Figs. 2-3): bit-exactness
+//! vs the software model, the pipelined dataflow trace, event counters,
+//! and the Zynq-class FPGA projection.
+//!
+//! ```bash
+//! cargo run --release --example accelerator_sim [-- --paper] [--trace]
+//! ```
+
+use anyhow::Result;
+
+use ssa_repro::config::{AttnConfig, PrngSharing};
+use ssa_repro::experiments::figures;
+use ssa_repro::hw::{simulate, SpikeStreams};
+
+fn main() -> Result<()> {
+    ssa_repro::util::logging::init_from_env();
+    let args: Vec<String> = std::env::args().collect();
+    let paper = args.iter().any(|a| a == "--paper");
+    let with_trace = args.iter().any(|a| a == "--trace");
+
+    let cfg = if paper {
+        AttnConfig::vit_small_paper()
+    } else {
+        AttnConfig::vit_tiny().with_time_steps(10)
+    };
+    println!(
+        "simulating SSA block: N={} D_K={} T={} ({})",
+        cfg.n_tokens,
+        cfg.d_head,
+        cfg.time_steps,
+        if paper { "paper ViT-Small geometry" } else { "demo ViT-Tiny geometry" }
+    );
+
+    for sharing in [PrngSharing::Independent, PrngSharing::PerRow, PrngSharing::Global] {
+        let streams = SpikeStreams::from_rates(&cfg, (0.5, 0.5, 0.5), 42);
+        let rep = simulate(cfg, sharing, &streams, 7, 200.0, false);
+        println!(
+            "\n[{sharing:?}] {} cycles | bit-exact vs eqs.(5)-(6): {} | attn rate {:.3}",
+            rep.events.cycles, rep.matches_software, rep.attn_rate
+        );
+        println!(
+            "  events: {} score-ANDs ({} ones), {} encoder samples, {} LFSR words",
+            rep.events.score_and_evals,
+            rep.events.score_and_ones,
+            rep.events.encoder_samples,
+            rep.events.lfsr_words
+        );
+        println!(
+            "  FPGA @200MHz: latency {:.3} us, power {:.2} W, {} LUTs / {} FFs \
+             (fits 7z020: {})",
+            rep.fpga.latency_us, rep.fpga.total_w, rep.fpga.luts, rep.fpga.ffs, rep.fpga.fits_7z020
+        );
+    }
+
+    if with_trace {
+        println!("\n{}", figures::fig3_dataflow(AttnConfig::vit_tiny().with_time_steps(3)));
+    }
+
+    println!("\n{}", figures::fig1_equivalence(AttnConfig::vit_tiny().with_time_steps(4), 3));
+    println!("accelerator_sim OK");
+    Ok(())
+}

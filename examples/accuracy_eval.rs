@@ -1,0 +1,32 @@
+//! Table I (experiment E1): print the trained accuracy sweep and
+//! cross-check variants end-to-end through the Rust PJRT runtime —
+//! proving the serving stack reproduces the Python-side numbers with
+//! Python out of the loop.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example accuracy_eval [-- N_IMAGES]
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use ssa_repro::experiments::table1;
+
+fn main() -> Result<()> {
+    ssa_repro::util::logging::init_from_env();
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+    let dir = PathBuf::from("artifacts");
+
+    println!("{}", table1::run(&dir, None)?);
+
+    println!("re-evaluating through the PJRT runtime ({n} images per variant):");
+    for variant in ["ann", "spikformer_t10", "ssa_t4", "ssa_t8", "ssa_t10"] {
+        match table1::rust_side_accuracy(&dir, variant, n) {
+            Ok(acc) => println!("  {variant:<16} {:.2}%", acc * 100.0),
+            Err(e) => println!("  {variant:<16} unavailable ({e})"),
+        }
+    }
+    println!("accuracy_eval OK");
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Regenerate the paper's energy/efficiency results: Table II, Table III,
+//! and the abstract's headline ratios (experiments E2, E3, E7).
+//!
+//! ```bash
+//! cargo run --release --example energy_report
+//! ```
+
+use anyhow::Result;
+
+use ssa_repro::experiments::{headline, table2, table3};
+
+fn main() -> Result<()> {
+    ssa_repro::util::logging::init_from_env();
+    println!("{}", table2::run());
+    println!("{}", table3::run(true)?);
+    println!("{}", headline()?);
+    println!("energy_report OK");
+    Ok(())
+}

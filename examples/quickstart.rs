@@ -1,0 +1,60 @@
+//! Quickstart: load an AOT-compiled SSA-ViT variant, classify a few test
+//! images from Rust, and verify the runtime reproduces the Python-side
+//! golden logits bit-for-bit.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use ssa_repro::runtime::{Dataset, Golden, Manifest, Runtime};
+
+fn main() -> Result<()> {
+    ssa_repro::util::logging::init_from_env();
+    let dir = std::path::PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
+    );
+
+    // 1. read the manifest and pick the headline variant
+    let manifest = Manifest::load(&dir)?;
+    let variant = manifest.variant("ssa_t10")?;
+    println!(
+        "variant {}: arch={} T={} batch={} ({} params)",
+        variant.name,
+        variant.arch,
+        variant.time_steps,
+        variant.batch,
+        variant.param_names.len()
+    );
+
+    // 2. compile on the PJRT CPU client and stage weights
+    let runtime = Runtime::cpu()?;
+    let model = runtime.load(variant)?;
+
+    // 3. classify one batch of test images
+    let ds = Dataset::load(&manifest.dataset_test)?;
+    let images = ds.batch(0, variant.batch);
+    let classes = model.classify(images, 12345)?;
+    println!("predicted: {classes:?}");
+    println!(
+        "labels   : {:?}",
+        &ds.labels[..variant.batch].iter().map(|&l| l as usize).collect::<Vec<_>>()
+    );
+
+    // 4. golden check: same inputs + same seed => same logits as Python
+    if let Some(golden_path) = &variant.golden {
+        let golden = Golden::load(golden_path)?;
+        let logits = model.infer(&golden.images, golden.seed)?;
+        let max_diff = logits
+            .iter()
+            .zip(&golden.logits)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!("golden check: max |rust - python| = {max_diff:.2e}");
+        anyhow::ensure!(max_diff < 1e-4, "runtime diverged from the AOT build");
+    }
+
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! End-to-end serving driver (experiment E8, the required system demo):
+//! start the coordinator, load-generate classification requests from the
+//! tiny-digits test split against several model variants, and report
+//! accuracy + latency/throughput percentiles + batching telemetry.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_requests [-- N_REQUESTS]
+//! ```
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use ssa_repro::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, SeedPolicy, Target,
+};
+use ssa_repro::runtime::Dataset;
+use ssa_repro::util::stats::LatencySummary;
+
+fn main() -> Result<()> {
+    ssa_repro::util::logging::init_from_env();
+    let n_requests: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+
+    let mut cfg = CoordinatorConfig::new("artifacts");
+    cfg.policy = BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(4) };
+    // preload the hot set: cold variants otherwise pay their XLA compile
+    // on the first request (multi-second p95 spikes; EXPERIMENTS.md §Perf)
+    cfg.preload = vec![
+        "ssa_t10".into(),
+        "ssa_t8".into(),
+        "ssa_t4".into(),
+        "spikformer_t10".into(),
+        "ann".into(),
+    ];
+    let coord = Coordinator::start(cfg)?;
+    let ds = Dataset::load(&coord.manifest().dataset_test)?;
+
+    // phase 1 — throughput: saturate the batcher with SSA-T10 requests
+    println!("== phase 1: {n_requests} SSA-T10 requests (batched) ==");
+    let mut rxs = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let idx = i % ds.len();
+        rxs.push((
+            idx,
+            coord.submit(Target::ssa(10), ds.image(idx).to_vec(), SeedPolicy::PerBatch)?,
+        ));
+    }
+    let mut correct = 0usize;
+    let mut lats = Vec::with_capacity(n_requests);
+    for (idx, rx) in rxs {
+        let r = rx.recv()?;
+        lats.push(r.latency_us);
+        if r.class as u32 == ds.labels[idx] {
+            correct += 1;
+        }
+    }
+    println!(
+        "accuracy {:.2}%  latency: {}",
+        100.0 * correct as f64 / n_requests as f64,
+        LatencySummary::from_micros(&lats)
+    );
+
+    // phase 2 — mixed traffic across variants (router demonstration)
+    println!("\n== phase 2: mixed ANN / Spikformer / SSA traffic ==");
+    let targets = [
+        Target::ann(),
+        Target::spikformer(10),
+        Target::ssa(4),
+        Target::ssa(8),
+        Target::ssa(10),
+    ];
+    let mut rxs = Vec::new();
+    for i in 0..n_requests.min(120) {
+        let idx = i % ds.len();
+        let t = targets[i % targets.len()].clone();
+        rxs.push((idx, coord.submit(t, ds.image(idx).to_vec(), SeedPolicy::PerBatch)?));
+    }
+    let total = rxs.len();
+    let mut correct = 0usize;
+    for (idx, rx) in rxs {
+        if rx.recv()?.class as u32 == ds.labels[idx] {
+            correct += 1;
+        }
+    }
+    println!("mixed-traffic accuracy {:.2}%", 100.0 * correct as f64 / total as f64);
+
+    // phase 3 — seed-ensemble serving (variance reduction, the serving-side
+    // counterpart of raising T; companions ablations A3/A4)
+    println!("\n== phase 3: seed-ensemble (K=5) on SSA-T4 ==");
+    for (label, policy) in
+        [("single seed", SeedPolicy::PerBatch), ("ensemble K=5", SeedPolicy::Ensemble(5))]
+    {
+        let n = 120.min(ds.len());
+        let mut rxs = Vec::new();
+        for idx in 0..n {
+            rxs.push((idx, coord.submit(Target::ssa(4), ds.image(idx).to_vec(), policy)?));
+        }
+        let mut correct = 0usize;
+        for (idx, rx) in rxs {
+            if rx.recv()?.class as u32 == ds.labels[idx] {
+                correct += 1;
+            }
+        }
+        println!("  {label:<13}: accuracy {:.2}%", 100.0 * correct as f64 / n as f64);
+    }
+
+    println!("\n{}", coord.metrics_report());
+    coord.shutdown();
+    println!("serve_requests OK");
+    Ok(())
+}

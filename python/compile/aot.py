@@ -1,0 +1,243 @@
+"""AOT compile path: train -> quantize -> lower to HLO text -> serialize.
+
+``python -m compile.aot --out ../artifacts`` produces everything the Rust
+binary consumes (and nothing else ever runs Python again):
+
+* ``<variant>.hlo.txt``      — HLO text of the jitted inference graph
+  (images + seed + flattened params -> logits).  HLO *text* because the
+  ``xla`` crate's xla_extension 0.5.1 rejects jax>=0.5 serialized protos
+  (64-bit instruction ids); the text parser reassigns ids.
+* ``weights_<arch>.bin``     — trained (INT8-quantize-dequantized) params.
+* ``dataset_test.bin``       — the canonical tiny-digits test split.
+* ``golden_<variant>.bin``   — logits computed in Python for a fixed
+  (batch, seed), letting Rust integration tests assert bit-faithful
+  execution of the loaded HLO.
+* ``accuracy.json``          — the Table-I sweep measured at train time.
+* ``loss_<arch>.csv``        — training loss curves (E2E evidence).
+* ``manifest.json``          — index of all of the above.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import struct
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model as model_mod
+from . import train as train_mod
+from .config import ARCH_ANN, ARCH_SPIKFORMER, ARCH_SSA, ModelConfig, TrainConfig, vit_tiny
+from .layers import AOT_MODE, Params
+
+T_SWEEP = (4, 8, 10)
+GOLDEN_SEED = 42
+
+
+# ---------------------------------------------------------------------------
+# HLO text lowering (see /opt/xla-example/gen_hlo.py and DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(cfg: ModelConfig, params: Params, batch: int) -> str:
+    """Lower (flattened-params, images, seed) -> (logits,) to HLO text.
+
+    Params are passed as runtime inputs (not baked constants) so the Rust
+    router can hot-swap weights without recompiling; flattening order is
+    the sorted parameter name list recorded in the manifest.
+    """
+    names = sorted(params.keys())
+    fn = model_mod.make_inference_fn(cfg, AOT_MODE)
+
+    def flat_fn(flat_params, images, seed):
+        p = dict(zip(names, flat_params))
+        return (fn(p, images, seed),)
+
+    example_params = tuple(
+        jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in names
+    )
+    images_spec = jax.ShapeDtypeStruct((batch, cfg.image_size, cfg.image_size), jnp.float32)
+    seed_spec = jax.ShapeDtypeStruct((), jnp.uint32)
+    # keep_unused: the ANN ignores `seed`; without this jit would DCE the
+    # parameter and break the uniform (params, images, seed) runtime ABI.
+    lowered = jax.jit(flat_fn, keep_unused=True).lower(
+        example_params, images_spec, seed_spec
+    )
+    return to_hlo_text(lowered)
+
+
+# ---------------------------------------------------------------------------
+# binary serialization shared with rust/src/runtime/weights.rs
+# ---------------------------------------------------------------------------
+
+WEIGHTS_MAGIC = 0x53534157  # 'WASS'
+
+
+def write_weights(path: str, params: Params) -> List[str]:
+    """Little-endian: magic, version, count, then per tensor:
+    name_len u32 | name utf8 | ndim u32 | dims u32* | f32 data."""
+    names = sorted(params.keys())
+    with open(path, "wb") as f:
+        f.write(struct.pack("<III", WEIGHTS_MAGIC, 1, len(names)))
+        for n in names:
+            w = np.asarray(params[n], dtype="<f4")
+            nb = n.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", w.ndim))
+            for d in w.shape:
+                f.write(struct.pack("<I", d))
+            f.write(w.tobytes())
+    return names
+
+
+def write_golden(path: str, logits: np.ndarray, images: np.ndarray, seed: int) -> None:
+    """Golden record: images + seed + expected logits for Rust integration
+    tests.  Layout: magic, version, batch, image_size, n_classes, seed,
+    images f32, logits f32."""
+    b, s, _ = images.shape
+    c = logits.shape[1]
+    with open(path, "wb") as f:
+        f.write(struct.pack("<IIIIII", 0x474F4C44, 1, b, s, c, seed))
+        f.write(images.astype("<f4").tobytes())
+        f.write(logits.astype("<f4").tobytes())
+
+
+# ---------------------------------------------------------------------------
+# main pipeline
+# ---------------------------------------------------------------------------
+
+
+def build(out_dir: str, tcfg: TrainConfig, serve_batch: int = 8) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    xtr, ytr, xte, yte = data_mod.train_test(tcfg.n_train, tcfg.n_test)
+    data_mod.write_dataset_bin(os.path.join(out_dir, "dataset_test.bin"), xte, yte)
+
+    log: List[str] = []
+    accuracy: Dict[str, Dict[str, float]] = {}
+    manifest: Dict = {
+        "version": 1,
+        "image_size": 16,
+        "patch_size": 4,
+        "n_classes": 10,
+        "golden_seed": GOLDEN_SEED,
+        "dataset": {"test": "dataset_test.bin", "n": int(len(yte))},
+        "variants": [],
+    }
+
+    golden_images = xte[:serve_batch]
+
+    for arch in (ARCH_ANN, ARCH_SPIKFORMER, ARCH_SSA):
+        cfg = vit_tiny(arch=arch, time_steps=max(T_SWEEP))
+        arch_tcfg = (
+            tcfg if arch == ARCH_ANN else dataclasses.replace(tcfg, steps=tcfg.snn_steps)
+        )
+        print(f"=== training {arch} ({arch_tcfg.steps} steps) ===", flush=True)
+        params, curve = train_mod.train_model(cfg, arch_tcfg, xtr, ytr, xte, yte, log)
+        params = train_mod.maybe_quantize(params, tcfg)
+
+        with open(os.path.join(out_dir, f"loss_{arch}.csv"), "w") as f:
+            f.write("step,loss\n")
+            for s, l in curve:
+                f.write(f"{s},{l:.6f}\n")
+
+        # post-quantization Table-I sweep
+        if arch == ARCH_ANN:
+            acc = train_mod.evaluate(
+                cfg, params, data_mod.patchify(xte, cfg.patch_size), yte, tcfg.batch_size
+            )
+            accuracy[arch] = {"-": acc}
+        else:
+            accuracy[arch] = {
+                str(t): a
+                for t, a in train_mod.accuracy_sweep(
+                    cfg, params, xte, yte, tcfg.batch_size, T_SWEEP
+                ).items()
+            }
+        print(f"accuracy[{arch}] = {accuracy[arch]}", flush=True)
+
+        weights_file = f"weights_{arch}.bin"
+        names = write_weights(os.path.join(out_dir, weights_file), params)
+
+        # export HLO variants: ANN once; SNNs across the T sweep; plus a
+        # batch-1 SSA variant for the latency-sensitive serving path.
+        t_values = ["-"] if arch == ARCH_ANN else list(T_SWEEP)
+        batches = [serve_batch]
+        for t in t_values:
+            vcfg = cfg if t == "-" else cfg.with_time_steps(int(t))
+            for b in batches + ([1] if (arch == ARCH_SSA and t == max(T_SWEEP)) else []):
+                name = vcfg.variant_name() + (f"_b{b}" if b != serve_batch else "")
+                hlo_file = f"{name}.hlo.txt"
+                print(f"lowering {name} (batch={b}) ...", flush=True)
+                hlo = lower_variant(vcfg, params, b)
+                with open(os.path.join(out_dir, hlo_file), "w") as f:
+                    f.write(hlo)
+
+                # golden logits for the serve-batch variants
+                golden_file = None
+                if b == serve_batch:
+                    fn = model_mod.make_inference_fn(vcfg, AOT_MODE)
+                    logits = np.asarray(
+                        jax.jit(fn)(params, jnp.asarray(golden_images), jnp.uint32(GOLDEN_SEED))
+                    )
+                    golden_file = f"golden_{name}.bin"
+                    write_golden(
+                        os.path.join(out_dir, golden_file), logits, golden_images, GOLDEN_SEED
+                    )
+
+                manifest["variants"].append(
+                    {
+                        "name": name,
+                        "arch": arch,
+                        "time_steps": 0 if t == "-" else int(t),
+                        "batch": b,
+                        "hlo": hlo_file,
+                        "weights": weights_file,
+                        "param_names": names,
+                        "golden": golden_file,
+                        "inputs": [
+                            {"name": "images", "shape": [b, 16, 16], "dtype": "f32"},
+                            {"name": "seed", "shape": [], "dtype": "u32"},
+                        ],
+                        "output": {"shape": [b, 10], "dtype": "f32"},
+                    }
+                )
+
+    with open(os.path.join(out_dir, "accuracy.json"), "w") as f:
+        json.dump(accuracy, f, indent=2)
+    with open(os.path.join(out_dir, "train_log.txt"), "w") as f:
+        f.write("\n".join(log) + "\n")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"artifacts written to {out_dir}", flush=True)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=TrainConfig.steps)
+    ap.add_argument("--quick", action="store_true", help="tiny run for CI smoke")
+    args = ap.parse_args(argv)
+    tcfg = TrainConfig(steps=args.steps)
+    if args.quick:
+        tcfg = TrainConfig(steps=30, snn_steps=30, n_train=512, n_test=256, eval_every=30)
+    build(args.out, tcfg)
+
+
+if __name__ == "__main__":
+    main()

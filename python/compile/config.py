@@ -1,0 +1,110 @@
+"""Model / training / experiment configuration.
+
+Two standard configurations are defined:
+
+* ``vit_tiny()`` — the trainable demo model used for the Table-I-shaped
+  accuracy experiment (E1) on the tiny-digits dataset.  Small enough to
+  train on one CPU core in minutes, structurally identical to the paper's
+  pipeline (Bernoulli input coding -> LIF QKV -> SSA -> spiking MLP).
+* ``vit_small_paper()`` — the paper's ViT-Small *attention-block geometry*
+  (N=64 tokens, D=384, 8 heads, D_K=48, T=10).  Never trained here; it is
+  the configuration at which the energy/latency models (Tables II/III) are
+  evaluated, mirroring the paper.
+
+Both N and D_K are powers of two in the demo config, matching the paper's
+§III-D hardware simplification (comparator-only Bernoulli encoders).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+ARCH_ANN = "ann"
+ARCH_SPIKFORMER = "spikformer"
+ARCH_SSA = "ssa"
+ARCHS = (ARCH_ANN, ARCH_SPIKFORMER, ARCH_SSA)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters shared by all three model families."""
+
+    arch: str = ARCH_SSA
+    image_size: int = 16
+    patch_size: int = 4
+    d_model: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    n_classes: int = 10
+    d_mlp: int = 128
+    # SNN-only parameters
+    time_steps: int = 10
+    lif_beta: float = 0.9
+    lif_theta: float = 1.0
+    surrogate_alpha: float = 2.0  # steepness of the sigmoid surrogate
+    # Spikformer attention pre-activation scale (their `s`)
+    spikformer_scale: float = 0.25
+
+    def __post_init__(self):
+        if self.arch not in ARCHS:
+            raise ValueError(f"unknown arch {self.arch!r}, expected one of {ARCHS}")
+        if self.image_size % self.patch_size:
+            raise ValueError("image_size must be divisible by patch_size")
+        if self.d_model % self.n_heads:
+            raise ValueError("d_model must be divisible by n_heads")
+
+    @property
+    def n_tokens(self) -> int:
+        return (self.image_size // self.patch_size) ** 2
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch_size * self.patch_size
+
+    def variant_name(self) -> str:
+        """Artifact-manifest key, e.g. ``ssa_t10``; the ANN has no T."""
+        if self.arch == ARCH_ANN:
+            return "ann"
+        return f"{self.arch}_t{self.time_steps}"
+
+    def with_time_steps(self, t: int) -> "ModelConfig":
+        return dataclasses.replace(self, time_steps=t)
+
+    def with_arch(self, arch: str) -> "ModelConfig":
+        return dataclasses.replace(self, arch=arch)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Surrogate-gradient training schedule for the E1 accuracy run."""
+
+    steps: int = 600
+    # SNNs converge slower under surrogate gradients + SC noise; they get
+    # a longer schedule (the ANN keeps `steps`).
+    snn_steps: int = 2200
+    batch_size: int = 64
+    lr: float = 1e-3
+    weight_decay: float = 1e-4
+    seed: int = 0
+    eval_every: int = 100
+    n_train: int = 4096
+    n_test: int = 1024
+    # INT8 post-training weight quantization (paper: "parameters of all
+    # three implementations are INT8-quantized")
+    quantize_int8: bool = True
+
+
+def vit_tiny(arch: str = ARCH_SSA, time_steps: int = 10) -> ModelConfig:
+    """Demo configuration trained in E1 (Table-I shape)."""
+    return ModelConfig(arch=arch, time_steps=time_steps)
+
+
+def vit_small_paper() -> Tuple[int, int, int, int, int]:
+    """Paper's attention-block geometry for Tables II/III:
+    ``(n_tokens, d_model, n_heads, d_head, time_steps)``."""
+    return (64, 384, 8, 48, 10)

@@ -1,0 +1,122 @@
+"""tiny-digits: a deterministic procedural stand-in for MNIST.
+
+The offline build image has no dataset downloads, so the Table-I-shaped
+accuracy experiment (E1) runs on a procedurally generated 10-class digit
+task: classic 5x7 bitmap-font glyphs rendered into a 16x16 canvas with a
+random integer offset, per-image contrast jitter, pixel dropout, and
+additive Gaussian noise.  The task is real enough that attention over
+patches matters (digit identity is a global shape property), and hard
+enough that accuracy is meaningfully below 100% at low spike counts —
+which is exactly the regime Table I probes (accuracy vs time steps T).
+
+Determinism: everything derives from ``numpy.random.Generator(PCG64(seed))``
+with fixed per-split seeds.  The test split is exported verbatim into
+``artifacts/dataset_test.bin`` by ``aot.py``, so the Rust side never needs
+to re-derive it (see DESIGN.md §3 substitutions, S14).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+# 5x7 bitmap font for digits 0-9 ('#' = ink). The canonical ASCII-art font.
+_GLYPHS = {
+    0: [" ### ", "#   #", "#  ##", "# # #", "##  #", "#   #", " ### "],
+    1: ["  #  ", " ##  ", "  #  ", "  #  ", "  #  ", "  #  ", " ### "],
+    2: [" ### ", "#   #", "    #", "   # ", "  #  ", " #   ", "#####"],
+    3: [" ### ", "#   #", "    #", "  ## ", "    #", "#   #", " ### "],
+    4: ["   # ", "  ## ", " # # ", "#  # ", "#####", "   # ", "   # "],
+    5: ["#####", "#    ", "#### ", "    #", "    #", "#   #", " ### "],
+    6: [" ### ", "#    ", "#    ", "#### ", "#   #", "#   #", " ### "],
+    7: ["#####", "    #", "   # ", "  #  ", "  #  ", "  #  ", "  #  "],
+    8: [" ### ", "#   #", "#   #", " ### ", "#   #", "#   #", " ### "],
+    9: [" ### ", "#   #", "#   #", " ####", "    #", "    #", " ### "],
+}
+
+GLYPH_H, GLYPH_W = 7, 5
+
+
+def _glyph_array(digit: int) -> np.ndarray:
+    rows = _GLYPHS[digit]
+    return np.array([[1.0 if c == "#" else 0.0 for c in row] for row in rows], np.float32)
+
+
+_GLYPH_CACHE = {d: _glyph_array(d) for d in range(10)}
+
+
+def render_digit(
+    digit: int,
+    rng: np.random.Generator,
+    image_size: int = 16,
+    noise_std: float = 0.18,
+    dropout: float = 0.12,
+) -> np.ndarray:
+    """Render one augmented digit into a ``[image_size, image_size]`` float
+    image with values clipped to [0, 1] (ready for Bernoulli rate coding)."""
+    glyph = _GLYPH_CACHE[digit]
+    # integer 2x upscale to 10x14, then random placement on the canvas
+    scale = 2
+    gh, gw = GLYPH_H * scale, GLYPH_W * scale
+    big = np.repeat(np.repeat(glyph, scale, axis=0), scale, axis=1)
+    canvas = np.zeros((image_size, image_size), np.float32)
+    max_y, max_x = image_size - gh, image_size - gw
+    oy = rng.integers(0, max_y + 1)
+    ox = rng.integers(0, max_x + 1)
+    contrast = rng.uniform(0.65, 1.0)
+    canvas[oy : oy + gh, ox : ox + gw] = big * contrast
+    # pixel dropout models flaky spiking sensors
+    keep = rng.random(canvas.shape) >= dropout
+    canvas *= keep
+    canvas += rng.normal(0.0, noise_std, canvas.shape).astype(np.float32)
+    return np.clip(canvas, 0.0, 1.0)
+
+
+def make_split(
+    n: int, seed: int, image_size: int = 16
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Generate ``n`` images with balanced labels; returns (X [n,s,s] f32 in
+    [0,1], y [n] int32)."""
+    rng = np.random.default_rng(np.random.PCG64(seed))
+    labels = np.arange(n, dtype=np.int32) % 10
+    rng.shuffle(labels)
+    images = np.stack([render_digit(int(d), rng, image_size) for d in labels])
+    return images.astype(np.float32), labels
+
+
+def train_test(
+    n_train: int, n_test: int, image_size: int = 16
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Canonical E1 splits (seeds fixed: train=0x5A, test=0xA5)."""
+    xtr, ytr = make_split(n_train, seed=0x5A, image_size=image_size)
+    xte, yte = make_split(n_test, seed=0xA5, image_size=image_size)
+    return xtr, ytr, xte, yte
+
+
+def patchify(images: np.ndarray, patch_size: int) -> np.ndarray:
+    """``[B, S, S] -> [B, N, patch_size**2]`` in row-major patch order —
+    must match ``rust/src/data`` (the serving example patchifies in Rust)."""
+    b, s, _ = images.shape
+    p = patch_size
+    g = s // p
+    x = images.reshape(b, g, p, g, p)
+    x = x.transpose(0, 1, 3, 2, 4)  # [B, gy, gx, p, p]
+    return x.reshape(b, g * g, p * p)
+
+
+def write_dataset_bin(path: str, images: np.ndarray, labels: np.ndarray) -> None:
+    """Serialize a split for the Rust side.
+
+    Layout (little-endian): magic ``u32=0x534E4454`` ('TDNS'), version u32,
+    count u32, image_size u32, then ``count`` records of
+    ``image_size**2 f32`` pixels followed by label ``u32``.
+    """
+    import struct
+
+    n, s, _ = images.shape
+    with open(path, "wb") as f:
+        f.write(struct.pack("<IIII", 0x534E4454, 1, n, s))
+        for i in range(n):
+            f.write(images[i].astype("<f4").tobytes())
+            f.write(struct.pack("<I", int(labels[i])))

@@ -1,0 +1,38 @@
+"""Pallas kernel for the Bernoulli rate encoder (paper eq. (2)).
+
+In hardware this block is an LFSR PRNG + comparator (paper §III-D); here
+the uniforms are explicit kernel inputs and the kernel is the comparator.
+Keeping randomness out of the kernel makes every layer of the stack
+(bit-)reproducible from a single seed and mirrors the silicon split
+between the PRNG and the datapath.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bernoulli_kernel(x_ref, u_ref, out_ref):
+    out_ref[...] = (u_ref[...] < x_ref[...]).astype(jnp.float32)
+
+
+@jax.jit
+def bernoulli_encode(x: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Encode normalized reals ``x`` (in [0,1]) into {0,1} spikes.
+
+    ``x`` and ``u`` must share a 2-D shape ``[G, F]``; returns float32 {0,1}.
+    Bit-exact against ``ref.bernoulli_encode``.
+    """
+    if x.shape != u.shape:
+        raise ValueError(f"x/u shape mismatch: {x.shape} vs {u.shape}")
+    g, f = x.shape
+    blk = pl.BlockSpec((g, f), lambda: (0, 0))
+    return pl.pallas_call(
+        _bernoulli_kernel,
+        in_specs=[blk, blk],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct((g, f), jnp.float32),
+        interpret=True,
+    )(x, u)

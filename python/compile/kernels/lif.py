@@ -1,0 +1,58 @@
+"""Pallas kernel for a layer of leaky integrate-and-fire (LIF) neurons.
+
+One kernel invocation advances every neuron in a ``[G, F]`` sheet by one
+discrete time step (paper §II-C): leak, integrate, threshold, soft reset.
+The spiking QKV encoders of eq. (4) are exactly this kernel applied to the
+result of the (dense) projection ``X^t W``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lif_step_kernel(v_ref, i_ref, v_out_ref, s_out_ref, *, beta: float, theta: float):
+    """LIF update for one VMEM-resident tile: v' = beta*v + I, fire, reset."""
+    v = beta * v_ref[...] + i_ref[...]
+    spikes = (v >= theta).astype(jnp.float32)
+    v_out_ref[...] = v - theta * spikes
+    s_out_ref[...] = spikes
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "theta", "interpret"))
+def lif_step(
+    v: jnp.ndarray,
+    current: jnp.ndarray,
+    beta: float = 0.9,
+    theta: float = 1.0,
+    interpret: bool = True,
+):
+    """Advance a LIF neuron sheet one step.
+
+    Args:
+      v: membrane potentials, any 2-D float32 shape ``[G, F]``.
+      current: input currents, same shape.
+      beta: leak factor in [0, 1].
+      theta: firing threshold.
+
+    Returns:
+      ``(v_next, spikes)`` — both ``[G, F]`` float32, spikes in {0,1}.
+      Bit-exact against ``ref.lif_step``.
+    """
+    if v.shape != current.shape:
+        raise ValueError(f"v/current shape mismatch: {v.shape} vs {current.shape}")
+    g, f = v.shape
+    kernel = functools.partial(_lif_step_kernel, beta=beta, theta=theta)
+    blk = pl.BlockSpec((g, f), lambda: (0, 0))
+    out_shape = jax.ShapeDtypeStruct((g, f), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        in_specs=[blk, blk],
+        out_specs=(blk, blk),
+        out_shape=(out_shape, out_shape),
+        interpret=interpret,
+    )(v, current)

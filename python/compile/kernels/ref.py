@@ -1,0 +1,124 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has a bit-exact oracle here (deterministic
+given the same uniform-random inputs).  pytest compares kernel vs oracle
+across a hypothesis sweep of shapes/dtypes; these oracles are also what the
+L2 model uses when ``use_pallas=False`` (e.g. under ``jax.grad``, where the
+interpret-mode kernel would be needlessly slow).
+
+Conventions
+-----------
+* Spikes are carried as ``float32`` tensors holding exactly 0.0 or 1.0.
+  (Binary dtypes do not survive the MXU; the {0,1}-float convention means a
+  logical AND across the feature axis is an ordinary matmul — the TPU
+  mapping of the paper's AND-gate array, see DESIGN.md §Hardware-Adaptation.)
+* All stochasticity enters through explicit uniform tensors in [0, 1);
+  a Bernoulli(p) draw is ``u < p``.  This mirrors the hardware, where the
+  Bernoulli encoder is an LFSR PRNG + comparator (paper §III-D).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bernoulli_encode(x: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Bernoulli-encode normalized reals ``x`` in [0,1] given uniforms ``u``.
+
+    Paper eq. (2): ``x^t ~ Bern(norm(x))``.  Returns {0,1} float32.
+    """
+    return (u < x).astype(jnp.float32)
+
+
+def lif_step(v: jnp.ndarray, current: jnp.ndarray, *, beta: float, theta: float):
+    """One step of the discrete leaky integrate-and-fire neuron (paper §II-C).
+
+    ``v' = beta * v + current``; spike where ``v' >= theta``; soft reset by
+    subtraction.  Returns ``(v_next, spikes)`` with spikes in {0,1} float32.
+    """
+    v = beta * v + current
+    spikes = (v >= theta).astype(jnp.float32)
+    v_next = v - theta * spikes
+    return v_next, spikes
+
+
+def ssa_attention_step(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    u_score: jnp.ndarray,
+    u_attn: jnp.ndarray,
+) -> jnp.ndarray:
+    """One time step of Stochastic Spiking Attention (paper eqs. (5)-(6)).
+
+    Args:
+      q, k, v: {0,1} float32 ``[..., N, D_K]`` spike matrices for this step.
+      u_score: uniforms ``[..., N, N]`` — the S-stage Bernoulli encoders.
+      u_attn:  uniforms ``[..., N, D_K]`` — the Attn-stage encoders.
+
+    Returns {0,1} float32 ``[..., N, D_K]``: ``Attn^t``.
+
+    The AND-and-count of the SAU array is expressed as a matmul of {0,1}
+    matrices: ``sum_d q[i,d] AND k[j,d] == (q @ k^T)[i,j]`` exactly.
+    """
+    d_k = q.shape[-1]
+    n = q.shape[-2]
+    # S^t_{ij} ~ Bern( (1/D_K) sum_d Q^t_{id} AND K^t_{jd} )      eq. (5)
+    scores = jnp.matmul(q, jnp.swapaxes(k, -1, -2)) / d_k
+    s = (u_score < scores).astype(jnp.float32)
+    # Attn^t_{id} ~ Bern( (1/N) sum_j S^t_{ij} AND V^t_{jd} )     eq. (6)
+    probs = jnp.matmul(s, v) / n
+    return (u_attn < probs).astype(jnp.float32)
+
+
+def ssa_attention_expectation(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray
+) -> jnp.ndarray:
+    """E[Attn^t | Q^t, K^t, V^t] — the deterministic mean of eqs. (5)-(6).
+
+    Used by the A4 ablation (stochastic vs expectation) and by the
+    expectation-matching tests: conditioned on the spikes, the two Bernoulli
+    stages chain, so the mean is the composed normalized product.
+    """
+    d_k = q.shape[-1]
+    n = q.shape[-2]
+    s_prob = jnp.matmul(q, jnp.swapaxes(k, -1, -2)) / d_k
+    return jnp.matmul(s_prob, v) / n
+
+
+def linear_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Softmax-free linear attention [26] on real-valued inputs.
+
+    ``(Q K^T / D_K) V / N`` — the ANN-domain quantity whose Bernoulli-coded
+    estimator SSA computes (Fig. 1 equivalence, experiment E4).
+    """
+    d_k = q.shape[-1]
+    n = q.shape[-2]
+    return jnp.matmul(jnp.matmul(q, jnp.swapaxes(k, -1, -2)) / d_k, v) / n
+
+
+def softmax(x: jnp.ndarray) -> jnp.ndarray:
+    """Numerically-stable softmax along the last axis."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Standard scaled dot-product attention (paper eq. (1)) — ANN baseline."""
+    d_k = q.shape[-1]
+    scores = jnp.matmul(q, jnp.swapaxes(k, -1, -2)) / jnp.sqrt(jnp.float32(d_k))
+    return jnp.matmul(softmax(scores), v)
+
+
+def spikformer_attention_step(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, scale: float
+) -> jnp.ndarray:
+    """Spikformer-style spiking self-attention [18] for one time step.
+
+    ``Q^t K^{tT} V^t`` computed with integer arithmetic on spike matrices
+    (the multiplier-based baseline that SSA's AND gates replace), scaled.
+    The caller passes the result through a LIF layer to re-binarize.
+    Returns the real-valued pre-activation ``[..., N, D_K]``.
+    """
+    return jnp.matmul(jnp.matmul(q, jnp.swapaxes(k, -1, -2)), v) * scale

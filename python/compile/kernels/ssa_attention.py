@@ -1,0 +1,147 @@
+"""Pallas kernel for one time step of Stochastic Spiking Attention.
+
+This is the L1 compute hot-spot of the stack: paper eqs. (5)-(6) fused into
+a single kernel per (batch, head) grid cell.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation)
+----------------------------------------------------
+The paper's accelerator is an N x N spatial array of AND-gate SAUs that
+consumes Q/K/V bit-serially over D_K clock cycles.  On a TPU-shaped target
+the same dataflow maps to:
+
+* AND + popcount over D_K  ->  one MXU matmul of {0,1}-float matrices
+  (``q @ k^T`` counts exactly the AND coincidences);
+* counter + normalizing Bernoulli encoder  ->  VPU compare against a
+  uniform tensor (``u < count / D_K``);
+* the "hold S while V streams" phase  ->  the second fused matmul
+  ``s @ v`` followed by its own comparator stage.
+
+BlockSpec tiles one (head) slice of Q/K/V/S into VMEM per grid step — the
+VMEM footprint for the paper's ViT-Small head (N=64, D_K=48) is ~84 KiB,
+far under budget, so no inner tiling is needed; the grid iterates over
+batch*heads.  ``interpret=True`` everywhere: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and correctness is what this path certifies (real-TPU
+perf is estimated analytically in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssa_step_kernel(q_ref, k_ref, v_ref, us_ref, ua_ref, out_ref, *, n: int, d_k: int):
+    """Fused SSA step for one (batch*head) tile resident in VMEM.
+
+    Refs are blocks of shape [1, N, D_K] (q/k/v/out), [1, N, N] (us),
+    [1, N, D_K] (ua); the leading unit axis is the grid axis.
+    """
+    q = q_ref[0]  # [N, D_K] {0,1} floats
+    k = k_ref[0]
+    v = v_ref[0]
+    # Stage 1 — attention scores, eq. (5): AND-count == binary matmul (MXU),
+    # then the Bernoulli encoder bank == comparator against uniforms (VPU).
+    counts = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    s = (us_ref[0] < counts * (1.0 / d_k)).astype(jnp.float32)
+    # Stage 2 — attention-value product, eq. (6): same SC pattern with the
+    # row adders normalizing by N.
+    acc = jnp.dot(s, v, preferred_element_type=jnp.float32)
+    out_ref[0] = (ua_ref[0] < acc * (1.0 / n)).astype(jnp.float32)
+
+
+def _ssa_step_kernel_fused(q_ref, k_ref, v_ref, us_ref, ua_ref, out_ref, *, n: int, d_k: int):
+    """Single-block variant: the whole [G, N, D_K] batch in one grid cell.
+
+    §Perf L2: under `interpret=True` a (G,) grid lowers to an XLA while
+    loop over grid cells — ~0.9 ms/step of loop overhead on the CPU PJRT
+    path.  For the small serving geometries the whole batch fits VMEM
+    comfortably (see `vmem_bytes`), so the AOT artifacts use this fused
+    block; a real-TPU build for ViT-Small-scale models would keep the
+    per-head grid (structure preserved in `_ssa_step_kernel`).
+    """
+    q = q_ref[...]  # [G, N, D_K]
+    counts = jax.lax.dot_general(
+        q,
+        k_ref[...],
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )  # [G, N, N]
+    s = (us_ref[...] < counts * (1.0 / d_k)).astype(jnp.float32)
+    acc = jax.lax.dot_general(
+        s,
+        v_ref[...],
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )  # [G, N, D_K]
+    out_ref[...] = (ua_ref[...] < acc * (1.0 / n)).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "fused"))
+def ssa_attention_step(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    u_score: jnp.ndarray,
+    u_attn: jnp.ndarray,
+    interpret: bool = True,
+    fused: bool = True,
+) -> jnp.ndarray:
+    """One SSA time step over a stacked ``[G, N, D_K]`` spike batch.
+
+    ``G`` is any flattened leading extent (batch * heads); each grid cell
+    processes one G-slice.  Bit-exact against ``ref.ssa_attention_step``
+    given identical uniforms (pytest enforces this across a hypothesis
+    sweep of shapes).
+
+    Args:
+      q, k, v: ``[G, N, D_K]`` float32 holding exactly {0,1}.
+      u_score: ``[G, N, N]`` float32 uniforms in [0, 1).
+      u_attn:  ``[G, N, D_K]`` float32 uniforms in [0, 1).
+      interpret: keep True on CPU PJRT (Mosaic is TPU-only).
+
+    Returns:
+      ``[G, N, D_K]`` float32 {0,1}: ``Attn^t``.
+    """
+    g, n, d_k = q.shape
+    if k.shape != (g, n, d_k) or v.shape != (g, n, d_k):
+        raise ValueError(f"q/k/v shape mismatch: {q.shape} {k.shape} {v.shape}")
+    if u_score.shape != (g, n, n):
+        raise ValueError(f"u_score must be [G,N,N], got {u_score.shape}")
+    if u_attn.shape != (g, n, d_k):
+        raise ValueError(f"u_attn must be [G,N,D_K], got {u_attn.shape}")
+
+    if fused:
+        kernel = functools.partial(_ssa_step_kernel_fused, n=n, d_k=d_k)
+        blk_nd = pl.BlockSpec((g, n, d_k), lambda: (0, 0, 0))
+        blk_nn = pl.BlockSpec((g, n, n), lambda: (0, 0, 0))
+        return pl.pallas_call(
+            kernel,
+            in_specs=[blk_nd, blk_nd, blk_nd, blk_nn, blk_nd],
+            out_specs=blk_nd,
+            out_shape=jax.ShapeDtypeStruct((g, n, d_k), jnp.float32),
+            interpret=interpret,
+        )(q, k, v, u_score, u_attn)
+    kernel = functools.partial(_ssa_step_kernel, n=n, d_k=d_k)
+    blk_nd = pl.BlockSpec((1, n, d_k), lambda i: (i, 0, 0))
+    blk_nn = pl.BlockSpec((1, n, n), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(g,),
+        in_specs=[blk_nd, blk_nd, blk_nd, blk_nn, blk_nd],
+        out_specs=blk_nd,
+        out_shape=jax.ShapeDtypeStruct((g, n, d_k), jnp.float32),
+        interpret=interpret,
+    )(q, k, v, u_score, u_attn)
+
+
+def vmem_bytes(n: int, d_k: int) -> int:
+    """Estimated VMEM residency of one grid step (f32), for DESIGN.md §Perf.
+
+    4 [N,D_K] tiles (q, k, v, out) + [N,N] scores/uniform tile + [N,D_K]
+    uniform tile + the [N,N] S intermediate.
+    """
+    f32 = 4
+    return f32 * (4 * n * d_k + 2 * n * n + n * d_k)

@@ -1,0 +1,194 @@
+"""L2 building blocks: spiking layers with surrogate gradients.
+
+Everything is pure-functional (params and LIF membrane state are explicit
+pytrees) so the same code paths serve three uses:
+
+1. **training** — surrogate-gradient mode: Bernoulli draws and LIF
+   thresholds use straight-through estimators so ``jax.grad`` flows;
+2. **evaluation** — hard {0,1} sampling with the jnp oracle ops;
+3. **AOT export** — hard sampling with the *Pallas kernels* from
+   ``compile.kernels``; this is the graph lowered to HLO text and executed
+   from Rust (the only mode that ever reaches the request path).
+
+The mode is a static ``StochasticMode`` flag compiled into the graph.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import ref
+from .kernels.bernoulli import bernoulli_encode as pallas_bernoulli
+from .kernels.lif import lif_step as pallas_lif
+from .kernels.ssa_attention import ssa_attention_step as pallas_ssa
+
+Params = Dict[str, jnp.ndarray]
+State = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class StochasticMode:
+    """Static compilation mode for the stochastic primitives."""
+
+    surrogate: bool = False  # straight-through gradients (training)
+    use_pallas: bool = False  # route hot ops through the L1 kernels (AOT)
+
+    def __post_init__(self):
+        if self.surrogate and self.use_pallas:
+            raise ValueError("surrogate training runs on the jnp oracle path")
+
+
+TRAIN_MODE = StochasticMode(surrogate=True, use_pallas=False)
+EVAL_MODE = StochasticMode(surrogate=False, use_pallas=False)
+AOT_MODE = StochasticMode(surrogate=False, use_pallas=True)
+
+
+# ---------------------------------------------------------------------------
+# stochastic primitives
+# ---------------------------------------------------------------------------
+
+
+def bernoulli(x: jnp.ndarray, u: jnp.ndarray, mode: StochasticMode) -> jnp.ndarray:
+    """Bernoulli rate encoding (eq. 2) with optional straight-through grad.
+
+    The straight-through estimator passes d(sample)/dx = 1: the sample is
+    an unbiased estimator of x, so the expected pathwise gradient matches
+    the gradient of the expectation (standard for SNN rate coding [28]).
+    """
+    if mode.surrogate:
+        hard = (u < x).astype(jnp.float32)
+        return x + jax.lax.stop_gradient(hard - x)
+    if mode.use_pallas:
+        flat = x.reshape(-1, x.shape[-1])
+        out = pallas_bernoulli(flat, u.reshape(flat.shape))
+        return out.reshape(x.shape)
+    return ref.bernoulli_encode(x, u)
+
+
+def lif(
+    v: jnp.ndarray, current: jnp.ndarray, cfg: ModelConfig, mode: StochasticMode
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """LIF neuron sheet step (paper §II-C) with sigmoid surrogate in training.
+
+    Returns ``(v_next, spikes)``.
+    """
+    if mode.surrogate:
+        v = cfg.lif_beta * v + current
+        hard = (v >= cfg.lif_theta).astype(jnp.float32)
+        sur = jax.nn.sigmoid(cfg.surrogate_alpha * (v - cfg.lif_theta))
+        spikes = sur + jax.lax.stop_gradient(hard - sur)
+        # reset uses the hard spike (what the hardware does); gradient flows
+        # through the surrogate via the spikes term only.
+        v_next = v - cfg.lif_theta * jax.lax.stop_gradient(hard)
+        return v_next, spikes
+    if mode.use_pallas:
+        shape = v.shape
+        flat_v = v.reshape(-1, shape[-1])
+        flat_i = current.reshape(flat_v.shape)
+        v2, s = pallas_lif(flat_v, flat_i, beta=cfg.lif_beta, theta=cfg.lif_theta)
+        return v2.reshape(shape), s.reshape(shape)
+    return ref.lif_step(v, current, beta=cfg.lif_beta, theta=cfg.lif_theta)
+
+
+def ssa_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    u_score: jnp.ndarray,
+    u_attn: jnp.ndarray,
+    mode: StochasticMode,
+) -> jnp.ndarray:
+    """SSA step (eqs. 5-6) over ``[B, H, N, D_K]`` spike tensors.
+
+    Training mode chains two straight-through Bernoulli stages so gradients
+    reach Q/K/V through the score probabilities — the surrogate recipe the
+    paper inherits from [28].
+    """
+    b, h, n, d_k = q.shape
+    if mode.surrogate:
+        scores = jnp.matmul(q, jnp.swapaxes(k, -1, -2)) / d_k
+        s_hard = (u_score < scores).astype(jnp.float32)
+        s = scores + jax.lax.stop_gradient(s_hard - scores)
+        probs = jnp.matmul(s, v) / n
+        a_hard = (u_attn < probs).astype(jnp.float32)
+        return probs + jax.lax.stop_gradient(a_hard - probs)
+    if mode.use_pallas:
+        g = b * h
+        out = pallas_ssa(
+            q.reshape(g, n, d_k),
+            k.reshape(g, n, d_k),
+            v.reshape(g, n, d_k),
+            u_score.reshape(g, n, n),
+            u_attn.reshape(g, n, d_k),
+        )
+        return out.reshape(b, h, n, d_k)
+    return ref.ssa_attention_step(q, k, v, u_score, u_attn)
+
+
+# ---------------------------------------------------------------------------
+# parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, fan_in: int, fan_out: int) -> jnp.ndarray:
+    scale = jnp.sqrt(2.0 / fan_in)
+    return scale * jax.random.normal(key, (fan_in, fan_out), jnp.float32)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    """Initialize the full parameter pytree for any of the three archs.
+
+    All three families share the same parameter names/shapes so the INT8
+    quantizer, the weights serializer, and the energy model see a single
+    layout (the paper compares the three at matched dimensions).
+    """
+    params: Params = {}
+    n_keys = 4 + 6 * cfg.n_layers
+    keys = iter(jax.random.split(key, n_keys))
+    params["embed/w"] = _dense_init(next(keys), cfg.patch_dim, cfg.d_model)
+    params["embed/pos"] = 0.02 * jax.random.normal(
+        next(keys), (cfg.n_tokens, cfg.d_model), jnp.float32
+    )
+    for l in range(cfg.n_layers):
+        p = f"layer{l}/"
+        params[p + "wq"] = _dense_init(next(keys), cfg.d_model, cfg.d_model)
+        params[p + "wk"] = _dense_init(next(keys), cfg.d_model, cfg.d_model)
+        params[p + "wv"] = _dense_init(next(keys), cfg.d_model, cfg.d_model)
+        params[p + "wo"] = _dense_init(next(keys), cfg.d_model, cfg.d_model)
+        params[p + "w1"] = _dense_init(next(keys), cfg.d_model, cfg.d_mlp)
+        params[p + "w2"] = _dense_init(next(keys), cfg.d_mlp, cfg.d_model)
+    params["head/w"] = _dense_init(next(keys), cfg.d_model, cfg.n_classes)
+    return params
+
+
+def quantize_int8(params: Params) -> Params:
+    """Symmetric per-tensor INT8 quantize-dequantize (paper §IV: parameters
+    of all three implementations are INT8-quantized)."""
+    out = {}
+    for name, w in params.items():
+        amax = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+        scale = amax / 127.0
+        out[name] = jnp.clip(jnp.round(w / scale), -127, 127) * scale
+    return out
+
+
+# ---------------------------------------------------------------------------
+# heads reshape helpers
+# ---------------------------------------------------------------------------
+
+
+def split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """``[B, N, D] -> [B, H, N, D_K]``"""
+    b, n, d = x.shape
+    return x.reshape(b, n, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    """``[B, H, N, D_K] -> [B, N, D]``"""
+    b, h, n, d_k = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * d_k)

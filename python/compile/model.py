@@ -1,0 +1,207 @@
+"""L2 models: the spiking ViT family (SSA / Spikformer) and the ANN baseline.
+
+The spiking forward pass follows the paper's pipeline end to end:
+
+  image -> patchify -> Bernoulli rate coding (eq. 2, per time step)
+        -> spiking patch embedding (LIF)
+        -> [encoder layer] x L:
+             Q/K/V = LIF(E^t W_{q,k,v})          (eq. 4, as in [18])
+             SSA   = Bern(Bern(QK^T/D_K) V / N)  (eqs. 5-6)   | Spikformer:
+                                                  LIF(s * Q K^T V)
+             residual merge in the current domain -> LIF
+             spiking MLP with residual current   -> LIF
+        -> spike-count readout accumulated over T -> logits
+
+Time is driven by ``jax.lax.scan`` (compile-size-friendly; the unrolled
+variant is the L2 perf ablation, see EXPERIMENTS.md §Perf).  All
+stochasticity derives from a single ``seed`` scalar via ``fold_in``, so
+the Rust runtime fully controls reproducibility.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ARCH_ANN, ARCH_SPIKFORMER, ARCH_SSA, ModelConfig
+from .kernels import ref
+from .layers import Params, StochasticMode
+
+
+# ---------------------------------------------------------------------------
+# spiking forward
+# ---------------------------------------------------------------------------
+
+
+def _init_state(cfg: ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    """Zero membrane potentials for every LIF site in the network."""
+    n, d, m = cfg.n_tokens, cfg.d_model, cfg.d_mlp
+    state = {"embed": jnp.zeros((batch, n, d))}
+    for l in range(cfg.n_layers):
+        p = f"layer{l}/"
+        for name in ("q", "k", "v"):
+            state[p + name] = jnp.zeros((batch, n, d))
+        state[p + "attn"] = jnp.zeros((batch, n, d))  # spikformer re-binarizer
+        state[p + "res"] = jnp.zeros((batch, n, d))
+        state[p + "mlp1"] = jnp.zeros((batch, n, m))
+        state[p + "mlp2"] = jnp.zeros((batch, n, d))
+    return state
+
+
+def _spiking_step(
+    cfg: ModelConfig,
+    params: Params,
+    mode: StochasticMode,
+    patches: jnp.ndarray,  # [B, N, P] in [0,1]
+    state: Dict[str, jnp.ndarray],
+    key: jax.Array,
+) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+    """One network-wide time step; returns (new_state, per-class logits)."""
+    b, n, _ = patches.shape
+    h, d_k = cfg.n_heads, cfg.d_head
+    new_state = {}
+    key_in, key_attn = jax.random.split(key)
+
+    # --- input rate coding (eq. 2) + spiking patch embedding -------------
+    u_in = jax.random.uniform(key_in, patches.shape)
+    x_t = layers.bernoulli(patches, u_in, mode)  # {0,1} [B,N,P]
+    emb_cur = jnp.matmul(x_t, params["embed/w"]) + params["embed/pos"]
+    new_state["embed"], spikes = layers.lif(state["embed"], emb_cur, cfg, mode)
+
+    # --- encoder layers ----------------------------------------------------
+    for l in range(cfg.n_layers):
+        p = f"layer{l}/"
+        kq, kk = jax.random.split(jax.random.fold_in(key_attn, l))
+
+        # eq. (4): Q^t, K^t, V^t through per-projection LIF layers
+        new_state[p + "q"], q_s = layers.lif(
+            state[p + "q"], jnp.matmul(spikes, params[p + "wq"]), cfg, mode
+        )
+        new_state[p + "k"], k_s = layers.lif(
+            state[p + "k"], jnp.matmul(spikes, params[p + "wk"]), cfg, mode
+        )
+        new_state[p + "v"], v_s = layers.lif(
+            state[p + "v"], jnp.matmul(spikes, params[p + "wv"]), cfg, mode
+        )
+        qh = layers.split_heads(q_s, h)
+        kh = layers.split_heads(k_s, h)
+        vh = layers.split_heads(v_s, h)
+
+        if cfg.arch == ARCH_SSA:
+            u_score = jax.random.uniform(kq, (b, h, n, n))
+            u_attn = jax.random.uniform(kk, (b, h, n, d_k))
+            attn = layers.ssa_attention(qh, kh, vh, u_score, u_attn, mode)
+            attn_spikes = layers.merge_heads(attn)
+            new_state[p + "attn"] = state[p + "attn"]  # unused site
+        elif cfg.arch == ARCH_SPIKFORMER:
+            pre = ref.spikformer_attention_step(qh, kh, vh, cfg.spikformer_scale)
+            new_state[p + "attn"], attn_spikes = layers.lif(
+                state[p + "attn"], layers.merge_heads(pre), cfg, mode
+            )
+        else:  # pragma: no cover - guarded by config validation
+            raise ValueError(cfg.arch)
+
+        # residual merge in the current domain, then re-binarize (SEW-style)
+        res_cur = jnp.matmul(attn_spikes, params[p + "wo"]) + spikes
+        new_state[p + "res"], res_spikes = layers.lif(state[p + "res"], res_cur, cfg, mode)
+
+        # spiking MLP with residual current
+        new_state[p + "mlp1"], m1 = layers.lif(
+            state[p + "mlp1"], jnp.matmul(res_spikes, params[p + "w1"]), cfg, mode
+        )
+        mlp_cur = jnp.matmul(m1, params[p + "w2"]) + res_spikes
+        new_state[p + "mlp2"], spikes = layers.lif(state[p + "mlp2"], mlp_cur, cfg, mode)
+
+    # --- readout: mean-pooled spike counts -> class currents ---------------
+    pooled = jnp.mean(spikes, axis=1)  # [B, D]
+    logits_t = jnp.matmul(pooled, params["head/w"])
+    return new_state, logits_t
+
+
+def spiking_forward(
+    cfg: ModelConfig,
+    params: Params,
+    patches: jnp.ndarray,
+    seed: jnp.ndarray,
+    mode: StochasticMode,
+) -> jnp.ndarray:
+    """Run T time steps; logits are the time-average of per-step readouts."""
+    b = patches.shape[0]
+    state0 = _init_state(cfg, b)
+    base = jax.random.PRNGKey(seed)
+
+    def step(state, t):
+        key = jax.random.fold_in(base, t)
+        state, logits_t = _spiking_step(cfg, params, mode, patches, state, key)
+        return state, logits_t
+
+    _, logits_all = jax.lax.scan(step, state0, jnp.arange(cfg.time_steps))
+    return jnp.mean(logits_all, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# ANN baseline
+# ---------------------------------------------------------------------------
+
+
+def ann_forward(cfg: ModelConfig, params: Params, patches: jnp.ndarray) -> jnp.ndarray:
+    """Conventional ViT baseline (eq. 1 softmax attention, ReLU MLP).
+
+    Uses the same parameter layout; no normalization layers so that the
+    spiking and ANN families differ only in the attention/activation
+    mechanism under study (the Table-I comparison axis).
+    """
+    x = jnp.matmul(patches, params["embed/w"]) + params["embed/pos"]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}/"
+        q = layers.split_heads(jnp.matmul(x, params[p + "wq"]), cfg.n_heads)
+        k = layers.split_heads(jnp.matmul(x, params[p + "wk"]), cfg.n_heads)
+        v = layers.split_heads(jnp.matmul(x, params[p + "wv"]), cfg.n_heads)
+        attn = layers.merge_heads(ref.softmax_attention(q, k, v))
+        x = x + jnp.matmul(attn, params[p + "wo"])
+        hidden = jax.nn.relu(jnp.matmul(x, params[p + "w1"]))
+        x = x + jnp.matmul(hidden, params[p + "w2"])
+    pooled = jnp.mean(x, axis=1)
+    return jnp.matmul(pooled, params["head/w"])
+
+
+# ---------------------------------------------------------------------------
+# unified entry points
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    patches: jnp.ndarray,
+    seed: jnp.ndarray,
+    mode: StochasticMode,
+) -> jnp.ndarray:
+    """Dispatch on architecture; ``seed`` is ignored by the ANN."""
+    if cfg.arch == ARCH_ANN:
+        return ann_forward(cfg, params, patches)
+    return spiking_forward(cfg, params, patches, seed, mode)
+
+
+def make_inference_fn(cfg: ModelConfig, mode: StochasticMode = layers.AOT_MODE):
+    """Build the (params, images, seed) -> logits function lowered by aot.py.
+
+    Takes raw ``[B, S, S]`` images so the HLO graph owns patchification —
+    the Rust side feeds unprocessed pixels.
+    """
+    from .data import patchify  # numpy twin; jnp re-implementation below
+
+    del patchify
+
+    def fn(params: Params, images: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
+        b, s, _ = images.shape
+        p = cfg.patch_size
+        g = s // p
+        x = images.reshape(b, g, p, g, p).transpose(0, 1, 3, 2, 4)
+        patches = x.reshape(b, g * g, p * p)
+        return forward(cfg, params, patches, seed, mode)
+
+    return fn

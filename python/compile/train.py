@@ -1,0 +1,192 @@
+"""Surrogate-gradient training for the E1 (Table-I-shaped) experiment.
+
+Build-time only: this module never ships to the request path.  It trains
+the three ViT-Tiny families (ANN / Spikformer / SSA) on tiny-digits with a
+hand-rolled Adam (the offline image carries no optax) and reports accuracy
+at T in {4, 8, 10} for the spiking families — the Table I sweep.
+
+The spiking nets are trained once at the largest T and evaluated at the
+smaller horizons: rate-coded SNNs degrade gracefully as the Bernoulli
+estimate gets fewer samples, which is exactly the accuracy-vs-T shape
+Table I reports.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterator, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from .config import ARCH_ANN, ModelConfig, TrainConfig
+from .layers import EVAL_MODE, TRAIN_MODE, Params, init_params, quantize_int8
+
+
+# ---------------------------------------------------------------------------
+# optimizer (Adam + decoupled weight decay)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params: Params) -> Dict:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(
+    params: Params,
+    grads: Params,
+    state: Dict,
+    lr: float,
+    weight_decay: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> Tuple[Params, Dict]:
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    bc1 = 1.0 - b1**tf
+    bc2 = 1.0 - b2**tf
+
+    def upd(p, m_, v_):
+        step = lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        return p - step - lr * weight_decay * p
+
+    return jax.tree_util.tree_map(upd, params, m, v), {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# loss / metrics
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Jitted (params, opt, patches, labels, seed) -> (params, opt, loss)."""
+
+    def loss_fn(params, patches, labels, seed):
+        logits = model_mod.forward(cfg, params, patches, seed, TRAIN_MODE)
+        return cross_entropy(logits, labels)
+
+    total = jnp.float32(max(tcfg.steps, 1))
+
+    @jax.jit
+    def step(params, opt, patches, labels, seed):
+        loss, grads = jax.value_and_grad(loss_fn)(params, patches, labels, seed)
+        # cosine decay to 10% of the base LR over the run
+        frac = jnp.minimum(opt["t"].astype(jnp.float32) / total, 1.0)
+        lr = tcfg.lr * (0.1 + 0.9 * 0.5 * (1.0 + jnp.cos(jnp.pi * frac)))
+        params, opt = adam_update(params, grads, opt, lr, tcfg.weight_decay)
+        return params, opt, loss
+
+    return step
+
+
+def make_eval_fn(cfg: ModelConfig):
+    """Jitted batch-accuracy in hard-sampling eval mode."""
+
+    @jax.jit
+    def run(params, patches, labels, seed):
+        logits = model_mod.forward(cfg, params, patches, seed, EVAL_MODE)
+        return jnp.sum(jnp.argmax(logits, axis=-1) == labels)
+
+    return run
+
+
+def evaluate(
+    cfg: ModelConfig, params: Params, patches: np.ndarray, labels: np.ndarray, batch: int, seed: int = 1234
+) -> float:
+    run = make_eval_fn(cfg)
+    correct = 0
+    n = len(labels)
+    batch = min(batch, n)
+    for i in range(0, n - n % batch, batch):
+        correct += int(
+            run(
+                params,
+                jnp.asarray(patches[i : i + batch]),
+                jnp.asarray(labels[i : i + batch]),
+                jnp.uint32(seed + i),
+            )
+        )
+    return correct / (n - n % batch)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def batches(
+    x: np.ndarray, y: np.ndarray, batch: int, seed: int
+) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    n = len(y)
+    while True:
+        idx = rng.permutation(n)
+        for i in range(0, n - n % batch, batch):
+            sel = idx[i : i + batch]
+            yield x[sel], y[sel]
+
+
+# ---------------------------------------------------------------------------
+# top-level training entry
+# ---------------------------------------------------------------------------
+
+
+def train_model(
+    cfg: ModelConfig, tcfg: TrainConfig, xtr: np.ndarray, ytr: np.ndarray,
+    xte: np.ndarray, yte: np.ndarray, log: List[str],
+) -> Tuple[Params, List[Tuple[int, float]]]:
+    """Train one architecture; returns (params, loss_curve)."""
+    patches_tr = data_mod.patchify(xtr, cfg.patch_size)
+    patches_te = data_mod.patchify(xte, cfg.patch_size)
+    params = init_params(cfg, jax.random.PRNGKey(tcfg.seed))
+    opt = adam_init(params)
+    step_fn = make_train_step(cfg, tcfg)
+    it = batches(patches_tr, ytr, tcfg.batch_size, tcfg.seed)
+
+    curve: List[Tuple[int, float]] = []
+    t0 = time.time()
+    for step in range(1, tcfg.steps + 1):
+        bx, by = next(it)
+        params, opt, loss = step_fn(
+            params, opt, jnp.asarray(bx), jnp.asarray(by), jnp.uint32(step)
+        )
+        if step % 20 == 0 or step == 1:
+            curve.append((step, float(loss)))
+        if step % tcfg.eval_every == 0 or step == tcfg.steps:
+            acc = evaluate(cfg, params, patches_te, yte, tcfg.batch_size)
+            msg = (
+                f"[{cfg.variant_name()}] step {step:4d} loss {float(loss):.4f} "
+                f"test-acc {acc * 100:.2f}% ({time.time() - t0:.0f}s)"
+            )
+            print(msg, flush=True)
+            log.append(msg)
+    return params, curve
+
+
+def accuracy_sweep(
+    cfg: ModelConfig, params: Params, xte: np.ndarray, yte: np.ndarray,
+    batch: int, t_values: Tuple[int, ...],
+) -> Dict[int, float]:
+    """Evaluate a trained spiking model at several time horizons (Table I)."""
+    patches = data_mod.patchify(xte, cfg.patch_size)
+    out = {}
+    for t in t_values:
+        out[t] = evaluate(cfg.with_time_steps(t), params, patches, yte, batch)
+    return out
+
+
+def maybe_quantize(params: Params, tcfg: TrainConfig) -> Params:
+    return quantize_int8(params) if tcfg.quantize_int8 else params

@@ -1,0 +1,80 @@
+"""AOT serialization formats + lowering: weights/golden binary layouts,
+manifest schema, and HLO-text lowering of a tiny variant."""
+
+import json
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot
+from compile.config import vit_tiny
+from compile.layers import init_params
+
+
+def test_weights_file_layout(tmp_path):
+    params = {"b": jnp.ones((2, 3)), "a": jnp.zeros((4,))}
+    path = tmp_path / "w.bin"
+    names = aot.write_weights(str(path), params)
+    assert names == ["a", "b"]  # sorted order is the ABI
+    raw = path.read_bytes()
+    magic, version, count = struct.unpack_from("<III", raw, 0)
+    assert magic == aot.WEIGHTS_MAGIC and version == 1 and count == 2
+    # first record is "a": name_len=1, 'a', ndim=1, dim=4, 4 f32
+    off = 12
+    (name_len,) = struct.unpack_from("<I", raw, off)
+    assert name_len == 1 and raw[off + 4 : off + 5] == b"a"
+
+
+def test_golden_file_layout(tmp_path):
+    images = np.random.default_rng(0).random((2, 16, 16)).astype(np.float32)
+    logits = np.arange(20, dtype=np.float32).reshape(2, 10)
+    path = tmp_path / "g.bin"
+    aot.write_golden(str(path), logits, images, seed=99)
+    raw = path.read_bytes()
+    magic, version, b, s, c, seed = struct.unpack_from("<IIIIII", raw, 0)
+    assert (magic, version, b, s, c, seed) == (0x474F4C44, 1, 2, 16, 10, 99)
+    tail = np.frombuffer(raw, dtype="<f4", offset=24 + 2 * 16 * 16 * 4)
+    np.testing.assert_array_equal(tail.reshape(2, 10), logits)
+
+
+def test_lower_variant_produces_parseable_hlo():
+    cfg = vit_tiny("ssa", 2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    hlo = aot.lower_variant(cfg, params, batch=1)
+    # HLO text module header + an entry computation with our input count
+    assert hlo.startswith("HloModule"), hlo[:64]
+    assert "ENTRY" in hlo
+    # params (sorted) + images + seed parameters all appear
+    n_inputs = len(params) + 2
+    assert hlo.count("parameter(") >= n_inputs
+
+
+def test_lowered_ann_has_no_rng_ops():
+    """The ANN graph must be seed-independent: no rng/bitcast-threefry."""
+    cfg = vit_tiny("ann")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    hlo = aot.lower_variant(cfg, params, batch=1)
+    assert "rng" not in hlo.lower() or "rng-get-and-update-state" not in hlo
+
+
+def test_manifest_schema_quick(tmp_path):
+    """Run the full (quick) build end-to-end and validate the manifest."""
+    from compile.config import TrainConfig
+
+    out = tmp_path / "artifacts"
+    tcfg = TrainConfig(steps=2, snn_steps=2, n_train=64, n_test=32, eval_every=100)
+    aot.build(str(out), tcfg)
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["image_size"] == 16
+    names = {v["name"] for v in manifest["variants"]}
+    assert {"ann", "spikformer_t10", "ssa_t4", "ssa_t8", "ssa_t10", "ssa_t10_b1"} <= names
+    for v in manifest["variants"]:
+        assert (out / v["hlo"]).exists(), v["name"]
+        assert (out / v["weights"]).exists()
+        if v["golden"]:
+            assert (out / v["golden"]).exists()
+        assert v["param_names"] == sorted(v["param_names"])
+    assert (out / "accuracy.json").exists()
+    assert (out / "dataset_test.bin").exists()

@@ -1,0 +1,59 @@
+"""L1 correctness: Bernoulli encoder kernel vs oracle + rate statistics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.bernoulli import bernoulli_encode
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    g=st.integers(1, 32),
+    f=st.sampled_from([1, 2, 16, 256]),
+)
+def test_kernel_matches_ref(seed, g, f):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.uniform(k1, (g, f))
+    u = jax.random.uniform(k2, (g, f))
+    np.testing.assert_array_equal(
+        np.asarray(bernoulli_encode(x, u)), np.asarray(ref.bernoulli_encode(x, u))
+    )
+
+
+def test_rate_statistics():
+    """Empirical spike rate over T draws converges to the encoded value —
+    the defining property of rate coding (paper eq. (2))."""
+    x = jnp.array([[0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 1.0]])
+    t = 8000
+    key = jax.random.PRNGKey(0)
+    total = np.zeros_like(np.asarray(x))
+    for i in range(t):
+        key, sub = jax.random.split(key)
+        u = jax.random.uniform(sub, x.shape)
+        total += np.asarray(ref.bernoulli_encode(x, u))
+    rate = total / t
+    np.testing.assert_allclose(rate, np.asarray(x), atol=3 * 0.5 / np.sqrt(t) + 5e-3)
+
+
+def test_endpoints_deterministic():
+    """x=0 never fires; x=1 always fires (u drawn from [0,1))."""
+    u = jax.random.uniform(jax.random.PRNGKey(1), (4, 64))
+    zeros = bernoulli_encode(jnp.zeros((4, 64)), u)
+    ones = bernoulli_encode(jnp.ones((4, 64)), u)
+    assert float(jnp.sum(zeros)) == 0.0
+    assert float(jnp.sum(ones)) == 4 * 64
+
+
+def test_sc_multiplication_property():
+    """Eq. (3): AND of two independent Bernoulli streams multiplies rates."""
+    p1, p2, t = 0.6, 0.7, 20000
+    key = jax.random.PRNGKey(2)
+    k1, k2 = jax.random.split(key)
+    a = jax.random.bernoulli(k1, p1, (t,)).astype(jnp.float32)
+    b = jax.random.bernoulli(k2, p2, (t,)).astype(jnp.float32)
+    rate = float(jnp.mean(a * b))  # AND of {0,1} == product
+    assert abs(rate - p1 * p2) < 3 * 0.5 / np.sqrt(t) + 5e-3

@@ -1,0 +1,74 @@
+"""tiny-digits dataset: determinism, normalization, patchify layout."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import data
+
+
+def test_split_is_deterministic():
+    x1, y1 = data.make_split(64, seed=7)
+    x2, y2 = data.make_split(64, seed=7)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_different_seeds_differ():
+    x1, _ = data.make_split(64, seed=1)
+    x2, _ = data.make_split(64, seed=2)
+    assert not np.array_equal(x1, x2)
+
+
+def test_values_normalized_and_balanced():
+    x, y = data.make_split(200, seed=3)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    counts = np.bincount(y, minlength=10)
+    assert counts.min() >= 200 // 10 - 1
+
+
+def test_canonical_split_seeds_are_fixed():
+    xtr, _, xte, _ = data.train_test(32, 32)
+    xtr2, _, xte2, _ = data.train_test(32, 32)
+    np.testing.assert_array_equal(xtr, xtr2)
+    np.testing.assert_array_equal(xte, xte2)
+    assert not np.array_equal(xtr, xte)
+
+
+def test_glyphs_are_distinguishable():
+    """Mean images per class should differ pairwise — the task is 10-way."""
+    x, y = data.make_split(500, seed=5)
+    means = np.stack([x[y == c].mean(axis=0) for c in range(10)])
+    for a in range(10):
+        for b in range(a + 1, 10):
+            assert np.abs(means[a] - means[b]).mean() > 0.01, (a, b)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 8), s=st.sampled_from([8, 16]), p=st.sampled_from([2, 4]))
+def test_patchify_shape_and_content(b, s, p):
+    imgs = np.arange(b * s * s, dtype=np.float32).reshape(b, s, s)
+    patches = data.patchify(imgs, p)
+    g = s // p
+    assert patches.shape == (b, g * g, p * p)
+    # first patch of first image == top-left pxp block, row-major
+    np.testing.assert_array_equal(
+        patches[0, 0], imgs[0, :p, :p].reshape(-1)
+    )
+    # last patch == bottom-right block
+    np.testing.assert_array_equal(
+        patches[0, -1], imgs[0, s - p :, s - p :].reshape(-1)
+    )
+
+
+def test_dataset_bin_roundtrip(tmp_path):
+    import struct
+
+    x, y = data.make_split(5, seed=9)
+    path = tmp_path / "ds.bin"
+    data.write_dataset_bin(str(path), x, y)
+    raw = path.read_bytes()
+    magic, version, n, s = struct.unpack_from("<IIII", raw, 0)
+    assert magic == 0x534E4454 and version == 1 and n == 5 and s == 16
+    # first image round-trips
+    first = np.frombuffer(raw, dtype="<f4", count=s * s, offset=16)
+    np.testing.assert_allclose(first.reshape(s, s), x[0])

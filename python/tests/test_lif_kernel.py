@@ -1,0 +1,69 @@
+"""L1 correctness: Pallas LIF kernel vs oracle, plus LIF invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.lif import lif_step
+
+
+def _inputs(seed, g, f):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    v = jax.random.uniform(k1, (g, f), minval=-1.0, maxval=1.0)
+    cur = jax.random.normal(k2, (g, f))
+    return v, cur
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    g=st.integers(1, 16),
+    f=st.sampled_from([1, 3, 16, 64, 128]),
+    beta=st.sampled_from([0.0, 0.5, 0.9, 1.0]),
+    theta=st.sampled_from([0.5, 1.0, 2.0]),
+)
+def test_kernel_matches_ref(seed, g, f, beta, theta):
+    """Sweep shapes/params: spikes exact away from the threshold knife-edge,
+    membrane within 1 ULP (XLA may fuse beta*v+I into an fma)."""
+    v, cur = _inputs(seed, g, f)
+    v1, s1 = lif_step(v, cur, beta=beta, theta=theta)
+    v2, s2 = ref.lif_step(v, cur, beta=beta, theta=theta)
+    v1, s1, v2, s2 = map(np.asarray, (v1, s1, v2, s2))
+    np.testing.assert_allclose(v1, v2, atol=1e-5)
+    pre = beta * np.asarray(v) + np.asarray(cur)
+    safe = np.abs(pre - theta) > 1e-5
+    np.testing.assert_array_equal(s1[safe], s2[safe])
+
+
+def test_spikes_are_binary_and_reset_subtracts():
+    v, cur = _inputs(0, 8, 32)
+    v1, s1 = lif_step(v, cur, beta=0.9, theta=1.0)
+    s = np.asarray(s1)
+    assert set(np.unique(s)).issubset({0.0, 1.0})
+    # where a spike fired, post-reset membrane dropped by exactly theta
+    pre = 0.9 * np.asarray(v) + np.asarray(cur)
+    np.testing.assert_allclose(np.asarray(v1), pre - 1.0 * s, atol=1e-5)
+
+
+def test_no_input_no_spikes_with_leak():
+    """Sub-threshold membranes decay toward zero and never fire."""
+    v = jnp.full((4, 4), 0.5)
+    zero = jnp.zeros((4, 4))
+    for _ in range(10):
+        v, s = lif_step(v, zero, beta=0.5, theta=1.0)
+        assert float(jnp.sum(s)) == 0.0
+    assert float(jnp.max(jnp.abs(v))) < 1e-3
+
+
+def test_constant_drive_fires_at_rate():
+    """DC current I with beta=0 fires every ceil(theta/I) steps on average:
+    with I=0.5, theta=1.0 the neuron spikes exactly every 2nd step."""
+    v = jnp.zeros((1, 1))
+    cur = jnp.full((1, 1), 0.5)
+    fired = []
+    for _ in range(10):
+        v, s = lif_step(v, cur, beta=1.0, theta=1.0)
+        fired.append(int(s[0, 0]))
+    assert fired == [0, 1] * 5

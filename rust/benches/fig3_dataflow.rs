@@ -1,0 +1,35 @@
+//! Bench: E6 (Fig. 3) — cycle-accurate simulator throughput across array
+//! sizes, plus the rendered dataflow schedule for the demo geometry.
+
+use ssa_repro::bench::BenchSet;
+use ssa_repro::config::{AttnConfig, PrngSharing};
+use ssa_repro::experiments::figures;
+use ssa_repro::hw::{SauArray, SpikeStreams};
+
+fn main() {
+    println!("{}", figures::fig3_dataflow(AttnConfig::vit_tiny().with_time_steps(3)));
+
+    let mut set = BenchSet::new("fig3_dataflow — simulator throughput");
+    set.start();
+    for (n, d_k) in [(16usize, 16usize), (32, 32), (64, 48)] {
+        let cfg = AttnConfig {
+            n_tokens: n,
+            d_model: d_k,
+            n_heads: 1,
+            d_head: d_k,
+            time_steps: 10,
+        };
+        let streams = SpikeStreams::from_rates(&cfg, (0.5, 0.5, 0.5), 1);
+        let cycles = ((cfg.time_steps + 1) * cfg.d_head) as f64;
+        let mut arr = SauArray::new(cfg, PrngSharing::PerRow, 2);
+        set.bench_units(
+            &format!("simulate N={n} D_K={d_k} T=10 (cycles/s)"),
+            Some(cycles),
+            || {
+                arr.reset_datapath();
+                std::hint::black_box(arr.run(&streams.q, &streams.k, &streams.v, None));
+            },
+        );
+    }
+    set.finish();
+}

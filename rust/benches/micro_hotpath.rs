@@ -1,0 +1,78 @@
+//! Microbenchmarks of the L3 hot paths (§Perf): packed AND+popcount,
+//! one SSA software step, LFSR word generation, Bernoulli comparator,
+//! f32 matmul, and a full cycle-accurate array run.
+
+use ssa_repro::attention::ssa::{bern_compare, SsaAttention};
+use ssa_repro::bench::BenchSet;
+use ssa_repro::config::{AttnConfig, PrngSharing};
+use ssa_repro::hw::{SauArray, SpikeStreams};
+use ssa_repro::tensor::Tensor;
+use ssa_repro::util::bitpack::BitMatrix;
+use ssa_repro::util::rng::{Lfsr16, Xoshiro256};
+
+fn main() {
+    let mut set = BenchSet::new("micro_hotpath");
+    set.start();
+
+    // packed AND+popcount — the CPU analogue of the SAU AND gates
+    let mut rng = Xoshiro256::new(1);
+    let vals = |rng: &mut Xoshiro256, n: usize| -> Vec<f32> {
+        (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect()
+    };
+    let a = BitMatrix::from_f01(64, 384, &vals(&mut rng, 64 * 384));
+    let b = BitMatrix::from_f01(64, 384, &vals(&mut rng, 64 * 384));
+    set.bench_units("and_popcount 64x64 pairs (D=384)", Some((64 * 64) as f64), || {
+        let mut acc = 0u32;
+        for i in 0..64 {
+            for j in 0..64 {
+                acc = acc.wrapping_add(a.and_popcount(i, &b, j));
+            }
+        }
+        std::hint::black_box(acc);
+    });
+
+    // one software SSA step at paper head geometry
+    let cfg = AttnConfig::vit_small_paper();
+    let streams = SpikeStreams::from_rates(&cfg, (0.5, 0.5, 0.5), 2);
+    let mut ssa = SsaAttention::new(cfg, PrngSharing::PerRow, 3);
+    set.bench("SsaAttention::step (N=64, D_K=48)", || {
+        std::hint::black_box(ssa.step(&streams.q[0], &streams.k[0], &streams.v[0]));
+    });
+
+    // LFSR word generation
+    let mut lfsr = Lfsr16::new(0xACE1);
+    set.bench_units("Lfsr16::next_u16 x 4096", Some(4096.0), || {
+        let mut acc = 0u16;
+        for _ in 0..4096 {
+            acc ^= lfsr.next_u16();
+        }
+        std::hint::black_box(acc);
+    });
+
+    // Bernoulli comparator
+    set.bench_units("bern_compare x 4096 (m=48)", Some(4096.0), || {
+        let mut acc = false;
+        for w in 0..4096u16 {
+            acc ^= bern_compare(w, (w % 49) as u32, 48);
+        }
+        std::hint::black_box(acc);
+    });
+
+    // f32 matmul golden path
+    let m1 = Tensor::from_vec(&[64, 384], vals(&mut rng, 64 * 384));
+    let m2 = Tensor::from_vec(&[384, 64], vals(&mut rng, 384 * 64));
+    set.bench("Tensor::matmul 64x384x64", || {
+        std::hint::black_box(m1.matmul(&m2));
+    });
+
+    // full cycle-accurate run, demo geometry
+    let demo = AttnConfig::vit_tiny().with_time_steps(10);
+    let dstreams = SpikeStreams::from_rates(&demo, (0.5, 0.5, 0.5), 4);
+    let mut arr = SauArray::new(demo, PrngSharing::PerRow, 5);
+    set.bench("SauArray::run (N=16, D_K=16, T=10)", || {
+        arr.reset_datapath();
+        std::hint::black_box(arr.run(&dstreams.q, &dstreams.k, &dstreams.v, None));
+    });
+
+    set.finish();
+}

@@ -1,0 +1,48 @@
+//! Bench: E1 (Table I) — print the trained accuracy sweep and measure the
+//! Rust-side PJRT inference throughput that the serving stack delivers per
+//! variant.  Skips gracefully when artifacts are missing (e.g. a bench run
+//! before `make artifacts`).
+
+use std::path::Path;
+
+use ssa_repro::bench::BenchSet;
+use ssa_repro::experiments::table1;
+use ssa_repro::runtime::{Dataset, Manifest, Runtime};
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("table1_accuracy: artifacts/ missing — run `make artifacts` first (skipping)");
+        return;
+    }
+
+    match table1::run(dir, None) {
+        Ok(s) => println!("{s}"),
+        Err(e) => {
+            println!("table1_accuracy: cannot load accuracy table: {e:#} (skipping)");
+            return;
+        }
+    }
+
+    let manifest = Manifest::load(dir).expect("manifest");
+    let ds = Dataset::load(&manifest.dataset_test).expect("dataset");
+    let runtime = Runtime::cpu().expect("pjrt");
+
+    let mut set = BenchSet::new("table1_accuracy — PJRT inference throughput");
+    set.start();
+    for name in ["ann", "spikformer_t10", "ssa_t4", "ssa_t10", "ssa_t10_b1"] {
+        let Ok(variant) = manifest.variant(name) else { continue };
+        let model = runtime.load(variant).expect("load variant");
+        let images = ds.batch(0, variant.batch).to_vec();
+        let mut seed = 0u32;
+        set.bench_units(
+            &format!("infer {name} (batch={})", variant.batch),
+            Some(variant.batch as f64),
+            || {
+                seed = seed.wrapping_add(1);
+                std::hint::black_box(model.infer(&images, seed).expect("infer"));
+            },
+        );
+    }
+    set.finish();
+}

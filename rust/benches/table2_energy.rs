@@ -1,0 +1,47 @@
+//! Bench: regenerate Table II (E2) and sweep the energy model across the
+//! token-count range the paper targets (N = 16..128), reporting how the
+//! SSA advantage scales.
+
+use ssa_repro::bench::BenchSet;
+use ssa_repro::config::AttnConfig;
+use ssa_repro::energy::{ActivityFactors, TableTwo, TechEnergies};
+
+fn main() {
+    let mut set = BenchSet::new("table2_energy (E2)");
+    set.start();
+
+    // the paper row
+    println!("{}", ssa_repro::experiments::table2::run());
+
+    // N sweep: the edge-Transformer range called out in §III-C
+    println!("N sweep (D=384, H=8, D_K=48, T=10):");
+    println!("|  N  | ANN total (uJ) | SSA total (uJ) | gain |");
+    for n in [16usize, 32, 64, 128] {
+        let cfg = AttnConfig {
+            n_tokens: n,
+            d_model: 384,
+            n_heads: 8,
+            d_head: 48,
+            time_steps: 10,
+        };
+        let t2 =
+            TableTwo::compute(&cfg, &ActivityFactors::default(), &TechEnergies::cmos_45nm());
+        println!(
+            "| {n:>3} | {:>14.2} | {:>14.2} | {:>3.1}x |",
+            t2.ann.total_uj(),
+            t2.ssa.total_uj(),
+            t2.ann.total_uj() / t2.ssa.total_uj()
+        );
+    }
+
+    // model-evaluation cost itself (it's on experiment hot paths)
+    let cfg = AttnConfig::vit_small_paper();
+    set.bench("TableTwo::compute (paper geometry)", || {
+        std::hint::black_box(TableTwo::compute(
+            &cfg,
+            &ActivityFactors::default(),
+            &TechEnergies::cmos_45nm(),
+        ));
+    });
+    set.finish();
+}

@@ -1,0 +1,72 @@
+//! Bench: regenerate Table III (E3) — the analytic device rows plus real
+//! wall-clock measurements of the Rust golden models on this host (the
+//! ground truth for the CPU column of the device model).
+
+use ssa_repro::bench::BenchSet;
+use ssa_repro::config::{AttnConfig, LifConfig, PrngSharing};
+use ssa_repro::attention::spikformer::SpikformerAttention;
+use ssa_repro::attention::ssa::SsaAttention;
+use ssa_repro::attention::softmax_attention;
+use ssa_repro::hw::SpikeStreams;
+use ssa_repro::tensor::Tensor;
+use ssa_repro::util::rng::Xoshiro256;
+
+fn main() {
+    println!("{}", ssa_repro::experiments::table3::run(false).expect("table3"));
+
+    let cfg = AttnConfig::vit_small_paper();
+    let mut set = BenchSet::new("table3_latency — measured on this host (E3 ground truth)");
+    set.start();
+
+    // ANN attention block (all 8 heads, softmax fp32)
+    let mut rng = Xoshiro256::new(1);
+    let mk = |rng: &mut Xoshiro256| {
+        let n = cfg.n_tokens * cfg.d_head;
+        Tensor::from_vec(
+            &[cfg.n_tokens, cfg.d_head],
+            (0..n).map(|_| rng.next_normal() as f32).collect(),
+        )
+    };
+    let heads: Vec<(Tensor, Tensor, Tensor)> =
+        (0..cfg.n_heads).map(|_| (mk(&mut rng), mk(&mut rng), mk(&mut rng))).collect();
+    set.bench_units("ANN attention block (8 heads, fp32)", Some(1.0), || {
+        for (q, k, v) in &heads {
+            std::hint::black_box(softmax_attention(q, k, v));
+        }
+    });
+
+    // SSA software block (packed bits, T=10, 8 heads)
+    let streams: Vec<SpikeStreams> = (0..cfg.n_heads)
+        .map(|h| SpikeStreams::from_rates(&cfg, (0.5, 0.5, 0.5), 100 + h as u64))
+        .collect();
+    let mut ssa_heads: Vec<SsaAttention> = (0..cfg.n_heads)
+        .map(|h| SsaAttention::new(cfg, PrngSharing::PerRow, 200 + h as u64))
+        .collect();
+    set.bench_units("SSA software block (8 heads, T=10, packed)", Some(1.0), || {
+        for (h, ssa) in ssa_heads.iter_mut().enumerate() {
+            let s = &streams[h];
+            for t in 0..cfg.time_steps {
+                std::hint::black_box(ssa.step(&s.q[t], &s.k[t], &s.v[t]));
+            }
+        }
+    });
+
+    // Spikformer software block
+    let mut sf_heads: Vec<SpikformerAttention> = (0..cfg.n_heads)
+        .map(|_| SpikformerAttention::new(cfg, 0.25, LifConfig::default()))
+        .collect();
+    set.bench_units("Spikformer software block (8 heads, T=10)", Some(1.0), || {
+        for (h, sf) in sf_heads.iter_mut().enumerate() {
+            let s = &streams[h];
+            for t in 0..cfg.time_steps {
+                std::hint::black_box(sf.step(&s.q[t], &s.k[t], &s.v[t]));
+            }
+        }
+    });
+
+    set.finish();
+    println!(
+        "\nNote: the paper's CPU (i7-12850HX) vs this container differ; the device model \
+         reproduces the paper's ratios, the numbers above are this host's ground truth."
+    );
+}

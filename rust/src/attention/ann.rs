@@ -1,0 +1,97 @@
+//! Conventional ANN attention baselines (paper eq. (1) and the linear
+//! variant [26]) — the fp32 golden models that the Table III CPU rows
+//! measure and the SSA expectation tests compare against.
+
+use crate::tensor::Tensor;
+
+/// Scaled dot-product attention with softmax (eq. 1): `softmax(QK^T/√D_K)V`.
+///
+/// `q, k, v: [N, D_K]` (one head); returns `[N, D_K]`.
+pub fn softmax_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let d_k = q.shape()[1] as f32;
+    let scores = q.matmul(&k.t()).scale(1.0 / d_k.sqrt());
+    scores.softmax_rows().matmul(v)
+}
+
+/// Softmax-free linear attention [26]: `(QK^T/D_K) V / N` — the quantity
+/// SSA estimates stochastically (E4).
+pub fn linear_attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let n = q.shape()[0] as f32;
+    let d_k = q.shape()[1] as f32;
+    q.matmul(&k.t()).scale(1.0 / d_k).matmul(v).scale(1.0 / n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn randn(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.next_normal() as f32).collect())
+    }
+
+    #[test]
+    fn softmax_attention_rows_are_convex_combinations() {
+        let q = randn(&[4, 8], 1);
+        let k = randn(&[4, 8], 2);
+        let v = randn(&[4, 8], 3);
+        let out = softmax_attention(&q, &k, &v);
+        // every output row must lie inside the convex hull of V rows:
+        // check min/max bounds per column.
+        for d in 0..8 {
+            let (mut vmin, mut vmax) = (f32::INFINITY, f32::NEG_INFINITY);
+            for j in 0..4 {
+                vmin = vmin.min(v.at2(j, d));
+                vmax = vmax.max(v.at2(j, d));
+            }
+            for i in 0..4 {
+                let o = out.at2(i, d);
+                assert!(o >= vmin - 1e-5 && o <= vmax + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_keys_average_values() {
+        // If all scores are equal, softmax attention averages V rows.
+        let q = Tensor::zeros(&[3, 4]);
+        let k = randn(&[3, 4], 4);
+        let v = randn(&[3, 4], 5);
+        let out = softmax_attention(&q, &k, &v);
+        for d in 0..4 {
+            let avg: f32 = (0..3).map(|j| v.at2(j, d)).sum::<f32>() / 3.0;
+            for i in 0..3 {
+                assert!((out.at2(i, d) - avg).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn linear_attention_on_binary_matches_ssa_expectation() {
+        use crate::attention::ssa::ssa_expectation;
+        use crate::util::bitpack::BitMatrix;
+        let mut rng = Xoshiro256::new(9);
+        let mut vals = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect()
+        };
+        let (n, d_k) = (8, 16);
+        let qv = vals(n * d_k);
+        let kv = vals(n * d_k);
+        let vv = vals(n * d_k);
+        let lin = linear_attention(
+            &Tensor::from_vec(&[n, d_k], qv.clone()),
+            &Tensor::from_vec(&[n, d_k], kv.clone()),
+            &Tensor::from_vec(&[n, d_k], vv.clone()),
+        );
+        let exp = ssa_expectation(
+            &BitMatrix::from_f01(n, d_k, &qv),
+            &BitMatrix::from_f01(n, d_k, &kv),
+            &BitMatrix::from_f01(n, d_k, &vv),
+        );
+        for (a, b) in lin.data().iter().zip(&exp) {
+            assert!((*a as f64 - b).abs() < 1e-5);
+        }
+    }
+}

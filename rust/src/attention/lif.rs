@@ -1,0 +1,98 @@
+//! Leaky integrate-and-fire neuron layer (paper §II-C), Rust twin of
+//! `python/compile/kernels/lif.py`: `v' = beta*v + I`, fire at `theta`,
+//! soft reset by subtraction.
+
+use crate::config::LifConfig;
+use crate::tensor::Tensor;
+use crate::util::bitpack::BitMatrix;
+
+/// A sheet of LIF neurons with persistent membrane state.
+#[derive(Clone, Debug)]
+pub struct LifLayer {
+    cfg: LifConfig,
+    rows: usize,
+    cols: usize,
+    v: Vec<f32>,
+}
+
+impl LifLayer {
+    pub fn new(rows: usize, cols: usize, cfg: LifConfig) -> Self {
+        Self { cfg, rows, cols, v: vec![0.0; rows * cols] }
+    }
+
+    pub fn reset(&mut self) {
+        self.v.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    pub fn membrane(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Advance one step with input currents `[rows, cols]`; returns spikes.
+    pub fn step(&mut self, current: &Tensor) -> BitMatrix {
+        assert_eq!(current.shape(), &[self.rows, self.cols]);
+        let mut spikes = BitMatrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let idx = r * self.cols + c;
+                let mut v = self.cfg.beta * self.v[idx] + current.at2(r, c);
+                if v >= self.cfg.theta {
+                    spikes.set(r, c, true);
+                    v -= self.cfg.theta;
+                }
+                self.v[idx] = v;
+            }
+        }
+        spikes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(beta: f32, theta: f32) -> LifLayer {
+        LifLayer::new(1, 1, LifConfig { beta, theta })
+    }
+
+    #[test]
+    fn constant_drive_half_rate() {
+        // I=0.5, theta=1, beta=1: fires exactly every 2nd step.
+        let mut l = layer(1.0, 1.0);
+        let i = Tensor::full(&[1, 1], 0.5);
+        let fired: Vec<bool> = (0..10).map(|_| l.step(&i).get(0, 0)).collect();
+        assert_eq!(fired, [false, true].repeat(5));
+    }
+
+    #[test]
+    fn leak_prevents_firing() {
+        let mut l = layer(0.5, 1.0);
+        let i = Tensor::full(&[1, 1], 0.4);
+        for _ in 0..50 {
+            assert!(!l.step(&i).get(0, 0)); // v converges to 0.8 < theta
+        }
+        assert!((l.membrane()[0] - 0.8).abs() < 1e-3);
+    }
+
+    #[test]
+    fn strong_input_fires_immediately_and_resets_by_subtraction() {
+        let mut l = layer(0.9, 1.0);
+        let i = Tensor::full(&[1, 1], 1.7);
+        let s = l.step(&i);
+        assert!(s.get(0, 0));
+        assert!((l.membrane()[0] - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matches_python_oracle_semantics() {
+        // Mirrors kernels/ref.lif_step: v'=beta*v+I, spike, subtract.
+        let mut l = LifLayer::new(2, 2, LifConfig { beta: 0.9, theta: 1.0 });
+        let i1 = Tensor::from_vec(&[2, 2], vec![0.6, 1.2, -0.3, 0.0]);
+        let s1 = l.step(&i1);
+        assert_eq!(s1.to_f01(), vec![0.0, 1.0, 0.0, 0.0]);
+        let expect_v = [0.6, 0.2, -0.3, 0.0];
+        for (v, e) in l.membrane().iter().zip(expect_v) {
+            assert!((v - e).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Software golden models of the three attention families compared in the
+//! paper: ANN (eq. 1 / linear [26]), Spikformer [18], and SSA (§III).
+//!
+//! The SSA model here is the *bit-exact software twin* of the
+//! cycle-accurate SAU-array simulator in `crate::hw`; see `ssa` module
+//! docs for the shared PRNG contract.
+
+pub mod ann;
+pub mod lif;
+pub mod spikformer;
+pub mod ssa;
+pub mod stochastic;
+
+pub use ann::{linear_attention, softmax_attention};
+pub use ssa::{SsaAttention, SsaStepOutput};

@@ -1,0 +1,113 @@
+//! Spikformer-style spiking attention [18] — the integer-multiplier
+//! baseline SSA is compared against in Tables I-III.
+//!
+//! Per time step: `A^t = Q^t K^{tT} V^t * s` computed with integer
+//! arithmetic on {0,1} spike matrices, then re-binarized through a LIF
+//! layer.  The hardware cost difference vs SSA is that the two matrix
+//! products need integer multiply-accumulate (the products are small ints,
+//! not bits), whereas SSA replaces them with AND + popcount + comparators.
+
+use crate::config::{AttnConfig, LifConfig};
+use crate::attention::lif::LifLayer;
+use crate::tensor::Tensor;
+use crate::util::bitpack::BitMatrix;
+
+/// Spikformer attention block state (per head).
+#[derive(Clone, Debug)]
+pub struct SpikformerAttention {
+    cfg: AttnConfig,
+    scale: f32,
+    lif: LifLayer,
+}
+
+impl SpikformerAttention {
+    pub fn new(cfg: AttnConfig, scale: f32, lif_cfg: LifConfig) -> Self {
+        cfg.validate().expect("invalid attention config");
+        Self { cfg, scale, lif: LifLayer::new(cfg.n_tokens, cfg.d_head, lif_cfg) }
+    }
+
+    pub fn reset(&mut self) {
+        self.lif.reset();
+    }
+
+    /// One time step: integer `Q K^T V`, scaled, re-binarized via LIF.
+    pub fn step(&mut self, q: &BitMatrix, k: &BitMatrix, v: &BitMatrix) -> BitMatrix {
+        let n = self.cfg.n_tokens;
+        let d_k = self.cfg.d_head;
+        // scores[i][j] = sum_d q[i,d]*k[j,d]  (integer MACs in hardware)
+        let mut scores = vec![0u32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                scores[i * n + j] = q.and_popcount(i, k, j);
+            }
+        }
+        // pre[i][d] = sum_j scores[i][j] * v[j,d]
+        let v_t = v.transpose();
+        let mut pre = Tensor::zeros(&[n, d_k]);
+        for i in 0..n {
+            for d in 0..d_k {
+                let mut acc = 0u64;
+                for j in 0..n {
+                    if v_t.get(d, j) {
+                        acc += scores[i * n + j] as u64;
+                    }
+                }
+                pre.set2(i, d, acc as f32 * self.scale);
+            }
+        }
+        self.lif.step(&pre)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::stochastic::encode_frame;
+    use crate::util::rng::Xoshiro256;
+
+    fn tiny() -> AttnConfig {
+        AttnConfig { n_tokens: 8, d_model: 64, n_heads: 4, d_head: 16, time_steps: 10 }
+    }
+
+    fn spikes(rate: f32, seed: u64) -> BitMatrix {
+        let mut rng = Xoshiro256::new(seed);
+        encode_frame(&Tensor::full(&[8, 16], rate), &mut rng)
+    }
+
+    #[test]
+    fn output_shape_and_binary() {
+        let mut sf = SpikformerAttention::new(tiny(), 0.01, LifConfig::default());
+        let out = sf.step(&spikes(0.5, 1), &spikes(0.5, 2), &spikes(0.5, 3));
+        assert_eq!((out.rows(), out.cols()), (8, 16));
+    }
+
+    #[test]
+    fn zero_input_never_fires() {
+        let mut sf = SpikformerAttention::new(tiny(), 0.25, LifConfig::default());
+        let z = BitMatrix::zeros(8, 16);
+        for _ in 0..5 {
+            assert_eq!(sf.step(&z, &z, &z).count_ones(), 0);
+        }
+    }
+
+    #[test]
+    fn dense_input_fires_with_large_scale() {
+        let mut sf = SpikformerAttention::new(tiny(), 1.0, LifConfig::default());
+        let ones = BitMatrix::from_f01(8, 16, &[1.0; 128]);
+        // counts = 16 per pair, pre = 8*16*1.0 = 128 >> theta: all fire.
+        let out = sf.step(&ones, &ones, &ones);
+        assert_eq!(out.count_ones(), 128);
+    }
+
+    #[test]
+    fn membrane_accumulates_across_steps() {
+        // Sub-threshold drive fires only after integration over steps.
+        let mut sf = SpikformerAttention::new(tiny(), 0.004, LifConfig { beta: 1.0, theta: 1.0 });
+        let ones = BitMatrix::from_f01(8, 16, &[1.0; 128]);
+        // pre = 128*0.004 = 0.512 per step -> fires every 2nd step.
+        let c1 = sf.step(&ones, &ones, &ones).count_ones();
+        let c2 = sf.step(&ones, &ones, &ones).count_ones();
+        assert_eq!(c1, 0);
+        assert_eq!(c2, 128);
+    }
+}

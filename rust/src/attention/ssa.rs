@@ -1,0 +1,420 @@
+//! Stochastic Spiking Attention — bit-exact software model (paper §III-B).
+//!
+//! This model and the cycle-accurate SAU-array simulator (`crate::hw`)
+//! consume the *same* LFSR streams under the *same draw-ordering contract*,
+//! so integration tests can assert equality of every `S^t` and `Attn^t`
+//! bit.  This equivalence is the load-bearing verification of the
+//! accelerator model (experiment E5 / Fig. 2).
+//!
+//! # PRNG contract
+//!
+//! All Bernoulli encoders are 16-bit LFSRs (`util::rng::Lfsr16`) seeded
+//! from a base seed via SplitMix64-derived tags (see [`seeds`]).  Per time
+//! step the draw schedule is:
+//!
+//! 1. **S-sample event** (end of the D_K-cycle phase 1): every SAU (i,j)
+//!    needs one 16-bit word.
+//!    * `Independent`: SAU (i,j) draws from its own LFSR.
+//!    * `PerRow`: row i's LFSR emits ONE word broadcast to the row's N
+//!      S-encoders (the ESSOP-style reuse [29] the paper adopts).
+//!    * `Global`: the single LFSR emits one word broadcast to all N².
+//! 2. **Attn-sample events** (phase 2, one per d in 0..D_K): row i's
+//!    output encoder needs one word per d.
+//!    * `Independent`: row-i attn LFSR draws.
+//!    * `PerRow`: row i's (shared) LFSR draws — after its S word.
+//!    * `Global`: the single LFSR draws one word per d, broadcast to rows.
+//!
+//! # Comparator semantics
+//!
+//! A Bernoulli sample with probability `count / m` is computed as
+//! `u16 * m < count << 16` (u128-free 32-bit arithmetic).  For
+//! power-of-two `m` this reduces to a plain bit-slice comparison — the
+//! §III-D hardware simplification (ablation A2) — and is *exact*; for
+//! other `m` the fixed-point quantization error is ≤ m / 2^16.
+
+use crate::config::{AttnConfig, PrngSharing};
+use crate::util::bitpack::BitMatrix;
+use crate::util::rng::{Lfsr16, SplitMix64};
+
+/// Seed derivation shared with `hw::array` (the contract's only source).
+pub mod seeds {
+    use super::SplitMix64;
+
+    const TAG_SAU: u64 = 0x5300_0000_0000_0000;
+    const TAG_ROW: u64 = 0x5200_0000_0000_0000;
+    const TAG_ATTN: u64 = 0x4100_0000_0000_0000;
+    const TAG_GLOBAL: u64 = 0x4700_0000_0000_0000;
+
+    fn derive(base: u64, tag: u64) -> u16 {
+        SplitMix64::new(base ^ tag).next_u64() as u16
+    }
+
+    /// Per-SAU S-encoder seed (Independent mode).
+    pub fn sau(base: u64, i: usize, j: usize, n: usize) -> u16 {
+        derive(base, TAG_SAU | (i * n + j) as u64)
+    }
+
+    /// Per-row shared-LFSR seed (PerRow mode).
+    pub fn row(base: u64, i: usize) -> u16 {
+        derive(base, TAG_ROW | i as u64)
+    }
+
+    /// Per-row Attn-encoder seed (Independent mode).
+    pub fn attn(base: u64, i: usize) -> u16 {
+        derive(base, TAG_ATTN | i as u64)
+    }
+
+    /// The single array-wide seed (Global mode).
+    pub fn global(base: u64) -> u16 {
+        derive(base, TAG_GLOBAL)
+    }
+}
+
+/// Bernoulli comparator: spike iff `u * m < count * 2^16`, P ≈ count/m.
+#[inline]
+pub fn bern_compare(u: u16, count: u32, m: u32) -> bool {
+    debug_assert!(count <= m);
+    (u as u64) * (m as u64) < (count as u64) << 16
+}
+
+/// The PRNG bank realizing the draw-ordering contract for one array.
+#[derive(Clone, Debug)]
+pub enum PrngBank {
+    Independent { sau: Vec<Lfsr16>, attn: Vec<Lfsr16>, n: usize },
+    PerRow { rows: Vec<Lfsr16> },
+    Global { lfsr: Lfsr16 },
+}
+
+impl PrngBank {
+    pub fn new(sharing: PrngSharing, base_seed: u64, n: usize) -> Self {
+        match sharing {
+            PrngSharing::Independent => PrngBank::Independent {
+                sau: (0..n * n)
+                    .map(|idx| Lfsr16::new(seeds::sau(base_seed, idx / n, idx % n, n)))
+                    .collect(),
+                attn: (0..n).map(|i| Lfsr16::new(seeds::attn(base_seed, i))).collect(),
+                n,
+            },
+            PrngSharing::PerRow => PrngBank::PerRow {
+                rows: (0..n).map(|i| Lfsr16::new(seeds::row(base_seed, i))).collect(),
+            },
+            PrngSharing::Global => {
+                PrngBank::Global { lfsr: Lfsr16::new(seeds::global(base_seed)) }
+            }
+        }
+    }
+
+    /// Number of physical LFSR instances (area/power accounting, A1).
+    pub fn instances(&self) -> usize {
+        match self {
+            PrngBank::Independent { sau, attn, .. } => sau.len() + attn.len(),
+            PrngBank::PerRow { rows } => rows.len(),
+            PrngBank::Global { .. } => 1,
+        }
+    }
+
+    /// Words for the S-sample event: `out[i*n + j]` for SAU (i,j).
+    pub fn s_words_n(&mut self, n: usize, out: &mut Vec<u16>) {
+        out.clear();
+        match self {
+            PrngBank::Independent { sau, .. } => {
+                out.extend(sau.iter_mut().map(|l| l.next_u16()));
+            }
+            PrngBank::PerRow { rows } => {
+                for lfsr in rows.iter_mut() {
+                    let w = lfsr.next_u16();
+                    out.extend(std::iter::repeat(w).take(n));
+                }
+            }
+            PrngBank::Global { lfsr } => {
+                let w = lfsr.next_u16();
+                out.extend(std::iter::repeat(w).take(n * n));
+            }
+        }
+    }
+
+    /// Words for one Attn-sample event (one per row).
+    pub fn attn_words(&mut self, n: usize, out: &mut Vec<u16>) {
+        out.clear();
+        match self {
+            PrngBank::Independent { attn, .. } => {
+                out.extend(attn.iter_mut().map(|l| l.next_u16()));
+            }
+            PrngBank::PerRow { rows } => {
+                out.extend(rows.iter_mut().map(|l| l.next_u16()));
+            }
+            PrngBank::Global { lfsr } => {
+                let w = lfsr.next_u16();
+                out.extend(std::iter::repeat(w).take(n));
+            }
+        }
+    }
+}
+
+/// One SSA attention block (all state for a head at geometry `cfg`).
+#[derive(Clone, Debug)]
+pub struct SsaAttention {
+    cfg: AttnConfig,
+    bank: PrngBank,
+    // scratch buffers (zero-alloc hot path, §Perf)
+    s_words: Vec<u16>,
+    attn_words: Vec<u16>,
+}
+
+/// Output of one SSA time step.
+#[derive(Clone, Debug)]
+pub struct SsaStepOutput {
+    /// `S^t` — the N×N binary attention-score matrix (eq. 5).
+    pub s: BitMatrix,
+    /// `Attn^t` — the N×D_K binary attention output (eq. 6).
+    pub attn: BitMatrix,
+}
+
+impl SsaAttention {
+    pub fn new(cfg: AttnConfig, sharing: PrngSharing, base_seed: u64) -> Self {
+        cfg.validate().expect("invalid attention config");
+        Self {
+            bank: PrngBank::new(sharing, base_seed, cfg.n_tokens),
+            cfg,
+            s_words: Vec::new(),
+            attn_words: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &AttnConfig {
+        &self.cfg
+    }
+
+    pub fn prng_instances(&self) -> usize {
+        self.bank.instances()
+    }
+
+    /// Execute one time step (eqs. 5-6) on `{0,1}` spike matrices
+    /// `q, k, v: [N, D_K]`.
+    ///
+    /// Hot path: AND+popcount on packed u64 words — the CPU analogue of
+    /// the paper's AND-gate array (this is what Table III's SSA-CPU row
+    /// measures).
+    pub fn step(&mut self, q: &BitMatrix, k: &BitMatrix, v: &BitMatrix) -> SsaStepOutput {
+        let n = self.cfg.n_tokens;
+        let d_k = self.cfg.d_head;
+        for (name, m) in [("q", q), ("k", k), ("v", v)] {
+            assert_eq!(
+                (m.rows(), m.cols()),
+                (n, d_k),
+                "{name} must be [N={n}, D_K={d_k}]"
+            );
+        }
+
+        // Phase 1 — eq. (5): counts via AND+popcount, then Bernoulli bank.
+        // S rows are assembled word-wise (§Perf L3: no per-bit set calls).
+        self.bank.s_words_n(n, &mut self.s_words);
+        let s_wpr = n.div_ceil(64);
+        let mut s_data = vec![0u64; n * s_wpr];
+        for i in 0..n {
+            for j in 0..n {
+                let count = q.and_popcount(i, k, j);
+                if bern_compare(self.s_words[i * n + j], count, d_k as u32) {
+                    s_data[i * s_wpr + j / 64] |= 1u64 << (j % 64);
+                }
+            }
+        }
+        let s = BitMatrix::from_words(n, n, s_data);
+
+        // Phase 2 — eq. (6): row adders + row encoders, one event per d.
+        // V is streamed column-wise in hardware; transpose once per step.
+        let v_t = v.transpose(); // [D_K, N]
+        let a_wpr = d_k.div_ceil(64);
+        let mut a_data = vec![0u64; n * a_wpr];
+        for d in 0..d_k {
+            self.bank.attn_words(n, &mut self.attn_words);
+            for i in 0..n {
+                let count = s.and_popcount(i, &v_t, d);
+                if bern_compare(self.attn_words[i], count, n as u32) {
+                    a_data[i * a_wpr + d / 64] |= 1u64 << (d % 64);
+                }
+            }
+        }
+        let attn = BitMatrix::from_words(n, d_k, a_data);
+        SsaStepOutput { s, attn }
+    }
+}
+
+/// Deterministic expectation of one SSA step given fixed spikes (the A4
+/// ablation and the E4 equivalence tests): `((Q K^T)/D_K (V))/N`.
+pub fn ssa_expectation(q: &BitMatrix, k: &BitMatrix, v: &BitMatrix) -> Vec<f64> {
+    let n = q.rows();
+    let d_k = q.cols();
+    let mut s_prob = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            s_prob[i * n + j] = q.and_popcount(i, k, j) as f64 / d_k as f64;
+        }
+    }
+    let mut out = vec![0.0f64; n * d_k];
+    for i in 0..n {
+        for d in 0..d_k {
+            let mut acc = 0.0;
+            for j in 0..n {
+                if v.get(j, d) {
+                    acc += s_prob[i * n + j];
+                }
+            }
+            out[i * d_k + d] = acc / n as f64;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::stochastic::encode_frame;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Xoshiro256;
+
+    fn random_spikes(n: usize, d_k: usize, rate: f32, seed: u64) -> BitMatrix {
+        let mut rng = Xoshiro256::new(seed);
+        encode_frame(&Tensor::full(&[n, d_k], rate), &mut rng)
+    }
+
+    fn tiny() -> AttnConfig {
+        AttnConfig { n_tokens: 8, d_model: 64, n_heads: 4, d_head: 16, time_steps: 10 }
+    }
+
+    #[test]
+    fn bern_compare_pow2_exact() {
+        // m=16: P(spike) must be exactly count/16 over all 2^16 words.
+        let m = 16u32;
+        for count in [0u32, 1, 8, 15, 16] {
+            let hits = (0..=u16::MAX).filter(|&u| bern_compare(u, count, m)).count();
+            assert_eq!(hits, (count as usize * 65536) / 16, "count={count}");
+        }
+    }
+
+    #[test]
+    fn bern_compare_non_pow2_error_bound() {
+        // m=48 (paper's D_K): quantization error ≤ m/2^16 per §III-D note.
+        let m = 48u32;
+        for count in 0..=m {
+            let hits = (0..=u16::MAX).filter(|&u| bern_compare(u, count, m)).count();
+            let p = hits as f64 / 65536.0;
+            assert!((p - count as f64 / m as f64).abs() <= m as f64 / 65536.0);
+        }
+    }
+
+    #[test]
+    fn output_shapes() {
+        let cfg = tiny();
+        let mut ssa = SsaAttention::new(cfg, PrngSharing::Independent, 1);
+        let q = random_spikes(8, 16, 0.5, 1);
+        let k = random_spikes(8, 16, 0.5, 2);
+        let v = random_spikes(8, 16, 0.5, 3);
+        let out = ssa.step(&q, &k, &v);
+        assert_eq!((out.s.rows(), out.s.cols()), (8, 8));
+        assert_eq!((out.attn.rows(), out.attn.cols()), (8, 16));
+    }
+
+    #[test]
+    fn zero_inputs_zero_output() {
+        let cfg = tiny();
+        let mut ssa = SsaAttention::new(cfg, PrngSharing::Independent, 1);
+        let z = BitMatrix::zeros(8, 16);
+        let out = ssa.step(&z, &z, &z);
+        assert_eq!(out.s.count_ones(), 0);
+        assert_eq!(out.attn.count_ones(), 0);
+    }
+
+    #[test]
+    fn saturated_inputs_saturate_output() {
+        let cfg = tiny();
+        let mut ssa = SsaAttention::new(cfg, PrngSharing::Independent, 1);
+        let ones = BitMatrix::from_f01(8, 16, &[1.0; 8 * 16]);
+        let out = ssa.step(&ones, &ones, &ones);
+        assert_eq!(out.s.count_ones(), 64);
+        assert_eq!(out.attn.count_ones(), 8 * 16);
+    }
+
+    #[test]
+    fn mean_converges_to_expectation() {
+        // E4: sample mean of Attn^t over encoder randomness -> expectation.
+        let cfg = tiny();
+        let q = random_spikes(8, 16, 0.5, 10);
+        let k = random_spikes(8, 16, 0.4, 11);
+        let v = random_spikes(8, 16, 0.6, 12);
+        let expect = ssa_expectation(&q, &k, &v);
+        let trials = 3000;
+        let mut acc = vec![0.0f64; 8 * 16];
+        for trial in 0..trials {
+            let mut ssa = SsaAttention::new(cfg, PrngSharing::Independent, 1000 + trial);
+            let out = ssa.step(&q, &k, &v);
+            for i in 0..8 {
+                for d in 0..16 {
+                    if out.attn.get(i, d) {
+                        acc[i * 16 + d] += 1.0;
+                    }
+                }
+            }
+        }
+        let tol = 3.0 * 0.5 / (trials as f64).sqrt() + 0.01;
+        for (idx, e) in expect.iter().enumerate() {
+            let mean = acc[idx] / trials as f64;
+            assert!((mean - e).abs() < tol, "idx={idx} mean={mean} expect={e}");
+        }
+    }
+
+    #[test]
+    fn sharing_modes_have_expected_instance_counts() {
+        let cfg = tiny();
+        let n = cfg.n_tokens;
+        for (mode, want) in [
+            (PrngSharing::Independent, n * n + n),
+            (PrngSharing::PerRow, n),
+            (PrngSharing::Global, 1),
+        ] {
+            let ssa = SsaAttention::new(cfg, mode, 1);
+            assert_eq!(ssa.prng_instances(), want, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn sharing_modes_still_unbiased_marginally() {
+        // Reuse correlates draws *across units*, but each unit's marginal
+        // rate stays correct: check mean output rate across many steps.
+        let cfg = tiny();
+        let q = random_spikes(8, 16, 0.5, 20);
+        let k = random_spikes(8, 16, 0.5, 21);
+        let v = random_spikes(8, 16, 0.5, 22);
+        let expect = ssa_expectation(&q, &k, &v);
+        let expect_mean: f64 = expect.iter().sum::<f64>() / expect.len() as f64;
+        for mode in [PrngSharing::PerRow, PrngSharing::Global] {
+            let mut ssa = SsaAttention::new(cfg, mode, 7);
+            let steps = 4000;
+            let mut ones = 0u64;
+            for _ in 0..steps {
+                ones += ssa.step(&q, &k, &v).attn.count_ones();
+            }
+            let rate = ones as f64 / (steps as f64 * 8.0 * 16.0);
+            assert!(
+                (rate - expect_mean).abs() < 0.02,
+                "{mode:?}: rate={rate} expect={expect_mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = tiny();
+        let q = random_spikes(8, 16, 0.5, 30);
+        let k = random_spikes(8, 16, 0.5, 31);
+        let v = random_spikes(8, 16, 0.5, 32);
+        let mut a = SsaAttention::new(cfg, PrngSharing::PerRow, 99);
+        let mut b = SsaAttention::new(cfg, PrngSharing::PerRow, 99);
+        for _ in 0..5 {
+            let oa = a.step(&q, &k, &v);
+            let ob = b.step(&q, &k, &v);
+            assert_eq!(oa.s, ob.s);
+            assert_eq!(oa.attn, ob.attn);
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Bernoulli rate coding and stochastic-computing primitives (paper §II-B).
+//!
+//! These are the Rust twins of `python/compile/kernels/bernoulli.py` /
+//! `ref.py`: real values in [0,1] become i.i.d. spike trains; AND of two
+//! independent streams multiplies rates (eq. 3).
+
+use crate::tensor::Tensor;
+use crate::util::bitpack::BitMatrix;
+use crate::util::rng::Xoshiro256;
+
+/// Clamp-to-[0,1] normalization (the paper's `norm(.)` for pre-normalized
+/// inputs; callers with other ranges rescale first).
+#[inline]
+pub fn norm01(x: f32) -> f32 {
+    x.clamp(0.0, 1.0)
+}
+
+/// Bernoulli-encode a `[rows, cols]` tensor of rates into one spike frame.
+pub fn encode_frame(rates: &Tensor, rng: &mut Xoshiro256) -> BitMatrix {
+    assert_eq!(rates.ndim(), 2);
+    let (rows, cols) = (rates.shape()[0], rates.shape()[1]);
+    let mut out = BitMatrix::zeros(rows, cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            if rng.next_f32() < norm01(rates.at2(r, c)) {
+                out.set(r, c, true);
+            }
+        }
+    }
+    out
+}
+
+/// Decode a spike-train history back to rates: mean over `frames`.
+pub fn decode_rate(frames: &[BitMatrix]) -> Tensor {
+    assert!(!frames.is_empty());
+    let (rows, cols) = (frames[0].rows(), frames[0].cols());
+    let mut acc = vec![0.0f32; rows * cols];
+    for f in frames {
+        assert_eq!((f.rows(), f.cols()), (rows, cols));
+        for r in 0..rows {
+            for c in 0..cols {
+                if f.get(r, c) {
+                    acc[r * cols + c] += 1.0;
+                }
+            }
+        }
+    }
+    let t = frames.len() as f32;
+    Tensor::from_vec(&[rows, cols], acc.into_iter().map(|v| v / t).collect())
+}
+
+/// SC multiplication (eq. 3): elementwise AND of two spike frames.
+pub fn sc_multiply(a: &BitMatrix, b: &BitMatrix) -> BitMatrix {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+    let mut out = BitMatrix::zeros(a.rows(), a.cols());
+    for r in 0..a.rows() {
+        for c in 0..a.cols() {
+            out.set(r, c, a.get(r, c) && b.get(r, c));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_rate_converges() {
+        let rates = Tensor::from_vec(&[1, 4], vec![0.0, 0.25, 0.75, 1.0]);
+        let mut rng = Xoshiro256::new(1);
+        let frames: Vec<BitMatrix> =
+            (0..4000).map(|_| encode_frame(&rates, &mut rng)).collect();
+        let decoded = decode_rate(&frames);
+        for (d, r) in decoded.data().iter().zip(rates.data()) {
+            assert!((d - r).abs() < 0.03, "decoded={d} rate={r}");
+        }
+    }
+
+    #[test]
+    fn endpoints_are_deterministic() {
+        let rates = Tensor::from_vec(&[1, 2], vec![0.0, 1.0]);
+        let mut rng = Xoshiro256::new(2);
+        for _ in 0..100 {
+            let f = encode_frame(&rates, &mut rng);
+            assert!(!f.get(0, 0));
+            assert!(f.get(0, 1));
+        }
+    }
+
+    #[test]
+    fn sc_multiply_is_rate_product() {
+        // eq. (3): AND of independent streams multiplies rates.
+        let (p1, p2) = (0.6f32, 0.7f32);
+        let a_r = Tensor::full(&[1, 64], p1);
+        let b_r = Tensor::full(&[1, 64], p2);
+        let mut rng = Xoshiro256::new(3);
+        let mut hits = 0u64;
+        let mut total = 0u64;
+        for _ in 0..500 {
+            let fa = encode_frame(&a_r, &mut rng);
+            let fb = encode_frame(&b_r, &mut rng);
+            hits += sc_multiply(&fa, &fb).count_ones();
+            total += 64;
+        }
+        let rate = hits as f64 / total as f64;
+        assert!((rate - (p1 * p2) as f64).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn norm_clamps() {
+        assert_eq!(norm01(-0.5), 0.0);
+        assert_eq!(norm01(0.5), 0.5);
+        assert_eq!(norm01(1.5), 1.0);
+    }
+}

@@ -1,0 +1,174 @@
+//! Micro-benchmark harness (the offline image carries no `criterion`).
+//!
+//! `cargo bench` runs the `harness = false` binaries under `rust/benches/`,
+//! each of which builds a [`BenchSet`], registers closures, and calls
+//! [`BenchSet::run`].  Measurement: warmup, then timed batches until a
+//! wall budget or a minimum sample count is reached; reports mean/p50/min
+//! and derived throughput.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{percentile, Running};
+
+/// One benchmark's result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub min_us: f64,
+    /// Optional user-supplied work units per iteration (ops, requests...)
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.units_per_iter.map(|u| u / (self.mean_us * 1e-6))
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_samples: 10,
+            max_samples: 10_000,
+        }
+    }
+}
+
+/// A named set of benchmarks sharing options.
+pub struct BenchSet {
+    title: String,
+    opts: BenchOpts,
+    results: Vec<BenchResult>,
+}
+
+impl BenchSet {
+    pub fn new(title: &str) -> Self {
+        Self { title: title.to_string(), opts: BenchOpts::default(), results: Vec::new() }
+    }
+
+    pub fn with_opts(mut self, opts: BenchOpts) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Time `f` (one call = one iteration).
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        self.bench_units(name, None, move || f())
+    }
+
+    /// Time `f`, attributing `units` work items per iteration.
+    pub fn bench_units(
+        &mut self,
+        name: &str,
+        units: Option<f64>,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.opts.warmup {
+            f();
+        }
+        // measure
+        let mut samples_us = Vec::new();
+        let b0 = Instant::now();
+        while (b0.elapsed() < self.opts.budget || samples_us.len() < self.opts.min_samples)
+            && samples_us.len() < self.opts.max_samples
+        {
+            let t0 = Instant::now();
+            f();
+            samples_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        let mut r = Running::new();
+        for &s in &samples_us {
+            r.push(s);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            samples: samples_us.len(),
+            mean_us: r.mean(),
+            p50_us: percentile(&samples_us, 50.0),
+            min_us: r.min(),
+            units_per_iter: units,
+        };
+        println!("{}", render_line(&res));
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the closing summary; call at the end of each bench binary.
+    pub fn finish(&self) {
+        println!("--- {} : {} benchmark(s) complete ---", self.title, self.results.len());
+    }
+
+    /// Header; call first.
+    pub fn start(&self) {
+        println!("=== {} ===", self.title);
+    }
+}
+
+fn render_line(r: &BenchResult) -> String {
+    let mut s = format!(
+        "  {:<44} mean {:>10.2} us   p50 {:>10.2} us   min {:>10.2} us   (n={})",
+        r.name, r.mean_us, r.p50_us, r.min_us, r.samples
+    );
+    if let Some(tp) = r.throughput() {
+        s.push_str(&format!("   {:.1} units/s", tp));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut set = BenchSet::new("test").with_opts(BenchOpts {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            min_samples: 3,
+            max_samples: 100,
+        });
+        let mut acc = 0u64;
+        let r = set.bench("spin", || {
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(r.samples >= 3);
+        assert!(r.mean_us > 0.0);
+        assert!(r.min_us <= r.mean_us);
+    }
+
+    #[test]
+    fn throughput_derived() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: 1,
+            mean_us: 1000.0, // 1ms
+            p50_us: 1000.0,
+            min_us: 1000.0,
+            units_per_iter: Some(8.0),
+        };
+        assert!((r.throughput().unwrap() - 8000.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,141 @@
+//! Hand-rolled CLI (the offline image carries no `clap`).
+//!
+//! ```text
+//! ssa-repro info
+//! ssa-repro serve      [--artifacts DIR] [--requests N] [--target ssa_t10] [--ensemble K]
+//! ssa-repro simulate   [--n 16] [--dk 16] [--t 10] [--sharing per-row] [--trace]
+//! ssa-repro experiments <table1|table2|table3|headline|fig1|fig2|fig3|all>
+//!                      [--artifacts DIR] [--cross-check N]
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: subcommand path + `--key value` / `--flag` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                // `--key=value` or `--key value` or boolean `--flag`
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.opts.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("invalid --{name} {s:?}: {e}")),
+        }
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(String::as_str)
+    }
+
+    pub fn sub_arg(&self, i: usize) -> Result<&str> {
+        self.positional
+            .get(i)
+            .map(String::as_str)
+            .with_context(|| format!("missing positional argument #{i}"))
+    }
+}
+
+pub const USAGE: &str = "\
+ssa-repro — Stochastic Spiking Attention (AICAS 2024) reproduction
+
+USAGE:
+  ssa-repro info
+  ssa-repro serve       [--artifacts DIR] [--requests N] [--target ssa_t10]
+                        [--ensemble K] [--max-batch B] [--max-delay-ms D]
+  ssa-repro simulate    [--n 16] [--dk 16] [--t 10]
+                        [--sharing independent|per-row|global] [--trace]
+  ssa-repro experiments table1|table2|table3|headline|fig1|fig2|fig3|all
+                        [--artifacts DIR] [--cross-check N_IMAGES]
+
+Artifacts default to ./artifacts (build with `make artifacts`).
+Set SSA_LOG=debug for verbose logs.";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("experiments table2 --artifacts /tmp/x --cross-check 64");
+        assert_eq!(a.subcommand(), Some("experiments"));
+        assert_eq!(a.sub_arg(1).unwrap(), "table2");
+        assert_eq!(a.opt("artifacts"), Some("/tmp/x"));
+        assert_eq!(a.opt_parse("cross-check", 0usize).unwrap(), 64);
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse("simulate --n=32 --trace");
+        assert_eq!(a.opt_parse("n", 0usize).unwrap(), 32);
+        assert!(a.flag("trace"));
+        assert!(!a.flag("nope"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("serve --trace --requests 5");
+        assert!(a.flag("trace"));
+        assert_eq!(a.opt_parse("requests", 0usize).unwrap(), 5);
+    }
+
+    #[test]
+    fn invalid_value_errors() {
+        let a = parse("simulate --n abc");
+        assert!(a.opt_parse("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn missing_positional_errors() {
+        let a = parse("experiments");
+        assert!(a.sub_arg(1).is_err());
+    }
+}

@@ -1,0 +1,185 @@
+//! Dynamic batcher: groups single-image requests into model-sized batches
+//! under a max-delay bound (the standard serving trade-off: fill batches
+//! for throughput, cap waiting for latency).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::request::ClassifyRequest;
+
+/// Batching policy knobs (per variant).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Execute as soon as this many requests are queued (model batch).
+    pub max_batch: usize,
+    /// ... or when the oldest queued request has waited this long.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, max_delay: Duration::from_millis(5) }
+    }
+}
+
+#[derive(Default)]
+struct Queue {
+    items: VecDeque<ClassifyRequest>,
+    closed: bool,
+}
+
+/// MPSC queue with batch-draining semantics.
+pub struct Batcher {
+    q: Mutex<Queue>,
+    cv: Condvar,
+    policy: BatchPolicy,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { q: Mutex::new(Queue::default()), cv: Condvar::new(), policy }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Enqueue a request (producer side). Returns false after close.
+    pub fn push(&self, req: ClassifyRequest) -> bool {
+        let mut q = self.q.lock().unwrap();
+        if q.closed {
+            return false;
+        }
+        q.items.push_back(req);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Blocking consumer: wait for work, then assemble a batch under the
+    /// policy.  Returns `None` once closed and drained.
+    pub fn next_batch(&self) -> Option<Vec<ClassifyRequest>> {
+        let mut q = self.q.lock().unwrap();
+        // wait for at least one item (or close)
+        loop {
+            if !q.items.is_empty() {
+                break;
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+        // fill window: oldest item anchors the deadline
+        let deadline = q.items.front().unwrap().submitted_at + self.policy.max_delay;
+        while q.items.len() < self.policy.max_batch && !q.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (nq, timeout) = self.cv.wait_timeout(q, deadline - now).unwrap();
+            q = nq;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = q.items.len().min(self.policy.max_batch);
+        Some(q.items.drain(..take).collect())
+    }
+
+    /// Close the queue; consumers drain the remainder then see `None`.
+    pub fn close(&self) {
+        let mut q = self.q.lock().unwrap();
+        q.closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{SeedPolicy, Target};
+    use std::sync::mpsc;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    fn req(id: u64) -> ClassifyRequest {
+        let (tx, _rx) = mpsc::channel();
+        ClassifyRequest {
+            id,
+            target: Target::ssa(10),
+            image: vec![0.0; 4],
+            seed_policy: SeedPolicy::PerBatch,
+            submitted_at: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn batches_up_to_max() {
+        let b = Batcher::new(BatchPolicy { max_batch: 3, max_delay: Duration::from_millis(1) });
+        for i in 0..5 {
+            assert!(b.push(req(i)));
+        }
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.len(), 3);
+        let second = b.next_batch().unwrap();
+        assert_eq!(second.len(), 2);
+    }
+
+    #[test]
+    fn delay_bound_flushes_partial_batch() {
+        let b = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 64,
+            max_delay: Duration::from_millis(10),
+        }));
+        b.push(req(1));
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let b = Batcher::new(BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(1) });
+        b.push(req(1));
+        b.close();
+        assert!(!b.push(req(2)), "push after close must fail");
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers() {
+        let b = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_delay: Duration::from_millis(20),
+        }));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let b2 = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..25 {
+                    b2.push(req(t * 100 + i));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut total = 0;
+        while total < 100 {
+            total += b.next_batch().unwrap().len();
+        }
+        assert_eq!(total, 100);
+    }
+}

@@ -1,0 +1,129 @@
+//! Serving metrics: per-target latency/throughput/batching telemetry.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::LatencySummary;
+
+#[derive(Default)]
+struct TargetMetrics {
+    latencies_us: Vec<f64>,
+    batches: u64,
+    requests: u64,
+    batch_fill: Vec<f64>,
+    errors: u64,
+}
+
+/// Thread-safe metrics registry.
+pub struct Metrics {
+    started: Instant,
+    by_target: Mutex<HashMap<String, TargetMetrics>>,
+}
+
+/// A rendered snapshot for one target.
+#[derive(Clone, Debug)]
+pub struct TargetReport {
+    pub target: String,
+    pub requests: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub mean_batch_fill: f64,
+    pub latency: Option<LatencySummary>,
+    pub throughput_rps: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self { started: Instant::now(), by_target: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn record_batch(&self, target: &str, batch_len: usize, max_batch: usize, lat_us: &[f64]) {
+        let mut m = self.by_target.lock().unwrap();
+        let e = m.entry(target.to_string()).or_default();
+        e.batches += 1;
+        e.requests += batch_len as u64;
+        e.batch_fill.push(batch_len as f64 / max_batch as f64);
+        e.latencies_us.extend_from_slice(lat_us);
+    }
+
+    pub fn record_error(&self, target: &str) {
+        let mut m = self.by_target.lock().unwrap();
+        m.entry(target.to_string()).or_default().errors += 1;
+    }
+
+    pub fn report(&self) -> Vec<TargetReport> {
+        let m = self.by_target.lock().unwrap();
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let mut out: Vec<TargetReport> = m
+            .iter()
+            .map(|(k, v)| TargetReport {
+                target: k.clone(),
+                requests: v.requests,
+                batches: v.batches,
+                errors: v.errors,
+                mean_batch_fill: if v.batch_fill.is_empty() {
+                    0.0
+                } else {
+                    v.batch_fill.iter().sum::<f64>() / v.batch_fill.len() as f64
+                },
+                latency: if v.latencies_us.is_empty() {
+                    None
+                } else {
+                    Some(LatencySummary::from_micros(&v.latencies_us))
+                },
+                throughput_rps: v.requests as f64 / elapsed.max(1e-9),
+            })
+            .collect();
+        out.sort_by(|a, b| a.target.cmp(&b.target));
+        out
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::from("=== coordinator metrics ===\n");
+        for r in self.report() {
+            s.push_str(&format!(
+                "[{}] req={} batches={} fill={:.0}% err={} thpt={:.1}/s\n",
+                r.target,
+                r.requests,
+                r.batches,
+                r.mean_batch_fill * 100.0,
+                r.errors,
+                r.throughput_rps
+            ));
+            if let Some(l) = r.latency {
+                s.push_str(&format!("        latency {l}\n"));
+            }
+        }
+        s
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_per_target() {
+        let m = Metrics::new();
+        m.record_batch("ssa_t10", 8, 8, &[100.0; 8]);
+        m.record_batch("ssa_t10", 4, 8, &[200.0; 4]);
+        m.record_batch("ann", 8, 8, &[50.0; 8]);
+        m.record_error("ann");
+        let rep = m.report();
+        assert_eq!(rep.len(), 2);
+        let ssa = rep.iter().find(|r| r.target == "ssa_t10").unwrap();
+        assert_eq!(ssa.requests, 12);
+        assert_eq!(ssa.batches, 2);
+        assert!((ssa.mean_batch_fill - 0.75).abs() < 1e-9);
+        let ann = rep.iter().find(|r| r.target == "ann").unwrap();
+        assert_eq!(ann.errors, 1);
+        assert!(m.render().contains("ssa_t10"));
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 serving coordinator — the system shell around the AOT-compiled
+//! spiking models: target-aware router, dynamic batcher, a single
+//! inference thread owning all PJRT state, seed-ensemble execution, and
+//! serving metrics.  Python never runs here.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::Metrics;
+pub use request::{ClassifyRequest, ClassifyResponse, SeedPolicy, ServeError, Target};
+pub use router::Router;
+pub use server::{Coordinator, CoordinatorConfig};

@@ -1,0 +1,79 @@
+//! Request/response types crossing the coordinator's thread boundaries.
+//! Only plain data crosses threads — all PJRT state stays on the single
+//! inference thread (the `xla` crate's handles are `Rc`-based and !Send).
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Which model variant a request targets.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Target {
+    /// `ann`, `spikformer`, or `ssa`.
+    pub arch: String,
+    /// SNN time steps (0 for the ANN).
+    pub time_steps: usize,
+}
+
+impl Target {
+    pub fn ssa(t: usize) -> Self {
+        Self { arch: "ssa".into(), time_steps: t }
+    }
+
+    pub fn ann() -> Self {
+        Self { arch: "ann".into(), time_steps: 0 }
+    }
+
+    pub fn spikformer(t: usize) -> Self {
+        Self { arch: "spikformer".into(), time_steps: t }
+    }
+}
+
+/// How the per-request stochastic seed is chosen.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeedPolicy {
+    /// Fixed seed (reproducible serving / golden replay).
+    Fixed(u32),
+    /// Coordinator assigns a fresh seed per batch.
+    PerBatch,
+    /// Run `n` independent seeds and average the logits — trades latency
+    /// for lower SC estimator variance (serving-side analogue of raising
+    /// T; ablation A3/A4 companion).
+    Ensemble(u32),
+}
+
+/// One classification request (a single image).
+#[derive(Debug)]
+pub struct ClassifyRequest {
+    pub id: u64,
+    pub target: Target,
+    /// Row-major `[S, S]` pixels in [0,1].
+    pub image: Vec<f32>,
+    pub seed_policy: SeedPolicy,
+    pub submitted_at: Instant,
+    pub reply: mpsc::Sender<ClassifyResponse>,
+}
+
+/// The answer.
+#[derive(Clone, Debug)]
+pub struct ClassifyResponse {
+    pub id: u64,
+    pub class: usize,
+    pub logits: Vec<f32>,
+    /// End-to-end latency in microseconds (submit -> reply).
+    pub latency_us: f64,
+    /// How many requests shared the executed batch (batching telemetry).
+    pub batch_size: usize,
+    /// Seed(s) actually used.
+    pub seed: u32,
+}
+
+/// Errors surfaced to the caller as a response-channel drop + log line.
+#[derive(Debug, thiserror::Error)]
+pub enum ServeError {
+    #[error("coordinator is shutting down")]
+    Shutdown,
+    #[error("unknown target {0:?}")]
+    UnknownTarget(String),
+    #[error("image has {got} pixels, expected {want}")]
+    BadImage { got: usize, want: usize },
+}

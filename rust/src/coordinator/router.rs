@@ -1,0 +1,179 @@
+//! Target-aware request router/scheduler.
+//!
+//! One shared queue feeds the single inference thread (PJRT handles are
+//! !Send, and the box has one core — a worker pool would only add lock
+//! traffic).  Batch assembly is target-aware: the head-of-line request
+//! picks the variant, then same-target requests are gathered up to the
+//! model batch or the delay bound, preserving arrival order for other
+//! targets (vLLM-router-style continuous batching, scalar edition).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use super::batcher::BatchPolicy;
+use super::request::{ClassifyRequest, Target};
+
+/// Maps a target to its artifact-manifest variant key.
+pub fn variant_key(t: &Target) -> String {
+    if t.arch == "ann" {
+        "ann".to_string()
+    } else {
+        format!("{}_t{}", t.arch, t.time_steps)
+    }
+}
+
+#[derive(Default)]
+struct State {
+    q: VecDeque<ClassifyRequest>,
+    closed: bool,
+}
+
+/// The shared scheduling queue.
+pub struct Router {
+    state: Mutex<State>,
+    cv: Condvar,
+    policy: BatchPolicy,
+}
+
+impl Router {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { state: Mutex::new(State::default()), cv: Condvar::new(), policy }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    pub fn push(&self, req: ClassifyRequest) -> bool {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return false;
+        }
+        s.q.push_back(req);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Next batch: `(variant_key, same-target requests)`, or `None` after
+    /// close + drain.
+    pub fn next_batch(&self) -> Option<(String, Vec<ClassifyRequest>)> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if !s.q.is_empty() {
+                break;
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.cv.wait(s).unwrap();
+        }
+        let target = s.q.front().unwrap().target.clone();
+        let key = variant_key(&target);
+        let deadline = s.q.front().unwrap().submitted_at + self.policy.max_delay;
+
+        loop {
+            let matching = s.q.iter().filter(|r| r.target == target).count();
+            if matching >= self.policy.max_batch || s.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (ns, timeout) = self.cv.wait_timeout(s, deadline - now).unwrap();
+            s = ns;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+
+        // extract up to max_batch same-target requests, preserving order
+        let mut batch = Vec::new();
+        let mut rest = VecDeque::with_capacity(s.q.len());
+        while let Some(r) = s.q.pop_front() {
+            if r.target == target && batch.len() < self.policy.max_batch {
+                batch.push(r);
+            } else {
+                rest.push_back(r);
+            }
+        }
+        s.q = rest;
+        Some((key, batch))
+    }
+
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::SeedPolicy;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    fn req(id: u64, target: Target) -> ClassifyRequest {
+        let (tx, _rx) = mpsc::channel();
+        ClassifyRequest {
+            id,
+            target,
+            image: vec![0.0; 4],
+            seed_policy: SeedPolicy::PerBatch,
+            submitted_at: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn variant_keys() {
+        assert_eq!(variant_key(&Target::ann()), "ann");
+        assert_eq!(variant_key(&Target::ssa(10)), "ssa_t10");
+        assert_eq!(variant_key(&Target::spikformer(4)), "spikformer_t4");
+    }
+
+    #[test]
+    fn groups_same_target_and_preserves_others() {
+        let r = Router::new(BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(5) });
+        r.push(req(1, Target::ssa(10)));
+        r.push(req(2, Target::ann()));
+        r.push(req(3, Target::ssa(10)));
+        let (key, batch) = r.next_batch().unwrap();
+        assert_eq!(key, "ssa_t10");
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        let (key2, batch2) = r.next_batch().unwrap();
+        assert_eq!(key2, "ann");
+        assert_eq!(batch2[0].id, 2);
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let r = Router::new(BatchPolicy { max_batch: 2, max_delay: Duration::from_millis(1) });
+        for i in 0..5 {
+            r.push(req(i, Target::ssa(4)));
+        }
+        assert_eq!(r.next_batch().unwrap().1.len(), 2);
+        assert_eq!(r.next_batch().unwrap().1.len(), 2);
+        assert_eq!(r.next_batch().unwrap().1.len(), 1);
+    }
+
+    #[test]
+    fn close_drains() {
+        let r = Router::new(BatchPolicy::default());
+        r.push(req(1, Target::ann()));
+        r.close();
+        assert!(!r.push(req(2, Target::ann())));
+        assert!(r.next_batch().is_some());
+        assert!(r.next_batch().is_none());
+    }
+}

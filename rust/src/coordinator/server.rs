@@ -1,0 +1,278 @@
+//! The serving coordinator: public submit API + the single inference
+//! thread that owns every PJRT object (client, compiled executables,
+//! staged weights) and drains the router queue batch by batch.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{LoadedModel, Manifest, Runtime};
+
+use super::batcher::BatchPolicy;
+use super::metrics::Metrics;
+use super::request::{ClassifyRequest, ClassifyResponse, SeedPolicy, ServeError, Target};
+use super::router::{variant_key, Router};
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub artifacts_dir: PathBuf,
+    pub policy: BatchPolicy,
+    /// Variants compiled eagerly at startup (others compile on first use).
+    pub preload: Vec<String>,
+}
+
+impl CoordinatorConfig {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Self {
+        Self {
+            artifacts_dir: artifacts_dir.into(),
+            policy: BatchPolicy::default(),
+            preload: vec!["ssa_t10".to_string()],
+        }
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    router: Arc<Router>,
+    metrics: Arc<Metrics>,
+    manifest: Manifest,
+    next_id: AtomicU64,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Load the manifest, spawn the inference thread, return the handle.
+    pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let router = Arc::new(Router::new(cfg.policy));
+        let metrics = Arc::new(Metrics::new());
+
+        let thread_router = Arc::clone(&router);
+        let thread_metrics = Arc::clone(&metrics);
+        let thread_manifest = manifest.clone();
+        let preload = cfg.preload.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+
+        let handle = std::thread::Builder::new()
+            .name("ssa-inference".into())
+            .spawn(move || {
+                inference_thread(thread_manifest, thread_router, thread_metrics, preload, ready_tx)
+            })
+            .context("spawning inference thread")?;
+
+        // surface startup errors (PJRT init, preload compile) synchronously
+        ready_rx.recv().context("inference thread died during startup")??;
+
+        Ok(Self { router, metrics, manifest, next_id: AtomicU64::new(1), handle: Some(handle) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Submit one image; returns the response channel.
+    pub fn submit(
+        &self,
+        target: Target,
+        image: Vec<f32>,
+        seed_policy: SeedPolicy,
+    ) -> Result<mpsc::Receiver<ClassifyResponse>, ServeError> {
+        let want = self.manifest.image_size * self.manifest.image_size;
+        if image.len() != want {
+            return Err(ServeError::BadImage { got: image.len(), want });
+        }
+        let key = variant_key(&target);
+        if self.manifest.variant(&key).is_err() {
+            return Err(ServeError::UnknownTarget(key));
+        }
+        let (tx, rx) = mpsc::channel();
+        let req = ClassifyRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            target,
+            image,
+            seed_policy,
+            submitted_at: Instant::now(),
+            reply: tx,
+        };
+        if !self.router.push(req) {
+            return Err(ServeError::Shutdown);
+        }
+        Ok(rx)
+    }
+
+    /// Submit and block for the answer.
+    pub fn classify(
+        &self,
+        target: Target,
+        image: Vec<f32>,
+        seed_policy: SeedPolicy,
+    ) -> Result<ClassifyResponse> {
+        let rx = self.submit(target, image, seed_policy).map_err(anyhow::Error::from)?;
+        rx.recv().context("inference thread dropped the request")
+    }
+
+    pub fn metrics_report(&self) -> String {
+        self.metrics.render()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Graceful shutdown: drain the queue, join the thread.
+    pub fn shutdown(mut self) {
+        self.router.close();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.router.close();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// inference thread
+// ---------------------------------------------------------------------------
+
+static BATCH_SEED: AtomicU32 = AtomicU32::new(0x5EED_0001);
+
+fn inference_thread(
+    manifest: Manifest,
+    router: Arc<Router>,
+    metrics: Arc<Metrics>,
+    preload: Vec<String>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let runtime = match Runtime::cpu() {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let mut models: HashMap<String, LoadedModel> = HashMap::new();
+    for key in &preload {
+        match manifest.variant(key).and_then(|v| runtime.load(v)) {
+            Ok(m) => {
+                models.insert(key.clone(), m);
+            }
+            Err(e) => {
+                let _ = ready.send(Err(e));
+                return;
+            }
+        }
+    }
+    let _ = ready.send(Ok(()));
+
+    let max_batch = router.policy().max_batch;
+    while let Some((key, batch)) = router.next_batch() {
+        if batch.is_empty() {
+            continue;
+        }
+        // lazy-load the variant on first use
+        if !models.contains_key(&key) {
+            match manifest.variant(&key).and_then(|v| runtime.load(v)) {
+                Ok(m) => {
+                    models.insert(key.clone(), m);
+                }
+                Err(e) => {
+                    crate::log_error!("loading variant {key}: {e:#}");
+                    metrics.record_error(&key);
+                    continue; // reply senders drop -> callers see RecvError
+                }
+            }
+        }
+        let model = &models[&key];
+        if let Err(e) = serve_batch(model, &batch, &metrics, &key, max_batch) {
+            crate::log_error!("serving batch on {key}: {e:#}");
+            metrics.record_error(&key);
+        }
+    }
+    crate::log_info!("inference thread: router closed, exiting");
+}
+
+fn serve_batch(
+    model: &LoadedModel,
+    batch: &[ClassifyRequest],
+    metrics: &Metrics,
+    key: &str,
+    max_batch: usize,
+) -> Result<()> {
+    let model_batch = model.batch();
+    let px = batch[0].image.len();
+    // assemble + pad (repeat last image; padded rows are never replied)
+    let mut images = Vec::with_capacity(model_batch * px);
+    for r in batch {
+        anyhow::ensure!(r.image.len() == px, "ragged image sizes in batch");
+        images.extend_from_slice(&r.image);
+    }
+    for _ in batch.len()..model_batch {
+        images.extend_from_slice(&batch.last().unwrap().image);
+    }
+    anyhow::ensure!(
+        batch.len() <= model_batch,
+        "batch {} exceeds model batch {model_batch}",
+        batch.len()
+    );
+
+    // batch-wide seed policy comes from the head request
+    let (seeds, seed_reported) = match batch[0].seed_policy {
+        SeedPolicy::Fixed(s) => (vec![s], s),
+        SeedPolicy::PerBatch => {
+            let s = BATCH_SEED.fetch_add(1, Ordering::Relaxed);
+            (vec![s], s)
+        }
+        SeedPolicy::Ensemble(n) => {
+            let s0 = BATCH_SEED.fetch_add(n.max(1), Ordering::Relaxed);
+            ((0..n.max(1)).map(|i| s0 + i).collect(), s0)
+        }
+    };
+
+    // run (ensemble averages logits across seeds)
+    let classes = model.variant().output_shape[1];
+    let mut logits_acc = vec![0.0f32; model_batch * classes];
+    for &seed in &seeds {
+        let logits = model.infer(&images, seed)?;
+        for (a, l) in logits_acc.iter_mut().zip(&logits) {
+            *a += l / seeds.len() as f32;
+        }
+    }
+
+    // reply per request
+    let now = Instant::now();
+    let mut lats = Vec::with_capacity(batch.len());
+    for (i, req) in batch.iter().enumerate() {
+        let row = &logits_acc[i * classes..(i + 1) * classes];
+        let class = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap();
+        let latency_us = now.duration_since(req.submitted_at).as_secs_f64() * 1e6;
+        lats.push(latency_us);
+        let _ = req.reply.send(ClassifyResponse {
+            id: req.id,
+            class,
+            logits: row.to_vec(),
+            latency_us,
+            batch_size: batch.len(),
+            seed: seed_reported,
+        });
+    }
+    metrics.record_batch(key, batch.len(), max_batch, &lats);
+    Ok(())
+}

@@ -1,0 +1,222 @@
+//! Per-architecture op/memory accounting for one attention block
+//! (Table II generators).  Geometry: N tokens, D model dim, H heads,
+//! D_K = D/H, T time steps (SNNs), INT8 parameters everywhere (paper §IV).
+//!
+//! Scope note (documented reproduction decision, see EXPERIMENTS.md §E2):
+//! the ANN and Spikformer rows cover the full attention block *including
+//! the QKV projections* (that is the only accounting under which the
+//! paper's 7.77 µJ ANN processing figure is reachable at ViT-Small
+//! geometry: 3·N·D² + 2·H·N²·D_K ≈ 31.5M INT8 MACs x 0.23 pJ ≈ 7.2 µJ).
+//! The SSA processing row covers the SSA block proper — the SAU-array
+//! datapath plus its Bernoulli encoders — per the paper's §III-A scoping
+//! ("we focus on accelerating the self-attention mechanism block that
+//! follows this encoding layer"); its memory row carries the full
+//! streaming traffic of the block with the array's broadcast reuse.
+
+use crate::config::AttnConfig;
+
+use super::ops::{ActivityFactors, MemCounts, OpCounts};
+
+/// Dimension products used by every model.
+struct Geom {
+    n: f64,
+    d: f64,
+    d_k: f64,
+    h: f64,
+    t: f64,
+    /// MACs in the three QKV projections: 3·N·D·D.
+    proj_macs: f64,
+    /// MACs in the two attention products: 2·H·N²·D_K.
+    attn_macs: f64,
+}
+
+impl Geom {
+    fn new(cfg: &AttnConfig) -> Self {
+        let n = cfg.n_tokens as f64;
+        let d = cfg.d_model as f64;
+        let d_k = cfg.d_head as f64;
+        let h = cfg.n_heads as f64;
+        let t = cfg.time_steps as f64;
+        Self {
+            n,
+            d,
+            d_k,
+            h,
+            t,
+            proj_macs: 3.0 * n * d * d,
+            attn_macs: 2.0 * h * n * n * d_k,
+        }
+    }
+}
+
+/// ANN attention block (INT8 activations + weights, eq. 1).
+pub fn ann_counts(cfg: &AttnConfig) -> (OpCounts, MemCounts) {
+    let g = Geom::new(cfg);
+    let macs = g.proj_macs + g.attn_macs;
+    let ops = OpCounts {
+        int8_macs: macs,
+        softmax_elems: g.h * g.n * g.n,
+        ..Default::default()
+    };
+    // Conservative operand accounting per [30]: each MAC fetches both
+    // INT8 operands from SRAM; result tensors written once; the score
+    // matrix S makes two extra passes for softmax (write, read) plus the
+    // AV read.
+    let s_elems = g.h * g.n * g.n;
+    let mem = MemCounts {
+        bytes_read: 2.0 * macs + 2.0 * s_elems,
+        bytes_written: 3.0 * g.n * g.d + 2.0 * s_elems + g.n * g.d,
+    };
+    (ops, mem)
+}
+
+/// Spikformer attention block [18]: binary activations, integer-multiplier
+/// attention products, per time step.
+pub fn spikformer_counts(cfg: &AttnConfig, act: &ActivityFactors) -> (OpCounts, MemCounts) {
+    let g = Geom::new(cfg);
+    // projections: spike-gated INT8 accumulations, every step
+    let proj_acs = g.t * g.proj_macs * act.r_input;
+    // attention: integer multiplies on spike operands (the multiplier
+    // hardware SSA removes), gated by the Q/K/V spike rate
+    let attn_macs = g.t * g.attn_macs * act.r_qkv;
+    // LIF sheets: Q, K, V, attention output = 4·N·D neurons per step
+    let lif = g.t * 4.0 * g.n * g.d;
+    let ops = OpCounts {
+        int8_acs: proj_acs,
+        int8_macs: attn_macs,
+        lif_updates: lif,
+        ..Default::default()
+    };
+    // memory: spike-gated weight fetch per projection AC (spike operands
+    // are 1-bit and ride in registers/line buffers); the attention
+    // products read/write the INT8 score matrix S each step (write after
+    // QK^T, read for AV) while their spike operands stay on-chip;
+    // membrane state r/w per LIF update (INT8-quantized membrane).
+    let s_elems = g.t * g.h * g.n * g.n;
+    let mem = MemCounts {
+        bytes_read: proj_acs + 2.0 * s_elems + lif,
+        bytes_written: s_elems + lif + g.t * g.n * g.d,
+    };
+    (ops, mem)
+}
+
+/// SSA block (§III): SAU-array datapath + Bernoulli encoders.
+pub fn ssa_counts(cfg: &AttnConfig, act: &ActivityFactors) -> (OpCounts, MemCounts) {
+    let g = Geom::new(cfg);
+    // score path: H·N²·D_K ANDs per step; value path the same count
+    let score_ands = g.t * g.h * g.n * g.n * g.d_k;
+    let value_ands = score_ands;
+    // counter increments fire on AND coincidences
+    let counter_incs = score_ands * act.r_coincidence;
+    // encoders: N² S-samples + N·D_K Attn-samples per head per step
+    let samples = g.t * g.h * (g.n * g.n + g.n * g.d_k);
+    // LFSR words under the PerRow reuse strategy [29]: one word per row
+    // per S event + one per row per Attn event
+    let lfsr_words = g.t * g.h * (g.n + g.n * g.d_k);
+    // row adders: N inputs x D_K events x N rows... counted as inputs
+    let adder_inputs = g.t * g.h * g.n * g.d_k * g.n;
+    // V-alignment FIFOs: every SAU clocks its D_K-bit shift register every
+    // cycle (D_K cycles per step), ~50% bit activity — the dominant SSA
+    // datapath energy term.
+    let fifo_bit_toggles = g.t * g.h * g.d_k * g.n * g.n * g.d_k * 0.5;
+    // non-pow2 moduli pay the fixed-point normalizer per sample (§III-D):
+    // S encoders normalize by D_K, Attn encoders by N.
+    let mut norm_mults = 0.0;
+    if !(cfg.d_head as u64).is_power_of_two() {
+        norm_mults += g.t * g.h * g.n * g.n;
+    }
+    if !(cfg.n_tokens as u64).is_power_of_two() {
+        norm_mults += g.t * g.h * g.n * g.d_k;
+    }
+    let ops = OpCounts {
+        and_gates: score_ands + value_ands,
+        counter_incs,
+        comparator_samples: samples,
+        lfsr_words,
+        adder_inputs,
+        fifo_bit_toggles,
+        norm_mults,
+        ..Default::default()
+    };
+    // memory: the same spike-gated projection weight traffic as any
+    // spiking frontend, divided by the array's streaming broadcast reuse
+    // (Q/K/V enter once and fan out across rows/columns; S and Attn^t
+    // never touch SRAM — "eliminates the need for writing/reading
+    // intermediate data", §III-C). Plus the packed spike streams.
+    let proj_traffic = g.t * g.proj_macs * act.r_input / act.ssa_stream_reuse;
+    let spike_stream_bytes = g.t * g.h * 3.0 * g.n * g.d_k / 8.0;
+    let mem = MemCounts {
+        bytes_read: proj_traffic + spike_stream_bytes,
+        bytes_written: g.t * g.n * g.d / 8.0, // packed Attn spikes out
+    };
+    (ops, mem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::ops::EnergyRow;
+    use crate::energy::tech::TechEnergies;
+
+    fn rows() -> (EnergyRow, EnergyRow, EnergyRow) {
+        let cfg = AttnConfig::vit_small_paper();
+        let t = TechEnergies::cmos_45nm();
+        let act = ActivityFactors::default();
+        let (ao, am) = ann_counts(&cfg);
+        let (so, sm) = spikformer_counts(&cfg, &act);
+        let (xo, xm) = ssa_counts(&cfg, &act);
+        (
+            EnergyRow::from_counts(&ao, &am, &t),
+            EnergyRow::from_counts(&so, &sm, &t),
+            EnergyRow::from_counts(&xo, &xm, &t),
+        )
+    }
+
+    #[test]
+    fn ann_processing_near_paper() {
+        let (ann, _, _) = rows();
+        // paper: 7.77 µJ — formula-level agreement within 15%
+        assert!((ann.processing_uj - 7.77).abs() / 7.77 < 0.15, "{}", ann.processing_uj);
+    }
+
+    #[test]
+    fn ann_memory_near_paper() {
+        let (ann, _, _) = rows();
+        // paper: 89.96 µJ
+        assert!((ann.memory_uj - 89.96).abs() / 89.96 < 0.15, "{}", ann.memory_uj);
+    }
+
+    #[test]
+    fn spikformer_row_near_paper() {
+        let (_, sf, _) = rows();
+        // paper: 6.20 / 102.85 µJ
+        assert!((sf.processing_uj - 6.20).abs() / 6.20 < 0.25, "{}", sf.processing_uj);
+        assert!((sf.memory_uj - 102.85).abs() / 102.85 < 0.25, "{}", sf.memory_uj);
+    }
+
+    #[test]
+    fn ssa_row_near_paper() {
+        let (_, _, ssa) = rows();
+        // paper: 1.23 / 52.80 µJ
+        assert!((ssa.processing_uj - 1.23).abs() / 1.23 < 0.35, "{}", ssa.processing_uj);
+        assert!((ssa.memory_uj - 52.80).abs() / 52.80 < 0.25, "{}", ssa.memory_uj);
+    }
+
+    #[test]
+    fn headline_ratios_hold() {
+        let (ann, sf, ssa) = rows();
+        // abstract: >6.3x processing vs ANN, ~5x vs Spikformer, 1.7x memory
+        let p_ann = ann.processing_uj / ssa.processing_uj;
+        let p_sf = sf.processing_uj / ssa.processing_uj;
+        let m_ann = ann.memory_uj / ssa.memory_uj;
+        let m_sf = sf.memory_uj / ssa.memory_uj;
+        assert!(p_ann > 4.0 && p_ann < 10.0, "processing vs ANN {p_ann}");
+        assert!(p_sf > 3.0 && p_sf < 8.0, "processing vs Spikformer {p_sf}");
+        assert!(m_ann > 1.3 && m_ann < 2.3, "memory vs ANN {m_ann}");
+        assert!(m_sf > 1.4 && m_sf < 2.6, "memory vs Spikformer {m_sf}");
+        // Spikformer memory exceeds ANN (the paper's observation)
+        assert!(sf.memory_uj > ann.memory_uj);
+        // totals: SSA best overall
+        assert!(ssa.total_uj() < ann.total_uj() && ssa.total_uj() < sf.total_uj());
+    }
+}

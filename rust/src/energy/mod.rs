@@ -1,0 +1,18 @@
+//! 45 nm energy model, op/memory accounting, and analytic device models —
+//! the generators for the paper's Table II (energy), Table III
+//! (latency/power), and the abstract's headline ratios.
+//!
+//! Methodology follows the paper's §IV: count every compute and SRAM
+//! access operation [30], multiply by 45 nm per-op energies [31][32].
+//! Scope decisions and calibration are documented in `arch.rs` and
+//! EXPERIMENTS.md §E2/E3.
+
+pub mod arch;
+pub mod devices;
+pub mod ops;
+pub mod report;
+pub mod tech;
+
+pub use ops::{ActivityFactors, EnergyRow};
+pub use report::{Headline, TableThree, TableTwo};
+pub use tech::TechEnergies;

@@ -1,0 +1,87 @@
+//! 45 nm CMOS energy table (paper §IV: "basic energy metrics for 45 nm
+//! CMOS technology as reported in [31], [32]").
+//!
+//! Values follow the standard 45 nm numbers (Horowitz ISSCC'14 / Pedram et
+//! al. [31]): INT8 add 0.03 pJ, INT8 multiply 0.2 pJ, FP32 add 0.9 pJ,
+//! FP32 multiply 3.7 pJ, SRAM access ~1.4 pJ/byte for the tens-of-KB
+//! arrays an attention block needs.  Gate-level costs for the SC datapath
+//! (AND, counter, comparator, LFSR) are standard-cell estimates at the
+//! same node.  All constants live here so the Table II generator has a
+//! single, auditable source.
+
+/// Per-operation energies in picojoules at 45 nm.
+#[derive(Clone, Copy, Debug)]
+pub struct TechEnergies {
+    // arithmetic
+    pub int8_add_pj: f64,
+    pub int8_mult_pj: f64,
+    pub int32_add_pj: f64,
+    pub fp32_add_pj: f64,
+    pub fp32_mult_pj: f64,
+    /// One INT8 MAC (multiply + accumulate).
+    pub int8_mac_pj: f64,
+    /// One softmax element (exp LUT + normalize divide).
+    pub softmax_elem_pj: f64,
+    /// One LIF update (leak shift + add + threshold compare).
+    pub lif_update_pj: f64,
+    // stochastic-computing datapath (standard cells)
+    pub and_gate_pj: f64,
+    pub counter_inc_pj: f64,
+    /// One Bernoulli comparator evaluation (16-bit compare).
+    pub comparator_pj: f64,
+    /// One 16-bit LFSR word (16 flop toggles + feedback taps).
+    pub lfsr_word_pj: f64,
+    /// One input of an N-input popcount/adder tree, per evaluation.
+    pub adder_input_pj: f64,
+    /// One flop toggle inside the D_K-bit V-alignment shift register; a
+    /// serial shift clocks every stage, so one SAU-cycle costs
+    /// D_K x activity x this (the dominant SSA datapath term).
+    pub fifo_bit_pj: f64,
+    /// Fixed-point normalizing multiply in a non-pow2 Bernoulli encoder
+    /// (the divider path the §III-D pow2 trick eliminates).
+    pub fixedpoint_norm_pj: f64,
+    // memory
+    pub sram_read_pj_per_byte: f64,
+    pub sram_write_pj_per_byte: f64,
+}
+
+impl TechEnergies {
+    /// The 45 nm table used throughout (single source of truth).
+    pub const fn cmos_45nm() -> Self {
+        Self {
+            int8_add_pj: 0.03,
+            int8_mult_pj: 0.2,
+            int32_add_pj: 0.1,
+            fp32_add_pj: 0.9,
+            fp32_mult_pj: 3.7,
+            int8_mac_pj: 0.23,
+            softmax_elem_pj: 3.0,
+            lif_update_pj: 0.09,
+            and_gate_pj: 0.001,
+            counter_inc_pj: 0.01,
+            comparator_pj: 0.03,
+            lfsr_word_pj: 0.032,
+            adder_input_pj: 0.01,
+            fifo_bit_pj: 0.002,
+            fixedpoint_norm_pj: 0.12,
+            sram_read_pj_per_byte: 1.4,
+            sram_write_pj_per_byte: 1.4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanity_orderings() {
+        let t = TechEnergies::cmos_45nm();
+        // SC primitives must be orders of magnitude below multipliers —
+        // the premise of the whole paper.
+        assert!(t.and_gate_pj * 100.0 < t.int8_mult_pj);
+        assert!(t.int8_add_pj < t.int8_mult_pj);
+        assert!(t.int8_mac_pj >= t.int8_mult_pj + t.int8_add_pj - 1e-12);
+        assert!(t.fp32_mult_pj > t.int8_mult_pj);
+    }
+}

@@ -1,0 +1,27 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §4).
+//!
+//! Each driver returns a rendered report string so the CLI, the examples,
+//! and the bench binaries share one implementation.
+
+pub mod figures;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use anyhow::Result;
+
+use crate::config::AttnConfig;
+use crate::energy::{Headline, TableThree, TableTwo};
+
+/// E7: the abstract's headline ratios, derived from E2+E3.
+pub fn headline() -> Result<String> {
+    let cfg = AttnConfig::vit_small_paper();
+    let t2 = TableTwo::compute(
+        &cfg,
+        &crate::energy::ActivityFactors::default(),
+        &crate::energy::TechEnergies::cmos_45nm(),
+    );
+    let events = table3::fpga_events(&cfg)?;
+    let t3 = TableThree::compute(&cfg, &events);
+    Ok(Headline::compute(&t2, &t3).render())
+}

@@ -1,0 +1,109 @@
+//! E1 — Table I: classification accuracy, ANN vs Spikformer vs SSA,
+//! T in {4, 8, 10}.
+//!
+//! Two sources are combined:
+//! * `artifacts/accuracy.json` — the full-test-set sweep measured by the
+//!   Python build right after training + INT8 quantization;
+//! * an optional *rust-side re-evaluation* through the AOT'd HLO graphs
+//!   (PJRT), proving the serving stack reproduces the numbers with Python
+//!   out of the loop.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Dataset, Manifest, Runtime};
+use crate::util::json::Json;
+
+/// The accuracy sweep parsed from `accuracy.json`.
+#[derive(Clone, Debug)]
+pub struct AccuracyTable {
+    /// (arch, T-label, accuracy) rows.
+    pub rows: Vec<(String, String, f64)>,
+}
+
+impl AccuracyTable {
+    pub fn load(artifacts: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(artifacts.join("accuracy.json"))
+            .context("reading accuracy.json — run `make artifacts`")?;
+        let j = Json::parse(&text)?;
+        let mut rows = Vec::new();
+        for arch in ["ann", "spikformer", "ssa"] {
+            if let Some(per_t) = j.get(arch).and_then(Json::as_obj) {
+                let mut keys: Vec<&String> = per_t.keys().collect();
+                keys.sort_by_key(|k| k.parse::<usize>().unwrap_or(0));
+                for k in keys {
+                    if let Some(acc) = per_t[k].as_f64() {
+                        rows.push((arch.to_string(), k.clone(), acc));
+                    }
+                }
+            }
+        }
+        Ok(Self { rows })
+    }
+
+    pub fn accuracy(&self, arch: &str, t: &str) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|(a, tt, _)| a == arch && tt == t)
+            .map(|(_, _, acc)| *acc)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("TABLE I — classification accuracy (tiny-digits substitute task)\n");
+        out.push_str("| Architecture | T   | Accuracy (%) |\n");
+        out.push_str("|--------------|-----|--------------|\n");
+        for (arch, t, acc) in &self.rows {
+            out.push_str(&format!("| {arch:<12} | {t:<3} | {:>10.2} |\n", acc * 100.0));
+        }
+        out.push_str(
+            "(paper, MNIST/CIFAR-10 @ ViT-Small: ANN 99.02/83.66; \
+             Spikformer T=10 98.34/83.41; SSA T=10 98.31/83.53 — see \
+             DESIGN.md §3 for the dataset substitution)\n",
+        );
+        out
+    }
+}
+
+/// Re-evaluate a variant through the PJRT runtime on the first `n` test
+/// images; returns accuracy.  This is the serving-stack ground truth.
+pub fn rust_side_accuracy(artifacts: &Path, variant: &str, n: usize) -> Result<f64> {
+    let manifest = Manifest::load(artifacts)?;
+    let v = manifest.variant(variant)?;
+    let ds = Dataset::load(&manifest.dataset_test)?;
+    let runtime = Runtime::cpu()?;
+    let model = runtime.load(v)?;
+    let b = v.batch;
+    let n = n.min(ds.len());
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    let mut chunk = 0usize;
+    while seen + b <= n {
+        let images = ds.batch(seen, b);
+        let classes = model.classify(images, 0x7357 + chunk as u32)?;
+        for (i, &c) in classes.iter().enumerate() {
+            if c as u32 == ds.labels[seen + i] {
+                correct += 1;
+            }
+        }
+        seen += b;
+        chunk += 1;
+    }
+    anyhow::ensure!(seen > 0, "not enough test images for one batch");
+    Ok(correct as f64 / seen as f64)
+}
+
+/// Render E1 with optional rust-side cross-check.
+pub fn run(artifacts: &Path, cross_check: Option<(&str, usize)>) -> Result<String> {
+    let table = AccuracyTable::load(artifacts)?;
+    let mut out = table.render();
+    if let Some((variant, n)) = cross_check {
+        let acc = rust_side_accuracy(artifacts, variant, n)?;
+        out.push_str(&format!(
+            "\nrust-side (PJRT) re-evaluation of {variant} on {n} images: {:.2}%\n",
+            acc * 100.0
+        ));
+    }
+    Ok(out)
+}

@@ -1,0 +1,34 @@
+//! E2 — Table II: attention-block energy for ANN / Spikformer / SSA.
+
+use crate::config::AttnConfig;
+use crate::energy::{ActivityFactors, TableTwo, TechEnergies};
+
+/// Compute and render Table II at the paper's ViT-Small geometry.
+pub fn run() -> String {
+    let cfg = AttnConfig::vit_small_paper();
+    let t2 = TableTwo::compute(&cfg, &ActivityFactors::default(), &TechEnergies::cmos_45nm());
+    let mut out = t2.render();
+    out.push_str(&format!(
+        "\nratios (ours): processing ANN/SSA = {:.1}x (paper 6.3x), \
+         Spikformer/SSA = {:.1}x (paper 5x)\n\
+         memory ANN/SSA = {:.1}x (paper 1.7x), Spikformer/SSA = {:.1}x (paper 1.9x)\n\
+         total  ANN/SSA = {:.1}x (paper 1.8x), Spikformer/SSA = {:.1}x (paper 2.0x)\n",
+        t2.ann.processing_uj / t2.ssa.processing_uj,
+        t2.spikformer.processing_uj / t2.ssa.processing_uj,
+        t2.ann.memory_uj / t2.ssa.memory_uj,
+        t2.spikformer.memory_uj / t2.ssa.memory_uj,
+        t2.ann.total_uj() / t2.ssa.total_uj(),
+        t2.spikformer.total_uj() / t2.ssa.total_uj(),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders() {
+        let r = super::run();
+        assert!(r.contains("TABLE II"));
+        assert!(r.contains("ratios"));
+    }
+}

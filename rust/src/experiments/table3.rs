@@ -1,0 +1,154 @@
+//! E3 — Table III: latency/power across CPU / GPU / FPGA, plus a
+//! measured-on-this-host column for the paths we can actually time
+//! (the Rust golden models on the local CPU).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::attention::spikformer::SpikformerAttention;
+use crate::attention::ssa::SsaAttention;
+use crate::attention::{linear_attention, softmax_attention};
+use crate::config::{AttnConfig, LifConfig, PrngSharing};
+use crate::energy::TableThree;
+use crate::hw::array::ArrayEvents;
+use crate::hw::{SauArray, SpikeStreams};
+use crate::tensor::Tensor;
+use crate::util::rng::Xoshiro256;
+
+/// Run the cycle-accurate simulator once at the paper geometry to get the
+/// event counts the FPGA row derives from.
+pub fn fpga_events(cfg: &AttnConfig) -> Result<ArrayEvents> {
+    let streams = SpikeStreams::from_rates(cfg, (0.5, 0.5, 0.5), 0xF1);
+    let mut arr = SauArray::new(*cfg, PrngSharing::PerRow, 0xF2);
+    Ok(arr.run(&streams.q, &streams.k, &streams.v, None).events)
+}
+
+/// Wall-clock one full ANN attention block (all heads) on this host.
+pub fn measure_local_ann_ms(cfg: &AttnConfig, reps: usize) -> f64 {
+    let mut rng = Xoshiro256::new(1);
+    let mk = |rng: &mut Xoshiro256| {
+        let n: usize = cfg.n_tokens * cfg.d_head;
+        Tensor::from_vec(
+            &[cfg.n_tokens, cfg.d_head],
+            (0..n).map(|_| rng.next_normal() as f32).collect(),
+        )
+    };
+    let heads: Vec<(Tensor, Tensor, Tensor)> =
+        (0..cfg.n_heads).map(|_| (mk(&mut rng), mk(&mut rng), mk(&mut rng))).collect();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for (q, k, v) in &heads {
+            std::hint::black_box(softmax_attention(q, k, v));
+        }
+    }
+    t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+}
+
+/// Wall-clock the packed-bit SSA software block (all heads, T steps).
+pub fn measure_local_ssa_ms(cfg: &AttnConfig, reps: usize) -> f64 {
+    let streams: Vec<SpikeStreams> = (0..cfg.n_heads)
+        .map(|h| SpikeStreams::from_rates(cfg, (0.5, 0.5, 0.5), 100 + h as u64))
+        .collect();
+    let mut heads: Vec<SsaAttention> = (0..cfg.n_heads)
+        .map(|h| SsaAttention::new(*cfg, PrngSharing::PerRow, 200 + h as u64))
+        .collect();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for (h, ssa) in heads.iter_mut().enumerate() {
+            let s = &streams[h];
+            for t in 0..cfg.time_steps {
+                std::hint::black_box(ssa.step(&s.q[t], &s.k[t], &s.v[t]));
+            }
+        }
+    }
+    t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+}
+
+/// Wall-clock the Spikformer software block.
+pub fn measure_local_spikformer_ms(cfg: &AttnConfig, reps: usize) -> f64 {
+    let streams: Vec<SpikeStreams> = (0..cfg.n_heads)
+        .map(|h| SpikeStreams::from_rates(cfg, (0.5, 0.5, 0.5), 300 + h as u64))
+        .collect();
+    let mut heads: Vec<SpikformerAttention> = (0..cfg.n_heads)
+        .map(|_| SpikformerAttention::new(*cfg, 0.25, LifConfig::default()))
+        .collect();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for (h, sf) in heads.iter_mut().enumerate() {
+            let s = &streams[h];
+            for t in 0..cfg.time_steps {
+                std::hint::black_box(sf.step(&s.q[t], &s.k[t], &s.v[t]));
+            }
+        }
+    }
+    t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+}
+
+/// Wall-clock the linear-attention ANN variant (fairness companion).
+pub fn measure_local_linear_ms(cfg: &AttnConfig, reps: usize) -> f64 {
+    let mut rng = Xoshiro256::new(7);
+    let n: usize = cfg.n_tokens * cfg.d_head;
+    let mk = |rng: &mut Xoshiro256| {
+        Tensor::from_vec(
+            &[cfg.n_tokens, cfg.d_head],
+            (0..n).map(|_| rng.next_f32()).collect(),
+        )
+    };
+    let heads: Vec<(Tensor, Tensor, Tensor)> =
+        (0..cfg.n_heads).map(|_| (mk(&mut rng), mk(&mut rng), mk(&mut rng))).collect();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for (q, k, v) in &heads {
+            std::hint::black_box(linear_attention(q, k, v));
+        }
+    }
+    t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+}
+
+/// Compute and render Table III (+ measured local ground truth).
+pub fn run(measure_local: bool) -> Result<String> {
+    let cfg = AttnConfig::vit_small_paper();
+    let events = fpga_events(&cfg)?;
+    let t3 = TableThree::compute(&cfg, &events);
+    let mut out = t3.render();
+    if measure_local {
+        let reps = 20;
+        out.push_str("\nmeasured on this host (rust golden models, 1 core):\n");
+        out.push_str(&format!(
+            "  ANN attention (softmax, fp32) : {:.3} ms\n",
+            measure_local_ann_ms(&cfg, reps)
+        ));
+        out.push_str(&format!(
+            "  SSA software (packed bits)    : {:.3} ms\n",
+            measure_local_ssa_ms(&cfg, reps)
+        ));
+        out.push_str(&format!(
+            "  Spikformer software           : {:.3} ms\n",
+            measure_local_spikformer_ms(&cfg, reps)
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_rows() {
+        let r = run(false).unwrap();
+        for row in ["ANN attention – CPU", "ANN attention – GPU", "SSA – CPU", "SSA – GPU", "SSA – FPGA"] {
+            assert!(r.contains(row), "missing {row}");
+        }
+    }
+
+    #[test]
+    fn local_measurements_positive() {
+        let cfg = AttnConfig::vit_tiny();
+        assert!(measure_local_ann_ms(&cfg, 2) > 0.0);
+        assert!(measure_local_ssa_ms(&cfg, 2) > 0.0);
+        assert!(measure_local_spikformer_ms(&cfg, 2) > 0.0);
+        assert!(measure_local_linear_ms(&cfg, 2) > 0.0);
+    }
+}

@@ -1,0 +1,353 @@
+//! The N×N SAU array with the Fig. 3 dataflow — cycle-accurate.
+//!
+//! Streaming (paper §III-C): at phase-1 cycle `d` of time step `t`, wire
+//! `Q^t[i, d]` to every SAU in row `i` and `K^t[j, d]`, `V^t[j, d]` to
+//! every SAU in column `j`.  Each SAU ANDs its pair into its counter; its
+//! FIFO delays V by D_K cycles so the value path of step `t-1` drains
+//! concurrently (two-step pipeline).  Row adders sum the N value-path
+//! outputs; row Bernoulli encoders normalize by N and emit `Attn^{t-1}`
+//! column by column.
+//!
+//! The PRNG bank and draw-ordering contract are shared with the software
+//! model (`attention::ssa`), which the integration suite uses to assert
+//! bit-exact equality of every `S^t` / `Attn^t` — experiment E5.
+
+use crate::attention::ssa::PrngBank;
+use crate::config::{AttnConfig, PrngSharing};
+use crate::util::bitpack::BitMatrix;
+
+use super::bernoulli_encoder::BernoulliEncoder;
+use super::sau::Sau;
+use super::trace::{CycleTrace, TraceEvent};
+
+/// Aggregate switching-activity / event counters for energy cross-checks
+/// (`energy::ssa` validates its analytic op counts against these).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArrayEvents {
+    pub cycles: u64,
+    /// Score-path AND evaluations that output 1 (toggle-relevant).
+    pub score_and_ones: u64,
+    /// All score-path AND evaluations (gate count x cycles).
+    pub score_and_evals: u64,
+    /// Counter increment events.
+    pub counter_increments: u64,
+    /// Value-path AND evaluations that output 1.
+    pub value_and_ones: u64,
+    pub value_and_evals: u64,
+    /// FIFO bit shifts.
+    pub fifo_shifts: u64,
+    /// Row-adder additions (N-input adder evaluations x rows).
+    pub adder_evals: u64,
+    /// Bernoulli encoder samples (comparator evaluations).
+    pub encoder_samples: u64,
+    /// 16-bit LFSR words drawn (16 flop toggles each in hardware).
+    pub lfsr_words: u64,
+    /// Spikes produced on the S plane and the Attn plane.
+    pub s_spikes: u64,
+    pub attn_spikes: u64,
+}
+
+/// The cycle-accurate SSA block (one attention head's N×N array).
+pub struct SauArray {
+    cfg: AttnConfig,
+    sharing: PrngSharing,
+    saus: Vec<Sau>, // row-major N×N
+    bank: PrngBank,
+    s_encoder: BernoulliEncoder,
+    attn_encoder: BernoulliEncoder,
+    events: ArrayEvents,
+    // scratch
+    s_words: Vec<u16>,
+    attn_words: Vec<u16>,
+    row_sums: Vec<u32>,
+}
+
+/// Result of running the array over a full T-step input stream.
+pub struct ArrayRun {
+    /// `S^t` matrices, one per time step.
+    pub s: Vec<BitMatrix>,
+    /// `Attn^t` matrices, one per time step.
+    pub attn: Vec<BitMatrix>,
+    pub events: ArrayEvents,
+}
+
+impl SauArray {
+    pub fn new(cfg: AttnConfig, sharing: PrngSharing, base_seed: u64) -> Self {
+        cfg.validate().expect("invalid attention config");
+        let n = cfg.n_tokens;
+        Self {
+            saus: (0..n * n).map(|_| Sau::new(cfg.d_head)).collect(),
+            bank: PrngBank::new(sharing, base_seed, n),
+            s_encoder: BernoulliEncoder::new(cfg.d_head as u32),
+            attn_encoder: BernoulliEncoder::new(cfg.n_tokens as u32),
+            cfg,
+            sharing,
+            events: ArrayEvents::default(),
+            s_words: Vec::new(),
+            attn_words: Vec::new(),
+            row_sums: vec![0; n],
+        }
+    }
+
+    pub fn config(&self) -> &AttnConfig {
+        &self.cfg
+    }
+
+    pub fn sharing(&self) -> PrngSharing {
+        self.sharing
+    }
+
+    pub fn events(&self) -> &ArrayEvents {
+        &self.events
+    }
+
+    /// Physical LFSR instances (A1 area accounting).
+    pub fn prng_instances(&self) -> usize {
+        self.bank.instances()
+    }
+
+    /// Run the pipelined dataflow over a T-step spike stream.
+    ///
+    /// `q, k, v` hold T matrices of shape `[N, D_K]`.  The run takes
+    /// `(T + 1) * D_K` datapath cycles: the extra block drains the value
+    /// path of the final step (Fig. 3's pipeline).
+    pub fn run(
+        &mut self,
+        q: &[BitMatrix],
+        k: &[BitMatrix],
+        v: &[BitMatrix],
+        mut trace: Option<&mut CycleTrace>,
+    ) -> ArrayRun {
+        let n = self.cfg.n_tokens;
+        let d_k = self.cfg.d_head;
+        let t_steps = q.len();
+        assert_eq!(k.len(), t_steps, "k stream length");
+        assert_eq!(v.len(), t_steps, "v stream length");
+        for (name, stream) in [("q", q), ("k", k), ("v", v)] {
+            for m in stream.iter() {
+                assert_eq!(
+                    (m.rows(), m.cols()),
+                    (n, d_k),
+                    "{name} frames must be [N, D_K]"
+                );
+            }
+        }
+
+        let mut s_out: Vec<BitMatrix> = Vec::with_capacity(t_steps);
+        let mut attn_out: Vec<BitMatrix> =
+            (0..t_steps).map(|_| BitMatrix::zeros(n, d_k)).collect();
+
+        // per-cycle streamed-bit scratch (allocated once, §Perf L3)
+        let mut q_bits = vec![false; n];
+        let mut k_bits = vec![false; n];
+        let mut v_bits = vec![false; n];
+
+        // Pipeline blocks: block `b` streams step `b` on the score path
+        // while step `b-1` drains on the value path.
+        for b in 0..=t_steps {
+            let streaming = b < t_steps;
+            let draining = b >= 1;
+            for d in 0..d_k {
+                self.events.cycles += 1;
+                // value-path sample for this cycle (step b-1, column d)
+                if draining {
+                    self.bank.attn_words(n, &mut self.attn_words);
+                    self.events.lfsr_words += match self.sharing {
+                        PrngSharing::Global => 1,
+                        _ => n as u64,
+                    };
+                }
+                self.row_sums.iter_mut().for_each(|s| *s = 0);
+
+                // hoist this cycle's streamed bits out of the N² SAU loop
+                // (§Perf L3: 3 packed-bit lookups per SAU -> per row/col)
+                for i in 0..n {
+                    q_bits[i] = streaming && q[b].get(i, d);
+                    k_bits[i] = streaming && k[b].get(i, d);
+                    v_bits[i] = streaming && v[b].get(i, d);
+                }
+
+                for i in 0..n {
+                    for j in 0..n {
+                        let (qb, kb, vb) = (q_bits[i], k_bits[j], v_bits[j]);
+                        let tick = self.saus[i * n + j].clock(qb, kb, vb);
+                        self.events.score_and_evals += 1;
+                        self.events.fifo_shifts += 1;
+                        if tick.score_and {
+                            self.events.score_and_ones += 1;
+                            self.events.counter_increments += 1;
+                        }
+                        self.events.value_and_evals += 1;
+                        if tick.value_and {
+                            self.events.value_and_ones += 1;
+                            self.row_sums[i] += 1;
+                        }
+                    }
+                }
+
+                if draining {
+                    let step = b - 1;
+                    self.events.adder_evals += n as u64;
+                    for i in 0..n {
+                        self.events.encoder_samples += 1;
+                        let spike =
+                            self.attn_encoder.sample(self.attn_words[i], self.row_sums[i]);
+                        if spike {
+                            self.events.attn_spikes += 1;
+                            attn_out[step].set(i, d, true);
+                        }
+                    }
+                    if let Some(tr) = trace.as_deref_mut() {
+                        tr.push(TraceEvent::AttnColumn {
+                            cycle: self.events.cycles,
+                            step,
+                            d,
+                            fired: self.row_sums.iter().filter(|&&s| s > 0).count(),
+                        });
+                    }
+                }
+            }
+
+            // S-sample boundary at the end of each streaming block.
+            if streaming {
+                self.bank.s_words_n(n, &mut self.s_words);
+                self.events.lfsr_words += match self.sharing {
+                    PrngSharing::Independent => (n * n) as u64,
+                    PrngSharing::PerRow => n as u64,
+                    PrngSharing::Global => 1,
+                };
+                let mut s_mat = BitMatrix::zeros(n, n);
+                for i in 0..n {
+                    for j in 0..n {
+                        let idx = i * n + j;
+                        // combinational: encoder sees the counter value
+                        let count = self.saus[idx].count() as u32;
+                        self.events.encoder_samples += 1;
+                        let spike = self.s_encoder.sample(self.s_words[idx], count);
+                        self.saus[idx].sample_boundary(spike);
+                        if spike {
+                            self.events.s_spikes += 1;
+                            s_mat.set(i, j, true);
+                        }
+                    }
+                }
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.push(TraceEvent::SSample {
+                        cycle: self.events.cycles,
+                        step: b,
+                        spikes: s_mat.count_ones(),
+                    });
+                }
+                s_out.push(s_mat);
+            }
+        }
+
+        ArrayRun { s: s_out, attn: attn_out, events: self.events }
+    }
+
+    /// Reset all registers and event counters (PRNG state is preserved —
+    /// matching the silicon, where LFSRs free-run).
+    pub fn reset_datapath(&mut self) {
+        for sau in &mut self.saus {
+            sau.reset();
+        }
+        self.events = ArrayEvents::default();
+    }
+
+    /// Total datapath cycles for a T-step run (the Fig. 3 schedule).
+    pub fn cycles_for(cfg: &AttnConfig) -> u64 {
+        ((cfg.time_steps + 1) * cfg.d_head) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::ssa::SsaAttention;
+    use crate::attention::stochastic::encode_frame;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Xoshiro256;
+
+    fn tiny() -> AttnConfig {
+        AttnConfig { n_tokens: 8, d_model: 64, n_heads: 4, d_head: 16, time_steps: 3 }
+    }
+
+    fn stream(t: usize, n: usize, d_k: usize, rate: f32, seed: u64) -> Vec<BitMatrix> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..t).map(|_| encode_frame(&Tensor::full(&[n, d_k], rate), &mut rng)).collect()
+    }
+
+    #[test]
+    fn cycle_count_matches_schedule() {
+        let cfg = tiny();
+        let (q, k, v) = (
+            stream(3, 8, 16, 0.5, 1),
+            stream(3, 8, 16, 0.5, 2),
+            stream(3, 8, 16, 0.5, 3),
+        );
+        let mut arr = SauArray::new(cfg, PrngSharing::Independent, 7);
+        let run = arr.run(&q, &k, &v, None);
+        assert_eq!(run.events.cycles, (3 + 1) * 16);
+        assert_eq!(run.events.cycles, SauArray::cycles_for(&cfg.with_time_steps(3)));
+    }
+
+    #[test]
+    fn bit_exact_vs_software_model_all_sharing_modes() {
+        // E5: the cycle-accurate array equals the software twin, bit for
+        // bit, on every S^t and Attn^t, under every PRNG sharing mode.
+        let cfg = tiny();
+        for sharing in
+            [PrngSharing::Independent, PrngSharing::PerRow, PrngSharing::Global]
+        {
+            for seed in [1u64, 42, 999] {
+                let (q, k, v) = (
+                    stream(3, 8, 16, 0.4, seed),
+                    stream(3, 8, 16, 0.5, seed + 10),
+                    stream(3, 8, 16, 0.6, seed + 20),
+                );
+                let mut hw = SauArray::new(cfg, sharing, seed);
+                let run = hw.run(&q, &k, &v, None);
+                let mut sw = SsaAttention::new(cfg, sharing, seed);
+                for t in 0..3 {
+                    let out = sw.step(&q[t], &k[t], &v[t]);
+                    assert_eq!(run.s[t], out.s, "{sharing:?} seed={seed} S^{t}");
+                    assert_eq!(run.attn[t], out.attn, "{sharing:?} seed={seed} Attn^{t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn event_counts_are_structural() {
+        let cfg = tiny();
+        let (q, k, v) = (
+            stream(3, 8, 16, 0.5, 5),
+            stream(3, 8, 16, 0.5, 6),
+            stream(3, 8, 16, 0.5, 7),
+        );
+        let mut arr = SauArray::new(cfg, PrngSharing::PerRow, 3);
+        let run = arr.run(&q, &k, &v, None);
+        let n = 8u64;
+        let d_k = 16u64;
+        let t = 3u64;
+        let cycles = (t + 1) * d_k;
+        assert_eq!(run.events.score_and_evals, cycles * n * n);
+        assert_eq!(run.events.fifo_shifts, cycles * n * n);
+        // encoders: N² per S-sample x T, plus N per value column x T*D_K
+        assert_eq!(run.events.encoder_samples, t * n * n + t * d_k * n);
+        assert_eq!(run.events.adder_evals, t * d_k * n);
+        // coincidences can't exceed streamed AND evaluations
+        assert!(run.events.score_and_ones <= t * d_k * n * n);
+        assert_eq!(run.events.counter_increments, run.events.score_and_ones);
+    }
+
+    #[test]
+    fn zero_stream_produces_zero_planes() {
+        let cfg = tiny();
+        let z: Vec<BitMatrix> = (0..3).map(|_| BitMatrix::zeros(8, 16)).collect();
+        let mut arr = SauArray::new(cfg, PrngSharing::Independent, 1);
+        let run = arr.run(&z, &z, &z, None);
+        assert_eq!(run.events.s_spikes, 0);
+        assert_eq!(run.events.attn_spikes, 0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Hardware Bernoulli encoder: LFSR word + comparator (paper §III-D).
+//!
+//! Given an integer `count` accumulated over `m` opportunities, emits a
+//! spike with probability `count / m`.  Two datapaths mirror the paper:
+//!
+//! * **pow2** (`m` a power of two): a plain bit-slice comparison between
+//!   the count and the top `log2(m)` LFSR bits — the §III-D simplification
+//!   ("eliminating the need for normalization").  Exact.
+//! * **divider** (general `m`): fixed-point normalization
+//!   `u * m < count << 16` — one 16x8 multiply per sample in hardware.
+//!   Quantization error ≤ m/2^16 (ablation A2 measures both).
+//!
+//! Both paths compute the *same* function for pow2 `m` (asserted in
+//! tests), so the simulator always evaluates the canonical comparison from
+//! `attention::ssa::bern_compare` and separately tracks which datapath the
+//! configured geometry would synthesize (for area/energy accounting).
+
+use crate::attention::ssa::bern_compare;
+
+/// Which comparator datapath the geometry synthesizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EncoderPath {
+    Pow2Compare,
+    FixedPointDivider,
+}
+
+impl EncoderPath {
+    pub fn for_modulus(m: u32) -> Self {
+        if m.is_power_of_two() {
+            EncoderPath::Pow2Compare
+        } else {
+            EncoderPath::FixedPointDivider
+        }
+    }
+}
+
+/// A Bernoulli encoder instance (stateless datapath; the LFSR lives in the
+/// PRNG bank so sharing strategies can be modeled — see `attention::ssa`).
+#[derive(Clone, Copy, Debug)]
+pub struct BernoulliEncoder {
+    m: u32,
+    path: EncoderPath,
+}
+
+impl BernoulliEncoder {
+    pub fn new(m: u32) -> Self {
+        assert!(m > 0 && m <= 1 << 16, "modulus out of comparator range");
+        Self { m, path: EncoderPath::for_modulus(m) }
+    }
+
+    pub fn path(&self) -> EncoderPath {
+        self.path
+    }
+
+    pub fn modulus(&self) -> u32 {
+        self.m
+    }
+
+    /// Sample: spike iff the LFSR word maps below `count / m`.
+    #[inline]
+    pub fn sample(&self, lfsr_word: u16, count: u32) -> bool {
+        bern_compare(lfsr_word, count.min(self.m), self.m)
+    }
+
+    /// The pow2 datapath as hardware would wire it: compare `count` against
+    /// the top `log2(m)` bits of the LFSR word.  Must equal [`sample`] for
+    /// pow2 moduli (tested) — this is the §III-D equivalence.
+    #[inline]
+    pub fn sample_pow2_datapath(&self, lfsr_word: u16, count: u32) -> bool {
+        debug_assert!(self.m.is_power_of_two());
+        let bits = self.m.trailing_zeros(); // log2(m)
+        let slice = (lfsr_word as u32) >> (16 - bits);
+        slice < count.min(self.m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_selection() {
+        assert_eq!(EncoderPath::for_modulus(16), EncoderPath::Pow2Compare);
+        assert_eq!(EncoderPath::for_modulus(64), EncoderPath::Pow2Compare);
+        assert_eq!(EncoderPath::for_modulus(48), EncoderPath::FixedPointDivider);
+    }
+
+    #[test]
+    fn pow2_datapath_equals_canonical() {
+        // A2 equivalence: bit-slice comparator == fixed-point compare for
+        // every word and count when m is a power of two.
+        for m in [2u32, 16, 64, 256] {
+            let e = BernoulliEncoder::new(m);
+            for count in 0..=m {
+                for w in (0..=u16::MAX).step_by(37) {
+                    assert_eq!(
+                        e.sample(w, count),
+                        e.sample_pow2_datapath(w, count),
+                        "m={m} count={count} w={w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn probability_is_count_over_m() {
+        let e = BernoulliEncoder::new(64);
+        for count in [0u32, 1, 32, 63, 64] {
+            let hits = (0..=u16::MAX).filter(|&w| e.sample(w, count)).count();
+            assert_eq!(hits as u32 * 64, count * 65536);
+        }
+    }
+
+    #[test]
+    fn count_clamped_to_modulus() {
+        let e = BernoulliEncoder::new(16);
+        // count > m (can't happen in a correct array, but the encoder
+        // saturates rather than mis-sampling)
+        assert!(e.sample(u16::MAX, 999));
+    }
+}

@@ -1,0 +1,64 @@
+//! UINT8 coincidence counter (paper §III-C: "counting the AND output using
+//! a counter with UINT8 output, accommodating a key dimension D_K up to
+//! 2^8 = 256").
+
+/// Saturating 8-bit up-counter with enable.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Uint8Counter {
+    value: u8,
+}
+
+impl Uint8Counter {
+    pub fn new() -> Self {
+        Self { value: 0 }
+    }
+
+    /// Clock edge: increment when `enable` is high. Saturates at 255
+    /// (cannot occur for D_K <= 256 with at most one increment per cycle,
+    /// but the hardware bound is modeled faithfully).
+    #[inline]
+    pub fn clock(&mut self, enable: bool) {
+        if enable {
+            self.value = self.value.saturating_add(1);
+        }
+    }
+
+    pub fn value(&self) -> u8 {
+        self.value
+    }
+
+    pub fn reset(&mut self) {
+        self.value = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_enabled_edges_only() {
+        let mut c = Uint8Counter::new();
+        for i in 0..10 {
+            c.clock(i % 2 == 0);
+        }
+        assert_eq!(c.value(), 5);
+    }
+
+    #[test]
+    fn saturates_at_255() {
+        let mut c = Uint8Counter::new();
+        for _ in 0..300 {
+            c.clock(true);
+        }
+        assert_eq!(c.value(), 255);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut c = Uint8Counter::new();
+        c.clock(true);
+        c.reset();
+        assert_eq!(c.value(), 0);
+    }
+}

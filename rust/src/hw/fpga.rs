@@ -1,0 +1,221 @@
+//! FPGA resource / timing / power model (Zynq-7000 class, Table III row 5).
+//!
+//! The paper implements one SSA block on a "lightweight FPGA (within
+//! Xilinx Zynq-7000 SoC)" at f_clk = 200 MHz and reports 3.3 µs latency
+//! and 1.47 W.  We cannot synthesize bitstreams here (DESIGN.md §3), so
+//! this module derives:
+//!
+//! * **latency** from the cycle-accurate schedule: `(T+1)·D_K` datapath
+//!   cycles (Fig. 3) plus a fixed control overhead (AXI handshake, input
+//!   load, output drain) calibrated once against the paper's 3.3 µs;
+//! * **resources** from per-component LUT/FF estimates (standard 7-series
+//!   mapping: 8-bit counter ≈ 8 LUT + 8 FF, 16-bit comparator ≈ 8 LUT,
+//!   SRL-based D_K-bit FIFO ≈ D_K/32 LUT, ...), checked against the
+//!   7z020's 53 200 LUTs / 106 400 FFs;
+//! * **power** from switching activity reported by the simulator
+//!   ([`super::array::ArrayEvents`]) times per-event energy coefficients,
+//!   plus static power — coefficients documented inline.
+
+use crate::config::{AttnConfig, PrngSharing};
+
+use super::array::ArrayEvents;
+
+/// Zynq-7020 programmable-logic capacity (the paper's "lightweight" part).
+pub const ZYNQ7020_LUTS: u64 = 53_200;
+pub const ZYNQ7020_FFS: u64 = 106_400;
+
+/// Fixed control overhead in cycles (AXI-lite handshake, Q/K/V input
+/// load-in, Attn drain).  Calibrated so the paper geometry (N=64, D_K=48,
+/// T=10) lands on the reported 3.3 µs at 200 MHz:
+/// (528 datapath + 132 control) / 200 MHz = 3.30 µs.
+pub const CONTROL_OVERHEAD_CYCLES: u64 = 132;
+
+/// Per-event dynamic energy coefficients (pJ), 28 nm-class programmable
+/// logic (CLB toggle energies; conservative mid-range values).
+#[derive(Clone, Copy, Debug)]
+pub struct FpgaEnergyCoeffs {
+    pub and_eval_pj: f64,
+    pub counter_inc_pj: f64,
+    pub fifo_shift_pj: f64,
+    pub adder_eval_pj: f64,
+    pub encoder_sample_pj: f64,
+    pub lfsr_word_pj: f64,
+    /// Clock-tree + routing per SAU per cycle.
+    pub clock_per_sau_pj: f64,
+    /// Static power of the configured PL region (W).
+    pub static_w: f64,
+}
+
+impl Default for FpgaEnergyCoeffs {
+    fn default() -> Self {
+        Self {
+            and_eval_pj: 0.08,
+            counter_inc_pj: 0.45,
+            fifo_shift_pj: 0.18,
+            adder_eval_pj: 1.6,   // N-input popcount tree per row
+            encoder_sample_pj: 1.2,
+            lfsr_word_pj: 1.0,    // 16 flops + feedback net
+            clock_per_sau_pj: 0.55,
+            static_w: 0.18,
+        }
+    }
+}
+
+/// FPGA implementation report for one SSA block run.
+#[derive(Clone, Debug)]
+pub struct FpgaReport {
+    pub f_clk_mhz: f64,
+    pub datapath_cycles: u64,
+    pub total_cycles: u64,
+    pub latency_us: f64,
+    pub dynamic_w: f64,
+    pub total_w: f64,
+    pub luts: u64,
+    pub ffs: u64,
+    pub fits_7z020: bool,
+    pub lut_utilization: f64,
+}
+
+/// Resource estimate for an N×N array at key dimension D_K.
+pub fn resources(cfg: &AttnConfig, sharing: PrngSharing) -> (u64, u64) {
+    let n = cfg.n_tokens as u64;
+    let d_k = cfg.d_head as u64;
+    // per SAU: 2 LUT (two ANDs fold into one LUT6 each), counter 8/8,
+    // SRL-FIFO ceil(D_K/32) LUT + 1 FF, S register 1 FF.
+    let sau_luts = 2 + 8 + d_k.div_ceil(32);
+    let sau_ffs = 8 + 1 + 1;
+    // S-stage Bernoulli encoder per SAU: comparator (8 LUT) + sample FF;
+    // divider path (non-pow2 D_K) adds a 16x8 multiplier ≈ 70 LUTs.
+    let enc_luts = if cfg.d_head.is_power_of_two() { 8 } else { 78 };
+    // row hardware: N-input adder tree ≈ 2N LUT, attn encoder, output reg
+    let row_luts = 2 * n + enc_luts + 4;
+    let row_ffs = 16 + 8;
+    // LFSRs: 16 FF + 2 LUT each
+    let lfsrs = match sharing {
+        PrngSharing::Independent => n * n + n,
+        PrngSharing::PerRow => n,
+        PrngSharing::Global => 1,
+    };
+    let luts = n * n * (sau_luts + enc_luts) + n * row_luts + lfsrs * 2;
+    let ffs = n * n * (sau_ffs + 1) + n * row_ffs + lfsrs * 16;
+    (luts, ffs)
+}
+
+/// Build the Table-III FPGA row from a simulated run.
+pub fn report(
+    cfg: &AttnConfig,
+    sharing: PrngSharing,
+    events: &ArrayEvents,
+    coeffs: &FpgaEnergyCoeffs,
+    f_clk_mhz: f64,
+) -> FpgaReport {
+    let datapath_cycles = events.cycles;
+    let total_cycles = datapath_cycles + CONTROL_OVERHEAD_CYCLES;
+    let latency_us = total_cycles as f64 / f_clk_mhz;
+    let n = cfg.n_tokens as u64;
+
+    let dynamic_pj = events.score_and_evals as f64 * coeffs.and_eval_pj
+        + events.value_and_evals as f64 * coeffs.and_eval_pj
+        + events.counter_increments as f64 * coeffs.counter_inc_pj
+        + events.fifo_shifts as f64 * coeffs.fifo_shift_pj
+        + events.adder_evals as f64 * coeffs.adder_eval_pj
+        + events.encoder_samples as f64 * coeffs.encoder_sample_pj
+        + events.lfsr_words as f64 * coeffs.lfsr_word_pj
+        + (events.cycles * n * n) as f64 * coeffs.clock_per_sau_pj;
+    // dynamic power = energy / active time
+    let active_s = datapath_cycles as f64 / (f_clk_mhz * 1e6);
+    let dynamic_w = dynamic_pj * 1e-12 / active_s.max(1e-12);
+
+    let (luts, ffs) = resources(cfg, sharing);
+    FpgaReport {
+        f_clk_mhz,
+        datapath_cycles,
+        total_cycles,
+        latency_us,
+        dynamic_w,
+        total_w: dynamic_w + coeffs.static_w,
+        luts,
+        ffs,
+        fits_7z020: luts <= ZYNQ7020_LUTS && ffs <= ZYNQ7020_FFS,
+        lut_utilization: luts as f64 / ZYNQ7020_LUTS as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::stochastic::encode_frame;
+    use crate::hw::array::SauArray;
+    use crate::tensor::Tensor;
+    use crate::util::bitpack::BitMatrix;
+    use crate::util::rng::Xoshiro256;
+
+    fn run_events(cfg: AttnConfig, rate: f32) -> ArrayEvents {
+        let mut rng = Xoshiro256::new(1);
+        let mk = |rng: &mut Xoshiro256| -> Vec<BitMatrix> {
+            (0..cfg.time_steps)
+                .map(|_| {
+                    encode_frame(&Tensor::full(&[cfg.n_tokens, cfg.d_head], rate), rng)
+                })
+                .collect()
+        };
+        let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let mut arr = SauArray::new(cfg, PrngSharing::PerRow, 5);
+        arr.run(&q, &k, &v, None).events
+    }
+
+    #[test]
+    fn paper_geometry_latency_is_3_3_us() {
+        // Table III row 5: SSA on FPGA at 200 MHz -> 3.3e-3 ms.
+        let cfg = AttnConfig::vit_small_paper();
+        let events = run_events(cfg, 0.5);
+        let rep = report(&cfg, PrngSharing::PerRow, &events, &FpgaEnergyCoeffs::default(), 200.0);
+        assert_eq!(rep.datapath_cycles, 11 * 48);
+        assert!((rep.latency_us - 3.3).abs() < 0.01, "latency={}", rep.latency_us);
+    }
+
+    #[test]
+    fn paper_geometry_power_near_reported() {
+        // Table III: 1.47 W. Coefficients are 28nm-class estimates; assert
+        // the order of magnitude and the calibration direction (±40%).
+        let cfg = AttnConfig::vit_small_paper();
+        let events = run_events(cfg, 0.5);
+        let rep = report(&cfg, PrngSharing::PerRow, &events, &FpgaEnergyCoeffs::default(), 200.0);
+        assert!(
+            rep.total_w > 0.88 && rep.total_w < 2.06,
+            "total_w={} should be near the reported 1.47 W",
+            rep.total_w
+        );
+    }
+
+    #[test]
+    fn per_row_sharing_fits_7z020_for_tiny_and_reports_for_paper() {
+        let tiny = AttnConfig::vit_tiny();
+        let (luts, _) = resources(&tiny, PrngSharing::PerRow);
+        assert!(luts < ZYNQ7020_LUTS, "tiny config must fit: {luts}");
+        // The paper geometry with pow2 encoders would not fit with
+        // independent PRNGs — the §III-D sharing strategy is what makes
+        // the divider-free design plausible; assert sharing shrinks it.
+        let cfg = AttnConfig::vit_small_paper();
+        let (ind, _) = resources(&cfg, PrngSharing::Independent);
+        let (shared, _) = resources(&cfg, PrngSharing::PerRow);
+        assert!(shared < ind);
+    }
+
+    #[test]
+    fn zero_activity_zero_dynamic_terms_scale() {
+        let cfg = AttnConfig::vit_tiny();
+        let z: Vec<BitMatrix> = (0..cfg.time_steps)
+            .map(|_| BitMatrix::zeros(cfg.n_tokens, cfg.d_head))
+            .collect();
+        let mut arr = SauArray::new(cfg, PrngSharing::PerRow, 5);
+        let ev = arr.run(&z, &z, &z, None).events;
+        assert_eq!(ev.counter_increments, 0);
+        let rep = report(&cfg, PrngSharing::PerRow, &ev, &FpgaEnergyCoeffs::default(), 200.0);
+        // clock tree + evaluations still burn power, but less than active
+        let ev_active = run_events(cfg, 0.9);
+        let rep_active =
+            report(&cfg, PrngSharing::PerRow, &ev_active, &FpgaEnergyCoeffs::default(), 200.0);
+        assert!(rep.dynamic_w < rep_active.dynamic_w);
+    }
+}

@@ -1,0 +1,20 @@
+//! Cycle-accurate model of the SSA hardware accelerator (paper §III-C/D,
+//! Figs. 2-3): LFSR-fed Bernoulli encoders, UINT8 counters, D_K-bit FIFOs,
+//! the N×N SAU array with row adders, the Fig. 3 pipelined dataflow, and
+//! the Zynq-class FPGA resource/timing/power projection.
+//!
+//! Verification strategy (E5): the array is asserted *bit-exact* against
+//! the software model `attention::ssa` under a shared PRNG contract, for
+//! every PRNG-sharing strategy.
+
+pub mod array;
+pub mod bernoulli_encoder;
+pub mod counter;
+pub mod fpga;
+pub mod sau;
+pub mod shift_register;
+pub mod sim;
+pub mod trace;
+
+pub use array::{ArrayEvents, ArrayRun, SauArray};
+pub use sim::{simulate, SimReport, SpikeStreams};

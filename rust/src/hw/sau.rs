@@ -1,0 +1,125 @@
+//! Stochastic Attention Unit — the (i,j) cell of Fig. 2 (bottom).
+//!
+//! Per clock cycle a SAU performs, in parallel (two-phase pipelining,
+//! Fig. 3):
+//!
+//! * **score path** (phase 1 of time step t): `AND(Q_i^t[d], K_j^t[d])`
+//!   feeds the UINT8 counter;
+//! * **value path** (phase 2 of time step t-1): `AND(S_reg, V_fifo_out)`
+//!   drives the row adder, where `S_reg` holds `S_{i,j}^{t-1}` and the
+//!   D_K-deep FIFO re-emits `V_j^{t-1}[d]` exactly when needed.
+//!
+//! At the S-sample boundary (every D_K cycles) the counter value is handed
+//! to the Bernoulli encoder, `S_reg` is reloaded, and the counter resets.
+
+use super::counter::Uint8Counter;
+use super::shift_register::BitFifo;
+
+/// One SAU's registers and per-cycle combinational outputs.
+#[derive(Clone, Debug)]
+pub struct Sau {
+    counter: Uint8Counter,
+    v_fifo: BitFifo,
+    s_reg: bool,
+}
+
+/// Combinational outputs of one SAU clock.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SauTick {
+    /// `S_reg AND v_delayed` — this SAU's contribution to the row adder.
+    pub value_and: bool,
+    /// Whether the score-path AND fired (event counting / toggle energy).
+    pub score_and: bool,
+}
+
+impl Sau {
+    pub fn new(d_k: usize) -> Self {
+        Self { counter: Uint8Counter::new(), v_fifo: BitFifo::new(d_k), s_reg: false }
+    }
+
+    /// One clock: stream in `(q_bit AND k_bit)` on the score path and
+    /// `v_bit` into the FIFO; produce the value-path AND output.
+    #[inline]
+    pub fn clock(&mut self, q_bit: bool, k_bit: bool, v_bit: bool) -> SauTick {
+        let score_and = q_bit & k_bit;
+        self.counter.clock(score_and);
+        let v_delayed = self.v_fifo.clock(v_bit);
+        SauTick { value_and: self.s_reg & v_delayed, score_and }
+    }
+
+    /// S-sample boundary: expose the accumulated count, load the new `S`
+    /// bit, reset the counter.
+    #[inline]
+    pub fn sample_boundary(&mut self, new_s: bool) -> u8 {
+        let count = self.counter.value();
+        self.s_reg = new_s;
+        self.counter.reset();
+        count
+    }
+
+    pub fn count(&self) -> u8 {
+        self.counter.value()
+    }
+
+    pub fn s_reg(&self) -> bool {
+        self.s_reg
+    }
+
+    pub fn reset(&mut self) {
+        self.counter.reset();
+        self.v_fifo.reset();
+        self.s_reg = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_path_counts_coincidences() {
+        let mut sau = Sau::new(4);
+        let q = [true, true, false, true];
+        let k = [true, false, false, true];
+        for d in 0..4 {
+            sau.clock(q[d], k[d], false);
+        }
+        assert_eq!(sau.count(), 2);
+    }
+
+    #[test]
+    fn sample_boundary_loads_s_and_resets() {
+        let mut sau = Sau::new(4);
+        for _ in 0..3 {
+            sau.clock(true, true, false);
+        }
+        let c = sau.sample_boundary(true);
+        assert_eq!(c, 3);
+        assert_eq!(sau.count(), 0);
+        assert!(sau.s_reg());
+    }
+
+    #[test]
+    fn value_path_aligns_v_with_s_by_dk_cycles() {
+        // V streamed during phase-1 of step t re-emerges during the next
+        // D_K cycles, exactly when S^t sits in the register (Fig. 3).
+        let d_k = 4;
+        let mut sau = Sau::new(d_k);
+        let v_t0 = [true, false, true, true];
+        for d in 0..d_k {
+            let tick = sau.clock(false, false, v_t0[d]);
+            assert!(!tick.value_and, "S_reg still 0 during fill");
+        }
+        sau.sample_boundary(true); // S^0 = 1
+        // next block: stream V^1 while V^0 drains against S^0
+        for d in 0..d_k {
+            let tick = sau.clock(false, false, false);
+            assert_eq!(tick.value_and, v_t0[d], "cycle {d}");
+        }
+        // with S=0 the value path is gated off
+        sau.sample_boundary(false);
+        for _ in 0..d_k {
+            assert!(!sau.clock(false, false, false).value_and);
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! D_K-bit first-in-first-out shift register (paper §III-D: "a D_K-bit
+//! shift register operating on a first-in-first-out basis is deployed in
+//! each SAU to temporarily buffer V^t and align it with S^t").
+
+/// Fixed-depth single-bit FIFO implemented as a ring buffer (functionally
+/// identical to the serial shift register, O(1) per clock).
+#[derive(Clone, Debug)]
+pub struct BitFifo {
+    buf: Vec<bool>,
+    head: usize,
+    depth: usize,
+}
+
+impl BitFifo {
+    pub fn new(depth: usize) -> Self {
+        assert!(depth > 0);
+        Self { buf: vec![false; depth], head: 0, depth }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Clock edge: shift `input` in, return the bit that falls out (the
+    /// value written `depth` clocks ago).
+    #[inline]
+    pub fn clock(&mut self, input: bool) -> bool {
+        let out = self.buf[self.head];
+        self.buf[self.head] = input;
+        self.head = (self.head + 1) % self.depth;
+        out
+    }
+
+    pub fn reset(&mut self) {
+        self.buf.iter_mut().for_each(|b| *b = false);
+        self.head = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_by_exactly_depth() {
+        let mut f = BitFifo::new(4);
+        let pattern = [true, false, true, true, false, false, true, false];
+        let mut outs = Vec::new();
+        for &b in &pattern {
+            outs.push(f.clock(b));
+        }
+        // first 4 outputs are the zero-initialized contents
+        assert_eq!(&outs[..4], &[false; 4]);
+        // then the input pattern re-emerges shifted by depth
+        assert_eq!(&outs[4..], &pattern[..4]);
+    }
+
+    #[test]
+    fn depth_one_is_single_register() {
+        let mut f = BitFifo::new(1);
+        assert!(!f.clock(true));
+        assert!(f.clock(false));
+        assert!(!f.clock(true));
+    }
+
+    #[test]
+    fn reset_clears_contents() {
+        let mut f = BitFifo::new(3);
+        f.clock(true);
+        f.clock(true);
+        f.reset();
+        for _ in 0..3 {
+            assert!(!f.clock(false));
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! # ssa-repro — Stochastic Spiking Attention (AICAS 2024)
+//!
+//! Production-grade reproduction of Song et al., *"Stochastic Spiking
+//! Attention: Accelerating Attention with Stochastic Computing in Spiking
+//! Networks"*, as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time)** — `python/compile/`: Pallas SSA kernels and the
+//!   spiking ViT family, AOT-lowered to HLO text artifacts.
+//! * **L3 (this crate)** — the serving coordinator and PJRT runtime that
+//!   execute those artifacts with Python never on the request path, plus
+//!   the paper's hardware story: a cycle-accurate SAU-array simulator
+//!   ([`hw`]), software golden models ([`attention`]), and the 45 nm
+//!   energy / device models ([`energy`]) that regenerate Tables II-III.
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index.
+
+pub mod attention;
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod energy;
+pub mod experiments;
+pub mod hw;
+pub mod prop;
+pub mod config;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,176 @@
+//! `ssa-repro` — CLI entry point.  See `cli::USAGE`.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use ssa_repro::cli::{Args, USAGE};
+use ssa_repro::config::{AttnConfig, PrngSharing};
+use ssa_repro::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, SeedPolicy, Target};
+use ssa_repro::experiments::{figures, headline, table1, table2, table3};
+use ssa_repro::hw::{simulate, SpikeStreams};
+use ssa_repro::runtime::Dataset;
+
+fn main() {
+    ssa_repro::util::logging::init_from_env();
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("info") => info(),
+        Some("serve") => serve(args),
+        Some("simulate") => simulate_cmd(args),
+        Some("experiments") => experiments(args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn info() -> Result<()> {
+    println!("ssa-repro — Stochastic Spiking Attention (AICAS 2024) reproduction");
+    println!("paper geometry: {:?}", AttnConfig::vit_small_paper());
+    println!("demo geometry : {:?}", AttnConfig::vit_tiny());
+    println!("see DESIGN.md for the experiment index, EXPERIMENTS.md for results");
+    Ok(())
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.opt_or("artifacts", "artifacts"))
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let n_requests: usize = args.opt_parse("requests", 64)?;
+    let target_s = args.opt_or("target", "ssa_t10");
+    let ensemble: u32 = args.opt_parse("ensemble", 1)?;
+    let max_batch: usize = args.opt_parse("max-batch", 8)?;
+    let max_delay_ms: u64 = args.opt_parse("max-delay-ms", 5)?;
+
+    let target = parse_target(&target_s)?;
+    let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(max_delay_ms) };
+    let mut cfg = CoordinatorConfig::new(dir);
+    cfg.policy = policy;
+    cfg.preload = vec![target_s.clone()];
+
+    let coord = Coordinator::start(cfg)?;
+    let ds = Dataset::load(&coord.manifest().dataset_test)?;
+    let seed_policy =
+        if ensemble > 1 { SeedPolicy::Ensemble(ensemble) } else { SeedPolicy::PerBatch };
+
+    println!("serving {n_requests} requests against {target_s} ...");
+    let mut correct = 0usize;
+    let mut receivers = Vec::new();
+    for i in 0..n_requests {
+        let idx = i % ds.len();
+        receivers.push((
+            idx,
+            coord
+                .submit(target.clone(), ds.image(idx).to_vec(), seed_policy)
+                .map_err(anyhow::Error::from)?,
+        ));
+    }
+    for (idx, rx) in receivers {
+        let resp = rx.recv()?;
+        if resp.class as u32 == ds.labels[idx] {
+            correct += 1;
+        }
+    }
+    println!("accuracy over served requests: {:.2}%", 100.0 * correct as f64 / n_requests as f64);
+    println!("{}", coord.metrics_report());
+    coord.shutdown();
+    Ok(())
+}
+
+fn parse_target(s: &str) -> Result<Target> {
+    if s == "ann" {
+        return Ok(Target::ann());
+    }
+    if let Some((arch, t)) = s.rsplit_once("_t") {
+        let t: usize = t.parse()?;
+        return Ok(Target { arch: arch.to_string(), time_steps: t });
+    }
+    bail!("cannot parse target {s:?} (expected e.g. `ann`, `ssa_t10`)");
+}
+
+fn simulate_cmd(args: &Args) -> Result<()> {
+    let n: usize = args.opt_parse("n", 16)?;
+    let d_k: usize = args.opt_parse("dk", 16)?;
+    let t: usize = args.opt_parse("t", 10)?;
+    let sharing = match args.opt_or("sharing", "per-row").as_str() {
+        "independent" => PrngSharing::Independent,
+        "per-row" => PrngSharing::PerRow,
+        "global" => PrngSharing::Global,
+        s => bail!("unknown --sharing {s:?}"),
+    };
+    let cfg = AttnConfig {
+        n_tokens: n,
+        d_model: d_k, // single-head standalone block
+        n_heads: 1,
+        d_head: d_k,
+        time_steps: t,
+    };
+    cfg.validate()?;
+    let streams = SpikeStreams::from_rates(&cfg, (0.5, 0.5, 0.5), 1);
+    let rep = simulate(cfg, sharing, &streams, 2, 200.0, args.flag("trace"));
+    println!(
+        "simulated N={n} D_K={d_k} T={t} sharing={sharing:?}: {} cycles, \
+         bit-exact vs software = {}",
+        rep.events.cycles, rep.matches_software
+    );
+    println!(
+        "FPGA projection @200MHz: latency {:.3} us, power {:.2} W, {} LUTs ({}% of 7z020)",
+        rep.fpga.latency_us,
+        rep.fpga.total_w,
+        rep.fpga.luts,
+        (rep.fpga.lut_utilization * 100.0) as u32
+    );
+    println!("attn spike rate {:.3}, estimator MAE {:.4}", rep.attn_rate, rep.estimator_mae);
+    if let Some(trace) = rep.trace {
+        println!("{trace}");
+    }
+    Ok(())
+}
+
+fn experiments(args: &Args) -> Result<()> {
+    let which = args.sub_arg(1)?;
+    let dir = artifacts_dir(args);
+    let cross: usize = args.opt_parse("cross-check", 0)?;
+    let tiny = AttnConfig::vit_tiny().with_time_steps(4);
+    match which {
+        "table1" => {
+            let cc = if cross > 0 { Some(("ssa_t10", cross)) } else { None };
+            println!("{}", table1::run(&dir, cc)?);
+        }
+        "table2" => println!("{}", table2::run()),
+        "table3" => println!("{}", table3::run(true)?),
+        "headline" => println!("{}", headline()?),
+        "fig1" => println!("{}", figures::fig1_equivalence(tiny, 3)),
+        "fig2" => println!("{}", figures::fig2_bit_exactness(tiny)),
+        "fig3" => println!("{}", figures::fig3_dataflow(tiny)),
+        "all" => {
+            println!("{}", table1::run(&dir, None)?);
+            println!("{}", table2::run());
+            println!("{}", table3::run(true)?);
+            println!("{}", headline()?);
+            println!("{}", figures::fig1_equivalence(tiny, 3));
+            println!("{}", figures::fig2_bit_exactness(tiny));
+            println!("{}", figures::fig3_dataflow(tiny));
+        }
+        other => bail!("unknown experiment {other:?} — see USAGE"),
+    }
+    Ok(())
+}

@@ -1,0 +1,204 @@
+//! Readers for `dataset_test.bin` and `golden_<variant>.bin` (written by
+//! `python/compile/data.py` / `aot.py`; formats documented there).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub const DATASET_MAGIC: u32 = 0x534E_4454; // 'TDNS'
+pub const GOLDEN_MAGIC: u32 = 0x474F_4C44; // 'GOLD'
+
+/// The tiny-digits test split.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub image_size: usize,
+    /// Row-major `[n, S, S]` pixels in [0,1].
+    pub images: Vec<f32>,
+    pub labels: Vec<u32>,
+}
+
+impl Dataset {
+    pub fn load(path: &Path) -> Result<Self> {
+        let buf = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&buf)
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Self> {
+        let mut c = Cur { buf, pos: 0 };
+        if c.u32()? != DATASET_MAGIC {
+            bail!("bad dataset magic");
+        }
+        if c.u32()? != 1 {
+            bail!("unsupported dataset version");
+        }
+        let n = c.u32()? as usize;
+        let s = c.u32()? as usize;
+        // checked: a corrupted header must error, not overflow or OOM
+        let total = n
+            .checked_mul(s)
+            .and_then(|x| x.checked_mul(s))
+            .filter(|&x| x.checked_mul(5).map_or(false, |bytes| bytes <= buf.len() * 2))
+            .ok_or_else(|| anyhow::anyhow!("implausible dataset header n={n} s={s}"))?;
+        let mut images = Vec::with_capacity(total);
+        let mut labels = Vec::with_capacity(n.min(total.max(1)));
+        for _ in 0..n {
+            for _ in 0..s * s {
+                images.push(c.f32()?);
+            }
+            labels.push(c.u32()?);
+        }
+        if c.pos != buf.len() {
+            bail!("trailing bytes in dataset");
+        }
+        Ok(Self { image_size: s, images, labels })
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Pixels of image `i`.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let px = self.image_size * self.image_size;
+        &self.images[i * px..(i + 1) * px]
+    }
+
+    /// Contiguous pixel slab for images `[start, start+count)`.
+    pub fn batch(&self, start: usize, count: usize) -> &[f32] {
+        let px = self.image_size * self.image_size;
+        &self.images[start * px..(start + count) * px]
+    }
+}
+
+/// A golden record: inputs + expected logits from the Python build.
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub batch: usize,
+    pub image_size: usize,
+    pub n_classes: usize,
+    pub seed: u32,
+    pub images: Vec<f32>,
+    pub logits: Vec<f32>,
+}
+
+impl Golden {
+    pub fn load(path: &Path) -> Result<Self> {
+        let buf = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&buf)
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Self> {
+        let mut c = Cur { buf, pos: 0 };
+        if c.u32()? != GOLDEN_MAGIC {
+            bail!("bad golden magic");
+        }
+        if c.u32()? != 1 {
+            bail!("unsupported golden version");
+        }
+        let batch = c.u32()? as usize;
+        let s = c.u32()? as usize;
+        let classes = c.u32()? as usize;
+        let seed = c.u32()?;
+        let px = batch
+            .checked_mul(s)
+            .and_then(|x| x.checked_mul(s))
+            .filter(|&x| x.checked_mul(4).map_or(false, |bytes| bytes <= buf.len()))
+            .ok_or_else(|| anyhow::anyhow!("implausible golden header"))?;
+        let mut images = Vec::with_capacity(px);
+        for _ in 0..batch * s * s {
+            images.push(c.f32()?);
+        }
+        let mut logits = Vec::with_capacity(batch * classes);
+        for _ in 0..batch * classes {
+            logits.push(c.f32()?);
+        }
+        if c.pos != buf.len() {
+            bail!("trailing bytes in golden file");
+        }
+        Ok(Self { batch, image_size: s, n_classes: classes, seed, images, logits })
+    }
+}
+
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Cur<'_> {
+    fn u32(&mut self) -> Result<u32> {
+        if self.pos + 4 > self.buf.len() {
+            bail!("truncated at {}", self.pos);
+        }
+        let b = &self.buf[self.pos..self.pos + 4];
+        self.pos += 4;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dataset_bytes() -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend(DATASET_MAGIC.to_le_bytes());
+        b.extend(1u32.to_le_bytes());
+        b.extend(2u32.to_le_bytes()); // n
+        b.extend(2u32.to_le_bytes()); // s
+        for img in 0..2u32 {
+            for p in 0..4 {
+                b.extend((0.1 * (img * 4 + p) as f32).to_le_bytes());
+            }
+            b.extend((img % 10).to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn dataset_roundtrip() {
+        let d = Dataset::parse(&dataset_bytes()).unwrap();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.image_size, 2);
+        assert_eq!(d.labels, vec![0, 1]);
+        assert_eq!(d.image(1).len(), 4);
+        assert!((d.image(1)[0] - 0.4).abs() < 1e-6);
+        assert_eq!(d.batch(0, 2).len(), 8);
+    }
+
+    #[test]
+    fn dataset_rejects_corruption() {
+        let b = dataset_bytes();
+        assert!(Dataset::parse(&b[..b.len() - 2]).is_err());
+        let mut bad = b.clone();
+        bad[0] ^= 0xFF;
+        assert!(Dataset::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn golden_roundtrip() {
+        let mut b = Vec::new();
+        b.extend(GOLDEN_MAGIC.to_le_bytes());
+        b.extend(1u32.to_le_bytes());
+        b.extend(1u32.to_le_bytes()); // batch
+        b.extend(2u32.to_le_bytes()); // s
+        b.extend(3u32.to_le_bytes()); // classes
+        b.extend(42u32.to_le_bytes());
+        for v in [0.1f32, 0.2, 0.3, 0.4] {
+            b.extend(v.to_le_bytes());
+        }
+        for v in [1.0f32, -1.0, 0.5] {
+            b.extend(v.to_le_bytes());
+        }
+        let g = Golden::parse(&b).unwrap();
+        assert_eq!(g.seed, 42);
+        assert_eq!(g.logits, vec![1.0, -1.0, 0.5]);
+    }
+}

@@ -1,0 +1,148 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute many.
+//!
+//! This is the only place the `xla` crate is touched.  The interchange
+//! format is HLO *text* (see DESIGN.md §2): `HloModuleProto::from_text_file`
+//! re-assigns instruction ids, avoiding the 64-bit-id protos that
+//! xla_extension 0.5.1 rejects.  Graphs are lowered by `aot.py` with
+//! `return_tuple=True`, so outputs unwrap with `to_tuple1()`.
+//!
+//! Weights are staged to device buffers once at load time; per-request
+//! work is one image-batch upload, one scalar seed upload, and one
+//! `execute_b` (the §Perf hot path).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::manifest::Variant;
+use super::weights::Weights;
+
+/// Shared PJRT CPU client.
+#[derive(Clone)]
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::log_info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one manifest variant and stage its weights.
+    pub fn load(&self, variant: &Variant) -> Result<LoadedModel> {
+        let proto = xla::HloModuleProto::from_text_file(
+            variant.hlo.to_str().context("non-utf8 hlo path")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", variant.hlo))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling variant {}", variant.name))?;
+
+        let weights = Weights::load(&variant.weights)?;
+        let mut weight_buffers = Vec::with_capacity(variant.param_names.len());
+        for name in &variant.param_names {
+            let t = weights.get(name)?;
+            let buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(t.data(), t.shape(), None)
+                .with_context(|| format!("staging weight {name}"))?;
+            weight_buffers.push(buf);
+        }
+        crate::log_info!(
+            "loaded variant {} ({} params, batch {})",
+            variant.name,
+            weight_buffers.len(),
+            variant.batch
+        );
+        Ok(LoadedModel {
+            runtime: self.clone(),
+            variant: variant.clone(),
+            weight_buffers: Arc::new(weight_buffers),
+            exe: Arc::new(exe),
+        })
+    }
+}
+
+/// A compiled model variant ready to serve.
+#[derive(Clone)]
+pub struct LoadedModel {
+    runtime: Runtime,
+    variant: Variant,
+    weight_buffers: Arc<Vec<xla::PjRtBuffer>>,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+}
+
+impl LoadedModel {
+    pub fn variant(&self) -> &Variant {
+        &self.variant
+    }
+
+    pub fn batch(&self) -> usize {
+        self.variant.batch
+    }
+
+    /// Run one inference: `images` is a row-major `[batch, S, S]` f32
+    /// buffer in [0,1]; returns `[batch, n_classes]` logits.
+    pub fn infer(&self, images: &[f32], seed: u32) -> Result<Vec<f32>> {
+        let img_spec = &self.variant.inputs[0];
+        let expected: usize = img_spec.shape.iter().product();
+        anyhow::ensure!(
+            images.len() == expected,
+            "images buffer has {} elements, variant {} expects {:?}",
+            images.len(),
+            self.variant.name,
+            img_spec.shape
+        );
+        let img_buf = self
+            .runtime
+            .client
+            .buffer_from_host_buffer::<f32>(images, &img_spec.shape, None)?;
+        let seed_buf =
+            self.runtime.client.buffer_from_host_buffer::<u32>(&[seed], &[], None)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(self.weight_buffers.len() + 2);
+        args.extend(self.weight_buffers.iter());
+        args.push(&img_buf);
+        args.push(&seed_buf);
+
+        let outputs = self.exe.execute_b(&args)?;
+        let literal = outputs[0][0].to_literal_sync()?;
+        let logits = literal.to_tuple1()?.to_vec::<f32>()?;
+        let want: usize = self.variant.output_shape.iter().product();
+        anyhow::ensure!(
+            logits.len() == want,
+            "output has {} elements, expected {want}",
+            logits.len()
+        );
+        Ok(logits)
+    }
+
+    /// Argmax class per batch row (serving convenience).
+    pub fn classify(&self, images: &[f32], seed: u32) -> Result<Vec<usize>> {
+        let logits = self.infer(images, seed)?;
+        let classes = self.variant.output_shape[1];
+        Ok(logits
+            .chunks_exact(classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect())
+    }
+}

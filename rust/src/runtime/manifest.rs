@@ -1,0 +1,184 @@
+//! `artifacts/manifest.json` — the index of everything `aot.py` produced.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One input tensor spec of an AOT'd graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One compiled model variant (e.g. `ssa_t10`, batch 8).
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub name: String,
+    pub arch: String,
+    pub time_steps: usize,
+    pub batch: usize,
+    pub hlo: PathBuf,
+    pub weights: PathBuf,
+    pub param_names: Vec<String>,
+    pub golden: Option<PathBuf>,
+    pub inputs: Vec<InputSpec>,
+    pub output_shape: Vec<usize>,
+}
+
+/// The whole artifacts directory, parsed.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub image_size: usize,
+    pub patch_size: usize,
+    pub n_classes: usize,
+    pub golden_seed: u32,
+    pub dataset_test: PathBuf,
+    pub dataset_n: usize,
+    pub variants: Vec<Variant>,
+}
+
+fn parse_shape(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .context("shape must be an array")?
+        .iter()
+        .map(|d| d.as_usize().context("shape dim must be a non-negative integer"))
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: &Path, j: &Json) -> Result<Self> {
+        let dataset = j.get("dataset").context("missing dataset")?;
+        let mut variants = Vec::new();
+        for v in j.get("variants").and_then(Json::as_arr).context("missing variants")? {
+            let inputs = v
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .context("variant missing inputs")?
+                .iter()
+                .map(|i| {
+                    Ok(InputSpec {
+                        name: i.str_field("name")?.to_string(),
+                        shape: parse_shape(i.get("shape").context("input missing shape")?)?,
+                        dtype: i.str_field("dtype")?.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            variants.push(Variant {
+                name: v.str_field("name")?.to_string(),
+                arch: v.str_field("arch")?.to_string(),
+                time_steps: v.usize_field("time_steps")?,
+                batch: v.usize_field("batch")?,
+                hlo: dir.join(v.str_field("hlo")?),
+                weights: dir.join(v.str_field("weights")?),
+                param_names: v
+                    .get("param_names")
+                    .and_then(Json::as_arr)
+                    .context("variant missing param_names")?
+                    .iter()
+                    .map(|n| Ok(n.as_str().context("param name must be string")?.to_string()))
+                    .collect::<Result<Vec<_>>>()?,
+                golden: match v.get("golden") {
+                    Some(Json::Str(s)) => Some(dir.join(s)),
+                    _ => None,
+                },
+                output_shape: parse_shape(
+                    v.get("output")
+                        .and_then(|o| o.get("shape"))
+                        .context("variant missing output.shape")?,
+                )?,
+                inputs,
+            });
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            image_size: j.usize_field("image_size")?,
+            patch_size: j.usize_field("patch_size")?,
+            n_classes: j.usize_field("n_classes")?,
+            golden_seed: j.usize_field("golden_seed")? as u32,
+            dataset_test: dir.join(dataset.str_field("test")?),
+            dataset_n: dataset.usize_field("n")?,
+            variants,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&Variant> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .with_context(|| format!("no variant {name:?} in manifest"))
+    }
+
+    /// Variants filtered by architecture, sorted by time steps.
+    pub fn variants_for_arch(&self, arch: &str) -> Vec<&Variant> {
+        let mut out: Vec<&Variant> =
+            self.variants.iter().filter(|v| v.arch == arch).collect();
+        out.sort_by_key(|v| (v.time_steps, v.batch));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1, "image_size": 16, "patch_size": 4, "n_classes": 10,
+        "golden_seed": 42,
+        "dataset": {"test": "dataset_test.bin", "n": 256},
+        "variants": [{
+            "name": "ssa_t10", "arch": "ssa", "time_steps": 10, "batch": 8,
+            "hlo": "ssa_t10.hlo.txt", "weights": "weights_ssa.bin",
+            "param_names": ["embed/w", "head/w"],
+            "golden": "golden_ssa_t10.bin",
+            "inputs": [
+                {"name": "images", "shape": [8, 16, 16], "dtype": "f32"},
+                {"name": "seed", "shape": [], "dtype": "u32"}
+            ],
+            "output": {"shape": [8, 10], "dtype": "f32"}
+        }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/a"), &j).unwrap();
+        assert_eq!(m.image_size, 16);
+        assert_eq!(m.variants.len(), 1);
+        let v = m.variant("ssa_t10").unwrap();
+        assert_eq!(v.batch, 8);
+        assert_eq!(v.inputs[0].shape, vec![8, 16, 16]);
+        assert_eq!(v.hlo, Path::new("/tmp/a/ssa_t10.hlo.txt"));
+        assert!(m.variant("nope").is_err());
+    }
+
+    #[test]
+    fn arch_filter_sorts_by_t() {
+        let j = Json::parse(&SAMPLE.replace(
+            r#""variants": [{"#,
+            r#""variants": [{
+            "name": "ssa_t4", "arch": "ssa", "time_steps": 4, "batch": 8,
+            "hlo": "a", "weights": "b", "param_names": [],
+            "inputs": [], "output": {"shape": [8, 10]}
+        }, {"#,
+        ))
+        .unwrap();
+        let m = Manifest::from_json(Path::new("/x"), &j).unwrap();
+        let vs = m.variants_for_arch("ssa");
+        assert_eq!(vs.len(), 2);
+        assert_eq!(vs[0].time_steps, 4);
+        assert_eq!(vs[1].time_steps, 10);
+    }
+}

@@ -1,0 +1,13 @@
+//! L3 runtime: PJRT client, HLO-text artifact loading, weights/dataset/
+//! golden readers.  Python never runs here — everything below consumes
+//! only the binary artifacts `make artifacts` produced.
+
+pub mod dataset;
+pub mod executable;
+pub mod manifest;
+pub mod weights;
+
+pub use dataset::{Dataset, Golden};
+pub use executable::{LoadedModel, Runtime};
+pub use manifest::{Manifest, Variant};
+pub use weights::Weights;

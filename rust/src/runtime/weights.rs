@@ -1,0 +1,171 @@
+//! Reader for `weights_<arch>.bin` produced by `python/compile/aot.py`.
+//!
+//! Layout (little-endian): magic `u32 = 0x53534157` ('WASS'), version u32,
+//! count u32, then per tensor: name_len u32 | name utf8 | ndim u32 |
+//! dims u32* | f32 data.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+pub const WEIGHTS_MAGIC: u32 = 0x5353_4157;
+
+/// Named parameter set, ordering matches the manifest's `param_names`.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut file = std::fs::File::open(path)
+            .with_context(|| format!("opening weights file {path:?}"))?;
+        let mut buf = Vec::new();
+        file.read_to_end(&mut buf)?;
+        Self::parse(&buf).with_context(|| format!("parsing weights file {path:?}"))
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Self> {
+        let mut r = Cursor { buf, pos: 0 };
+        let magic = r.u32()?;
+        if magic != WEIGHTS_MAGIC {
+            bail!("bad magic {magic:#x}, expected {WEIGHTS_MAGIC:#x}");
+        }
+        let version = r.u32()?;
+        if version != 1 {
+            bail!("unsupported weights version {version}");
+        }
+        let count = r.u32()? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = r.u32()? as usize;
+            let name = String::from_utf8(r.bytes(name_len)?.to_vec())
+                .context("tensor name not utf8")?;
+            let ndim = r.u32()? as usize;
+            if ndim > 8 {
+                bail!("implausible ndim {ndim} for {name}");
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u32()? as usize);
+            }
+            // checked: corrupted dims must error, not overflow (debug) or
+            // wrap (release) — exercised by prop_parsers_never_panic
+            let n = dims
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .and_then(|n| n.checked_mul(4))
+                .with_context(|| format!("element count overflow for {name}"))?;
+            let raw = r.bytes(n)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.insert(name, Tensor::from_vec(&dims, data));
+        }
+        if r.pos != buf.len() {
+            bail!("trailing bytes after last tensor");
+        }
+        Ok(Self { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).with_context(|| format!("missing weight {name:?}"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated file at byte {} (need {n} more)", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<u8> {
+        // magic, version=1, count=1, name "w" [2,2], data 1..4
+        let mut b = Vec::new();
+        b.extend(WEIGHTS_MAGIC.to_le_bytes());
+        b.extend(1u32.to_le_bytes());
+        b.extend(1u32.to_le_bytes());
+        b.extend(1u32.to_le_bytes());
+        b.push(b'w');
+        b.extend(2u32.to_le_bytes());
+        b.extend(2u32.to_le_bytes());
+        b.extend(2u32.to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            b.extend(v.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn parses_valid_file() {
+        let w = Weights::parse(&sample()).unwrap();
+        assert_eq!(w.len(), 1);
+        let t = w.get("w").unwrap();
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut b = sample();
+        b[0] = 0;
+        assert!(Weights::parse(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let b = sample();
+        for cut in [3, 11, 20, b.len() - 1] {
+            assert!(Weights::parse(&b[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut b = sample();
+        b.push(0);
+        assert!(Weights::parse(&b).is_err());
+    }
+
+    #[test]
+    fn missing_weight_errors() {
+        let w = Weights::parse(&sample()).unwrap();
+        assert!(w.get("nope").is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! Packed binary spike storage.
+//!
+//! The CPU analogue of the paper's AND-gate datapath: spikes pack 64 per
+//! `u64` word so the SSA inner product `sum_d q[i,d] AND k[j,d]` becomes
+//! `(qw & kw).count_ones()` over words — this is the L3 performance-path
+//! representation measured in Table III's SSA-CPU row and §Perf.
+
+/// A row-major matrix of bits (spikes), rows padded to whole u64 words.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitMatrix {
+    rows: usize,
+    cols: usize,
+    words_per_row: usize,
+    data: Vec<u64>,
+}
+
+impl BitMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        let words_per_row = cols.div_ceil(64);
+        Self { rows, cols, words_per_row, data: vec![0; rows * words_per_row] }
+    }
+
+    /// Build directly from packed row words (rows padded to whole u64
+    /// words; padding bits must be zero).  This is the §Perf L3 fast path
+    /// for constructors on the SSA hot loop.
+    pub fn from_words(rows: usize, cols: usize, data: Vec<u64>) -> Self {
+        let words_per_row = cols.div_ceil(64);
+        assert_eq!(data.len(), rows * words_per_row, "packed data length");
+        if cols % 64 != 0 {
+            let mask = !0u64 >> (64 - cols % 64);
+            for (idx, w) in data.iter().enumerate() {
+                debug_assert!(
+                    idx % words_per_row != words_per_row - 1 || w & !mask == 0,
+                    "padding bits must be zero"
+                );
+                let _ = w;
+            }
+        }
+        Self { rows, cols, words_per_row, data }
+    }
+
+    /// Build from a {0,1} f32 slice in row-major order (the JAX convention).
+    pub fn from_f01(rows: usize, cols: usize, values: &[f32]) -> Self {
+        assert_eq!(values.len(), rows * cols, "shape mismatch");
+        let mut m = Self::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                if values[r * cols + c] != 0.0 {
+                    m.set(r, c, true);
+                }
+            }
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        debug_assert!(r < self.rows && c < self.cols);
+        let w = self.data[r * self.words_per_row + c / 64];
+        (w >> (c % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        debug_assert!(r < self.rows && c < self.cols);
+        let idx = r * self.words_per_row + c / 64;
+        let bit = 1u64 << (c % 64);
+        if v {
+            self.data[idx] |= bit;
+        } else {
+            self.data[idx] &= !bit;
+        }
+    }
+
+    /// Word view of one row (padding bits beyond `cols` are always zero).
+    #[inline]
+    pub fn row_words(&self, r: usize) -> &[u64] {
+        &self.data[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    /// `popcount(row_a AND row_b)` — the SAU dot product (paper eq. 5 sum).
+    #[inline]
+    pub fn and_popcount(&self, r: usize, other: &BitMatrix, r_other: usize) -> u32 {
+        debug_assert_eq!(self.cols, other.cols);
+        let a = self.row_words(r);
+        let b = other.row_words(r_other);
+        let mut acc = 0u32;
+        for (x, y) in a.iter().zip(b) {
+            acc += (x & y).count_ones();
+        }
+        acc
+    }
+
+    /// Number of set bits in the whole matrix (spike-count statistics).
+    pub fn count_ones(&self) -> u64 {
+        self.data.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// Spike rate = ones / (rows*cols).
+    pub fn rate(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            0.0
+        } else {
+            self.count_ones() as f64 / (self.rows * self.cols) as f64
+        }
+    }
+
+    /// Unpack to {0,1} f32 (for comparisons against the float models).
+    pub fn to_f01(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.rows * self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                if self.get(r, c) {
+                    out[r * self.cols + c] = 1.0;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transposed copy (used to lay K out for row-streaming).
+    pub fn transpose(&self) -> BitMatrix {
+        let mut t = BitMatrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                if self.get(r, c) {
+                    t.set(c, r, true);
+                }
+            }
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut m = BitMatrix::zeros(3, 130); // spans 3 words per row
+        m.set(0, 0, true);
+        m.set(1, 64, true);
+        m.set(2, 129, true);
+        assert!(m.get(0, 0) && m.get(1, 64) && m.get(2, 129));
+        assert!(!m.get(0, 1) && !m.get(2, 128));
+        m.set(1, 64, false);
+        assert!(!m.get(1, 64));
+    }
+
+    #[test]
+    fn from_f01_roundtrip() {
+        let vals = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let m = BitMatrix::from_f01(2, 3, &vals);
+        assert_eq!(m.to_f01(), vals);
+        assert_eq!(m.count_ones(), 4);
+    }
+
+    #[test]
+    fn and_popcount_matches_naive() {
+        let mut rng = Xoshiro256::new(11);
+        for cols in [1usize, 7, 63, 64, 65, 200] {
+            let av: Vec<f32> =
+                (0..cols).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+            let bv: Vec<f32> =
+                (0..cols).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+            let a = BitMatrix::from_f01(1, cols, &av);
+            let b = BitMatrix::from_f01(1, cols, &bv);
+            let naive: u32 =
+                av.iter().zip(&bv).map(|(x, y)| (*x as u32) & (*y as u32)).sum();
+            assert_eq!(a.and_popcount(0, &b, 0), naive, "cols={cols}");
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Xoshiro256::new(5);
+        let vals: Vec<f32> =
+            (0..6 * 11).map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 }).collect();
+        let m = BitMatrix::from_f01(6, 11, &vals);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn padding_bits_stay_zero() {
+        let m = BitMatrix::from_f01(1, 65, &[1.0; 65]);
+        assert_eq!(m.count_ones(), 65);
+        assert_eq!(m.row_words(0)[1] >> 1, 0, "bits beyond cols must be zero");
+    }
+
+    #[test]
+    fn rate() {
+        let m = BitMatrix::from_f01(2, 2, &[1.0, 0.0, 0.0, 1.0]);
+        assert!((m.rate() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,9 @@
+//! Infrastructure substrates the offline environment forces in-tree:
+//! PRNGs (including the paper's hardware LFSRs), minimal JSON, statistics,
+//! packed spike matrices, and a tiny logger.
+
+pub mod bitpack;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;

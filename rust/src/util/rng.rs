@@ -1,0 +1,333 @@
+//! Pseudo-random number generators.
+//!
+//! The offline build carries no `rand` crate, and this paper *is about*
+//! hardware PRNGs anyway: the Bernoulli encoders of the SSA accelerator are
+//! LFSRs + comparators (paper §III-D).  This module provides
+//!
+//! * [`SplitMix64`] — seeding / stream-splitting utility generator,
+//! * [`Xoshiro256`] — fast general-purpose software PRNG (xoshiro256**),
+//!   used by workload generators and the software SSA model,
+//! * [`Lfsr16`] / [`Lfsr8`] — bit-exact models of the maximal-length
+//!   Fibonacci LFSRs instantiated in the hardware simulator (`hw::lfsr`
+//!   re-exports these; the software twin consumes the *same* streams so the
+//!   cycle-accurate array can be verified bit-for-bit against `attention::ssa`).
+
+/// SplitMix64 (Steele et al.) — the canonical seeding generator.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** 1.0 (Blackman & Vigna) — the workhorse software PRNG.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()] }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let out = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        out
+    }
+
+    /// Uniform f64 in [0, 1) with 53 random bits.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1) with 24 random bits.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire's method, 64-bit).
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Bernoulli draw with probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via Box-Muller (used by workload generators only).
+    pub fn next_normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-12 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Derive an independent stream (for per-worker / per-unit RNGs).
+    pub fn split(&mut self) -> Xoshiro256 {
+        Xoshiro256::new(self.next_u64())
+    }
+}
+
+/// Maximal-length 16-bit Fibonacci LFSR, taps x^16 + x^15 + x^13 + x^4 + 1
+/// (0xB400 mask) — period 2^16 - 1.  This is the RTL-faithful PRNG of the
+/// Bernoulli encoders: `next_u16` shifts 16 times to emit one fresh word,
+/// exactly like a 16-cycle-per-sample serial LFSR with a parallel read-out.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Lfsr16 {
+    state: u16,
+}
+
+impl Lfsr16 {
+    /// Seed must be non-zero (the all-zero state is the LFSR fixed point).
+    pub fn new(seed: u16) -> Self {
+        Self { state: if seed == 0 { 0xACE1 } else { seed } }
+    }
+
+    /// One shift: returns the output bit.
+    #[inline]
+    pub fn step(&mut self) -> bool {
+        let lsb = self.state & 1 != 0;
+        self.state >>= 1;
+        if lsb {
+            self.state ^= 0xB400;
+        }
+        lsb
+    }
+
+    /// Emit a full 16-bit word (16 serial shifts, LSB first).
+    ///
+    /// Perf: the software models draw millions of words (§Perf L3), so
+    /// this looks up a lazily-built 64K-entry table of
+    /// `state -> (word, next_state)` precomputed with [`Self::step`];
+    /// bit-exact with the serial path by construction (and by test).
+    #[inline]
+    pub fn next_u16(&mut self) -> u16 {
+        let entry = word_table()[self.state as usize];
+        self.state = (entry >> 16) as u16;
+        entry as u16
+    }
+
+    /// The RTL-faithful serial word generator (16 explicit shifts).
+    pub fn next_u16_serial(&mut self) -> u16 {
+        let mut w = 0u16;
+        for i in 0..16 {
+            w |= (self.step() as u16) << i;
+        }
+        w
+    }
+
+    pub fn state(&self) -> u16 {
+        self.state
+    }
+}
+
+/// `state -> (next_state << 16) | word` for every 16-bit LFSR state.
+fn word_table() -> &'static [u32; 65536] {
+    static TABLE: once_cell::sync::OnceCell<Box<[u32; 65536]>> =
+        once_cell::sync::OnceCell::new();
+    TABLE.get_or_init(|| {
+        let mut t = vec![0u32; 65536].into_boxed_slice();
+        for state in 0..=u16::MAX {
+            let mut l = Lfsr16 { state };
+            let w = l.next_u16_serial();
+            t[state as usize] = ((l.state as u32) << 16) | w as u32;
+        }
+        t.try_into().unwrap()
+    })
+}
+
+/// Maximal-length 8-bit Fibonacci LFSR, taps x^8 + x^6 + x^5 + x^4 + 1
+/// (0xB8 mask) — period 2^8 - 1.  Used by the UINT8 comparator encoders
+/// when `D_K`, `N` <= 256 (paper §III-C: UINT8 counters).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Lfsr8 {
+    state: u8,
+}
+
+impl Lfsr8 {
+    pub fn new(seed: u8) -> Self {
+        Self { state: if seed == 0 { 0x5A } else { seed } }
+    }
+
+    #[inline]
+    pub fn step(&mut self) -> bool {
+        let lsb = self.state & 1 != 0;
+        self.state >>= 1;
+        if lsb {
+            self.state ^= 0xB8;
+        }
+        lsb
+    }
+
+    #[inline]
+    pub fn next_u8(&mut self) -> u8 {
+        let mut w = 0u8;
+        for i in 0..8 {
+            w |= (self.step() as u8) << i;
+        }
+        w
+    }
+
+    pub fn state(&self) -> u8 {
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // First outputs for seed 0 (published reference values).
+        let mut sm = SplitMix64::new(0);
+        assert_eq!(sm.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(sm.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+    }
+
+    #[test]
+    fn xoshiro_uniform_range_and_mean() {
+        let mut rng = Xoshiro256::new(42);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn xoshiro_f32_in_range() {
+        let mut rng = Xoshiro256::new(7);
+        for _ in 0..10_000 {
+            let x = rng.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn xoshiro_next_below_bounds() {
+        let mut rng = Xoshiro256::new(3);
+        for bound in [1u64, 2, 7, 10, 1000] {
+            for _ in 0..1000 {
+                assert!(rng.next_below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn xoshiro_split_streams_differ() {
+        let mut a = Xoshiro256::new(1);
+        let mut b = a.split();
+        let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn lfsr16_full_period() {
+        let mut lfsr = Lfsr16::new(1);
+        let start = lfsr.state();
+        let mut period = 0u32;
+        loop {
+            lfsr.step();
+            period += 1;
+            if lfsr.state() == start {
+                break;
+            }
+            assert!(period <= 70_000, "period overflow: not maximal-length");
+        }
+        assert_eq!(period, 65_535, "x^16+x^15+x^13+x^4+1 must be maximal");
+    }
+
+    #[test]
+    fn lfsr8_full_period() {
+        let mut lfsr = Lfsr8::new(1);
+        let start = lfsr.state();
+        let mut period = 0u32;
+        loop {
+            lfsr.step();
+            period += 1;
+            if lfsr.state() == start {
+                break;
+            }
+            assert!(period <= 300);
+        }
+        assert_eq!(period, 255);
+    }
+
+    #[test]
+    fn lfsr_zero_seed_is_remapped() {
+        assert_ne!(Lfsr16::new(0).state(), 0);
+        assert_ne!(Lfsr8::new(0).state(), 0);
+    }
+
+    #[test]
+    fn lfsr16_table_matches_serial_for_all_states() {
+        for state in (0..=u16::MAX).step_by(1) {
+            let mut a = Lfsr16 { state };
+            let mut b = Lfsr16 { state };
+            assert_eq!(a.next_u16(), b.next_u16_serial(), "state={state}");
+            assert_eq!(a.state(), b.state(), "state={state}");
+        }
+    }
+
+    #[test]
+    fn lfsr16_word_uniformity() {
+        // Crude uniformity: mean of 16-bit words near 32767 over many draws.
+        let mut lfsr = Lfsr16::new(0xBEEF);
+        let n = 65_535u64;
+        let mut sum = 0u64;
+        for _ in 0..n {
+            sum += lfsr.next_u16() as u64;
+        }
+        let mean = sum as f64 / n as f64;
+        assert!((mean - 32767.5).abs() < 300.0, "mean={mean}");
+    }
+
+    #[test]
+    fn bernoulli_rate_tracks_p() {
+        let mut rng = Xoshiro256::new(9);
+        for &p in &[0.1, 0.5, 0.9] {
+            let n = 50_000;
+            let hits = (0..n).filter(|_| rng.bernoulli(p)).count();
+            let rate = hits as f64 / n as f64;
+            assert!((rate - p).abs() < 0.01, "p={p} rate={rate}");
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Coordinator integration (needs `make artifacts`): batching under load,
+//! mixed-target routing, seed policies, error paths, graceful shutdown.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use ssa_repro::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, SeedPolicy, ServeError, Target,
+};
+use ssa_repro::runtime::Dataset;
+
+fn start(max_batch: usize, delay_ms: u64) -> Option<(Coordinator, Dataset)> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("integration_coordinator: artifacts/ missing (skipped)");
+        return None;
+    }
+    let mut cfg = CoordinatorConfig::new(dir);
+    cfg.policy =
+        BatchPolicy { max_batch, max_delay: Duration::from_millis(delay_ms) };
+    cfg.preload = vec!["ssa_t4".into()];
+    let coord = Coordinator::start(cfg).expect("coordinator");
+    let ds = Dataset::load(&coord.manifest().dataset_test).expect("dataset");
+    Some((coord, ds))
+}
+
+#[test]
+fn serves_batched_requests_with_full_batches() {
+    let Some((coord, ds)) = start(8, 50) else { return };
+    let n = 32;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        rxs.push(
+            coord
+                .submit(Target::ssa(4), ds.image(i % ds.len()).to_vec(), SeedPolicy::PerBatch)
+                .expect("submit"),
+        );
+    }
+    let mut batch_sizes = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv().expect("response");
+        assert!(resp.logits.len() == 10);
+        batch_sizes.push(resp.batch_size);
+    }
+    // all submitted up front with generous delay: batches should fill
+    assert!(
+        batch_sizes.iter().filter(|&&b| b == 8).count() >= 24,
+        "expected mostly full batches, got {batch_sizes:?}"
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn mixed_targets_route_correctly_and_match_direct_inference() {
+    let Some((coord, ds)) = start(4, 5) else { return };
+    // fixed seed + single-request batches => reproducible routing check
+    let img = ds.image(3).to_vec();
+    let targets =
+        [Target::ann(), Target::ssa(4), Target::ssa(10), Target::spikformer(10)];
+    for t in targets {
+        let r = coord
+            .classify(t.clone(), img.clone(), SeedPolicy::Fixed(42))
+            .expect("classify");
+        assert_eq!(r.logits.len(), 10, "target {t:?}");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn fixed_seed_is_reproducible_across_requests() {
+    let Some((coord, ds)) = start(1, 1) else { return };
+    let img = ds.image(0).to_vec();
+    let a = coord.classify(Target::ssa(4), img.clone(), SeedPolicy::Fixed(7)).unwrap();
+    let b = coord.classify(Target::ssa(4), img, SeedPolicy::Fixed(7)).unwrap();
+    assert_eq!(a.logits, b.logits);
+    assert_eq!(a.seed, 7);
+    coord.shutdown();
+}
+
+#[test]
+fn ensemble_reduces_logit_variance() {
+    let Some((coord, ds)) = start(1, 1) else { return };
+    let img = ds.image(1).to_vec();
+    let spread = |policy: SeedPolicy, reps: usize| -> f64 {
+        let mut tops = Vec::new();
+        for _ in 0..reps {
+            let r = coord.classify(Target::ssa(4), img.clone(), policy).unwrap();
+            tops.push(r.logits[r.class] as f64);
+        }
+        let mean = tops.iter().sum::<f64>() / tops.len() as f64;
+        tops.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / tops.len() as f64
+    };
+    let var_single = spread(SeedPolicy::PerBatch, 12);
+    let var_ens = spread(SeedPolicy::Ensemble(8), 12);
+    assert!(
+        var_ens <= var_single + 1e-9,
+        "ensemble should not increase variance: {var_ens} vs {var_single}"
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn submit_validates_inputs() {
+    let Some((coord, _ds)) = start(2, 1) else { return };
+    match coord.submit(Target::ssa(4), vec![0.0; 3], SeedPolicy::PerBatch) {
+        Err(ServeError::BadImage { got: 3, .. }) => {}
+        other => panic!("expected BadImage, got {other:?}"),
+    }
+    match coord.submit(Target::ssa(999), vec![0.0; 256], SeedPolicy::PerBatch) {
+        Err(ServeError::UnknownTarget(_)) => {}
+        other => panic!("expected UnknownTarget, got {other:?}"),
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_rejects_new_requests() {
+    let Some((coord, ds)) = start(2, 1) else { return };
+    let img = ds.image(0).to_vec();
+    // answer one request, then shut down
+    coord.classify(Target::ssa(4), img, SeedPolicy::PerBatch).expect("classify");
+    coord.shutdown();
+    // a new coordinator can start again cleanly afterwards
+    let Some((coord2, ds2)) = start(2, 1) else { return };
+    coord2.classify(Target::ssa(4), ds2.image(0).to_vec(), SeedPolicy::PerBatch).unwrap();
+    coord2.shutdown();
+}
+
+#[test]
+fn concurrent_submitters_all_get_answers() {
+    let Some((coord, ds)) = start(8, 3) else { return };
+    let coord = std::sync::Arc::new(coord);
+    let ds = std::sync::Arc::new(ds);
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let c = std::sync::Arc::clone(&coord);
+        let d = std::sync::Arc::clone(&ds);
+        handles.push(std::thread::spawn(move || {
+            let mut ok = 0;
+            for i in 0..16 {
+                let idx = (t as usize * 16 + i) % d.len();
+                let r = c
+                    .classify(Target::ssa(4), d.image(idx).to_vec(), SeedPolicy::PerBatch)
+                    .expect("classify");
+                assert!(r.class < 10);
+                ok += 1;
+            }
+            ok
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 64);
+}

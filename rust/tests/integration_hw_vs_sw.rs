@@ -1,0 +1,115 @@
+//! E5 integration: the cycle-accurate SAU array must be *bit-exact*
+//! against the software model across random geometries, spike rates,
+//! sharing strategies, and stream lengths — the load-bearing verification
+//! of the accelerator model (DESIGN.md §6.1).
+
+use ssa_repro::attention::ssa::SsaAttention;
+use ssa_repro::attention::stochastic::encode_frame;
+use ssa_repro::config::{AttnConfig, PrngSharing};
+use ssa_repro::hw::SauArray;
+use ssa_repro::prop::{check, ensure, Gen};
+use ssa_repro::tensor::Tensor;
+use ssa_repro::util::bitpack::BitMatrix;
+use ssa_repro::util::rng::Xoshiro256;
+
+fn random_streams(
+    g: &mut Gen,
+    t: usize,
+    n: usize,
+    d_k: usize,
+) -> (Vec<BitMatrix>, Vec<BitMatrix>, Vec<BitMatrix>) {
+    let mut rng = Xoshiro256::new(g.u64());
+    let mut mk = |rate: f64| -> Vec<BitMatrix> {
+        (0..t)
+            .map(|_| encode_frame(&Tensor::full(&[n, d_k], rate as f32), &mut rng))
+            .collect()
+    };
+    let (rq, rk, rv) = (g.f64_01(), g.f64_01(), g.f64_01());
+    (mk(rq), mk(rk), mk(rv))
+}
+
+#[test]
+fn hw_equals_sw_across_random_configs() {
+    check("hw == sw bit-exact", 60, |g| {
+        let n = g.pow2_in(1, 5); // 2..32
+        let d_k = g.pow2_in(1, 5);
+        let t = g.usize_in(1, 6);
+        let sharing = match g.usize_in(0, 2) {
+            0 => PrngSharing::Independent,
+            1 => PrngSharing::PerRow,
+            _ => PrngSharing::Global,
+        };
+        let cfg = AttnConfig { n_tokens: n, d_model: d_k, n_heads: 1, d_head: d_k, time_steps: t };
+        let seed = g.u64();
+        let (q, k, v) = random_streams(g, t, n, d_k);
+        let mut hw = SauArray::new(cfg, sharing, seed);
+        let run = hw.run(&q, &k, &v, None);
+        let mut sw = SsaAttention::new(cfg, sharing, seed);
+        for step in 0..t {
+            let out = sw.step(&q[step], &k[step], &v[step]);
+            ensure(
+                run.s[step] == out.s,
+                format!("S^{step} differs (n={n} d_k={d_k} {sharing:?} seed={seed})"),
+            )?;
+            ensure(
+                run.attn[step] == out.attn,
+                format!("Attn^{step} differs (n={n} d_k={d_k} {sharing:?} seed={seed})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hw_equals_sw_non_pow2_dk() {
+    // the divider path (paper's D_K=48) must also be bit-exact
+    check("hw == sw non-pow2 D_K", 20, |g| {
+        let d_k = [3usize, 5, 12, 48][g.usize_in(0, 3)];
+        let n = g.pow2_in(2, 4);
+        let cfg =
+            AttnConfig { n_tokens: n, d_model: d_k, n_heads: 1, d_head: d_k, time_steps: 3 };
+        let seed = g.u64();
+        let (q, k, v) = random_streams(g, 3, n, d_k);
+        let mut hw = SauArray::new(cfg, PrngSharing::PerRow, seed);
+        let run = hw.run(&q, &k, &v, None);
+        let mut sw = SsaAttention::new(cfg, PrngSharing::PerRow, seed);
+        for step in 0..3 {
+            let out = sw.step(&q[step], &k[step], &v[step]);
+            ensure(run.s[step] == out.s && run.attn[step] == out.attn, "divider path differs")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn long_stream_stays_exact_and_counts_cycles() {
+    let cfg =
+        AttnConfig { n_tokens: 8, d_model: 16, n_heads: 1, d_head: 16, time_steps: 64 };
+    let mut g = Gen::new(7);
+    let (q, k, v) = random_streams(&mut g, 64, 8, 16);
+    let mut hw = SauArray::new(cfg, PrngSharing::Global, 99);
+    let run = hw.run(&q, &k, &v, None);
+    assert_eq!(run.events.cycles, 65 * 16);
+    let mut sw = SsaAttention::new(cfg, PrngSharing::Global, 99);
+    for step in 0..64 {
+        let out = sw.step(&q[step], &k[step], &v[step]);
+        assert_eq!(run.s[step], out.s, "step {step}");
+        assert_eq!(run.attn[step], out.attn, "step {step}");
+    }
+}
+
+#[test]
+fn event_counters_scale_linearly_with_t() {
+    let base = AttnConfig { n_tokens: 8, d_model: 16, n_heads: 1, d_head: 16, time_steps: 2 };
+    let mut g = Gen::new(11);
+    let (q, k, v) = random_streams(&mut g, 8, 8, 16);
+    let run_t = |t: usize| {
+        let mut hw = SauArray::new(base.with_time_steps(t), PrngSharing::PerRow, 5);
+        hw.run(&q[..t], &k[..t], &v[..t], None).events
+    };
+    let e2 = run_t(2);
+    let e8 = run_t(8);
+    // streamed evaluations scale with (T+1) blocks
+    assert_eq!(e2.score_and_evals / 3, e8.score_and_evals / 9);
+    assert_eq!(e2.adder_evals / 2, e8.adder_evals / 8);
+}

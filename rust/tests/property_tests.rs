@@ -1,0 +1,177 @@
+//! Property-based tests (via the in-tree `prop` mini-framework) over the
+//! substrate invariants: packed bit algebra, comparator probabilities,
+//! JSON round-trips, parser robustness under corruption, LIF dynamics.
+
+use ssa_repro::attention::lif::LifLayer;
+use ssa_repro::attention::ssa::bern_compare;
+use ssa_repro::config::LifConfig;
+use ssa_repro::prop::{check, ensure, Gen};
+use ssa_repro::runtime::{Dataset, Weights};
+use ssa_repro::tensor::Tensor;
+use ssa_repro::util::bitpack::BitMatrix;
+use ssa_repro::util::json::Json;
+
+#[test]
+fn prop_and_popcount_matches_naive() {
+    check("and_popcount == naive", 300, |g| {
+        let cols = g.usize_in(1, 300);
+        let ra = g.f64_01();
+        let rb = g.f64_01();
+        let a = g.spikes(cols, ra);
+        let b = g.spikes(cols, rb);
+        let am = BitMatrix::from_f01(1, cols, &a);
+        let bm = BitMatrix::from_f01(1, cols, &b);
+        let naive: u32 = a.iter().zip(&b).map(|(x, y)| (*x as u32) & (*y as u32)).sum();
+        ensure(
+            am.and_popcount(0, &bm, 0) == naive,
+            format!("cols={cols}: {} != {naive}", am.and_popcount(0, &bm, 0)),
+        )
+    });
+}
+
+#[test]
+fn prop_bitmatrix_roundtrip_and_transpose() {
+    check("BitMatrix f01 roundtrip + transpose involution", 200, |g| {
+        let rows = g.usize_in(1, 20);
+        let cols = g.usize_in(1, 150);
+        let vals = g.spikes(rows * cols, 0.5);
+        let m = BitMatrix::from_f01(rows, cols, &vals);
+        ensure(m.to_f01() == vals, "roundtrip failed")?;
+        ensure(m.transpose().transpose() == m, "transpose not involutive")
+    });
+}
+
+#[test]
+fn prop_bern_compare_probability_bound() {
+    // P(spike) = ceil/floor approximation of count/m with error <= m/2^16,
+    // and monotone in count.
+    check("bern_compare probability", 40, |g| {
+        let m = g.usize_in(1, 300) as u32;
+        let count = g.usize_in(0, m as usize) as u32;
+        let hits = (0..=u16::MAX).filter(|&u| bern_compare(u, count, m)).count();
+        let p = hits as f64 / 65536.0;
+        let target = count as f64 / m as f64;
+        ensure(
+            (p - target).abs() <= m as f64 / 65536.0 + 1e-12,
+            format!("m={m} count={count}: p={p} target={target}"),
+        )?;
+        if count < m {
+            let hits_next =
+                (0..=u16::MAX).filter(|&u| bern_compare(u, count + 1, m)).count();
+            ensure(hits_next >= hits, "not monotone in count")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool(0.5)),
+            2 => Json::Num((g.usize_in(0, 1_000_000) as f64) - 500_000.0),
+            3 => Json::Str(
+                (0..g.usize_in(0, 12))
+                    .map(|_| char::from_u32(g.usize_in(32, 126) as u32).unwrap())
+                    .collect(),
+            ),
+            4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| random_json(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize_in(0, 4))
+                    .map(|i| (format!("k{i}"), random_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json print->parse roundtrip", 300, |g| {
+        let v = random_json(g, 3);
+        let text = v.to_string();
+        let re = Json::parse(&text).map_err(|e| format!("reparse failed: {e} on {text}"))?;
+        ensure(re == v, format!("roundtrip mismatch: {text}"))
+    });
+}
+
+#[test]
+fn prop_parsers_never_panic_on_corruption() {
+    // Corrupt/truncate valid files arbitrarily: parsers must return Err,
+    // not panic (failure injection for the artifact loaders).
+    let mut weights_bytes = Vec::new();
+    {
+        // magic, version, count=1, "w" [2,2] data
+        weights_bytes.extend(0x5353_4157u32.to_le_bytes());
+        weights_bytes.extend(1u32.to_le_bytes());
+        weights_bytes.extend(1u32.to_le_bytes());
+        weights_bytes.extend(1u32.to_le_bytes());
+        weights_bytes.push(b'w');
+        weights_bytes.extend(2u32.to_le_bytes());
+        weights_bytes.extend(2u32.to_le_bytes());
+        weights_bytes.extend(2u32.to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            weights_bytes.extend(v.to_le_bytes());
+        }
+    }
+    check("weights/dataset parsers survive corruption", 500, |g| {
+        let mut buf = weights_bytes.clone();
+        match g.usize_in(0, 2) {
+            0 => {
+                let cut = g.usize_in(0, buf.len());
+                buf.truncate(cut);
+            }
+            1 => {
+                let idx = g.usize_in(0, buf.len() - 1);
+                buf[idx] ^= (g.u64() as u8) | 1;
+            }
+            _ => {
+                let idx = g.usize_in(0, buf.len() - 1);
+                buf.splice(idx..idx, std::iter::repeat(g.u64() as u8).take(g.usize_in(1, 9)));
+            }
+        }
+        let _ = Weights::parse(&buf); // must not panic
+        let _ = Dataset::parse(&buf);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lif_membrane_bounded_under_bounded_input() {
+    // With |I| <= c and leak beta < 1, the membrane stays bounded by
+    // c/(1-beta) + theta — stability of the neuron model.
+    check("LIF membrane bounded", 100, |g| {
+        let beta = 0.5 + 0.4 * g.f32_01();
+        let theta = 0.5 + g.f32_01();
+        let c = 2.0 * g.f32_01();
+        let mut layer = LifLayer::new(1, 4, LifConfig { beta, theta });
+        let bound = c / (1.0 - beta) + theta + 1e-3;
+        for _ in 0..200 {
+            let cur = Tensor::from_vec(
+                &[1, 4],
+                (0..4).map(|_| (g.f32_01() * 2.0 - 1.0) * c).collect(),
+            );
+            layer.step(&cur);
+            for &v in layer.membrane() {
+                ensure(
+                    v.abs() <= bound,
+                    format!("|v|={} > bound={bound} (beta={beta} theta={theta})", v.abs()),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tensor_matmul_distributes_over_add() {
+    check("(A+B)C == AC + BC", 100, |g| {
+        let (m, k, n) = (g.usize_in(1, 6), g.usize_in(1, 6), g.usize_in(1, 6));
+        let rand_t = |g: &mut Gen, r: usize, c: usize| {
+            Tensor::from_vec(&[r, c], (0..r * c).map(|_| g.f32_01() * 2.0 - 1.0).collect())
+        };
+        let a = rand_t(g, m, k);
+        let b = rand_t(g, m, k);
+        let c = rand_t(g, k, n);
+        let lhs = a.add(&b).matmul(&c);
+        let rhs = a.matmul(&c).add(&b.matmul(&c));
+        ensure(lhs.max_abs_diff(&rhs) < 1e-4, "distributivity violated")
+    });
+}

@@ -1,13 +1,15 @@
 //! Bench: E1 (Table I) — print the trained accuracy sweep and measure the
-//! Rust-side PJRT inference throughput that the serving stack delivers per
-//! variant.  Skips gracefully when artifacts are missing (e.g. a bench run
-//! before `make artifacts`).
+//! Rust-side inference throughput that the serving stack delivers per
+//! variant, through the default inference backend (PJRT on `xla` builds,
+//! the native forward pass otherwise).  Skips gracefully when artifacts
+//! are missing (e.g. a bench run before `make artifacts`).
 
 use std::path::Path;
 
 use ssa_repro::bench::BenchSet;
+use ssa_repro::config::BackendKind;
 use ssa_repro::experiments::table1;
-use ssa_repro::runtime::{Dataset, Manifest, Runtime};
+use ssa_repro::runtime::{create_backend, Dataset, Manifest};
 
 fn main() {
     let dir = Path::new("artifacts");
@@ -16,7 +18,8 @@ fn main() {
         return;
     }
 
-    match table1::run(dir, None) {
+    let backend = BackendKind::default();
+    match table1::run(dir, None, backend) {
         Ok(s) => println!("{s}"),
         Err(e) => {
             println!("table1_accuracy: cannot load accuracy table: {e:#} (skipping)");
@@ -26,13 +29,16 @@ fn main() {
 
     let manifest = Manifest::load(dir).expect("manifest");
     let ds = Dataset::load(&manifest.dataset_test).expect("dataset");
-    let runtime = Runtime::cpu().expect("pjrt");
+    let engine = create_backend(backend).expect("backend");
 
-    let mut set = BenchSet::new("table1_accuracy — PJRT inference throughput");
+    let mut set = BenchSet::new(&format!(
+        "table1_accuracy — {} inference throughput",
+        backend.name()
+    ));
     set.start();
     for name in ["ann", "spikformer_t10", "ssa_t4", "ssa_t10", "ssa_t10_b1"] {
         let Ok(variant) = manifest.variant(name) else { continue };
-        let model = runtime.load(variant).expect("load variant");
+        let model = engine.load(&manifest, variant).expect("load variant");
         let images = ds.batch(0, variant.batch).to_vec();
         let mut seed = 0u32;
         set.bench_units(

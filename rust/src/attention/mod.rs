@@ -6,10 +6,14 @@
 //! docs for the shared PRNG contract.
 
 pub mod ann;
+pub mod block;
 pub mod lif;
+pub mod model;
 pub mod spikformer;
 pub mod ssa;
 pub mod stochastic;
 
 pub use ann::{linear_attention, softmax_attention};
+pub use block::{MultiHeadSsa, MultiHeadStep, SsaEncoderLayer};
+pub use model::{Arch, ModelGeometry, NativeModel};
 pub use ssa::{SsaAttention, SsaStepOutput};

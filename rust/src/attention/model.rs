@@ -1,0 +1,462 @@
+//! The full native spiking-ViT forward pass — pure Rust, no XLA.
+//!
+//! This is the serving twin of `python/compile/model.py`: image ->
+//! patchify -> Bernoulli rate coding -> spiking patch embedding ->
+//! `n_layers` SSA (or Spikformer) encoder layers -> spike-count readout
+//! averaged over `time_steps` (rate-decoded logits).  The conventional
+//! ANN baseline shares the same parameter layout and is evaluated
+//! deterministically.
+//!
+//! Weights come from the existing `runtime::weights` format (the same
+//! `weights_<arch>.bin` the PJRT path stages to device buffers); the
+//! model never re-reads them per request.  Per-request LIF membranes and
+//! attention PRNG banks are rebuilt from the request seed, so inference
+//! is stateless across requests and bit-reproducible given `(seed, image)`.
+//!
+//! Seed discipline: a request seed `s` expands through SplitMix64-derived
+//! streams — one for the input Bernoulli encoders, and per-(layer, head)
+//! SSA bank seeds via `ssa::seeds::head` (the contract the bit-exactness
+//! tests pin down).
+
+use anyhow::{bail, Context, Result};
+
+use crate::attention::ann::softmax_attention;
+use crate::attention::block::{LayerWeights, SsaEncoderLayer};
+use crate::attention::lif::LifLayer;
+use crate::attention::stochastic::encode_frame;
+use crate::config::{AttnConfig, LifConfig, PrngSharing};
+use crate::runtime::Weights;
+use crate::tensor::Tensor;
+use crate::util::rng::{SplitMix64, Xoshiro256};
+
+/// Architecture family of a native model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    Ann,
+    Spikformer,
+    Ssa,
+}
+
+impl Arch {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "ann" => Ok(Arch::Ann),
+            "spikformer" => Ok(Arch::Spikformer),
+            "ssa" => Ok(Arch::Ssa),
+            other => bail!("unknown architecture {other:?}"),
+        }
+    }
+}
+
+/// Full-model geometry (superset of [`AttnConfig`]: adds the embedding,
+/// MLP, classifier, and input-patch dimensions).
+#[derive(Clone, Copy, Debug)]
+pub struct ModelGeometry {
+    pub image_size: usize,
+    pub patch_size: usize,
+    pub n_tokens: usize,
+    pub patch_dim: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_mlp: usize,
+    pub n_layers: usize,
+    pub n_classes: usize,
+    pub time_steps: usize,
+    pub lif: LifConfig,
+    pub prng_sharing: PrngSharing,
+    pub spikformer_scale: f32,
+}
+
+impl ModelGeometry {
+    pub fn attn_config(&self) -> AttnConfig {
+        AttnConfig {
+            n_tokens: self.n_tokens,
+            d_model: self.d_model,
+            n_heads: self.n_heads,
+            d_head: self.d_head,
+            time_steps: self.time_steps,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.image_size % self.patch_size == 0, "S % P != 0");
+        anyhow::ensure!(
+            self.n_tokens == (self.image_size / self.patch_size).pow(2),
+            "n_tokens must be (S/P)^2"
+        );
+        anyhow::ensure!(self.patch_dim == self.patch_size * self.patch_size);
+        anyhow::ensure!(self.n_heads > 0 && self.d_model % self.n_heads == 0);
+        anyhow::ensure!(self.d_head == self.d_model / self.n_heads);
+        anyhow::ensure!(self.n_classes > 0 && self.time_steps > 0);
+        if self.n_layers > 0 {
+            self.attn_config().validate()?;
+        }
+        Ok(())
+    }
+}
+
+/// Patchify one `[S, S]` image into `[N, P*P]` rows, matching
+/// `model.make_inference_fn`'s reshape/transpose exactly.
+pub fn patchify(image: &[f32], image_size: usize, patch_size: usize) -> Tensor {
+    let (s, p) = (image_size, patch_size);
+    assert_eq!(image.len(), s * s, "image pixel count");
+    let g = s / p;
+    let mut out = vec![0.0f32; g * g * p * p];
+    for gi in 0..g {
+        for gj in 0..g {
+            let token = gi * g + gj;
+            for pi in 0..p {
+                for pj in 0..p {
+                    out[token * p * p + pi * p + pj] = image[(gi * p + pi) * s + gj * p + pj];
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[g * g, p * p], out)
+}
+
+/// A loaded native model: geometry + immutable weights.
+pub struct NativeModel {
+    geo: ModelGeometry,
+    arch: Arch,
+    embed_w: Tensor,
+    embed_pos: Tensor,
+    layers: Vec<LayerWeights>,
+    head_w: Tensor,
+}
+
+fn expect_shape(t: &Tensor, shape: &[usize], name: &str) -> Result<()> {
+    anyhow::ensure!(
+        t.shape() == shape,
+        "weight {name} has shape {:?}, geometry expects {shape:?}",
+        t.shape()
+    );
+    Ok(())
+}
+
+impl NativeModel {
+    /// Bind weights to a geometry, checking every tensor's shape up front
+    /// so request-path code never panics on a malformed artifact.
+    pub fn from_weights(geo: ModelGeometry, arch: Arch, weights: &Weights) -> Result<Self> {
+        geo.validate()?;
+        let embed_w = weights.get("embed/w").context("native model weights")?.clone();
+        let embed_pos = weights.get("embed/pos").context("native model weights")?.clone();
+        let head_w = weights.get("head/w").context("native model weights")?.clone();
+        expect_shape(&embed_w, &[geo.patch_dim, geo.d_model], "embed/w")?;
+        expect_shape(&embed_pos, &[geo.n_tokens, geo.d_model], "embed/pos")?;
+        expect_shape(&head_w, &[geo.d_model, geo.n_classes], "head/w")?;
+        let mut layers = Vec::with_capacity(geo.n_layers);
+        for l in 0..geo.n_layers {
+            let get = |suffix: &str| -> Result<Tensor> {
+                Ok(weights
+                    .get(&format!("layer{l}/{suffix}"))
+                    .with_context(|| format!("layer {l} weights"))?
+                    .clone())
+            };
+            let w = LayerWeights {
+                wq: get("wq")?,
+                wk: get("wk")?,
+                wv: get("wv")?,
+                wo: get("wo")?,
+                w1: get("w1")?,
+                w2: get("w2")?,
+            };
+            let d = geo.d_model;
+            expect_shape(&w.wq, &[d, d], "wq")?;
+            expect_shape(&w.wk, &[d, d], "wk")?;
+            expect_shape(&w.wv, &[d, d], "wv")?;
+            expect_shape(&w.wo, &[d, d], "wo")?;
+            expect_shape(&w.w1, &[d, geo.d_mlp], "w1")?;
+            expect_shape(&w.w2, &[geo.d_mlp, d], "w2")?;
+            layers.push(w);
+        }
+        Ok(Self { geo, arch, embed_w, embed_pos, layers, head_w })
+    }
+
+    /// Count `layer{l}/wq` entries in a weights file (geometry inference
+    /// for manifests that predate the native backend).
+    pub fn count_layers(weights: &Weights) -> usize {
+        (0..)
+            .take_while(|l| weights.get(&format!("layer{l}/wq")).is_ok())
+            .count()
+    }
+
+    pub fn geometry(&self) -> &ModelGeometry {
+        &self.geo
+    }
+
+    pub fn arch(&self) -> Arch {
+        self.arch
+    }
+
+    /// Classify one `[S, S]` image; returns `n_classes` logits.
+    pub fn infer_image(&self, image: &[f32], seed: u64) -> Result<Vec<f32>> {
+        let patches = patchify(image, self.geo.image_size, self.geo.patch_size);
+        match self.arch {
+            Arch::Ann => Ok(self.ann_forward(&patches)),
+            Arch::Ssa | Arch::Spikformer => self.spiking_forward(&patches, seed),
+        }
+    }
+
+    /// Batched entry point mirroring the PJRT calling convention:
+    /// `images` is row-major `[batch, S, S]`, `seed` the request seed;
+    /// image `i` runs under an independent SplitMix64-derived stream.
+    pub fn infer(&self, images: &[f32], batch: usize, seed: u32) -> Result<Vec<f32>> {
+        let px = self.geo.image_size * self.geo.image_size;
+        anyhow::ensure!(
+            images.len() == batch * px,
+            "images buffer has {} elements, expected {} ({} x {px})",
+            images.len(),
+            batch * px,
+            batch
+        );
+        let mut logits = Vec::with_capacity(batch * self.geo.n_classes);
+        for i in 0..batch {
+            let row = self.infer_image(&images[i * px..(i + 1) * px], image_seed(seed, i))?;
+            logits.extend(row);
+        }
+        Ok(logits)
+    }
+
+    // --- spiking forward (SSA / Spikformer) --------------------------------
+
+    fn spiking_forward(&self, patches: &Tensor, seed: u64) -> Result<Vec<f32>> {
+        let geo = &self.geo;
+        let cfg = geo.attn_config();
+        // per-request state
+        let mut input_rng = Xoshiro256::new(SplitMix64::new(seed ^ TAG_INPUT).next_u64());
+        let mut lif_embed = LifLayer::new(geo.n_tokens, geo.d_model, geo.lif);
+        let mut layers: Vec<SsaEncoderLayer> = (0..geo.n_layers)
+            .map(|l| match self.arch {
+                Arch::Ssa => SsaEncoderLayer::new_ssa(
+                    cfg,
+                    geo.lif,
+                    geo.prng_sharing,
+                    seed,
+                    l,
+                    geo.d_mlp,
+                ),
+                Arch::Spikformer => SsaEncoderLayer::new_spikformer(
+                    cfg,
+                    geo.lif,
+                    geo.spikformer_scale,
+                    geo.d_mlp,
+                ),
+                Arch::Ann => unreachable!("ANN uses ann_forward"),
+            })
+            .collect();
+
+        let mut logits_acc = vec![0.0f64; geo.n_classes];
+        for _t in 0..geo.time_steps {
+            // input rate coding (eq. 2) + spiking patch embedding
+            let x_t = encode_frame(patches, &mut input_rng);
+            let x_f = Tensor::from_vec(&[geo.n_tokens, geo.patch_dim], x_t.to_f01());
+            let emb_cur = x_f.matmul(&self.embed_w).add(&self.embed_pos);
+            let mut spikes = lif_embed.step(&emb_cur);
+
+            for (l, layer) in layers.iter_mut().enumerate() {
+                spikes = layer.step(&spikes, &self.layers[l], None)?;
+            }
+
+            // readout: mean-pooled spike counts -> class currents
+            let pooled = mean_pool_rows(&spikes.to_f01(), geo.n_tokens, geo.d_model);
+            let logits_t = pooled.matmul(&self.head_w);
+            for (acc, &v) in logits_acc.iter_mut().zip(logits_t.data()) {
+                *acc += v as f64;
+            }
+        }
+        let t = geo.time_steps as f64;
+        Ok(logits_acc.into_iter().map(|v| (v / t) as f32).collect())
+    }
+
+    // --- ANN baseline ------------------------------------------------------
+
+    fn ann_forward(&self, patches: &Tensor) -> Vec<f32> {
+        let geo = &self.geo;
+        let mut x = patches.matmul(&self.embed_w).add(&self.embed_pos);
+        for w in &self.layers {
+            let q = x.matmul(&w.wq);
+            let k = x.matmul(&w.wk);
+            let v = x.matmul(&w.wv);
+            let mut heads = Vec::with_capacity(geo.n_heads);
+            for h in 0..geo.n_heads {
+                let qh = slice_cols(&q, h * geo.d_head, geo.d_head);
+                let kh = slice_cols(&k, h * geo.d_head, geo.d_head);
+                let vh = slice_cols(&v, h * geo.d_head, geo.d_head);
+                heads.push(softmax_attention(&qh, &kh, &vh));
+            }
+            let attn = concat_cols(&heads);
+            x = x.add(&attn.matmul(&w.wo));
+            let hidden = x.matmul(&w.w1).map(|v| v.max(0.0));
+            x = x.add(&hidden.matmul(&w.w2));
+        }
+        let pooled = mean_pool_rows(x.data(), geo.n_tokens, geo.d_model);
+        pooled.matmul(&self.head_w).into_vec()
+    }
+}
+
+const TAG_INPUT: u64 = 0x494E_5055_5400_0000; // "INPUT"
+const TAG_IMAGE: u64 = 0x494D_4147_4500_0000; // "IMAGE"
+
+/// Per-image seed stream for batched requests.  The index occupies the
+/// high half so it can never collide with the 32-bit request seed's bits
+/// (`(seed, index)` pairs map to distinct SplitMix64 streams).
+pub fn image_seed(seed: u32, index: usize) -> u64 {
+    SplitMix64::new((seed as u64) ^ TAG_IMAGE ^ ((index as u64) << 32)).next_u64()
+}
+
+fn mean_pool_rows(data: &[f32], rows: usize, cols: usize) -> Tensor {
+    let mut pooled = vec![0.0f32; cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            pooled[c] += data[r * cols + c];
+        }
+    }
+    for v in pooled.iter_mut() {
+        *v /= rows as f32;
+    }
+    Tensor::from_vec(&[1, cols], pooled)
+}
+
+fn slice_cols(t: &Tensor, start: usize, width: usize) -> Tensor {
+    let (rows, cols) = (t.shape()[0], t.shape()[1]);
+    let mut out = vec![0.0f32; rows * width];
+    for r in 0..rows {
+        out[r * width..(r + 1) * width]
+            .copy_from_slice(&t.data()[r * cols + start..r * cols + start + width]);
+    }
+    Tensor::from_vec(&[rows, width], out)
+}
+
+fn concat_cols(parts: &[Tensor]) -> Tensor {
+    let rows = parts[0].shape()[0];
+    let cols: usize = parts.iter().map(|p| p.shape()[1]).sum();
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let mut base = 0;
+        for p in parts {
+            let w = p.shape()[1];
+            out[r * cols + base..r * cols + base + w]
+                .copy_from_slice(&p.data()[r * w..(r + 1) * w]);
+            base += w;
+        }
+    }
+    Tensor::from_vec(&[rows, cols], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::weights::test_support::build_weights;
+
+    pub(crate) fn tiny_geometry(arch_layers: usize) -> ModelGeometry {
+        ModelGeometry {
+            image_size: 8,
+            patch_size: 4,
+            n_tokens: 4,
+            patch_dim: 16,
+            d_model: 16,
+            n_heads: 2,
+            d_head: 8,
+            d_mlp: 32,
+            n_layers: arch_layers,
+            n_classes: 3,
+            time_steps: 6,
+            lif: LifConfig::default(),
+            prng_sharing: PrngSharing::PerRow,
+            spikformer_scale: 0.25,
+        }
+    }
+
+    fn tiny_model(arch: Arch) -> NativeModel {
+        let geo = tiny_geometry(1);
+        let w = build_weights(
+            geo.patch_dim,
+            geo.d_model,
+            geo.n_tokens,
+            geo.d_mlp,
+            geo.n_layers,
+            geo.n_classes,
+            0xA11CE,
+        );
+        NativeModel::from_weights(geo, arch, &w).unwrap()
+    }
+
+    #[test]
+    fn patchify_matches_python_layout() {
+        // 4x4 image, patch 2: token (gi,gj) holds rows gi*2..gi*2+2 of
+        // cols gj*2..gj*2+2 in row-major (pi, pj) order.
+        let img: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let p = patchify(&img, 4, 2);
+        assert_eq!(p.shape(), &[4, 4]);
+        assert_eq!(p.data()[0..4], [0.0, 1.0, 4.0, 5.0]); // token (0,0)
+        assert_eq!(p.data()[4..8], [2.0, 3.0, 6.0, 7.0]); // token (0,1)
+        assert_eq!(p.data()[12..16], [10.0, 11.0, 14.0, 15.0]); // token (1,1)
+    }
+
+    #[test]
+    fn ssa_inference_is_deterministic_and_seed_sensitive() {
+        let m = tiny_model(Arch::Ssa);
+        let img = vec![0.5f32; 64];
+        let a = m.infer_image(&img, 7).unwrap();
+        let b = m.infer_image(&img, 7).unwrap();
+        assert_eq!(a, b, "same seed must replay");
+        assert_eq!(a.len(), 3);
+        let c = m.infer_image(&img, 8).unwrap();
+        assert_ne!(a, c, "different seed must perturb the stochastic pass");
+    }
+
+    #[test]
+    fn ann_ignores_seed() {
+        let m = tiny_model(Arch::Ann);
+        let img: Vec<f32> = (0..64).map(|v| (v as f32) / 64.0).collect();
+        assert_eq!(m.infer_image(&img, 1).unwrap(), m.infer_image(&img, 2).unwrap());
+    }
+
+    #[test]
+    fn spikformer_runs_and_differs_from_ssa() {
+        let img = vec![0.6f32; 64];
+        let s = tiny_model(Arch::Ssa).infer_image(&img, 3).unwrap();
+        let f = tiny_model(Arch::Spikformer).infer_image(&img, 3).unwrap();
+        assert_eq!(f.len(), 3);
+        assert!(s.iter().all(|v| v.is_finite()) && f.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn batched_infer_concatenates_per_image_rows() {
+        let m = tiny_model(Arch::Ssa);
+        let img0 = vec![0.2f32; 64];
+        let img1 = vec![0.8f32; 64];
+        let mut both = img0.clone();
+        both.extend_from_slice(&img1);
+        let logits = m.infer(&both, 2, 42).unwrap();
+        assert_eq!(logits.len(), 6);
+        assert_eq!(&logits[0..3], &m.infer_image(&img0, image_seed(42, 0)).unwrap()[..]);
+        assert_eq!(&logits[3..6], &m.infer_image(&img1, image_seed(42, 1)).unwrap()[..]);
+    }
+
+    #[test]
+    fn image_seed_streams_do_not_collide_across_seed_index_pairs() {
+        // regression: index used to land in the seed's own bit range, so
+        // e.g. (seed 0, row 1) aliased (seed 2, row 0)
+        let mut seen = std::collections::HashSet::new();
+        for seed in 0..64u32 {
+            for index in 0..16usize {
+                assert!(
+                    seen.insert(image_seed(seed, index)),
+                    "collision at seed={seed} index={index}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_buffer_and_bad_shapes() {
+        let m = tiny_model(Arch::Ssa);
+        assert!(m.infer(&[0.0; 7], 2, 1).is_err());
+        let geo = tiny_geometry(2); // weights only carry 1 layer
+        let w = build_weights(16, 16, 4, 32, 1, 3, 1);
+        assert!(NativeModel::from_weights(geo, Arch::Ssa, &w).is_err());
+    }
+}

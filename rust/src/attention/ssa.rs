@@ -44,9 +44,22 @@ pub mod seeds {
     const TAG_ROW: u64 = 0x5200_0000_0000_0000;
     const TAG_ATTN: u64 = 0x4100_0000_0000_0000;
     const TAG_GLOBAL: u64 = 0x4700_0000_0000_0000;
+    const TAG_HEAD: u64 = 0x4845_0000_0000_0000;
 
     fn derive(base: u64, tag: u64) -> u16 {
         SplitMix64::new(base ^ tag).next_u64() as u16
+    }
+
+    /// Per-(layer, head) base seed for multi-head / multi-layer stacks.
+    ///
+    /// Each head owns an independent `SsaAttention` (its own PRNG bank);
+    /// this derivation is the *only* source of those per-head base seeds,
+    /// so the native backend and any standalone `SsaAttention` built from
+    /// the same `(base, layer, head)` triple consume identical LFSR
+    /// streams — the bit-exactness tests rely on it.
+    pub fn head(base: u64, layer: usize, head: usize) -> u64 {
+        SplitMix64::new(base ^ TAG_HEAD ^ (((layer as u64) << 16) | head as u64))
+            .next_u64()
     }
 
     /// Per-SAU S-encoder seed (Independent mode).

@@ -2,10 +2,11 @@
 //!
 //! ```text
 //! ssa-repro info
-//! ssa-repro serve      [--artifacts DIR] [--requests N] [--target ssa_t10] [--ensemble K]
+//! ssa-repro serve      [--artifacts DIR] [--backend native|xla] [--requests N]
+//!                      [--target ssa_t10] [--ensemble K]
 //! ssa-repro simulate   [--n 16] [--dk 16] [--t 10] [--sharing per-row] [--trace]
 //! ssa-repro experiments <table1|table2|table3|headline|fig1|fig2|fig3|all>
-//!                      [--artifacts DIR] [--cross-check N]
+//!                      [--artifacts DIR] [--cross-check N] [--backend native|xla]
 //! ```
 
 use std::collections::HashMap;
@@ -85,12 +86,20 @@ ssa-repro — Stochastic Spiking Attention (AICAS 2024) reproduction
 
 USAGE:
   ssa-repro info
-  ssa-repro serve       [--artifacts DIR] [--requests N] [--target ssa_t10]
+  ssa-repro serve       [--artifacts DIR] [--backend native|xla]
+                        [--requests N] [--target ssa_t10]
                         [--ensemble K] [--max-batch B] [--max-delay-ms D]
   ssa-repro simulate    [--n 16] [--dk 16] [--t 10]
                         [--sharing independent|per-row|global] [--trace]
   ssa-repro experiments table1|table2|table3|headline|fig1|fig2|fig3|all
                         [--artifacts DIR] [--cross-check N_IMAGES]
+                        [--backend native|xla]
+
+Backends (see rust/DESIGN.md):
+  native  pure-Rust spiking forward pass — needs only manifest.json +
+          weights_<arch>.bin, no XLA artifacts or PJRT client
+  xla     PJRT execution of the AOT-compiled HLO graphs (requires a
+          build with the `xla` cargo feature); the default on such builds
 
 Artifacts default to ./artifacts (build with `make artifacts`).
 Set SSA_LOG=debug for verbose logs.";

@@ -75,6 +75,46 @@ impl Default for LifConfig {
     }
 }
 
+/// Which execution engine serves inference requests.
+///
+/// `Native` runs the full spiking forward pass in pure Rust (always
+/// available); `Xla` executes the AOT-compiled HLO artifacts through
+/// PJRT and requires a build with the `xla` feature.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            other => anyhow::bail!("unknown backend {other:?} (expected `native` or `xla`)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+impl Default for BackendKind {
+    /// XLA when the build carries it (the historical behavior), otherwise
+    /// the native engine — so a plain build serves out of the box.
+    fn default() -> Self {
+        if cfg!(feature = "xla") {
+            BackendKind::Xla
+        } else {
+            BackendKind::Native
+        }
+    }
+}
+
 /// PRNG allocation strategy for the hardware Bernoulli encoders
 /// (ablation A1; the paper adopts a reuse strategy "similar to [29]").
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -108,6 +148,14 @@ mod tests {
         let c = AttnConfig::vit_tiny();
         c.validate().unwrap();
         assert!(c.pow2_dims());
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Xla);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::Native.name(), "native");
     }
 
     #[test]

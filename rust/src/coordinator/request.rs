@@ -29,7 +29,12 @@ impl Target {
 }
 
 /// How the per-request stochastic seed is chosen.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+///
+/// `Eq + Hash` because the router batches only requests with identical
+/// seed policies: a batch runs under one (or one ensemble of) seed(s), so
+/// mixing policies would silently serve tail requests under the head
+/// request's policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SeedPolicy {
     /// Fixed seed (reproducible serving / golden replay).
     Fixed(u32),
@@ -68,12 +73,23 @@ pub struct ClassifyResponse {
 }
 
 /// Errors surfaced to the caller as a response-channel drop + log line.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ServeError {
-    #[error("coordinator is shutting down")]
     Shutdown,
-    #[error("unknown target {0:?}")]
     UnknownTarget(String),
-    #[error("image has {got} pixels, expected {want}")]
     BadImage { got: usize, want: usize },
 }
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Shutdown => write!(f, "coordinator is shutting down"),
+            ServeError::UnknownTarget(t) => write!(f, "unknown target {t:?}"),
+            ServeError::BadImage { got, want } => {
+                write!(f, "image has {got} pixels, expected {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}

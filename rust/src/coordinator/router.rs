@@ -55,8 +55,13 @@ impl Router {
         true
     }
 
-    /// Next batch: `(variant_key, same-target requests)`, or `None` after
-    /// close + drain.
+    /// Next batch: `(variant_key, requests sharing the head request's
+    /// target AND seed policy)`, or `None` after close + drain.
+    ///
+    /// A batch executes under one seed schedule, so grouping must honor
+    /// the seed policy too — otherwise a `Fixed(7)` request queued behind
+    /// a `PerBatch` head would silently run under a coordinator-assigned
+    /// seed (and report the wrong `seed` back to its caller).
     pub fn next_batch(&self) -> Option<(String, Vec<ClassifyRequest>)> {
         let mut s = self.state.lock().unwrap();
         loop {
@@ -68,12 +73,18 @@ impl Router {
             }
             s = self.cv.wait(s).unwrap();
         }
-        let target = s.q.front().unwrap().target.clone();
+        let head = s.q.front().unwrap();
+        let target = head.target.clone();
+        let policy = head.seed_policy;
         let key = variant_key(&target);
-        let deadline = s.q.front().unwrap().submitted_at + self.policy.max_delay;
+        let deadline = head.submitted_at + self.policy.max_delay;
 
         loop {
-            let matching = s.q.iter().filter(|r| r.target == target).count();
+            let matching = s
+                .q
+                .iter()
+                .filter(|r| r.target == target && r.seed_policy == policy)
+                .count();
             if matching >= self.policy.max_batch || s.closed {
                 break;
             }
@@ -88,11 +99,14 @@ impl Router {
             }
         }
 
-        // extract up to max_batch same-target requests, preserving order
+        // extract up to max_batch matching requests, preserving order
         let mut batch = Vec::new();
         let mut rest = VecDeque::with_capacity(s.q.len());
         while let Some(r) = s.q.pop_front() {
-            if r.target == target && batch.len() < self.policy.max_batch {
+            if r.target == target
+                && r.seed_policy == policy
+                && batch.len() < self.policy.max_batch
+            {
                 batch.push(r);
             } else {
                 rest.push_back(r);
@@ -124,12 +138,16 @@ mod tests {
     use std::time::Duration;
 
     fn req(id: u64, target: Target) -> ClassifyRequest {
+        req_with_policy(id, target, SeedPolicy::PerBatch)
+    }
+
+    fn req_with_policy(id: u64, target: Target, seed_policy: SeedPolicy) -> ClassifyRequest {
         let (tx, _rx) = mpsc::channel();
         ClassifyRequest {
             id,
             target,
             image: vec![0.0; 4],
-            seed_policy: SeedPolicy::PerBatch,
+            seed_policy,
             submitted_at: Instant::now(),
             reply: tx,
         }
@@ -165,6 +183,22 @@ mod tests {
         assert_eq!(r.next_batch().unwrap().1.len(), 2);
         assert_eq!(r.next_batch().unwrap().1.len(), 2);
         assert_eq!(r.next_batch().unwrap().1.len(), 1);
+    }
+
+    #[test]
+    fn mixed_seed_policies_split_into_homogeneous_batches() {
+        let r = Router::new(BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(1) });
+        r.push(req_with_policy(1, Target::ssa(10), SeedPolicy::PerBatch));
+        r.push(req_with_policy(2, Target::ssa(10), SeedPolicy::Fixed(7)));
+        r.push(req_with_policy(3, Target::ssa(10), SeedPolicy::PerBatch));
+        r.push(req_with_policy(4, Target::ssa(10), SeedPolicy::Fixed(7)));
+        r.push(req_with_policy(5, Target::ssa(10), SeedPolicy::Fixed(9)));
+        let (_, b1) = r.next_batch().unwrap();
+        assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        let (_, b2) = r.next_batch().unwrap();
+        assert_eq!(b2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 4]);
+        let (_, b3) = r.next_batch().unwrap();
+        assert_eq!(b3.iter().map(|r| r.id).collect::<Vec<_>>(), vec![5]);
     }
 
     #[test]

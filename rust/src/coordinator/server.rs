@@ -1,17 +1,25 @@
 //! The serving coordinator: public submit API + the single inference
-//! thread that owns every PJRT object (client, compiled executables,
-//! staged weights) and drains the router queue batch by batch.
+//! thread that owns the execution backend (native or PJRT) and drains the
+//! router queue batch by batch.
+//!
+//! The thread is backend-agnostic: it talks to
+//! [`crate::runtime::InferenceBackend`] / [`crate::runtime::LoadedVariant`]
+//! only, so the batcher / router / metrics layers never see which engine
+//! runs underneath.  Backend construction happens *inside* the thread
+//! (PJRT handles are `Rc`-based and `!Send`; the native engine simply
+//! doesn't care).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{LoadedModel, Manifest, Runtime};
+use crate::config::BackendKind;
+use crate::runtime::{create_backend, LoadedVariant, Manifest};
 
 use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
@@ -25,6 +33,12 @@ pub struct CoordinatorConfig {
     pub policy: BatchPolicy,
     /// Variants compiled eagerly at startup (others compile on first use).
     pub preload: Vec<String>,
+    /// Execution engine for every variant this coordinator serves.
+    pub backend: BackendKind,
+    /// First value of the per-coordinator batch-seed counter (PerBatch /
+    /// Ensemble policies).  Owned by the coordinator — not process-global —
+    /// so in-process test runs replay deterministically.
+    pub initial_batch_seed: u32,
 }
 
 impl CoordinatorConfig {
@@ -33,7 +47,14 @@ impl CoordinatorConfig {
             artifacts_dir: artifacts_dir.into(),
             policy: BatchPolicy::default(),
             preload: vec!["ssa_t10".to_string()],
+            backend: BackendKind::default(),
+            initial_batch_seed: 0x5EED_0001,
         }
+    }
+
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
     }
 }
 
@@ -42,6 +63,7 @@ pub struct Coordinator {
     router: Arc<Router>,
     metrics: Arc<Metrics>,
     manifest: Manifest,
+    backend: BackendKind,
     next_id: AtomicU64,
     handle: Option<JoinHandle<()>>,
 }
@@ -57,23 +79,44 @@ impl Coordinator {
         let thread_metrics = Arc::clone(&metrics);
         let thread_manifest = manifest.clone();
         let preload = cfg.preload.clone();
+        let backend = cfg.backend;
+        let batch_seed = cfg.initial_batch_seed;
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
 
         let handle = std::thread::Builder::new()
             .name("ssa-inference".into())
             .spawn(move || {
-                inference_thread(thread_manifest, thread_router, thread_metrics, preload, ready_tx)
+                inference_thread(
+                    thread_manifest,
+                    thread_router,
+                    thread_metrics,
+                    preload,
+                    backend,
+                    batch_seed,
+                    ready_tx,
+                )
             })
             .context("spawning inference thread")?;
 
-        // surface startup errors (PJRT init, preload compile) synchronously
+        // surface startup errors (backend init, preload) synchronously
         ready_rx.recv().context("inference thread died during startup")??;
 
-        Ok(Self { router, metrics, manifest, next_id: AtomicU64::new(1), handle: Some(handle) })
+        Ok(Self {
+            router,
+            metrics,
+            manifest,
+            backend: cfg.backend,
+            next_id: AtomicU64::new(1),
+            handle: Some(handle),
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    pub fn backend(&self) -> BackendKind {
+        self.backend
     }
 
     /// Submit one image; returns the response channel.
@@ -147,25 +190,27 @@ impl Drop for Coordinator {
 // inference thread
 // ---------------------------------------------------------------------------
 
-static BATCH_SEED: AtomicU32 = AtomicU32::new(0x5EED_0001);
-
+#[allow(clippy::too_many_arguments)]
 fn inference_thread(
     manifest: Manifest,
     router: Arc<Router>,
     metrics: Arc<Metrics>,
     preload: Vec<String>,
+    backend_kind: BackendKind,
+    initial_batch_seed: u32,
     ready: mpsc::Sender<Result<()>>,
 ) {
-    let runtime = match Runtime::cpu() {
-        Ok(r) => r,
+    let backend = match create_backend(backend_kind) {
+        Ok(b) => b,
         Err(e) => {
             let _ = ready.send(Err(e));
             return;
         }
     };
-    let mut models: HashMap<String, LoadedModel> = HashMap::new();
+    crate::log_info!("inference thread: {} backend up", backend.name());
+    let mut models: HashMap<String, Box<dyn LoadedVariant>> = HashMap::new();
     for key in &preload {
-        match manifest.variant(key).and_then(|v| runtime.load(v)) {
+        match manifest.variant(key).and_then(|v| backend.load(&manifest, v)) {
             Ok(m) => {
                 models.insert(key.clone(), m);
             }
@@ -177,6 +222,8 @@ fn inference_thread(
     }
     let _ = ready.send(Ok(()));
 
+    // per-coordinator seed counter: single-owner state of this thread
+    let mut batch_seed = initial_batch_seed;
     let max_batch = router.policy().max_batch;
     while let Some((key, batch)) = router.next_batch() {
         if batch.is_empty() {
@@ -184,7 +231,7 @@ fn inference_thread(
         }
         // lazy-load the variant on first use
         if !models.contains_key(&key) {
-            match manifest.variant(&key).and_then(|v| runtime.load(v)) {
+            match manifest.variant(&key).and_then(|v| backend.load(&manifest, v)) {
                 Ok(m) => {
                     models.insert(key.clone(), m);
                 }
@@ -195,8 +242,9 @@ fn inference_thread(
                 }
             }
         }
-        let model = &models[&key];
-        if let Err(e) = serve_batch(model, &batch, &metrics, &key, max_batch) {
+        let model = models[&key].as_ref();
+        if let Err(e) = serve_batch(model, &batch, &metrics, &key, max_batch, &mut batch_seed)
+        {
             crate::log_error!("serving batch on {key}: {e:#}");
             metrics.record_error(&key);
         }
@@ -205,15 +253,29 @@ fn inference_thread(
 }
 
 fn serve_batch(
-    model: &LoadedModel,
+    model: &dyn LoadedVariant,
     batch: &[ClassifyRequest],
     metrics: &Metrics,
     key: &str,
     max_batch: usize,
+    batch_seed: &mut u32,
 ) -> Result<()> {
     let model_batch = model.batch();
-    let px = batch[0].image.len();
+    anyhow::ensure!(
+        batch.len() <= model_batch,
+        "batch {} exceeds model batch {model_batch}",
+        batch.len()
+    );
+    // the router only groups requests sharing one seed policy; reject
+    // a mixed batch outright rather than mis-seeding the tail requests
+    let policy = batch[0].seed_policy;
+    anyhow::ensure!(
+        batch.iter().all(|r| r.seed_policy == policy),
+        "mixed seed policies in one batch (router invariant violated)"
+    );
+
     // assemble + pad (repeat last image; padded rows are never replied)
+    let px = batch[0].image.len();
     let mut images = Vec::with_capacity(model_batch * px);
     for r in batch {
         anyhow::ensure!(r.image.len() == px, "ragged image sizes in batch");
@@ -222,22 +284,20 @@ fn serve_batch(
     for _ in batch.len()..model_batch {
         images.extend_from_slice(&batch.last().unwrap().image);
     }
-    anyhow::ensure!(
-        batch.len() <= model_batch,
-        "batch {} exceeds model batch {model_batch}",
-        batch.len()
-    );
 
-    // batch-wide seed policy comes from the head request
-    let (seeds, seed_reported) = match batch[0].seed_policy {
+    // allocate seeds from the coordinator-owned counter
+    let (seeds, seed_reported) = match policy {
         SeedPolicy::Fixed(s) => (vec![s], s),
         SeedPolicy::PerBatch => {
-            let s = BATCH_SEED.fetch_add(1, Ordering::Relaxed);
+            let s = *batch_seed;
+            *batch_seed = batch_seed.wrapping_add(1);
             (vec![s], s)
         }
         SeedPolicy::Ensemble(n) => {
-            let s0 = BATCH_SEED.fetch_add(n.max(1), Ordering::Relaxed);
-            ((0..n.max(1)).map(|i| s0 + i).collect(), s0)
+            let n = n.max(1);
+            let s0 = *batch_seed;
+            *batch_seed = batch_seed.wrapping_add(n);
+            ((0..n).map(|i| s0.wrapping_add(i)).collect(), s0)
         }
     };
 
@@ -256,12 +316,7 @@ fn serve_batch(
     let mut lats = Vec::with_capacity(batch.len());
     for (i, req) in batch.iter().enumerate() {
         let row = &logits_acc[i * classes..(i + 1) * classes];
-        let class = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(j, _)| j)
-            .unwrap();
+        let class = crate::util::argmax(row).unwrap_or(0);
         let latency_us = now.duration_since(req.submitted_at).as_secs_f64() * 1e6;
         lats.push(latency_us);
         let _ = req.reply.send(ClassifyResponse {

@@ -4,15 +4,17 @@
 //! Two sources are combined:
 //! * `artifacts/accuracy.json` — the full-test-set sweep measured by the
 //!   Python build right after training + INT8 quantization;
-//! * an optional *rust-side re-evaluation* through the AOT'd HLO graphs
-//!   (PJRT), proving the serving stack reproduces the numbers with Python
-//!   out of the loop.
+//! * an optional *rust-side re-evaluation* through either inference
+//!   backend (native forward pass, or the AOT'd HLO graphs under PJRT),
+//!   proving the serving stack reproduces the numbers with Python out of
+//!   the loop.
 
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{Dataset, Manifest, Runtime};
+use crate::config::BackendKind;
+use crate::runtime::{create_backend, Dataset, Manifest};
 use crate::util::json::Json;
 
 /// The accuracy sweep parsed from `accuracy.json`.
@@ -66,14 +68,21 @@ impl AccuracyTable {
     }
 }
 
-/// Re-evaluate a variant through the PJRT runtime on the first `n` test
-/// images; returns accuracy.  This is the serving-stack ground truth.
-pub fn rust_side_accuracy(artifacts: &Path, variant: &str, n: usize) -> Result<f64> {
+/// Re-evaluate a variant through an inference backend on the first `n`
+/// test images; returns accuracy.  This is the serving-stack ground truth
+/// (the native backend makes an honest SSA-CPU row possible on machines
+/// without XLA artifacts).
+pub fn rust_side_accuracy(
+    artifacts: &Path,
+    variant: &str,
+    n: usize,
+    backend: BackendKind,
+) -> Result<f64> {
     let manifest = Manifest::load(artifacts)?;
     let v = manifest.variant(variant)?;
     let ds = Dataset::load(&manifest.dataset_test)?;
-    let runtime = Runtime::cpu()?;
-    let model = runtime.load(v)?;
+    let engine = create_backend(backend)?;
+    let model = engine.load(&manifest, v)?;
     let b = v.batch;
     let n = n.min(ds.len());
     let mut correct = 0usize;
@@ -95,13 +104,18 @@ pub fn rust_side_accuracy(artifacts: &Path, variant: &str, n: usize) -> Result<f
 }
 
 /// Render E1 with optional rust-side cross-check.
-pub fn run(artifacts: &Path, cross_check: Option<(&str, usize)>) -> Result<String> {
+pub fn run(
+    artifacts: &Path,
+    cross_check: Option<(&str, usize)>,
+    backend: BackendKind,
+) -> Result<String> {
     let table = AccuracyTable::load(artifacts)?;
     let mut out = table.render();
     if let Some((variant, n)) = cross_check {
-        let acc = rust_side_accuracy(artifacts, variant, n)?;
+        let acc = rust_side_accuracy(artifacts, variant, n, backend)?;
         out.push_str(&format!(
-            "\nrust-side (PJRT) re-evaluation of {variant} on {n} images: {:.2}%\n",
+            "\nrust-side ({}) re-evaluation of {variant} on {n} images: {:.2}%\n",
+            backend.name(),
             acc * 100.0
         ));
     }

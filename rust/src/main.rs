@@ -6,7 +6,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use ssa_repro::cli::{Args, USAGE};
-use ssa_repro::config::{AttnConfig, PrngSharing};
+use ssa_repro::config::{AttnConfig, BackendKind, PrngSharing};
 use ssa_repro::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, SeedPolicy, Target};
 use ssa_repro::experiments::{figures, headline, table1, table2, table3};
 use ssa_repro::hw::{simulate, SpikeStreams};
@@ -52,6 +52,13 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.opt_or("artifacts", "artifacts"))
 }
 
+fn backend_kind(args: &Args) -> Result<BackendKind> {
+    match args.opt("backend") {
+        None => Ok(BackendKind::default()),
+        Some(s) => BackendKind::parse(s),
+    }
+}
+
 fn serve(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let n_requests: usize = args.opt_parse("requests", 64)?;
@@ -59,10 +66,11 @@ fn serve(args: &Args) -> Result<()> {
     let ensemble: u32 = args.opt_parse("ensemble", 1)?;
     let max_batch: usize = args.opt_parse("max-batch", 8)?;
     let max_delay_ms: u64 = args.opt_parse("max-delay-ms", 5)?;
+    let backend = backend_kind(args)?;
 
     let target = parse_target(&target_s)?;
     let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(max_delay_ms) };
-    let mut cfg = CoordinatorConfig::new(dir);
+    let mut cfg = CoordinatorConfig::new(dir).with_backend(backend);
     cfg.policy = policy;
     cfg.preload = vec![target_s.clone()];
 
@@ -71,7 +79,10 @@ fn serve(args: &Args) -> Result<()> {
     let seed_policy =
         if ensemble > 1 { SeedPolicy::Ensemble(ensemble) } else { SeedPolicy::PerBatch };
 
-    println!("serving {n_requests} requests against {target_s} ...");
+    println!(
+        "serving {n_requests} requests against {target_s} on the {} backend ...",
+        coord.backend().name()
+    );
     let mut correct = 0usize;
     let mut receivers = Vec::new();
     for i in 0..n_requests {
@@ -149,11 +160,12 @@ fn experiments(args: &Args) -> Result<()> {
     let which = args.sub_arg(1)?;
     let dir = artifacts_dir(args);
     let cross: usize = args.opt_parse("cross-check", 0)?;
+    let backend = backend_kind(args)?;
     let tiny = AttnConfig::vit_tiny().with_time_steps(4);
     match which {
         "table1" => {
             let cc = if cross > 0 { Some(("ssa_t10", cross)) } else { None };
-            println!("{}", table1::run(&dir, cc)?);
+            println!("{}", table1::run(&dir, cc, backend)?);
         }
         "table2" => println!("{}", table2::run()),
         "table3" => println!("{}", table3::run(true)?),
@@ -162,7 +174,7 @@ fn experiments(args: &Args) -> Result<()> {
         "fig2" => println!("{}", figures::fig2_bit_exactness(tiny)),
         "fig3" => println!("{}", figures::fig3_dataflow(tiny)),
         "all" => {
-            println!("{}", table1::run(&dir, None)?);
+            println!("{}", table1::run(&dir, None, backend)?);
             println!("{}", table2::run());
             println!("{}", table3::run(true)?);
             println!("{}", headline()?);

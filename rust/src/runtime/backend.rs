@@ -1,0 +1,97 @@
+//! The pluggable inference-backend seam.
+//!
+//! The serving coordinator used to be welded to the PJRT runtime; this
+//! trait pair is everything it actually needs, so variants can resolve to
+//! either execution engine:
+//!
+//! * [`crate::runtime::NativeBackend`] — the full SSA/Spikformer/ANN
+//!   forward pass in pure Rust (Bernoulli coding, bit-packed per-head SSA,
+//!   LIF feed-forward, rate-decoded readout).  Always available; needs
+//!   only `manifest.json` + `weights_<arch>.bin`.
+//! * `XlaBackend` (feature `xla`) — compiles the AOT'd HLO-text artifacts
+//!   through PJRT and stages weights to device buffers.
+//!
+//! Neither trait requires `Send`: PJRT handles are `Rc`-based, so the
+//! coordinator constructs its backend *inside* the single inference
+//! thread, exactly as before.
+
+use anyhow::Result;
+
+use crate::config::BackendKind;
+
+use super::manifest::{Manifest, Variant};
+
+/// An execution engine that can materialize manifest variants.
+pub trait InferenceBackend {
+    /// Short engine name for logs/metrics (`"native"`, `"xla"`).
+    fn name(&self) -> &'static str;
+
+    /// Load one variant and make it servable.  `manifest` provides the
+    /// artifact-wide geometry (image size, patch size, class count) that
+    /// the variant entry alone does not carry.
+    fn load(&self, manifest: &Manifest, variant: &Variant) -> Result<Box<dyn LoadedVariant>>;
+}
+
+/// A loaded, servable model variant.
+pub trait LoadedVariant {
+    fn variant(&self) -> &Variant;
+
+    fn batch(&self) -> usize {
+        self.variant().batch
+    }
+
+    /// Run one inference: `images` is a row-major `[batch, S, S]` f32
+    /// buffer in [0,1]; returns `[batch, n_classes]` logits.
+    fn infer(&self, images: &[f32], seed: u32) -> Result<Vec<f32>>;
+
+    /// Argmax class per batch row (total-order; never panics on NaN).
+    fn classify(&self, images: &[f32], seed: u32) -> Result<Vec<usize>> {
+        let logits = self.infer(images, seed)?;
+        let classes = self.variant().output_shape[1];
+        Ok(logits
+            .chunks_exact(classes)
+            .map(|row| crate::util::argmax(row).unwrap_or(0))
+            .collect())
+    }
+}
+
+/// Instantiate a backend by kind.  `Xla` errors out (rather than being
+/// hidden) when the binary was built without the `xla` feature, so a
+/// misconfigured deployment fails loudly at startup, not per request.
+pub fn create_backend(kind: BackendKind) -> Result<Box<dyn InferenceBackend>> {
+    match kind {
+        BackendKind::Native => Ok(Box::new(super::native::NativeBackend::new())),
+        BackendKind::Xla => create_xla_backend(),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn create_xla_backend() -> Result<Box<dyn InferenceBackend>> {
+    Ok(Box::new(super::executable::XlaBackend::new()?))
+}
+
+#[cfg(not(feature = "xla"))]
+fn create_xla_backend() -> Result<Box<dyn InferenceBackend>> {
+    anyhow::bail!(
+        "this binary was built without the `xla` feature — \
+         use `--backend native` or rebuild with `--features xla`"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_backend_always_constructs() {
+        let b = create_backend(BackendKind::Native).unwrap();
+        assert_eq!(b.name(), "native");
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn xla_backend_errors_without_feature() {
+        let err = create_backend(BackendKind::Xla).unwrap_err();
+        assert!(format!("{err:#}").contains("xla"));
+    }
+}

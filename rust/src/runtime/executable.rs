@@ -1,10 +1,13 @@
 //! PJRT runtime: load HLO-text artifacts, compile once, execute many.
 //!
-//! This is the only place the `xla` crate is touched.  The interchange
-//! format is HLO *text* (see DESIGN.md §2): `HloModuleProto::from_text_file`
-//! re-assigns instruction ids, avoiding the 64-bit-id protos that
-//! xla_extension 0.5.1 rejects.  Graphs are lowered by `aot.py` with
-//! `return_tuple=True`, so outputs unwrap with `to_tuple1()`.
+//! This is the only place the `xla` crate is touched, and the whole
+//! module is compiled only under the `xla` feature (the offline image
+//! carries no xla_extension; the native backend serves instead).  The
+//! interchange format is HLO *text* (see DESIGN.md §2):
+//! `HloModuleProto::from_text_file` re-assigns instruction ids, avoiding
+//! the 64-bit-id protos that xla_extension 0.5.1 rejects.  Graphs are
+//! lowered by `aot.py` with `return_tuple=True`, so outputs unwrap with
+//! `to_tuple1()`.
 //!
 //! Weights are staged to device buffers once at load time; per-request
 //! work is one image-batch upload, one scalar seed upload, and one
@@ -14,7 +17,8 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use super::manifest::Variant;
+use super::backend::{InferenceBackend, LoadedVariant};
+use super::manifest::{Manifest, Variant};
 use super::weights::Weights;
 
 /// Shared PJRT CPU client.
@@ -130,19 +134,49 @@ impl LoadedModel {
         Ok(logits)
     }
 
-    /// Argmax class per batch row (serving convenience).
+    /// Argmax class per batch row (serving convenience; total-order, so
+    /// NaN logits pick a fallback class instead of panicking the thread).
     pub fn classify(&self, images: &[f32], seed: u32) -> Result<Vec<usize>> {
         let logits = self.infer(images, seed)?;
         let classes = self.variant.output_shape[1];
         Ok(logits
             .chunks_exact(classes)
-            .map(|row| {
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap()
-            })
+            .map(|row| crate::util::argmax(row).unwrap_or(0))
             .collect())
+    }
+}
+
+/// PJRT engine behind the [`InferenceBackend`] seam.
+pub struct XlaBackend {
+    runtime: Runtime,
+}
+
+impl XlaBackend {
+    pub fn new() -> Result<Self> {
+        Ok(Self { runtime: Runtime::cpu()? })
+    }
+}
+
+impl InferenceBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn load(&self, _manifest: &Manifest, variant: &Variant) -> Result<Box<dyn LoadedVariant>> {
+        Ok(Box::new(self.runtime.load(variant)?))
+    }
+}
+
+impl LoadedVariant for LoadedModel {
+    fn variant(&self) -> &Variant {
+        LoadedModel::variant(self)
+    }
+
+    fn infer(&self, images: &[f32], seed: u32) -> Result<Vec<f32>> {
+        LoadedModel::infer(self, images, seed)
+    }
+
+    fn classify(&self, images: &[f32], seed: u32) -> Result<Vec<usize>> {
+        LoadedModel::classify(self, images, seed)
     }
 }

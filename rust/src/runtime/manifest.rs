@@ -14,6 +14,60 @@ pub struct InputSpec {
     pub dtype: String,
 }
 
+/// Optional model-geometry hints for the native (pure-Rust) backend.
+///
+/// Everything derivable from the weights file (d_model, layer count, ...)
+/// is inferred there; these cover what the weights cannot encode — head
+/// count, LIF constants, the Spikformer scale, PRNG sharing.  Hints may
+/// appear as a `"model": {...}` object at the manifest root (defaults for
+/// all variants) and/or per variant (overrides).  Absent fields fall back
+/// to `python/compile/config.ModelConfig` defaults, so manifests that
+/// predate the native backend keep working.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ModelHints {
+    pub n_heads: Option<usize>,
+    pub n_layers: Option<usize>,
+    pub d_mlp: Option<usize>,
+    pub lif_beta: Option<f32>,
+    pub lif_theta: Option<f32>,
+    pub spikformer_scale: Option<f32>,
+    pub prng_sharing: Option<String>,
+}
+
+impl ModelHints {
+    fn from_json(j: Option<&Json>) -> Self {
+        let Some(j) = j else { return Self::default() };
+        Self {
+            n_heads: j.get("n_heads").and_then(Json::as_usize),
+            n_layers: j.get("n_layers").and_then(Json::as_usize),
+            d_mlp: j.get("d_mlp").and_then(Json::as_usize),
+            lif_beta: j.get("lif_beta").and_then(Json::as_f64).map(|v| v as f32),
+            lif_theta: j.get("lif_theta").and_then(Json::as_f64).map(|v| v as f32),
+            spikformer_scale: j
+                .get("spikformer_scale")
+                .and_then(Json::as_f64)
+                .map(|v| v as f32),
+            prng_sharing: j
+                .get("prng_sharing")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+        }
+    }
+
+    /// Field-wise `self` over `fallback` (variant hints over manifest ones).
+    pub fn merged_over(&self, fallback: &ModelHints) -> ModelHints {
+        ModelHints {
+            n_heads: self.n_heads.or(fallback.n_heads),
+            n_layers: self.n_layers.or(fallback.n_layers),
+            d_mlp: self.d_mlp.or(fallback.d_mlp),
+            lif_beta: self.lif_beta.or(fallback.lif_beta),
+            lif_theta: self.lif_theta.or(fallback.lif_theta),
+            spikformer_scale: self.spikformer_scale.or(fallback.spikformer_scale),
+            prng_sharing: self.prng_sharing.clone().or_else(|| fallback.prng_sharing.clone()),
+        }
+    }
+}
+
 /// One compiled model variant (e.g. `ssa_t10`, batch 8).
 #[derive(Clone, Debug)]
 pub struct Variant {
@@ -27,6 +81,7 @@ pub struct Variant {
     pub golden: Option<PathBuf>,
     pub inputs: Vec<InputSpec>,
     pub output_shape: Vec<usize>,
+    pub model: ModelHints,
 }
 
 /// The whole artifacts directory, parsed.
@@ -40,6 +95,8 @@ pub struct Manifest {
     pub dataset_test: PathBuf,
     pub dataset_n: usize,
     pub variants: Vec<Variant>,
+    /// Manifest-wide native-backend geometry defaults.
+    pub model: ModelHints,
 }
 
 fn parse_shape(j: &Json) -> Result<Vec<usize>> {
@@ -100,6 +157,7 @@ impl Manifest {
                         .context("variant missing output.shape")?,
                 )?,
                 inputs,
+                model: ModelHints::from_json(v.get("model")),
             });
         }
         Ok(Self {
@@ -111,6 +169,7 @@ impl Manifest {
             dataset_test: dir.join(dataset.str_field("test")?),
             dataset_n: dataset.usize_field("n")?,
             variants,
+            model: ModelHints::from_json(j.get("model")),
         })
     }
 
@@ -162,6 +221,26 @@ mod tests {
         assert_eq!(v.inputs[0].shape, vec![8, 16, 16]);
         assert_eq!(v.hlo, Path::new("/tmp/a/ssa_t10.hlo.txt"));
         assert!(m.variant("nope").is_err());
+        // no "model" object: hints default to empty at both levels
+        assert_eq!(m.model, ModelHints::default());
+        assert_eq!(v.model, ModelHints::default());
+    }
+
+    #[test]
+    fn parses_model_hints_with_variant_override() {
+        let j = Json::parse(&SAMPLE.replace(
+            r#""golden_seed": 42,"#,
+            r#""golden_seed": 42, "model": {"n_heads": 4, "lif_beta": 0.9},"#,
+        ))
+        .unwrap();
+        let mut m = Manifest::from_json(Path::new("/x"), &j).unwrap();
+        assert_eq!(m.model.n_heads, Some(4));
+        assert_eq!(m.model.lif_beta, Some(0.9));
+        assert_eq!(m.model.lif_theta, None);
+        m.variants[0].model.n_heads = Some(8);
+        let merged = m.variants[0].model.merged_over(&m.model);
+        assert_eq!(merged.n_heads, Some(8), "variant hint wins");
+        assert_eq!(merged.lif_beta, Some(0.9), "manifest default fills gaps");
     }
 
     #[test]

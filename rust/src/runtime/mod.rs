@@ -1,13 +1,21 @@
-//! L3 runtime: PJRT client, HLO-text artifact loading, weights/dataset/
-//! golden readers.  Python never runs here — everything below consumes
-//! only the binary artifacts `make artifacts` produced.
+//! L3 runtime: the pluggable inference-backend seam, the native pure-Rust
+//! execution engine, the PJRT/XLA engine (feature `xla`), and the
+//! weights/dataset/golden/manifest readers.  Python never runs here —
+//! everything below consumes only the binary artifacts `make artifacts`
+//! produced (and the native backend needs only the manifest + weights).
 
+pub mod backend;
 pub mod dataset;
+#[cfg(feature = "xla")]
 pub mod executable;
 pub mod manifest;
+pub mod native;
 pub mod weights;
 
+pub use backend::{create_backend, InferenceBackend, LoadedVariant};
 pub use dataset::{Dataset, Golden};
-pub use executable::{LoadedModel, Runtime};
-pub use manifest::{Manifest, Variant};
+#[cfg(feature = "xla")]
+pub use executable::{LoadedModel, Runtime, XlaBackend};
+pub use manifest::{Manifest, ModelHints, Variant};
+pub use native::{NativeBackend, NativeVariant};
 pub use weights::Weights;

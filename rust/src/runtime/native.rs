@@ -1,0 +1,166 @@
+//! The native inference backend: serves manifest variants through the
+//! pure-Rust spiking forward pass ([`crate::attention::model`]) with no
+//! PJRT client, no HLO artifacts, and no Python — only `manifest.json`
+//! and the `weights_<arch>.bin` files need to exist on disk.
+//!
+//! Geometry resolution: everything encoded in the weights file (embedding
+//! dims, layer count, MLP width, class count) is inferred from tensor
+//! shapes; the rest (head count, LIF constants, Spikformer scale, PRNG
+//! sharing) comes from the manifest's optional `"model"` hints with
+//! `python/compile/config.ModelConfig` defaults, and is cross-checked
+//! against the manifest's image/patch geometry before anything serves.
+
+use anyhow::{Context, Result};
+
+use crate::attention::model::{Arch, ModelGeometry, NativeModel};
+use crate::config::{LifConfig, PrngSharing};
+
+use super::backend::{InferenceBackend, LoadedVariant};
+use super::manifest::{Manifest, ModelHints, Variant};
+use super::weights::Weights;
+
+/// Python `ModelConfig` defaults, used when the manifest carries no hints.
+const DEFAULT_N_HEADS: usize = 4;
+const DEFAULT_LIF_BETA: f32 = 0.9;
+const DEFAULT_LIF_THETA: f32 = 1.0;
+const DEFAULT_SPIKFORMER_SCALE: f32 = 0.25;
+
+/// Stateless factory: all per-variant state lives in [`NativeVariant`].
+#[derive(Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl InferenceBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn load(&self, manifest: &Manifest, variant: &Variant) -> Result<Box<dyn LoadedVariant>> {
+        let weights = Weights::load(&variant.weights)?;
+        let arch = Arch::parse(&variant.arch)
+            .with_context(|| format!("native backend, variant {}", variant.name))?;
+        let hints = variant.model.merged_over(&manifest.model);
+        let geo = resolve_geometry(manifest, variant, &weights, &hints)?;
+        let model = NativeModel::from_weights(geo, arch, &weights)
+            .with_context(|| format!("binding native model for variant {}", variant.name))?;
+        crate::log_info!(
+            "native backend loaded {}: {} layers, {} heads, T={}, batch {}",
+            variant.name,
+            geo.n_layers,
+            geo.n_heads,
+            geo.time_steps,
+            variant.batch
+        );
+        Ok(Box::new(NativeVariant { variant: variant.clone(), model }))
+    }
+}
+
+fn parse_sharing(s: Option<&str>) -> Result<PrngSharing> {
+    match s {
+        None | Some("per-row") => Ok(PrngSharing::PerRow),
+        Some("independent") => Ok(PrngSharing::Independent),
+        Some("global") => Ok(PrngSharing::Global),
+        Some(other) => anyhow::bail!("unknown prng_sharing hint {other:?}"),
+    }
+}
+
+fn resolve_geometry(
+    manifest: &Manifest,
+    variant: &Variant,
+    weights: &Weights,
+    hints: &ModelHints,
+) -> Result<ModelGeometry> {
+    let embed_w = weights.get("embed/w").context("resolving native geometry")?;
+    let embed_pos = weights.get("embed/pos").context("resolving native geometry")?;
+    let head_w = weights.get("head/w").context("resolving native geometry")?;
+    anyhow::ensure!(embed_w.ndim() == 2 && embed_pos.ndim() == 2 && head_w.ndim() == 2);
+
+    let patch_dim = embed_w.shape()[0];
+    let d_model = embed_w.shape()[1];
+    let n_tokens = embed_pos.shape()[0];
+    let n_classes = head_w.shape()[1];
+    anyhow::ensure!(
+        patch_dim == manifest.patch_size * manifest.patch_size,
+        "embed/w fan-in {patch_dim} != manifest patch {}^2",
+        manifest.patch_size
+    );
+    anyhow::ensure!(
+        n_tokens == (manifest.image_size / manifest.patch_size).pow(2),
+        "embed/pos rows {n_tokens} != (S/P)^2"
+    );
+    anyhow::ensure!(
+        n_classes == manifest.n_classes,
+        "head/w classes {n_classes} != manifest {}",
+        manifest.n_classes
+    );
+
+    let n_layers = hints.n_layers.unwrap_or_else(|| NativeModel::count_layers(weights));
+    let d_mlp = match hints.d_mlp {
+        Some(m) => m,
+        None if n_layers > 0 => {
+            let w1 = weights.get("layer0/w1")?;
+            anyhow::ensure!(w1.ndim() == 2, "layer0/w1 must be 2-D to infer d_mlp");
+            w1.shape()[1]
+        }
+        None => 1, // unused when there are no encoder layers
+    };
+    let n_heads = hints
+        .n_heads
+        .unwrap_or(if d_model % DEFAULT_N_HEADS == 0 { DEFAULT_N_HEADS } else { 1 });
+    anyhow::ensure!(
+        n_heads > 0 && d_model % n_heads == 0,
+        "d_model {d_model} not divisible by n_heads {n_heads} — \
+         set a \"model\": {{\"n_heads\": H}} hint in manifest.json"
+    );
+
+    let geo = ModelGeometry {
+        image_size: manifest.image_size,
+        patch_size: manifest.patch_size,
+        n_tokens,
+        patch_dim,
+        d_model,
+        n_heads,
+        d_head: d_model / n_heads,
+        d_mlp,
+        n_layers,
+        n_classes,
+        // the ANN variant reports time_steps = 0; its forward pass is
+        // deterministic, but the geometry still wants a positive T
+        time_steps: variant.time_steps.max(1),
+        lif: LifConfig {
+            beta: hints.lif_beta.unwrap_or(DEFAULT_LIF_BETA),
+            theta: hints.lif_theta.unwrap_or(DEFAULT_LIF_THETA),
+        },
+        prng_sharing: parse_sharing(hints.prng_sharing.as_deref())?,
+        spikformer_scale: hints.spikformer_scale.unwrap_or(DEFAULT_SPIKFORMER_SCALE),
+    };
+    geo.validate().with_context(|| format!("variant {} geometry", variant.name))?;
+    Ok(geo)
+}
+
+/// A weights-bound native model serving one manifest variant.
+pub struct NativeVariant {
+    variant: Variant,
+    model: NativeModel,
+}
+
+impl NativeVariant {
+    pub fn model(&self) -> &NativeModel {
+        &self.model
+    }
+}
+
+impl LoadedVariant for NativeVariant {
+    fn variant(&self) -> &Variant {
+        &self.variant
+    }
+
+    fn infer(&self, images: &[f32], seed: u32) -> Result<Vec<f32>> {
+        self.model.infer(images, self.variant.batch, seed)
+    }
+}

@@ -90,6 +90,97 @@ impl Weights {
     }
 }
 
+/// Builders for synthetic weights files — used by the native-backend unit
+/// and integration tests (which must be able to fabricate a servable
+/// artifacts directory without Python), and handy for local smoke runs.
+pub mod test_support {
+    use super::{Weights, WEIGHTS_MAGIC};
+    use crate::tensor::Tensor;
+    use crate::util::rng::Xoshiro256;
+
+    /// Serialize named tensors into the WASS v1 byte format `parse` reads.
+    pub fn serialize(tensors: &[(String, Tensor)]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend(WEIGHTS_MAGIC.to_le_bytes());
+        b.extend(1u32.to_le_bytes());
+        b.extend((tensors.len() as u32).to_le_bytes());
+        for (name, t) in tensors {
+            b.extend((name.len() as u32).to_le_bytes());
+            b.extend(name.as_bytes());
+            b.extend((t.shape().len() as u32).to_le_bytes());
+            for &d in t.shape() {
+                b.extend((d as u32).to_le_bytes());
+            }
+            for &v in t.data() {
+                b.extend(v.to_le_bytes());
+            }
+        }
+        b
+    }
+
+    /// Deterministic Kaiming-style random weights for the full spiking-ViT
+    /// parameter layout of `python/compile/layers.init_params`.
+    pub fn build_weight_bytes(
+        patch_dim: usize,
+        d_model: usize,
+        n_tokens: usize,
+        d_mlp: usize,
+        n_layers: usize,
+        n_classes: usize,
+        seed: u64,
+    ) -> Vec<u8> {
+        let mut rng = Xoshiro256::new(seed);
+        let mut dense = |fan_in: usize, fan_out: usize| -> Tensor {
+            let scale = (2.0 / fan_in as f64).sqrt();
+            Tensor::from_vec(
+                &[fan_in, fan_out],
+                (0..fan_in * fan_out)
+                    .map(|_| (rng.next_normal() * scale) as f32)
+                    .collect(),
+            )
+        };
+        let mut tensors = vec![("embed/w".to_string(), dense(patch_dim, d_model))];
+        {
+            let mut rng2 = Xoshiro256::new(seed ^ 0x505F);
+            tensors.push((
+                "embed/pos".to_string(),
+                Tensor::from_vec(
+                    &[n_tokens, d_model],
+                    (0..n_tokens * d_model)
+                        .map(|_| (0.02 * rng2.next_normal()) as f32)
+                        .collect(),
+                ),
+            ));
+        }
+        for l in 0..n_layers {
+            for name in ["wq", "wk", "wv", "wo"] {
+                tensors.push((format!("layer{l}/{name}"), dense(d_model, d_model)));
+            }
+            tensors.push((format!("layer{l}/w1"), dense(d_model, d_mlp)));
+            tensors.push((format!("layer{l}/w2"), dense(d_mlp, d_model)));
+        }
+        tensors.push(("head/w".to_string(), dense(d_model, n_classes)));
+        serialize(&tensors)
+    }
+
+    /// Parsed form of [`build_weight_bytes`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_weights(
+        patch_dim: usize,
+        d_model: usize,
+        n_tokens: usize,
+        d_mlp: usize,
+        n_layers: usize,
+        n_classes: usize,
+        seed: u64,
+    ) -> Weights {
+        Weights::parse(&build_weight_bytes(
+            patch_dim, d_model, n_tokens, d_mlp, n_layers, n_classes, seed,
+        ))
+        .expect("synthetic weights must round-trip")
+    }
+}
+
 struct Cursor<'a> {
     buf: &'a [u8],
     pos: usize,

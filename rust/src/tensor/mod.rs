@@ -176,14 +176,7 @@ impl Tensor {
         assert_eq!(self.ndim(), 2);
         let (m, n) = (self.shape[0], self.shape[1]);
         (0..m)
-            .map(|i| {
-                let row = &self.data[i * n..(i + 1) * n];
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(j, _)| j)
-                    .unwrap()
-            })
+            .map(|i| crate::util::argmax(&self.data[i * n..(i + 1) * n]).unwrap_or(0))
             .collect()
     }
 }

@@ -126,6 +126,42 @@ impl BitMatrix {
         out
     }
 
+    /// Copy of columns `[start, start + width)` (head splitting: one
+    /// attention head owns a contiguous D_K-column slab of `[N, D]`).
+    pub fn col_slice(&self, start: usize, width: usize) -> BitMatrix {
+        assert!(start + width <= self.cols, "col_slice out of range");
+        let mut out = BitMatrix::zeros(self.rows, width);
+        for r in 0..self.rows {
+            for c in 0..width {
+                if self.get(r, start + c) {
+                    out.set(r, c, true);
+                }
+            }
+        }
+        out
+    }
+
+    /// Horizontal concatenation (head merging: `[N, D_K] x H -> [N, D]`).
+    pub fn hconcat(parts: &[&BitMatrix]) -> BitMatrix {
+        assert!(!parts.is_empty(), "hconcat of no parts");
+        let rows = parts[0].rows;
+        let cols: usize = parts.iter().map(|p| p.cols).sum();
+        let mut out = BitMatrix::zeros(rows, cols);
+        let mut base = 0;
+        for p in parts {
+            assert_eq!(p.rows, rows, "hconcat row mismatch");
+            for r in 0..rows {
+                for c in 0..p.cols {
+                    if p.get(r, c) {
+                        out.set(r, base + c, true);
+                    }
+                }
+            }
+            base += p.cols;
+        }
+        out
+    }
+
     /// Transposed copy (used to lay K out for row-streaming).
     pub fn transpose(&self) -> BitMatrix {
         let mut t = BitMatrix::zeros(self.cols, self.rows);
@@ -188,6 +224,20 @@ mod tests {
             (0..6 * 11).map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 }).collect();
         let m = BitMatrix::from_f01(6, 11, &vals);
         assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn col_slice_and_hconcat_roundtrip() {
+        let mut rng = Xoshiro256::new(17);
+        let vals: Vec<f32> =
+            (0..4 * 70).map(|_| if rng.bernoulli(0.4) { 1.0 } else { 0.0 }).collect();
+        let m = BitMatrix::from_f01(4, 70, &vals);
+        let a = m.col_slice(0, 30);
+        let b = m.col_slice(30, 25);
+        let c = m.col_slice(55, 15);
+        assert_eq!((a.rows(), a.cols()), (4, 30));
+        assert!(a.get(1, 5) == m.get(1, 5) && b.get(2, 0) == m.get(2, 30));
+        assert_eq!(BitMatrix::hconcat(&[&a, &b, &c]), m);
     }
 
     #[test]

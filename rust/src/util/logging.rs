@@ -4,9 +4,8 @@
 
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
-
-use once_cell::sync::Lazy;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
@@ -19,7 +18,11 @@ pub enum Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn start() -> Instant {
+    *START.get_or_init(Instant::now)
+}
 
 pub fn init_from_env() {
     let lvl = match std::env::var("SSA_LOG").as_deref() {
@@ -30,7 +33,7 @@ pub fn init_from_env() {
         _ => Level::Info,
     };
     set_level(lvl);
-    Lazy::force(&START);
+    start(); // pin t=0 to logger init
 }
 
 pub fn set_level(lvl: Level) {
@@ -45,7 +48,7 @@ pub fn log(lvl: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if !enabled(lvl) {
         return;
     }
-    let t = START.elapsed().as_secs_f64();
+    let t = start().elapsed().as_secs_f64();
     let tag = match lvl {
         Level::Error => "ERROR",
         Level::Warn => "WARN ",

@@ -7,3 +7,53 @@ pub mod json;
 pub mod logging;
 pub mod rng;
 pub mod stats;
+
+/// Total-order argmax over `f32` logits.
+///
+/// Unlike `iter().max_by(partial_cmp().unwrap())` this never panics:
+/// NaNs are skipped (they compare as "smallest"), ties resolve to the
+/// lowest index, and an all-NaN row falls back to index 0.  Returns
+/// `None` only for an empty slice.  Shared by the serving coordinator,
+/// both inference backends, and the tensor helpers so every layer agrees
+/// on the predicted class for pathological logits.
+pub fn argmax(values: &[f32]) -> Option<usize> {
+    if values.is_empty() {
+        return None;
+    }
+    let mut best: Option<(usize, f32)> = None;
+    for (i, &v) in values.iter().enumerate() {
+        if v.is_nan() {
+            continue;
+        }
+        match best {
+            Some((_, b)) if v <= b => {}
+            _ => best = Some((i, v)),
+        }
+    }
+    Some(best.map_or(0, |(i, _)| i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::argmax;
+
+    #[test]
+    fn argmax_basic_and_ties() {
+        assert_eq!(argmax(&[0.0, 5.0, 1.0]), Some(1));
+        assert_eq!(argmax(&[9.0, 0.0, 9.0]), Some(0), "ties pick lowest index");
+        assert_eq!(argmax(&[-3.0, -1.0, -2.0]), Some(1));
+    }
+
+    #[test]
+    fn argmax_handles_nan_and_infinities() {
+        assert_eq!(argmax(&[f32::NAN, 1.0, 2.0]), Some(2));
+        assert_eq!(argmax(&[1.0, f32::NAN, 0.0]), Some(0));
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), Some(0), "all-NaN falls back to 0");
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::INFINITY]), Some(1));
+    }
+
+    #[test]
+    fn argmax_empty_is_none() {
+        assert_eq!(argmax(&[]), None);
+    }
+}

@@ -155,8 +155,7 @@ impl Lfsr16 {
 
 /// `state -> (next_state << 16) | word` for every 16-bit LFSR state.
 fn word_table() -> &'static [u32; 65536] {
-    static TABLE: once_cell::sync::OnceCell<Box<[u32; 65536]>> =
-        once_cell::sync::OnceCell::new();
+    static TABLE: std::sync::OnceLock<Box<[u32; 65536]>> = std::sync::OnceLock::new();
     TABLE.get_or_init(|| {
         let mut t = vec![0u32; 65536].into_boxed_slice();
         for state in 0..=u16::MAX {

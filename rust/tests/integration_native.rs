@@ -1,0 +1,272 @@
+//! Native-backend integration: the coordinator serves classify requests
+//! end-to-end from a synthesized artifacts directory containing ONLY
+//! `manifest.json` + weights files — no HLO artifacts, no PJRT client,
+//! no Python.  Also pins the two load-bearing native-model properties:
+//!
+//! * bit-exactness — the multi-head SSA layer's per-head `S^t` / `Attn^t`
+//!   bits equal standalone `SsaAttention::step` runs under the shared
+//!   `seeds::head` PRNG contract;
+//! * convergence — rate-decoded SSA attention approaches the
+//!   `ssa_expectation` reference as `time_steps` grows (the E4 property,
+//!   here exercised through the native backend's building block).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use ssa_repro::attention::block::{head_config, MultiHeadSsa};
+use ssa_repro::attention::ssa::{seeds, ssa_expectation, SsaAttention};
+use ssa_repro::attention::stochastic::encode_frame;
+use ssa_repro::config::{AttnConfig, BackendKind, PrngSharing};
+use ssa_repro::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, SeedPolicy, Target,
+};
+use ssa_repro::runtime::weights::test_support::build_weight_bytes;
+use ssa_repro::tensor::Tensor;
+use ssa_repro::util::rng::Xoshiro256;
+
+// --- synthetic artifacts -----------------------------------------------------
+
+/// Tiny servable geometry: 8x8 images, 4x4 patches -> N=4 tokens, D=16,
+/// H=2, M=32, 1 encoder layer, 3 classes.
+const IMAGE: usize = 8;
+const PX: usize = IMAGE * IMAGE;
+
+fn manifest_json() -> String {
+    let variant = |name: &str, arch: &str, t: usize, batch: usize| {
+        format!(
+            r#"{{
+            "name": "{name}", "arch": "{arch}", "time_steps": {t}, "batch": {batch},
+            "hlo": "{name}.hlo.txt", "weights": "weights_{arch}.bin",
+            "param_names": [],
+            "inputs": [
+                {{"name": "images", "shape": [{batch}, {IMAGE}, {IMAGE}], "dtype": "f32"}},
+                {{"name": "seed", "shape": [], "dtype": "u32"}}
+            ],
+            "output": {{"shape": [{batch}, 3], "dtype": "f32"}}
+        }}"#
+        )
+    };
+    format!(
+        r#"{{
+        "version": 1, "image_size": {IMAGE}, "patch_size": 4, "n_classes": 3,
+        "golden_seed": 42,
+        "model": {{"n_heads": 2, "lif_beta": 0.9, "lif_theta": 1.0, "prng_sharing": "per-row"}},
+        "dataset": {{"test": "dataset_test.bin", "n": 0}},
+        "variants": [{}, {}, {}]
+    }}"#,
+        variant("ssa_t4", "ssa", 4, 4),
+        variant("spikformer_t4", "spikformer", 4, 2),
+        variant("ann", "ann", 0, 2)
+    )
+}
+
+/// Write manifest + weights (and nothing else — in particular no `.hlo`
+/// files) into a fresh per-test directory.
+fn synth_artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("ssa-native-it-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("mkdir artifacts");
+    std::fs::write(dir.join("manifest.json"), manifest_json()).expect("write manifest");
+    let weights = build_weight_bytes(16, 16, 4, 32, 1, 3, 0xBEEF);
+    for arch in ["ssa", "spikformer", "ann"] {
+        std::fs::write(dir.join(format!("weights_{arch}.bin")), &weights)
+            .expect("write weights");
+    }
+    assert!(
+        std::fs::read_dir(&dir).unwrap().all(|e| {
+            let n = e.unwrap().file_name().to_string_lossy().to_string();
+            !n.ends_with(".hlo.txt")
+        }),
+        "the native artifacts dir must carry no XLA artifacts"
+    );
+    dir
+}
+
+fn start(tag: &str, max_batch: usize, delay_ms: u64, seed0: u32) -> Coordinator {
+    let mut cfg = CoordinatorConfig::new(synth_artifacts(tag))
+        .with_backend(BackendKind::Native);
+    cfg.policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(delay_ms) };
+    cfg.preload = vec!["ssa_t4".into()];
+    cfg.initial_batch_seed = seed0;
+    Coordinator::start(cfg).expect("native coordinator must start without XLA artifacts")
+}
+
+fn image(fill: f32) -> Vec<f32> {
+    (0..PX).map(|i| (fill + (i % 7) as f32 / 14.0).clamp(0.0, 1.0)).collect()
+}
+
+// --- end-to-end serving ------------------------------------------------------
+
+#[test]
+fn native_coordinator_serves_all_archs_end_to_end() {
+    let coord = start("all-archs", 4, 5, 1);
+    for target in [Target::ssa(4), Target::spikformer(4), Target::ann()] {
+        let resp = coord
+            .classify(target.clone(), image(0.4), SeedPolicy::Fixed(7))
+            .expect("classify");
+        assert_eq!(resp.logits.len(), 3, "target {target:?}");
+        assert!(resp.class < 3);
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+    }
+    let report = coord.metrics_report();
+    assert!(report.contains("ssa_t4"), "metrics must track the native batches");
+    coord.shutdown();
+}
+
+#[test]
+fn native_fixed_seed_is_reproducible() {
+    let coord = start("fixed-seed", 1, 1, 1);
+    let a = coord.classify(Target::ssa(4), image(0.5), SeedPolicy::Fixed(99)).unwrap();
+    let b = coord.classify(Target::ssa(4), image(0.5), SeedPolicy::Fixed(99)).unwrap();
+    assert_eq!(a.logits, b.logits);
+    assert_eq!(a.seed, 99);
+    let c = coord.classify(Target::ssa(4), image(0.5), SeedPolicy::Fixed(100)).unwrap();
+    assert_ne!(a.logits, c.logits, "different fixed seed must change SSA logits");
+    coord.shutdown();
+}
+
+#[test]
+fn per_coordinator_batch_seed_makes_runs_deterministic() {
+    // Two coordinators with the same initial batch seed must assign the
+    // same PerBatch seeds in the same order — the counter is per-instance
+    // state now, not a process-global atomic.
+    let run = |tag: &str| -> (u32, Vec<f32>) {
+        let coord = start(tag, 1, 1, 0x5EED_0001);
+        let r = coord.classify(Target::ssa(4), image(0.3), SeedPolicy::PerBatch).unwrap();
+        coord.shutdown();
+        (r.seed, r.logits)
+    };
+    let (seed_a, logits_a) = run("det-a");
+    let (seed_b, logits_b) = run("det-b");
+    assert_eq!(seed_a, seed_b, "same initial counter => same assigned seed");
+    assert_eq!(logits_a, logits_b);
+}
+
+#[test]
+fn mixed_seed_policy_batches_report_their_own_seeds() {
+    let coord = start("mixed-policy", 8, 40, 500);
+    // queue a PerBatch head followed by Fixed requests before the window
+    // closes: the router must split them, so the Fixed callers get their
+    // exact seed back instead of the head request's policy.
+    let rx_pb = coord.submit(Target::ssa(4), image(0.2), SeedPolicy::PerBatch).unwrap();
+    let rx_f1 = coord.submit(Target::ssa(4), image(0.2), SeedPolicy::Fixed(1234)).unwrap();
+    let rx_f2 = coord.submit(Target::ssa(4), image(0.6), SeedPolicy::Fixed(1234)).unwrap();
+    let pb = rx_pb.recv().unwrap();
+    let f1 = rx_f1.recv().unwrap();
+    let f2 = rx_f2.recv().unwrap();
+    assert_eq!(pb.seed, 500, "PerBatch head takes the coordinator counter");
+    assert_eq!(f1.seed, 1234);
+    assert_eq!(f2.seed, 1234);
+    assert_eq!(f1.batch_size, 2, "the two Fixed(1234) requests batch together");
+    coord.shutdown();
+}
+
+#[test]
+fn ensemble_policy_serves_on_native_backend() {
+    let coord = start("ensemble", 1, 1, 40);
+    let r = coord.classify(Target::ssa(4), image(0.5), SeedPolicy::Ensemble(4)).unwrap();
+    assert_eq!(r.logits.len(), 3);
+    assert_eq!(r.seed, 40, "ensemble reports its first seed");
+    coord.shutdown();
+}
+
+// --- PRNG seed contract (acceptance: per-head bits match SsaAttention) ------
+
+#[test]
+fn native_multihead_bits_match_standalone_ssa_attention() {
+    let cfg = AttnConfig { n_tokens: 8, d_model: 32, n_heads: 4, d_head: 8, time_steps: 10 };
+    let base = 0x0DDB_A11;
+    let layer = 1;
+    for sharing in [PrngSharing::Independent, PrngSharing::PerRow, PrngSharing::Global] {
+        let mut mh = MultiHeadSsa::new(cfg, sharing, base, layer);
+        let mut standalone: Vec<SsaAttention> = (0..cfg.n_heads)
+            .map(|h| SsaAttention::new(head_config(&cfg), sharing, seeds::head(base, layer, h)))
+            .collect();
+        let mut rng = Xoshiro256::new(777);
+        for _t in 0..6 {
+            let mk = |rng: &mut Xoshiro256, rate: f32| {
+                encode_frame(&Tensor::full(&[8, 32], rate), rng)
+            };
+            let q = mk(&mut rng, 0.5);
+            let k = mk(&mut rng, 0.4);
+            let v = mk(&mut rng, 0.6);
+            let out = mh.step(&q, &k, &v);
+            for (h, ssa) in standalone.iter_mut().enumerate() {
+                let expect = ssa.step(
+                    &q.col_slice(h * cfg.d_head, cfg.d_head),
+                    &k.col_slice(h * cfg.d_head, cfg.d_head),
+                    &v.col_slice(h * cfg.d_head, cfg.d_head),
+                );
+                assert_eq!(
+                    out.per_head[h].s, expect.s,
+                    "{sharing:?} head {h}: S^t bits diverged from the seed contract"
+                );
+                assert_eq!(
+                    out.per_head[h].attn, expect.attn,
+                    "{sharing:?} head {h}: Attn^t bits diverged from the seed contract"
+                );
+            }
+        }
+    }
+}
+
+// --- convergence property (rate decode -> ssa_expectation) ------------------
+
+/// Mean absolute error of the rate-decoded multi-head SSA output against
+/// the per-head `ssa_expectation` reference, after `t_steps` steps on
+/// fixed spike inputs.
+fn multihead_rate_mae(cfg: &AttnConfig, t_steps: usize, seed: u64) -> f64 {
+    let mut rng = Xoshiro256::new(9000);
+    let q = encode_frame(&Tensor::full(&[cfg.n_tokens, cfg.d_model], 0.55), &mut rng);
+    let k = encode_frame(&Tensor::full(&[cfg.n_tokens, cfg.d_model], 0.45), &mut rng);
+    let v = encode_frame(&Tensor::full(&[cfg.n_tokens, cfg.d_model], 0.6), &mut rng);
+
+    let d_k = cfg.d_head;
+    let expect: Vec<Vec<f64>> = (0..cfg.n_heads)
+        .map(|h| {
+            ssa_expectation(
+                &q.col_slice(h * d_k, d_k),
+                &k.col_slice(h * d_k, d_k),
+                &v.col_slice(h * d_k, d_k),
+            )
+        })
+        .collect();
+
+    let mut mh = MultiHeadSsa::new(*cfg, PrngSharing::Independent, seed, 0);
+    let mut counts = vec![vec![0u64; cfg.n_tokens * d_k]; cfg.n_heads];
+    for _ in 0..t_steps {
+        let out = mh.step(&q, &k, &v);
+        for (h, o) in out.per_head.iter().enumerate() {
+            for i in 0..cfg.n_tokens {
+                for d in 0..d_k {
+                    if o.attn.get(i, d) {
+                        counts[h][i * d_k + d] += 1;
+                    }
+                }
+            }
+        }
+    }
+    let mut err = 0.0;
+    let mut n = 0usize;
+    for h in 0..cfg.n_heads {
+        for (c, e) in counts[h].iter().zip(&expect[h]) {
+            err += (*c as f64 / t_steps as f64 - e).abs();
+            n += 1;
+        }
+    }
+    err / n as f64
+}
+
+#[test]
+fn rate_decoded_attention_converges_to_ssa_expectation() {
+    let cfg = AttnConfig { n_tokens: 8, d_model: 32, n_heads: 2, d_head: 16, time_steps: 10 };
+    let short = multihead_rate_mae(&cfg, 25, 31);
+    let long = multihead_rate_mae(&cfg, 2500, 31);
+    // Monte-Carlo error shrinks ~1/sqrt(T): a 100x step increase must cut
+    // the MAE decisively, and the long run must sit near the reference.
+    assert!(
+        long < short * 0.5,
+        "MAE did not shrink with T: short(T=25)={short:.4} long(T=2500)={long:.4}"
+    );
+    assert!(long < 0.02, "long-run MAE too large: {long:.4}");
+}

@@ -4,7 +4,11 @@
 //!
 //! Tests self-skip with a notice when `artifacts/` is absent, so `cargo
 //! test` works in a fresh checkout; `make test` always builds artifacts
-//! first.
+//! first.  The whole file needs the PJRT engine, so it only compiles with
+//! the `xla` feature (the native backend is covered by
+//! `integration_native.rs`).
+
+#![cfg(feature = "xla")]
 
 use std::path::PathBuf;
 

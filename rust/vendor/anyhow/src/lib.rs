@@ -1,0 +1,227 @@
+//! Offline API-compatible subset of `anyhow` (the image has no registry
+//! access, and this crate's needs are small): [`Error`], [`Result`],
+//! [`Context`], and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Semantics mirrored from upstream:
+//! * `{}` displays the outermost message/context only;
+//! * `{:#}` (and `Debug`) display the whole chain, `": "`-joined;
+//! * `From<E: std::error::Error + Send + Sync + 'static>` captures the
+//!   `source()` chain, so `?` works on any std error;
+//! * `.context(..)` / `.with_context(..)` work on `Result<T, E>` for std
+//!   errors *and* for `Error` itself (via the same private-trait trick
+//!   upstream uses), and on `Option<T>`.
+//!
+//! Not implemented (unused in this repo): downcasting, backtraces,
+//! `Error::new`, `Chain` iteration.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the upstream default-parameter shape.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error chain: `chain[0]` is the outermost context message.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a displayable message (upstream `Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (upstream `Error::context`).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    fn from_std<E: std::error::Error + ?Sized>(error: &E) -> Self {
+        let mut chain = vec![error.to_string()];
+        let mut source = error.source();
+        while let Some(cause) = source {
+            chain.push(cause.to_string());
+            source = cause.source();
+        }
+        Error { chain }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain.join(": "))
+    }
+}
+
+// Coherence note: this blanket impl is legal alongside the lack of a
+// `std::error::Error` impl for `Error` — the overlap with `From<T> for T`
+// is ruled out within this crate (same reasoning as upstream anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::from_std(&error)
+    }
+}
+
+mod ext {
+    /// Private unifier so `Context` has one blanket impl covering both
+    /// std errors and `Error` itself (upstream's `ext::StdError` trick).
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> super::Error {
+            super::Error::from_std(&self)
+        }
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+}
+
+/// Attach context to errors (`Result`) or turn `None` into an error.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "Condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "root cause")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = std::result::Result::<(), _>::Err(io_err())
+            .context("outer")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root cause");
+        assert_eq!(format!("{e:?}"), "outer: root cause");
+    }
+
+    #[test]
+    fn context_on_anyhow_error_and_option() {
+        let e: Error = std::result::Result::<(), Error>::Err(Error::msg("inner"))
+            .with_context(|| format!("outer {}", 1))
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer 1: inner");
+        let o: Result<u8> = None.context("missing");
+        assert_eq!(format!("{}", o.unwrap_err()), "missing");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10);
+            ensure!(x != 3, "three is right out (got {x})");
+            if x == 4 {
+                bail!("no {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(f(1).unwrap(), 1);
+        assert!(format!("{}", f(12).unwrap_err()).contains("Condition failed"));
+        assert!(format!("{}", f(3).unwrap_err()).contains("three"));
+        assert!(format!("{}", f(4).unwrap_err()).contains("no 4"));
+        let e = anyhow!("value {v:?}", v = Some(1));
+        assert!(format!("{e}").contains("Some(1)"));
+    }
+
+    #[test]
+    fn question_mark_conversion() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+}

@@ -1,0 +1,73 @@
+//! Drive the serving coordinator with the load-generation subsystem and
+//! measure worker-pool scaling — the library-level equivalent of
+//! `ssa-repro serve-bench --synthetic --workers 1,4`.
+//!
+//! ```bash
+//! cargo run --release --example serve_bench
+//! ```
+//!
+//! Sizing note: in closed loop a batch is served by exactly one worker,
+//! so keep `concurrency >= workers * max_batch` (or shrink the batch) —
+//! otherwise the batcher coalesces every waiting client into one batch
+//! and the extra workers idle.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use ssa_repro::config::BackendKind;
+use ssa_repro::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, SeedPolicy};
+use ssa_repro::loadgen::{
+    self, ArrivalMode, BenchReport, BenchRun, ImageSource, LoadSpec, Scenario, SyntheticSpec,
+};
+
+fn main() -> Result<()> {
+    ssa_repro::util::logging::init_from_env();
+
+    // a complete servable artifacts dir — manifest + weights + dataset,
+    // no Python, no XLA
+    let dir = std::env::temp_dir().join("ssa-example-serve-bench");
+    loadgen::write_artifacts(&dir, &SyntheticSpec::default())?;
+
+    // mixed traffic: mostly SSA, some ANN, an ensemble slice
+    let scenario = Scenario::parse(
+        "ssa_t4*3,ann,spikformer_t4@ensemble:2*0.5",
+        SeedPolicy::PerBatch,
+    )?;
+    let spec = LoadSpec {
+        mode: ArrivalMode::Closed { concurrency: 16 },
+        duration: Duration::from_secs(3),
+        scenario: scenario.clone(),
+        seed: 0x10AD_5EED,
+    };
+    let images = ImageSource::synthetic(16, 64, 7);
+
+    let mut report = BenchReport {
+        scenario: scenario.name.clone(),
+        mode: spec.mode.describe(),
+        backend: "native".into(),
+        duration_s: spec.duration.as_secs_f64(),
+        runs: Vec::new(),
+    };
+    for workers in [1usize, 4] {
+        let mut cfg = CoordinatorConfig::new(dir.clone())
+            .with_backend(BackendKind::Native)
+            .with_workers(workers);
+        cfg.policy = BatchPolicy { max_batch: 2, max_delay: Duration::from_millis(5) };
+        cfg.preload = vec!["ssa_t4".into(), "spikformer_t4".into(), "ann".into()];
+        let coord = Coordinator::start(cfg)?;
+        let stats = loadgen::run(&coord, &spec, &images)?;
+        report.runs.push(BenchRun::new(
+            coord.workers(),
+            stats,
+            coord.metrics().report(),
+            coord.metrics().worker_report(),
+        ));
+        coord.shutdown();
+    }
+
+    print!("{}", report.render());
+    report.write(std::path::Path::new("BENCH_serving.json"))?;
+    println!("wrote BENCH_serving.json");
+    Ok(())
+}

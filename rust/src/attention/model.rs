@@ -219,6 +219,31 @@ impl NativeModel {
         Ok(logits)
     }
 
+    /// Batched entry point with an explicit pre-expanded stream per row:
+    /// row `i` runs under `row_seeds[i]` instead of `image_seed(seed, i)`.
+    /// This is the worker pool's fixed-seed determinism seam — a caller
+    /// can pin a row's stream independently of its batch placement.
+    pub fn infer_rows(&self, images: &[f32], batch: usize, row_seeds: &[u64]) -> Result<Vec<f32>> {
+        let px = self.geo.image_size * self.geo.image_size;
+        anyhow::ensure!(
+            images.len() == batch * px,
+            "images buffer has {} elements, expected {} ({} x {px})",
+            images.len(),
+            batch * px,
+            batch
+        );
+        anyhow::ensure!(
+            row_seeds.len() == batch,
+            "{} row seeds for a batch of {batch}",
+            row_seeds.len()
+        );
+        let mut logits = Vec::with_capacity(batch * self.geo.n_classes);
+        for i in 0..batch {
+            logits.extend(self.infer_image(&images[i * px..(i + 1) * px], row_seeds[i])?);
+        }
+        Ok(logits)
+    }
+
     // --- spiking forward (SSA / Spikformer) --------------------------------
 
     fn spiking_forward(&self, patches: &Tensor, seed: u64) -> Result<Vec<f32>> {
@@ -434,6 +459,29 @@ mod tests {
         assert_eq!(logits.len(), 6);
         assert_eq!(&logits[0..3], &m.infer_image(&img0, image_seed(42, 0)).unwrap()[..]);
         assert_eq!(&logits[3..6], &m.infer_image(&img1, image_seed(42, 1)).unwrap()[..]);
+    }
+
+    #[test]
+    fn infer_rows_pins_streams_independent_of_batch_placement() {
+        let m = tiny_model(Arch::Ssa);
+        let img0 = vec![0.2f32; 64];
+        let img1 = vec![0.8f32; 64];
+        let mut both = img0.clone();
+        both.extend_from_slice(&img1);
+        let mut swapped = img1.clone();
+        swapped.extend_from_slice(&img0);
+        // every row pinned to the singleton stream of Fixed(42)
+        let row = image_seed(42, 0);
+        let ab = m.infer_rows(&both, 2, &[row, row]).unwrap();
+        let ba = m.infer_rows(&swapped, 2, &[row, row]).unwrap();
+        // same image => same logits, at either batch position
+        assert_eq!(&ab[0..3], &ba[3..6], "img0 logits independent of position");
+        assert_eq!(&ab[3..6], &ba[0..3], "img1 logits independent of position");
+        // and each row equals the singleton-batch result
+        assert_eq!(&ab[0..3], &m.infer_image(&img0, row).unwrap()[..]);
+        assert_eq!(&ab[3..6], &m.infer_image(&img1, row).unwrap()[..]);
+        // seed-count mismatch is rejected
+        assert!(m.infer_rows(&both, 2, &[row]).is_err());
     }
 
     #[test]

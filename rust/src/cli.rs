@@ -2,11 +2,13 @@
 //!
 //! ```text
 //! ssa-repro info
-//! ssa-repro serve      [--artifacts DIR] [--backend native|xla] [--requests N]
-//!                      [--target ssa_t10] [--ensemble K]
-//! ssa-repro simulate   [--n 16] [--dk 16] [--t 10] [--sharing per-row] [--trace]
+//! ssa-repro serve       [--artifacts DIR] [--backend native|xla] [--requests N]
+//!                       [--target ssa_t10] [--ensemble K] [--workers N]
+//! ssa-repro serve-bench [--synthetic] [--workers 1,4] [--concurrency C | --rps R]
+//!                       [--duration SECS] [--mix "ssa_t4*3,ann@fixed:7"]
+//! ssa-repro simulate    [--n 16] [--dk 16] [--t 10] [--sharing per-row] [--trace]
 //! ssa-repro experiments <table1|table2|table3|headline|fig1|fig2|fig3|all>
-//!                      [--artifacts DIR] [--cross-check N] [--backend native|xla]
+//!                       [--artifacts DIR] [--cross-check N] [--backend native|xla]
 //! ```
 
 use std::collections::HashMap;
@@ -87,13 +89,39 @@ ssa-repro — Stochastic Spiking Attention (AICAS 2024) reproduction
 USAGE:
   ssa-repro info
   ssa-repro serve       [--artifacts DIR] [--backend native|xla]
-                        [--requests N] [--target ssa_t10]
+                        [--requests N] [--target ssa_t10] [--workers N]
                         [--ensemble K] [--max-batch B] [--max-delay-ms D]
+  ssa-repro serve-bench [--artifacts DIR | --synthetic]
+                        [--backend native|xla] [--workers N[,M,...]]
+                        [--concurrency C | --rps R] [--duration SECS]
+                        [--mix \"ssa_t4*3,ann@fixed:7\"]
+                        [--seed-policy perbatch|fixed:N|ensemble:K]
+                        [--max-batch B] [--max-delay-ms D] [--seed S]
+                        [--out BENCH_serving.json]
   ssa-repro simulate    [--n 16] [--dk 16] [--t 10]
                         [--sharing independent|per-row|global] [--trace]
   ssa-repro experiments table1|table2|table3|headline|fig1|fig2|fig3|all
                         [--artifacts DIR] [--cross-check N_IMAGES]
                         [--backend native|xla]
+
+Serving (see rust/DESIGN.md):
+  --workers N      replica-pool size: N threads, each owning a private
+                   replica of every served variant (native backend; the
+                   xla backend is pinned to 1 worker).  Fixed-seed
+                   results are bit-identical for any worker count.
+
+serve-bench (load generation -> BENCH_serving.json):
+  --concurrency C  closed loop: C clients, each submits the next request
+                   as soon as the previous answers (capacity measurement)
+  --rps R          open loop: Poisson arrivals at R req/s regardless of
+                   completions (latency-under-offered-load measurement)
+  --duration S     seconds of load per run (default 5)
+  --workers 1,4    comma list: one run per worker count; the report
+                   records the last-vs-first throughput speedup
+  --mix SPEC       weighted scenario mix, TARGET[@POLICY][*WEIGHT] per
+                   comma-separated entry (e.g. \"ssa_t4*3,ann@fixed:7\")
+  --synthetic      fabricate a servable artifacts dir (manifest, random
+                   weights, synthetic dataset) — no Python needed
 
 Backends (see rust/DESIGN.md):
   native  pure-Rust spiking forward pass — needs only manifest.json +

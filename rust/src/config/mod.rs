@@ -101,6 +101,17 @@ impl BackendKind {
             BackendKind::Xla => "xla",
         }
     }
+
+    /// How many pool workers may run this engine concurrently.  The
+    /// native engine replicates freely (plain-data models, one replica
+    /// per worker thread); PJRT handles are `Rc`-based and `!Send`, so
+    /// the XLA engine stays pinned to a single worker.
+    pub fn max_workers(&self) -> usize {
+        match self {
+            BackendKind::Native => usize::MAX,
+            BackendKind::Xla => 1,
+        }
+    }
 }
 
 impl Default for BackendKind {
@@ -156,6 +167,12 @@ mod tests {
         assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Xla);
         assert!(BackendKind::parse("tpu").is_err());
         assert_eq!(BackendKind::Native.name(), "native");
+    }
+
+    #[test]
+    fn xla_backend_is_pinned_to_one_worker() {
+        assert_eq!(BackendKind::Xla.max_workers(), 1);
+        assert!(BackendKind::Native.max_workers() > 1);
     }
 
     #[test]

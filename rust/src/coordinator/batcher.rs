@@ -158,6 +158,59 @@ mod tests {
         assert!(b.next_batch().is_none());
     }
 
+    /// Satellite invariant: a request `push` accepted (returned true) is
+    /// delivered to a consumer exactly once, no matter how `close()`
+    /// races the producers — nothing accepted is dropped, nothing is
+    /// duplicated, and nothing rejected sneaks through.
+    #[test]
+    fn racing_close_never_drops_or_duplicates_accepted_requests() {
+        for round in 0..12u64 {
+            let b = Arc::new(Batcher::new(BatchPolicy {
+                max_batch: 4,
+                max_delay: Duration::from_millis(1),
+            }));
+            // consumer drains concurrently with the producers AND the close
+            let consumer = {
+                let b2 = Arc::clone(&b);
+                std::thread::spawn(move || {
+                    let mut ids = Vec::new();
+                    while let Some(batch) = b2.next_batch() {
+                        ids.extend(batch.iter().map(|r| r.id));
+                    }
+                    ids
+                })
+            };
+            let mut producers = Vec::new();
+            for t in 0..4u64 {
+                let b2 = Arc::clone(&b);
+                producers.push(std::thread::spawn(move || {
+                    let mut accepted = Vec::new();
+                    for i in 0..64 {
+                        let id = t * 1000 + i;
+                        if b2.push(req(id)) {
+                            accepted.push(id);
+                        } else {
+                            break; // closed: every later push would fail too
+                        }
+                    }
+                    accepted
+                }));
+            }
+            // close at a varying point in the race
+            std::thread::sleep(Duration::from_micros(150 * round));
+            b.close();
+            let mut accepted: Vec<u64> =
+                producers.into_iter().flat_map(|h| h.join().unwrap()).collect();
+            let mut drained = consumer.join().unwrap();
+            accepted.sort_unstable();
+            drained.sort_unstable();
+            assert_eq!(
+                drained, accepted,
+                "round {round}: drained requests != accepted requests"
+            );
+        }
+    }
+
     #[test]
     fn concurrent_producers() {
         let b = Arc::new(Batcher::new(BatchPolicy {

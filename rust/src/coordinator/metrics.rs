@@ -1,24 +1,40 @@
-//! Serving metrics: per-target latency/throughput/batching telemetry.
+//! Serving metrics: per-target latency/throughput/batching telemetry plus
+//! per-worker utilization for the replica pool.
+//!
+//! Memory is bounded by design: latency samples land in a fixed-size
+//! log-bucketed histogram ([`crate::util::stats::LogHistogram`]) and
+//! batch fill in a running sum, so the registry's footprint is constant
+//! under sustained load (the per-sample `Vec`s it replaced grew without
+//! bound — a leak for any long-lived coordinator).
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::util::stats::LatencySummary;
+use crate::util::stats::{LatencySummary, LogHistogram};
 
 #[derive(Default)]
 struct TargetMetrics {
-    latencies_us: Vec<f64>,
+    latencies: LogHistogram,
     batches: u64,
     requests: u64,
-    batch_fill: Vec<f64>,
+    fill_sum: f64,
     errors: u64,
+}
+
+#[derive(Clone, Default)]
+struct WorkerMetrics {
+    batches: u64,
+    requests: u64,
+    busy_us: f64,
 }
 
 /// Thread-safe metrics registry.
 pub struct Metrics {
-    started: Instant,
+    /// Start of the current measurement window (see [`Self::reset_window`]).
+    started: Mutex<Instant>,
     by_target: Mutex<HashMap<String, TargetMetrics>>,
+    by_worker: Mutex<HashMap<usize, WorkerMetrics>>,
 }
 
 /// A rendered snapshot for one target.
@@ -33,9 +49,37 @@ pub struct TargetReport {
     pub throughput_rps: f64,
 }
 
+/// A rendered snapshot for one pool worker.
+#[derive(Clone, Debug)]
+pub struct WorkerReport {
+    pub worker: usize,
+    pub batches: u64,
+    pub requests: u64,
+    pub busy_us: f64,
+    /// Busy fraction of the wall time since the registry started.
+    pub utilization: f64,
+}
+
 impl Metrics {
     pub fn new() -> Self {
-        Self { started: Instant::now(), by_target: Mutex::new(HashMap::new()) }
+        Self {
+            started: Mutex::new(Instant::now()),
+            by_target: Mutex::new(HashMap::new()),
+            by_worker: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Restart the measurement window: zero every per-target and
+    /// per-worker counter (registered workers stay listed) and re-anchor
+    /// the wall clock.  The load generator calls this the moment load
+    /// actually starts, so coordinator startup / replica preload time is
+    /// not charged as idle time against worker utilization or throughput.
+    pub fn reset_window(&self) {
+        self.by_target.lock().unwrap().clear();
+        for v in self.by_worker.lock().unwrap().values_mut() {
+            *v = WorkerMetrics::default();
+        }
+        *self.started.lock().unwrap() = Instant::now();
     }
 
     pub fn record_batch(&self, target: &str, batch_len: usize, max_batch: usize, lat_us: &[f64]) {
@@ -43,8 +87,10 @@ impl Metrics {
         let e = m.entry(target.to_string()).or_default();
         e.batches += 1;
         e.requests += batch_len as u64;
-        e.batch_fill.push(batch_len as f64 / max_batch as f64);
-        e.latencies_us.extend_from_slice(lat_us);
+        e.fill_sum += batch_len as f64 / max_batch as f64;
+        for &l in lat_us {
+            e.latencies.record(l);
+        }
     }
 
     pub fn record_error(&self, target: &str) {
@@ -52,9 +98,24 @@ impl Metrics {
         m.entry(target.to_string()).or_default().errors += 1;
     }
 
+    /// Pre-register a pool worker so idle workers still appear (with zero
+    /// utilization) in reports.
+    pub fn register_worker(&self, worker: usize) {
+        self.by_worker.lock().unwrap().entry(worker).or_default();
+    }
+
+    /// Account one served batch against `worker`'s busy time.
+    pub fn record_worker(&self, worker: usize, requests: usize, busy_us: f64) {
+        let mut m = self.by_worker.lock().unwrap();
+        let e = m.entry(worker).or_default();
+        e.batches += 1;
+        e.requests += requests as u64;
+        e.busy_us += busy_us;
+    }
+
     pub fn report(&self) -> Vec<TargetReport> {
+        let elapsed = self.started.lock().unwrap().elapsed().as_secs_f64();
         let m = self.by_target.lock().unwrap();
-        let elapsed = self.started.elapsed().as_secs_f64();
         let mut out: Vec<TargetReport> = m
             .iter()
             .map(|(k, v)| TargetReport {
@@ -62,20 +123,38 @@ impl Metrics {
                 requests: v.requests,
                 batches: v.batches,
                 errors: v.errors,
-                mean_batch_fill: if v.batch_fill.is_empty() {
+                mean_batch_fill: if v.batches == 0 {
                     0.0
                 } else {
-                    v.batch_fill.iter().sum::<f64>() / v.batch_fill.len() as f64
+                    v.fill_sum / v.batches as f64
                 },
-                latency: if v.latencies_us.is_empty() {
+                latency: if v.latencies.count() == 0 {
                     None
                 } else {
-                    Some(LatencySummary::from_micros(&v.latencies_us))
+                    Some(LatencySummary::from_histogram(&v.latencies))
                 },
                 throughput_rps: v.requests as f64 / elapsed.max(1e-9),
             })
             .collect();
         out.sort_by(|a, b| a.target.cmp(&b.target));
+        out
+    }
+
+    pub fn worker_report(&self) -> Vec<WorkerReport> {
+        let elapsed_us =
+            (self.started.lock().unwrap().elapsed().as_secs_f64() * 1e6).max(1e-9);
+        let m = self.by_worker.lock().unwrap();
+        let mut out: Vec<WorkerReport> = m
+            .iter()
+            .map(|(&w, v)| WorkerReport {
+                worker: w,
+                batches: v.batches,
+                requests: v.requests,
+                busy_us: v.busy_us,
+                utilization: (v.busy_us / elapsed_us).min(1.0),
+            })
+            .collect();
+        out.sort_by_key(|r| r.worker);
         out
     }
 
@@ -94,6 +173,19 @@ impl Metrics {
             if let Some(l) = r.latency {
                 s.push_str(&format!("        latency {l}\n"));
             }
+        }
+        let workers = self.worker_report();
+        if !workers.is_empty() {
+            s.push_str("workers:");
+            for w in workers {
+                s.push_str(&format!(
+                    " w{}={:.0}% ({} batches)",
+                    w.worker,
+                    w.utilization * 100.0,
+                    w.batches
+                ));
+            }
+            s.push('\n');
         }
         s
     }
@@ -125,5 +217,56 @@ mod tests {
         let ann = rep.iter().find(|r| r.target == "ann").unwrap();
         assert_eq!(ann.errors, 1);
         assert!(m.render().contains("ssa_t10"));
+    }
+
+    #[test]
+    fn latency_summary_shape_survives_histogram_backing() {
+        let m = Metrics::new();
+        for i in 0..10_000u64 {
+            m.record_batch("ssa_t10", 1, 8, &[(i % 1000) as f64 + 1.0]);
+        }
+        let rep = m.report();
+        let l = rep[0].latency.clone().expect("latency summary present");
+        assert_eq!(l.count, 10_000);
+        assert_eq!(l.max_us, 1000.0, "max is exact");
+        assert!((l.mean_us - 500.5).abs() < 1e-6, "mean is exact: {}", l.mean_us);
+        assert!((l.p50_us - 500.0).abs() / 500.0 < 0.1, "p50 {} ~ 500", l.p50_us);
+        assert!((l.p95_us - 950.0).abs() / 950.0 < 0.1, "p95 {} ~ 950", l.p95_us);
+        assert!(l.p50_us <= l.p95_us && l.p95_us <= l.p99_us && l.p99_us <= l.max_us);
+    }
+
+    #[test]
+    fn worker_utilization_tracks_busy_time() {
+        let m = Metrics::new();
+        m.register_worker(0);
+        m.register_worker(1);
+        m.record_worker(0, 8, 1_000.0);
+        m.record_worker(0, 4, 500.0);
+        let rep = m.worker_report();
+        assert_eq!(rep.len(), 2, "idle workers still listed");
+        assert_eq!(rep[0].worker, 0);
+        assert_eq!(rep[0].batches, 2);
+        assert_eq!(rep[0].requests, 12);
+        assert!((rep[0].busy_us - 1_500.0).abs() < 1e-9);
+        assert!(rep[0].utilization > 0.0 && rep[0].utilization <= 1.0);
+        assert_eq!(rep[1].batches, 0);
+        assert_eq!(rep[1].utilization, 0.0);
+        assert!(m.render().contains("workers:"));
+    }
+
+    #[test]
+    fn reset_window_zeroes_counters_but_keeps_workers_listed() {
+        let m = Metrics::new();
+        m.register_worker(0);
+        m.record_batch("ssa_t10", 4, 8, &[100.0; 4]);
+        m.record_worker(0, 4, 2_000.0);
+        m.reset_window();
+        assert!(m.report().is_empty(), "target counters cleared");
+        let w = m.worker_report();
+        assert_eq!(w.len(), 1, "registered workers survive the reset");
+        assert_eq!(w[0].batches, 0);
+        assert_eq!(w[0].busy_us, 0.0);
+        m.record_batch("ssa_t10", 2, 8, &[50.0; 2]);
+        assert_eq!(m.report()[0].requests, 2, "fresh window counts from zero");
     }
 }

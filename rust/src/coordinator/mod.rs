@@ -1,7 +1,7 @@
-//! L3 serving coordinator — the system shell around the AOT-compiled
-//! spiking models: target-aware router, dynamic batcher, a single
-//! inference thread owning all PJRT state, seed-ensemble execution, and
-//! serving metrics.  Python never runs here.
+//! L3 serving coordinator — the system shell around the compiled spiking
+//! models: target-aware router, dynamic batcher, a replica worker pool
+//! (each worker owns its backend state — see `crate::pool`),
+//! seed-ensemble execution, and serving metrics.  Python never runs here.
 
 pub mod batcher;
 pub mod metrics;
@@ -10,7 +10,7 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, TargetReport, WorkerReport};
 pub use request::{ClassifyRequest, ClassifyResponse, SeedPolicy, ServeError, Target};
 pub use router::Router;
 pub use server::{Coordinator, CoordinatorConfig};

@@ -26,6 +26,22 @@ impl Target {
     pub fn spikformer(t: usize) -> Self {
         Self { arch: "spikformer".into(), time_steps: t }
     }
+
+    /// Parse a manifest-style target key — the inverse of
+    /// `router::variant_key` (`ann`, `ssa_t10`, `spikformer_t4`, ...).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        if s == "ann" {
+            return Ok(Self::ann());
+        }
+        if let Some((arch, t)) = s.rsplit_once("_t") {
+            if !arch.is_empty() {
+                if let Ok(t) = t.parse() {
+                    return Ok(Self { arch: arch.to_string(), time_steps: t });
+                }
+            }
+        }
+        anyhow::bail!("cannot parse target {s:?} (expected e.g. `ann`, `ssa_t10`)")
+    }
 }
 
 /// How the per-request stochastic seed is chosen.
@@ -93,3 +109,18 @@ impl std::fmt::Display for ServeError {
 }
 
 impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn target_parse_roundtrips_variant_keys() {
+        assert_eq!(Target::parse("ann").unwrap(), Target::ann());
+        assert_eq!(Target::parse("ssa_t10").unwrap(), Target::ssa(10));
+        assert_eq!(Target::parse("spikformer_t4").unwrap(), Target::spikformer(4));
+        assert!(Target::parse("ssa").is_err());
+        assert!(Target::parse("_t4").is_err());
+        assert!(Target::parse("ssa_tx").is_err());
+    }
+}

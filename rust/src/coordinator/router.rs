@@ -1,18 +1,26 @@
 //! Target-aware request router/scheduler.
 //!
-//! One shared queue feeds the single inference thread (PJRT handles are
-//! !Send, and the box has one core — a worker pool would only add lock
-//! traffic).  Batch assembly is target-aware: the head-of-line request
-//! picks the variant, then same-target requests are gathered up to the
-//! model batch or the delay bound, preserving arrival order for other
-//! targets (vLLM-router-style continuous batching, scalar edition).
+//! One shared arrival-ordered queue feeds the worker pool (one or more
+//! drain threads; see `crate::pool`).  Batch assembly is target-aware:
+//! a worker anchors the oldest request whose (target, seed-policy) group
+//! no sibling is already filling, then gathers requests from that group
+//! up to the model batch or the delay bound, preserving arrival order
+//! for other groups (vLLM-router-style continuous batching, scalar
+//! edition).
+//!
+//! `next_batch` is multi-consumer safe and group-exclusive: several
+//! workers may block in it concurrently, each extracted request goes to
+//! exactly one worker, and while one worker fill-waits on a group its
+//! siblings skip that group and serve *other* traffic — a freshly
+//! arrived request for an idle target is picked up by an idle worker
+//! immediately instead of waiting out another target's delay bound.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
 use super::batcher::BatchPolicy;
-use super::request::{ClassifyRequest, Target};
+use super::request::{ClassifyRequest, SeedPolicy, Target};
 
 /// Maps a target to its artifact-manifest variant key.
 pub fn variant_key(t: &Target) -> String {
@@ -27,6 +35,24 @@ pub fn variant_key(t: &Target) -> String {
 struct State {
     q: VecDeque<ClassifyRequest>,
     closed: bool,
+    /// (target, seed-policy) groups some worker is currently
+    /// fill-waiting on; siblings skip these when anchoring a head.
+    /// At most one entry per pool worker, so a linear scan is fine.
+    claimed: Vec<(Target, SeedPolicy)>,
+}
+
+impl State {
+    fn is_claimed(&self, target: &Target, policy: SeedPolicy) -> bool {
+        self.claimed.iter().any(|(t, p)| t == target && *p == policy)
+    }
+
+    fn unclaim(&mut self, target: &Target, policy: SeedPolicy) {
+        if let Some(pos) =
+            self.claimed.iter().position(|(t, p)| t == target && *p == policy)
+        {
+            self.claimed.swap_remove(pos);
+        }
+    }
 }
 
 /// The shared scheduling queue.
@@ -51,7 +77,11 @@ impl Router {
             return false;
         }
         s.q.push_back(req);
-        self.cv.notify_one();
+        // notify_all, not notify_one: the one woken waiter may be a
+        // sibling mid-fill-window for a *different* claimed group that
+        // goes straight back to sleep — every idle worker must get the
+        // chance to anchor this request's group.
+        self.cv.notify_all();
         true
     }
 
@@ -64,56 +94,84 @@ impl Router {
     /// seed (and report the wrong `seed` back to its caller).
     pub fn next_batch(&self) -> Option<(String, Vec<ClassifyRequest>)> {
         let mut s = self.state.lock().unwrap();
-        loop {
-            if !s.q.is_empty() {
-                break;
-            }
-            if s.closed {
-                return None;
-            }
-            s = self.cv.wait(s).unwrap();
-        }
-        let head = s.q.front().unwrap();
-        let target = head.target.clone();
-        let policy = head.seed_policy;
-        let key = variant_key(&target);
-        let deadline = head.submitted_at + self.policy.max_delay;
+        'find: loop {
+            // anchor the oldest request whose group no sibling is filling
+            let head = loop {
+                let pick = s
+                    .q
+                    .iter()
+                    .find(|r| !s.is_claimed(&r.target, r.seed_policy))
+                    .map(|r| (r.target.clone(), r.seed_policy, r.submitted_at));
+                if let Some(h) = pick {
+                    break h;
+                }
+                if s.closed && s.q.is_empty() {
+                    return None;
+                }
+                // empty queue, or every queued group is being filled by a
+                // sibling: wait for a push, a close, or an unclaim
+                s = self.cv.wait(s).unwrap();
+            };
+            let (target, policy, submitted_at) = head;
+            let key = variant_key(&target);
+            let deadline = submitted_at + self.policy.max_delay;
+            // claim the group: siblings now skip it, so only this worker
+            // can extract these requests until the claim is dropped below
+            s.claimed.push((target.clone(), policy));
 
-        loop {
-            let matching = s
-                .q
-                .iter()
-                .filter(|r| r.target == target && r.seed_policy == policy)
-                .count();
-            if matching >= self.policy.max_batch || s.closed {
-                break;
+            loop {
+                // only "have we filled a batch yet?" matters, so stop
+                // counting at max_batch — at overload (deep same-target
+                // queue) this keeps the per-wakeup scan O(max_batch)
+                // instead of O(queue)
+                let matching = s
+                    .q
+                    .iter()
+                    .filter(|r| r.target == target && r.seed_policy == policy)
+                    .take(self.policy.max_batch)
+                    .count();
+                if matching >= self.policy.max_batch || s.closed {
+                    break;
+                }
+                if matching == 0 {
+                    // unreachable while we hold the claim — defensive
+                    s.unclaim(&target, policy);
+                    continue 'find;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (ns, timeout) = self.cv.wait_timeout(s, deadline - now).unwrap();
+                s = ns;
+                if timeout.timed_out() {
+                    break;
+                }
             }
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            let (ns, timeout) = self.cv.wait_timeout(s, deadline - now).unwrap();
-            s = ns;
-            if timeout.timed_out() {
-                break;
-            }
-        }
 
-        // extract up to max_batch matching requests, preserving order
-        let mut batch = Vec::new();
-        let mut rest = VecDeque::with_capacity(s.q.len());
-        while let Some(r) = s.q.pop_front() {
-            if r.target == target
-                && r.seed_policy == policy
-                && batch.len() < self.policy.max_batch
-            {
-                batch.push(r);
-            } else {
-                rest.push_back(r);
+            // extract up to max_batch matching requests, preserving order
+            let mut batch = Vec::new();
+            let mut rest = VecDeque::with_capacity(s.q.len());
+            while let Some(r) = s.q.pop_front() {
+                if r.target == target
+                    && r.seed_policy == policy
+                    && batch.len() < self.policy.max_batch
+                {
+                    batch.push(r);
+                } else {
+                    rest.push_back(r);
+                }
             }
+            s.q = rest;
+            s.unclaim(&target, policy);
+            // leftovers of this group (beyond max_batch) are anchorable
+            // again, and close-drain waiters must recheck
+            self.cv.notify_all();
+            if batch.is_empty() {
+                continue 'find; // defensive: claim makes this unreachable
+            }
+            return Some((key, batch));
         }
-        s.q = rest;
-        Some((key, batch))
     }
 
     pub fn close(&self) {
@@ -209,5 +267,88 @@ mod tests {
         assert!(!r.push(req(2, Target::ann())));
         assert!(r.next_batch().is_some());
         assert!(r.next_batch().is_none());
+    }
+
+    /// While one worker fill-waits on a claimed group, an idle sibling
+    /// must batch and serve *other* traffic concurrently: a full `ann`
+    /// batch arriving mid-window is served immediately, not after the
+    /// ssa worker's delay bound expires.  (A partial batch still waits
+    /// its own fill window — that part is unchanged.)
+    #[test]
+    fn idle_worker_serves_other_target_while_sibling_fills() {
+        use std::sync::Arc;
+        let r = Arc::new(Router::new(BatchPolicy {
+            max_batch: 4,
+            max_delay: Duration::from_millis(400),
+        }));
+        r.push(req(1, Target::ssa(10)));
+        let consumer = |r: &Arc<Router>| {
+            let r2 = Arc::clone(r);
+            std::thread::spawn(move || {
+                let t0 = Instant::now();
+                let out = r2.next_batch();
+                (t0.elapsed(), out)
+            })
+        };
+        let a = consumer(&r);
+        std::thread::sleep(Duration::from_millis(50)); // let the first claim land
+        let b = consumer(&r);
+        std::thread::sleep(Duration::from_millis(10));
+        // a FULL ann batch: the idle worker can serve it the moment the
+        // fourth request lands, well inside the ssa worker's 400ms window
+        for id in 2..6 {
+            r.push(req(id, Target::ann()));
+        }
+        let mut results = vec![a.join().unwrap(), b.join().unwrap()];
+        results.sort_by_key(|(_, out)| out.as_ref().unwrap().0.clone());
+        let (ann_wait, ann_out) = &results[0];
+        let (_, ssa_out) = &results[1];
+        let (ann_key, ann_batch) = ann_out.as_ref().unwrap();
+        assert_eq!(ann_key, "ann");
+        assert_eq!(ann_batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3, 4, 5]);
+        assert_eq!(ssa_out.as_ref().unwrap().0, "ssa_t10");
+        assert_eq!(ssa_out.as_ref().unwrap().1[0].id, 1);
+        assert!(
+            *ann_wait < Duration::from_millis(300),
+            "full ann batch waited {ann_wait:?} — it must not sit out the ssa fill window"
+        );
+        r.close();
+    }
+
+    #[test]
+    fn multi_consumer_drain_never_drops_or_duplicates() {
+        use std::sync::Arc;
+        let r = Arc::new(Router::new(BatchPolicy {
+            max_batch: 4,
+            max_delay: Duration::from_millis(2),
+        }));
+        let mut consumers = Vec::new();
+        for _ in 0..4 {
+            let r2 = Arc::clone(&r);
+            consumers.push(std::thread::spawn(move || {
+                let mut ids = Vec::new();
+                while let Some((_key, batch)) = r2.next_batch() {
+                    assert!(!batch.is_empty(), "consumers must never see empty batches");
+                    ids.extend(batch.iter().map(|q| q.id));
+                }
+                ids
+            }));
+        }
+        for i in 0..200u64 {
+            let t = match i % 3 {
+                0 => Target::ssa(10),
+                1 => Target::ann(),
+                _ => Target::spikformer(4),
+            };
+            assert!(r.push(req(i, t)));
+        }
+        while !r.is_empty() {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        r.close();
+        let mut got: Vec<u64> =
+            consumers.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..200).collect::<Vec<_>>(), "every request exactly once");
     }
 }

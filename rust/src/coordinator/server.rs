@@ -1,25 +1,23 @@
-//! The serving coordinator: public submit API + the single inference
-//! thread that owns the execution backend (native or PJRT) and drains the
-//! router queue batch by batch.
+//! The serving coordinator: public submit API in front of the worker
+//! pool (`crate::pool`) that drains the router queue batch by batch.
 //!
-//! The thread is backend-agnostic: it talks to
+//! The coordinator is backend-agnostic: each pool worker talks to
 //! [`crate::runtime::InferenceBackend`] / [`crate::runtime::LoadedVariant`]
-//! only, so the batcher / router / metrics layers never see which engine
-//! runs underneath.  Backend construction happens *inside* the thread
-//! (PJRT handles are `Rc`-based and `!Send`; the native engine simply
-//! doesn't care).
+//! only, and constructs its backend *inside* its own thread (PJRT handles
+//! are `Rc`-based and `!Send`; the native engine simply doesn't care).
+//! `--workers N` scales the native engine across cores; the XLA engine is
+//! pinned to one worker by `pool::effective_workers`.
 
-use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
-use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::config::BackendKind;
-use crate::runtime::{create_backend, LoadedVariant, Manifest};
+use crate::pool::{PoolConfig, WorkerPool};
+use crate::runtime::Manifest;
 
 use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
@@ -35,10 +33,13 @@ pub struct CoordinatorConfig {
     pub preload: Vec<String>,
     /// Execution engine for every variant this coordinator serves.
     pub backend: BackendKind,
-    /// First value of the per-coordinator batch-seed counter (PerBatch /
-    /// Ensemble policies).  Owned by the coordinator — not process-global —
-    /// so in-process test runs replay deterministically.
+    /// First value of the pool-shared batch-seed counter (PerBatch /
+    /// Ensemble policies).  Owned by the coordinator — not process-global
+    /// — so in-process test runs replay deterministically.
     pub initial_batch_seed: u32,
+    /// Replica-pool size.  Clamped to the engine's capability (native
+    /// scales freely, XLA pins to 1 — see `pool::effective_workers`).
+    pub workers: usize,
 }
 
 impl CoordinatorConfig {
@@ -49,11 +50,17 @@ impl CoordinatorConfig {
             preload: vec!["ssa_t10".to_string()],
             backend: BackendKind::default(),
             initial_batch_seed: 0x5EED_0001,
+            workers: 1,
         }
     }
 
     pub fn with_backend(mut self, backend: BackendKind) -> Self {
         self.backend = backend;
+        self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
         self
     }
 }
@@ -65,49 +72,33 @@ pub struct Coordinator {
     manifest: Manifest,
     backend: BackendKind,
     next_id: AtomicU64,
-    handle: Option<JoinHandle<()>>,
+    pool: WorkerPool,
 }
 
 impl Coordinator {
-    /// Load the manifest, spawn the inference thread, return the handle.
+    /// Load the manifest, spawn the worker pool, return the handle.
     pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         let router = Arc::new(Router::new(cfg.policy));
         let metrics = Arc::new(Metrics::new());
-
-        let thread_router = Arc::clone(&router);
-        let thread_metrics = Arc::clone(&metrics);
-        let thread_manifest = manifest.clone();
-        let preload = cfg.preload.clone();
-        let backend = cfg.backend;
-        let batch_seed = cfg.initial_batch_seed;
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-
-        let handle = std::thread::Builder::new()
-            .name("ssa-inference".into())
-            .spawn(move || {
-                inference_thread(
-                    thread_manifest,
-                    thread_router,
-                    thread_metrics,
-                    preload,
-                    backend,
-                    batch_seed,
-                    ready_tx,
-                )
-            })
-            .context("spawning inference thread")?;
-
-        // surface startup errors (backend init, preload) synchronously
-        ready_rx.recv().context("inference thread died during startup")??;
-
+        let pool = WorkerPool::start(
+            &PoolConfig {
+                workers: cfg.workers,
+                backend: cfg.backend,
+                preload: cfg.preload.clone(),
+                initial_batch_seed: cfg.initial_batch_seed,
+            },
+            &manifest,
+            &router,
+            &metrics,
+        )?;
         Ok(Self {
             router,
             metrics,
             manifest,
             backend: cfg.backend,
             next_id: AtomicU64::new(1),
-            handle: Some(handle),
+            pool,
         })
     }
 
@@ -117,6 +108,11 @@ impl Coordinator {
 
     pub fn backend(&self) -> BackendKind {
         self.backend
+    }
+
+    /// Pool workers actually running (after capability clamping).
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
     }
 
     /// Submit one image; returns the response channel.
@@ -157,7 +153,7 @@ impl Coordinator {
         seed_policy: SeedPolicy,
     ) -> Result<ClassifyResponse> {
         let rx = self.submit(target, image, seed_policy).map_err(anyhow::Error::from)?;
-        rx.recv().context("inference thread dropped the request")
+        rx.recv().context("worker pool dropped the request")
     }
 
     pub fn metrics_report(&self) -> String {
@@ -168,166 +164,16 @@ impl Coordinator {
         &self.metrics
     }
 
-    /// Graceful shutdown: drain the queue, join the thread.
+    /// Graceful shutdown: drain the queue, join every worker.
     pub fn shutdown(mut self) {
         self.router.close();
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.pool.join();
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
         self.router.close();
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.pool.join();
     }
-}
-
-// ---------------------------------------------------------------------------
-// inference thread
-// ---------------------------------------------------------------------------
-
-#[allow(clippy::too_many_arguments)]
-fn inference_thread(
-    manifest: Manifest,
-    router: Arc<Router>,
-    metrics: Arc<Metrics>,
-    preload: Vec<String>,
-    backend_kind: BackendKind,
-    initial_batch_seed: u32,
-    ready: mpsc::Sender<Result<()>>,
-) {
-    let backend = match create_backend(backend_kind) {
-        Ok(b) => b,
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
-        }
-    };
-    crate::log_info!("inference thread: {} backend up", backend.name());
-    let mut models: HashMap<String, Box<dyn LoadedVariant>> = HashMap::new();
-    for key in &preload {
-        match manifest.variant(key).and_then(|v| backend.load(&manifest, v)) {
-            Ok(m) => {
-                models.insert(key.clone(), m);
-            }
-            Err(e) => {
-                let _ = ready.send(Err(e));
-                return;
-            }
-        }
-    }
-    let _ = ready.send(Ok(()));
-
-    // per-coordinator seed counter: single-owner state of this thread
-    let mut batch_seed = initial_batch_seed;
-    let max_batch = router.policy().max_batch;
-    while let Some((key, batch)) = router.next_batch() {
-        if batch.is_empty() {
-            continue;
-        }
-        // lazy-load the variant on first use
-        if !models.contains_key(&key) {
-            match manifest.variant(&key).and_then(|v| backend.load(&manifest, v)) {
-                Ok(m) => {
-                    models.insert(key.clone(), m);
-                }
-                Err(e) => {
-                    crate::log_error!("loading variant {key}: {e:#}");
-                    metrics.record_error(&key);
-                    continue; // reply senders drop -> callers see RecvError
-                }
-            }
-        }
-        let model = models[&key].as_ref();
-        if let Err(e) = serve_batch(model, &batch, &metrics, &key, max_batch, &mut batch_seed)
-        {
-            crate::log_error!("serving batch on {key}: {e:#}");
-            metrics.record_error(&key);
-        }
-    }
-    crate::log_info!("inference thread: router closed, exiting");
-}
-
-fn serve_batch(
-    model: &dyn LoadedVariant,
-    batch: &[ClassifyRequest],
-    metrics: &Metrics,
-    key: &str,
-    max_batch: usize,
-    batch_seed: &mut u32,
-) -> Result<()> {
-    let model_batch = model.batch();
-    anyhow::ensure!(
-        batch.len() <= model_batch,
-        "batch {} exceeds model batch {model_batch}",
-        batch.len()
-    );
-    // the router only groups requests sharing one seed policy; reject
-    // a mixed batch outright rather than mis-seeding the tail requests
-    let policy = batch[0].seed_policy;
-    anyhow::ensure!(
-        batch.iter().all(|r| r.seed_policy == policy),
-        "mixed seed policies in one batch (router invariant violated)"
-    );
-
-    // assemble + pad (repeat last image; padded rows are never replied)
-    let px = batch[0].image.len();
-    let mut images = Vec::with_capacity(model_batch * px);
-    for r in batch {
-        anyhow::ensure!(r.image.len() == px, "ragged image sizes in batch");
-        images.extend_from_slice(&r.image);
-    }
-    for _ in batch.len()..model_batch {
-        images.extend_from_slice(&batch.last().unwrap().image);
-    }
-
-    // allocate seeds from the coordinator-owned counter
-    let (seeds, seed_reported) = match policy {
-        SeedPolicy::Fixed(s) => (vec![s], s),
-        SeedPolicy::PerBatch => {
-            let s = *batch_seed;
-            *batch_seed = batch_seed.wrapping_add(1);
-            (vec![s], s)
-        }
-        SeedPolicy::Ensemble(n) => {
-            let n = n.max(1);
-            let s0 = *batch_seed;
-            *batch_seed = batch_seed.wrapping_add(n);
-            ((0..n).map(|i| s0.wrapping_add(i)).collect(), s0)
-        }
-    };
-
-    // run (ensemble averages logits across seeds)
-    let classes = model.variant().output_shape[1];
-    let mut logits_acc = vec![0.0f32; model_batch * classes];
-    for &seed in &seeds {
-        let logits = model.infer(&images, seed)?;
-        for (a, l) in logits_acc.iter_mut().zip(&logits) {
-            *a += l / seeds.len() as f32;
-        }
-    }
-
-    // reply per request
-    let now = Instant::now();
-    let mut lats = Vec::with_capacity(batch.len());
-    for (i, req) in batch.iter().enumerate() {
-        let row = &logits_acc[i * classes..(i + 1) * classes];
-        let class = crate::util::argmax(row).unwrap_or(0);
-        let latency_us = now.duration_since(req.submitted_at).as_secs_f64() * 1e6;
-        lats.push(latency_us);
-        let _ = req.reply.send(ClassifyResponse {
-            id: req.id,
-            class,
-            logits: row.to_vec(),
-            latency_us,
-            batch_size: batch.len(),
-            seed: seed_reported,
-        });
-    }
-    metrics.record_batch(key, batch.len(), max_batch, &lats);
-    Ok(())
 }

@@ -21,6 +21,8 @@ pub mod coordinator;
 pub mod energy;
 pub mod experiments;
 pub mod hw;
+pub mod loadgen;
+pub mod pool;
 pub mod prop;
 pub mod config;
 pub mod runtime;

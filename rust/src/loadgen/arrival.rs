@@ -1,0 +1,123 @@
+//! Arrival processes and mix sampling for the load generator.
+//!
+//! Everything here is driven by [`Xoshiro256`] streams derived from the
+//! run's master seed, so a bench run is fully replayable: same seed, same
+//! arrival schedule, same (target, seed-policy, image) choice sequence.
+
+use anyhow::{ensure, Result};
+
+use crate::util::rng::Xoshiro256;
+
+/// Poisson arrival schedule: i.i.d. exponential inter-arrival times at a
+/// target rate (the standard open-loop model — arrivals are memoryless
+/// and independent of service completions).
+pub struct PoissonArrivals {
+    rng: Xoshiro256,
+    rate_per_us: f64,
+    at_us: f64,
+}
+
+impl PoissonArrivals {
+    pub fn new(rps: f64, seed: u64) -> Result<Self> {
+        ensure!(rps.is_finite() && rps > 0.0, "target rps must be positive, got {rps}");
+        Ok(Self { rng: Xoshiro256::new(seed), rate_per_us: rps / 1e6, at_us: 0.0 })
+    }
+
+    /// Offset of the next arrival from load start, in microseconds
+    /// (monotone nondecreasing).
+    pub fn next_us(&mut self) -> f64 {
+        let u = loop {
+            let u = self.rng.next_f64();
+            if u > 1e-12 {
+                break u;
+            }
+        };
+        self.at_us += -u.ln() / self.rate_per_us;
+        self.at_us
+    }
+}
+
+/// Weighted index sampling over a scenario mix (inverse-CDF draw).
+pub struct WeightedPick {
+    cumulative: Vec<f64>,
+}
+
+impl WeightedPick {
+    pub fn new(weights: &[f64]) -> Result<Self> {
+        ensure!(!weights.is_empty(), "empty weight set");
+        let mut cumulative = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for &w in weights {
+            ensure!(w.is_finite() && w > 0.0, "weights must be positive and finite, got {w}");
+            acc += w;
+            cumulative.push(acc);
+        }
+        Ok(Self { cumulative })
+    }
+
+    pub fn pick(&self, rng: &mut Xoshiro256) -> usize {
+        let total = *self.cumulative.last().unwrap();
+        let x = rng.next_f64() * total;
+        self.cumulative
+            .iter()
+            .position(|&c| x < c)
+            .unwrap_or(self.cumulative.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_interarrival_matches_rate() {
+        let mut a = PoissonArrivals::new(1000.0, 7).unwrap(); // 1000 rps => 1000us gaps
+        let n = 20_000;
+        let mut last = 0.0;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let t = a.next_us();
+            assert!(t >= last, "schedule must be monotone");
+            sum += t - last;
+            last = t;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 1000.0).abs() < 30.0, "mean inter-arrival {mean}us, want ~1000us");
+    }
+
+    #[test]
+    fn poisson_is_deterministic_per_seed() {
+        let mut a = PoissonArrivals::new(500.0, 99).unwrap();
+        let mut b = PoissonArrivals::new(500.0, 99).unwrap();
+        for _ in 0..100 {
+            assert_eq!(a.next_us().to_bits(), b.next_us().to_bits());
+        }
+        let mut c = PoissonArrivals::new(500.0, 100).unwrap();
+        assert_ne!(a.next_us().to_bits(), c.next_us().to_bits());
+    }
+
+    #[test]
+    fn poisson_rejects_bad_rates() {
+        assert!(PoissonArrivals::new(0.0, 1).is_err());
+        assert!(PoissonArrivals::new(-3.0, 1).is_err());
+        assert!(PoissonArrivals::new(f64::NAN, 1).is_err());
+    }
+
+    #[test]
+    fn weighted_pick_tracks_weights() {
+        let pick = WeightedPick::new(&[3.0, 1.0]).unwrap();
+        let mut rng = Xoshiro256::new(5);
+        let n = 40_000;
+        let zeros = (0..n).filter(|_| pick.pick(&mut rng) == 0).count();
+        let frac = zeros as f64 / n as f64;
+        assert!((frac - 0.75).abs() < 0.02, "P(entry 0) = {frac}, want ~0.75");
+    }
+
+    #[test]
+    fn weighted_pick_rejects_bad_weights() {
+        assert!(WeightedPick::new(&[]).is_err());
+        assert!(WeightedPick::new(&[1.0, 0.0]).is_err());
+        assert!(WeightedPick::new(&[1.0, -2.0]).is_err());
+        assert!(WeightedPick::new(&[f64::INFINITY]).is_err());
+    }
+}

@@ -1,0 +1,166 @@
+//! Load-generation subsystem: open-loop (Poisson arrivals at a target
+//! RPS) and closed-loop (fixed concurrency) drivers for a live
+//! [`crate::coordinator::Coordinator`], with weighted scenario mixes over
+//! (target, seed-policy) pairs, deterministic replayable schedules, and a
+//! JSON bench report (`BENCH_serving.json`).  The `serve-bench` CLI
+//! subcommand is the front door; `synthetic` can fabricate a complete
+//! servable artifacts directory so the harness runs anywhere the native
+//! backend does (CI included).
+
+pub mod arrival;
+pub mod report;
+pub mod runner;
+pub mod synthetic;
+
+pub use arrival::{PoissonArrivals, WeightedPick};
+pub use report::{BenchReport, BenchRun};
+pub use runner::{run, ImageSource, LoadSpec, RunStats};
+pub use synthetic::{write_artifacts, SyntheticSpec};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{SeedPolicy, Target};
+
+/// How requests are injected.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalMode {
+    /// Open loop: submit on a Poisson schedule at `rps` regardless of
+    /// completions — measures latency under offered load (and exposes
+    /// queueing collapse when the pool saturates).
+    Open { rps: f64 },
+    /// Closed loop: `concurrency` clients, each submitting its next
+    /// request the moment the previous one answers — measures capacity.
+    Closed { concurrency: usize },
+}
+
+impl ArrivalMode {
+    pub fn describe(&self) -> String {
+        match self {
+            ArrivalMode::Open { rps } => format!("open(rps={rps})"),
+            ArrivalMode::Closed { concurrency } => format!("closed(concurrency={concurrency})"),
+        }
+    }
+}
+
+/// One weighted component of a scenario mix.
+#[derive(Clone, Debug)]
+pub struct MixEntry {
+    pub target: Target,
+    pub seed_policy: SeedPolicy,
+    pub weight: f64,
+}
+
+/// A weighted request mix over targets / seed policies / time steps.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub entries: Vec<MixEntry>,
+}
+
+impl Scenario {
+    /// Single-target scenario.
+    pub fn uniform(target: Target, seed_policy: SeedPolicy) -> Self {
+        let name = format!("{}_t{}", target.arch, target.time_steps);
+        Self { name, entries: vec![MixEntry { target, seed_policy, weight: 1.0 }] }
+    }
+
+    /// Parse a comma-separated mix spec, `TARGET[@POLICY][*WEIGHT]` per
+    /// entry — e.g. `"ssa_t4*3,ann@fixed:7,spikformer_t4@ensemble:2*0.5"`.
+    /// Entries without `@POLICY` use `default_policy`; entries without
+    /// `*WEIGHT` weigh 1.
+    pub fn parse(spec: &str, default_policy: SeedPolicy) -> Result<Self> {
+        let mut entries = Vec::new();
+        for item in spec.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (head, weight) = match item.rsplit_once('*') {
+                Some((h, w)) => (
+                    h,
+                    w.parse::<f64>()
+                        .map_err(|e| anyhow::anyhow!("bad weight in {item:?}: {e}"))?,
+                ),
+                None => (item, 1.0),
+            };
+            if !(weight.is_finite() && weight > 0.0) {
+                bail!("mix weight must be positive and finite, got {weight} in {item:?}");
+            }
+            let (target_s, policy) = match head.split_once('@') {
+                Some((t, p)) => (t, parse_seed_policy(p)?),
+                None => (head, default_policy),
+            };
+            entries.push(MixEntry {
+                target: Target::parse(target_s)?,
+                seed_policy: policy,
+                weight,
+            });
+        }
+        if entries.is_empty() {
+            bail!("empty scenario mix {spec:?}");
+        }
+        Ok(Self { name: spec.to_string(), entries })
+    }
+}
+
+/// Parse `perbatch`, `fixed:SEED`, or `ensemble:K`.
+pub fn parse_seed_policy(s: &str) -> Result<SeedPolicy> {
+    match s.split_once(':') {
+        None if s == "perbatch" => Ok(SeedPolicy::PerBatch),
+        Some(("fixed", v)) => Ok(SeedPolicy::Fixed(v.parse().context("fixed seed value")?)),
+        Some(("ensemble", v)) => {
+            Ok(SeedPolicy::Ensemble(v.parse().context("ensemble size")?))
+        }
+        _ => bail!(
+            "unknown seed policy {s:?} (expected `perbatch`, `fixed:SEED`, or `ensemble:K`)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_seed_policies() {
+        assert_eq!(parse_seed_policy("perbatch").unwrap(), SeedPolicy::PerBatch);
+        assert_eq!(parse_seed_policy("fixed:42").unwrap(), SeedPolicy::Fixed(42));
+        assert_eq!(parse_seed_policy("ensemble:4").unwrap(), SeedPolicy::Ensemble(4));
+        assert!(parse_seed_policy("fixed").is_err());
+        assert!(parse_seed_policy("random:3").is_err());
+        assert!(parse_seed_policy("ensemble:x").is_err());
+    }
+
+    #[test]
+    fn parses_scenario_mixes() {
+        let s = Scenario::parse(
+            "ssa_t4*3, ann@fixed:7, spikformer_t4@ensemble:2*0.5",
+            SeedPolicy::PerBatch,
+        )
+        .unwrap();
+        assert_eq!(s.entries.len(), 3);
+        assert_eq!(s.entries[0].target, Target::ssa(4));
+        assert_eq!(s.entries[0].seed_policy, SeedPolicy::PerBatch);
+        assert!((s.entries[0].weight - 3.0).abs() < 1e-12);
+        assert_eq!(s.entries[1].target, Target::ann());
+        assert_eq!(s.entries[1].seed_policy, SeedPolicy::Fixed(7));
+        assert_eq!(s.entries[2].seed_policy, SeedPolicy::Ensemble(2));
+        assert!((s.entries[2].weight - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_mixes() {
+        assert!(Scenario::parse("", SeedPolicy::PerBatch).is_err());
+        assert!(Scenario::parse("ssa_t4*-1", SeedPolicy::PerBatch).is_err());
+        assert!(Scenario::parse("ssa_t4*nan", SeedPolicy::PerBatch).is_err());
+        assert!(Scenario::parse("bogus", SeedPolicy::PerBatch).is_err());
+        assert!(Scenario::parse("ssa_t4@never", SeedPolicy::PerBatch).is_err());
+    }
+
+    #[test]
+    fn uniform_scenario_names_itself() {
+        let s = Scenario::uniform(Target::ssa(10), SeedPolicy::PerBatch);
+        assert_eq!(s.name, "ssa_t10");
+        assert_eq!(s.entries.len(), 1);
+    }
+}

@@ -1,0 +1,228 @@
+//! Bench report assembly and `BENCH_serving.json` emission.
+//!
+//! The report is the repo's first measured serving-perf artifact: one
+//! entry per worker count (so `serve-bench --workers 1,4` records the
+//! scaling headline directly), each carrying client-side counters plus
+//! the coordinator's own per-target and per-worker telemetry.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{TargetReport, WorkerReport};
+use crate::util::json::Json;
+use crate::util::stats::LatencySummary;
+
+use super::runner::RunStats;
+
+/// One (worker count, load) measurement.
+pub struct BenchRun {
+    pub workers: usize,
+    pub stats: RunStats,
+    pub latency: Option<LatencySummary>,
+    pub targets: Vec<TargetReport>,
+    pub worker_util: Vec<WorkerReport>,
+}
+
+impl BenchRun {
+    pub fn new(
+        workers: usize,
+        stats: RunStats,
+        targets: Vec<TargetReport>,
+        worker_util: Vec<WorkerReport>,
+    ) -> Self {
+        let latency = if stats.latency.count() == 0 {
+            None
+        } else {
+            Some(LatencySummary::from_histogram(&stats.latency))
+        };
+        Self { workers, stats, latency, targets, worker_util }
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        self.stats.throughput_rps()
+    }
+
+    fn to_json(&self) -> Json {
+        let latency = match &self.latency {
+            None => Json::Null,
+            Some(l) => Json::obj(vec![
+                ("count", Json::from(l.count)),
+                ("mean_us", Json::num(l.mean_us)),
+                ("p50_us", Json::num(l.p50_us)),
+                ("p95_us", Json::num(l.p95_us)),
+                ("p99_us", Json::num(l.p99_us)),
+                ("max_us", Json::num(l.max_us)),
+            ]),
+        };
+        let targets: Vec<Json> = self
+            .targets
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("target", Json::str(&t.target)),
+                    ("requests", Json::num(t.requests as f64)),
+                    ("batches", Json::num(t.batches as f64)),
+                    ("errors", Json::num(t.errors as f64)),
+                    ("mean_batch_fill", Json::num(t.mean_batch_fill)),
+                    ("throughput_rps", Json::num(t.throughput_rps)),
+                ])
+            })
+            .collect();
+        let workers: Vec<Json> = self
+            .worker_util
+            .iter()
+            .map(|w| {
+                Json::obj(vec![
+                    ("worker", Json::from(w.worker)),
+                    ("batches", Json::num(w.batches as f64)),
+                    ("requests", Json::num(w.requests as f64)),
+                    ("busy_us", Json::num(w.busy_us)),
+                    ("utilization", Json::num(w.utilization)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("workers", Json::from(self.workers)),
+            ("offered", Json::num(self.stats.offered as f64)),
+            ("ok", Json::num(self.stats.ok as f64)),
+            ("errors", Json::num(self.stats.errors as f64)),
+            ("wall_s", Json::num(self.stats.wall.as_secs_f64())),
+            ("throughput_rps", Json::num(self.throughput_rps())),
+            ("latency_us", latency),
+            ("targets", Json::Arr(targets)),
+            ("worker_util", Json::Arr(workers)),
+        ])
+    }
+}
+
+/// The full serve-bench result: one run per requested worker count.
+pub struct BenchReport {
+    pub scenario: String,
+    pub mode: String,
+    pub backend: String,
+    pub duration_s: f64,
+    pub runs: Vec<BenchRun>,
+}
+
+impl BenchReport {
+    /// Throughput of the last run relative to the first — the
+    /// `--workers 1,N` scaling headline.  `None` with fewer than two
+    /// runs or a dead baseline.
+    pub fn speedup(&self) -> Option<f64> {
+        if self.runs.len() < 2 {
+            return None;
+        }
+        let base = self.runs.first().unwrap().throughput_rps();
+        if base <= 0.0 {
+            return None;
+        }
+        Some(self.runs.last().unwrap().throughput_rps() / base)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str("serving")),
+            ("scenario", Json::str(&self.scenario)),
+            ("mode", Json::str(&self.mode)),
+            ("backend", Json::str(&self.backend)),
+            ("duration_s", Json::num(self.duration_s)),
+            ("runs", Json::Arr(self.runs.iter().map(BenchRun::to_json).collect())),
+            (
+                "speedup_last_vs_first",
+                self.speedup().map(Json::num).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing bench report {path:?}"))
+    }
+
+    /// Human-readable run summary for the CLI.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "=== serve-bench: {} | {} | {} backend | {:.1}s per run ===\n",
+            self.scenario, self.mode, self.backend, self.duration_s
+        );
+        for r in &self.runs {
+            s.push_str(&format!(
+                "workers={:<2} ok={:<6} err={:<4} thpt={:>8.1} req/s",
+                r.workers, r.stats.ok, r.stats.errors, r.throughput_rps()
+            ));
+            if let Some(l) = &r.latency {
+                s.push_str(&format!(
+                    "  p50={:.0}us p95={:.0}us p99={:.0}us",
+                    l.p50_us, l.p95_us, l.p99_us
+                ));
+            }
+            s.push('\n');
+        }
+        if let Some(x) = self.speedup() {
+            s.push_str(&format!(
+                "speedup (workers={} vs {}): {x:.2}x\n",
+                self.runs.last().unwrap().workers,
+                self.runs[0].workers
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::LogHistogram;
+    use std::time::Duration;
+
+    fn stats(ok: u64, wall_ms: u64) -> RunStats {
+        let mut latency = LogHistogram::new();
+        for i in 0..ok {
+            latency.record(100.0 + i as f64);
+        }
+        RunStats {
+            offered: ok,
+            ok,
+            errors: 0,
+            wall: Duration::from_millis(wall_ms),
+            latency,
+        }
+    }
+
+    fn report() -> BenchReport {
+        BenchReport {
+            scenario: "ssa_t4".into(),
+            mode: "closed(concurrency=4)".into(),
+            backend: "native".into(),
+            duration_s: 1.0,
+            runs: vec![
+                BenchRun::new(1, stats(100, 1000), vec![], vec![]),
+                BenchRun::new(4, stats(320, 1000), vec![], vec![]),
+            ],
+        }
+    }
+
+    #[test]
+    fn speedup_is_last_over_first() {
+        let r = report();
+        assert!((r.speedup().unwrap() - 3.2).abs() < 1e-9);
+        let single = BenchReport { runs: vec![], ..report() };
+        assert!(single.speedup().is_none());
+    }
+
+    #[test]
+    fn json_round_trips_with_expected_keys() {
+        let r = report();
+        let text = r.to_json().to_string();
+        let parsed = Json::parse(&text).expect("report JSON must parse");
+        assert_eq!(parsed.str_field("bench").unwrap(), "serving");
+        let runs = parsed.get("runs").and_then(Json::as_arr).unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[1].usize_field("workers").unwrap(), 4);
+        assert!(runs[0].get("throughput_rps").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(runs[0].get("latency_us").unwrap().get("p95_us").is_some());
+        assert!(parsed.get("speedup_last_vs_first").and_then(Json::as_f64).is_some());
+        assert!(r.render().contains("speedup"));
+    }
+}

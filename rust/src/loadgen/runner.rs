@@ -1,0 +1,221 @@
+//! Drives a live coordinator with a scenario load and collects stats.
+//!
+//! Both drivers use the coordinator's public submit/classify API only —
+//! the load generator is an ordinary (if pushy) client, so whatever it
+//! measures is what real callers would see.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::{ClassifyResponse, Coordinator};
+use crate::runtime::Dataset;
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::LogHistogram;
+
+use super::arrival::{PoissonArrivals, WeightedPick};
+use super::{ArrivalMode, Scenario};
+
+/// The image pool requests draw from (real test split or synthetic).
+#[derive(Clone)]
+pub struct ImageSource {
+    px: usize,
+    images: Vec<f32>,
+    n: usize,
+}
+
+impl ImageSource {
+    /// Takes the dataset by value to move its image buffer instead of
+    /// duplicating it (real test splits are tens of MB).
+    pub fn from_dataset(ds: Dataset) -> Result<Self> {
+        anyhow::ensure!(!ds.is_empty(), "dataset has no images");
+        Ok(Self { px: ds.image_size * ds.image_size, n: ds.len(), images: ds.images })
+    }
+
+    /// Deterministic pseudo-images in [0,1] for dataset-less runs.
+    pub fn synthetic(image_size: usize, n: usize, seed: u64) -> Self {
+        let px = image_size * image_size;
+        let mut rng = Xoshiro256::new(seed);
+        Self { px, images: (0..n * px).map(|_| rng.next_f32()).collect(), n }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        let i = i % self.n;
+        &self.images[i * self.px..(i + 1) * self.px]
+    }
+}
+
+/// One load-generation run description.
+#[derive(Clone, Debug)]
+pub struct LoadSpec {
+    pub mode: ArrivalMode,
+    pub duration: Duration,
+    pub scenario: Scenario,
+    /// Master seed for arrivals / mix / image choice (replayable runs).
+    pub seed: u64,
+}
+
+/// Client-side counters for one run.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    /// Requests the generator attempted to submit.
+    pub offered: u64,
+    /// Requests that received an answer.
+    pub ok: u64,
+    /// Submit rejections plus dropped replies.
+    pub errors: u64,
+    /// First submit to last reply.
+    pub wall: Duration,
+    /// End-to-end (submit → reply) latency, as reported in responses.
+    pub latency: LogHistogram,
+}
+
+impl RunStats {
+    pub fn throughput_rps(&self) -> f64 {
+        self.ok as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    fn absorb(&mut self, other: RunStats) {
+        self.offered += other.offered;
+        self.ok += other.ok;
+        self.errors += other.errors;
+        self.latency.merge(&other.latency);
+    }
+}
+
+/// Run one load-generation pass against a live coordinator.
+pub fn run(coord: &Coordinator, spec: &LoadSpec, images: &ImageSource) -> Result<RunStats> {
+    anyhow::ensure!(!images.is_empty(), "image source is empty");
+    anyhow::ensure!(!spec.duration.is_zero(), "--duration must be positive");
+    let weights: Vec<f64> = spec.scenario.entries.iter().map(|e| e.weight).collect();
+    let pick = WeightedPick::new(&weights)?;
+    // measure only the load window: startup / replica-preload time must
+    // not deflate the utilization and throughput the report publishes
+    coord.metrics().reset_window();
+    match spec.mode {
+        ArrivalMode::Closed { concurrency } => {
+            run_closed(coord, spec, images, &pick, concurrency)
+        }
+        ArrivalMode::Open { rps } => run_open(coord, spec, images, &pick, rps),
+    }
+}
+
+fn run_closed(
+    coord: &Coordinator,
+    spec: &LoadSpec,
+    images: &ImageSource,
+    pick: &WeightedPick,
+    concurrency: usize,
+) -> Result<RunStats> {
+    anyhow::ensure!(concurrency > 0, "closed-loop concurrency must be >= 1");
+    let t0 = Instant::now();
+    let deadline = t0 + spec.duration;
+    let mut total = RunStats::default();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..concurrency)
+            .map(|client| {
+                s.spawn(move || {
+                    let mut rng = Xoshiro256::new(
+                        spec.seed ^ 0x9E37_79B9u64.wrapping_mul(client as u64 + 1),
+                    );
+                    let mut st = RunStats::default();
+                    while Instant::now() < deadline {
+                        let e = &spec.scenario.entries[pick.pick(&mut rng)];
+                        let idx = rng.next_below(images.len() as u64) as usize;
+                        st.offered += 1;
+                        match coord.classify(
+                            e.target.clone(),
+                            images.image(idx).to_vec(),
+                            e.seed_policy,
+                        ) {
+                            Ok(resp) => {
+                                st.ok += 1;
+                                st.latency.record(resp.latency_us);
+                            }
+                            Err(_) => st.errors += 1,
+                        }
+                    }
+                    st
+                })
+            })
+            .collect();
+        for h in handles {
+            total.absorb(h.join().expect("load client panicked"));
+        }
+    });
+    total.wall = t0.elapsed();
+    Ok(total)
+}
+
+fn run_open(
+    coord: &Coordinator,
+    spec: &LoadSpec,
+    images: &ImageSource,
+    pick: &WeightedPick,
+    rps: f64,
+) -> Result<RunStats> {
+    let mut arrivals = PoissonArrivals::new(rps, spec.seed)?;
+    let mut rng = Xoshiro256::new(spec.seed ^ 0x0A11_CE5A_11CE_5A11);
+    let (tx, rx) = mpsc::channel::<mpsc::Receiver<ClassifyResponse>>();
+    let t0 = Instant::now();
+    let horizon_us = spec.duration.as_secs_f64() * 1e6;
+    let mut stats = RunStats::default();
+
+    std::thread::scope(|s| {
+        // collector drains replies concurrently so the pacer never blocks
+        // on service completions (that would close the loop)
+        let collector = s.spawn(move || {
+            let mut ok = 0u64;
+            let mut errors = 0u64;
+            let mut hist = LogHistogram::new();
+            while let Ok(resp_rx) = rx.recv() {
+                match resp_rx.recv() {
+                    Ok(resp) => {
+                        ok += 1;
+                        hist.record(resp.latency_us);
+                    }
+                    Err(_) => errors += 1, // pool dropped the reply (serve error)
+                }
+            }
+            (ok, errors, hist)
+        });
+
+        loop {
+            let at_us = arrivals.next_us();
+            if at_us > horizon_us {
+                break;
+            }
+            let elapsed_us = t0.elapsed().as_secs_f64() * 1e6;
+            if at_us > elapsed_us {
+                // sleep to the scheduled instant; when behind, submit
+                // immediately (the schedule, not the pacer, is the clock)
+                std::thread::sleep(Duration::from_micros((at_us - elapsed_us) as u64));
+            }
+            let e = &spec.scenario.entries[pick.pick(&mut rng)];
+            let idx = rng.next_below(images.len() as u64) as usize;
+            stats.offered += 1;
+            match coord.submit(e.target.clone(), images.image(idx).to_vec(), e.seed_policy) {
+                Ok(resp_rx) => {
+                    let _ = tx.send(resp_rx);
+                }
+                Err(_) => stats.errors += 1,
+            }
+        }
+        drop(tx); // pacer done; collector drains the in-flight tail
+        let (ok, errors, hist) = collector.join().expect("collector panicked");
+        stats.ok = ok;
+        stats.errors += errors;
+        stats.latency = hist;
+    });
+    stats.wall = t0.elapsed();
+    Ok(stats)
+}

@@ -1,0 +1,199 @@
+//! Synthesize a complete, servable native-backend artifacts directory —
+//! `manifest.json`, `weights_<arch>.bin`, and `dataset_test.bin` — with
+//! no Python and no XLA toolchain.  This is what lets `serve-bench
+//! --synthetic` (and the pool/loadgen integration tests, and the CI
+//! smoke job) measure the serving stack on any machine the crate builds
+//! on.  Weights are deterministic Kaiming-style random tensors in the
+//! exact `aot.py` byte format (`runtime::weights::test_support`).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::dataset::DATASET_MAGIC;
+use crate::runtime::weights::test_support::build_weight_bytes;
+use crate::util::rng::Xoshiro256;
+
+/// Geometry + dataset knobs for a synthesized artifacts directory.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    pub image_size: usize,
+    pub patch_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_mlp: usize,
+    pub n_layers: usize,
+    pub n_classes: usize,
+    /// One `ssa_t{T}` + `spikformer_t{T}` variant pair per entry (an
+    /// `ann` variant is always emitted too).
+    pub time_steps: Vec<usize>,
+    pub batch: usize,
+    pub dataset_n: usize,
+    pub seed: u64,
+}
+
+impl Default for SyntheticSpec {
+    /// Heavy enough per image that one worker saturates a core (2 encoder
+    /// layers, T=4), small enough that a CI smoke run finishes in seconds.
+    fn default() -> Self {
+        Self {
+            image_size: 16,
+            patch_size: 4,
+            d_model: 32,
+            n_heads: 4,
+            d_mlp: 64,
+            n_layers: 2,
+            n_classes: 10,
+            time_steps: vec![4],
+            batch: 8,
+            dataset_n: 64,
+            seed: 0xBE4C_11AD,
+        }
+    }
+}
+
+impl SyntheticSpec {
+    fn n_tokens(&self) -> usize {
+        (self.image_size / self.patch_size).pow(2)
+    }
+
+    fn patch_dim(&self) -> usize {
+        self.patch_size * self.patch_size
+    }
+
+    fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.patch_size > 0 && self.image_size % self.patch_size == 0,
+            "image size {} not divisible by patch size {}",
+            self.image_size,
+            self.patch_size
+        );
+        anyhow::ensure!(
+            self.n_heads > 0 && self.d_model % self.n_heads == 0,
+            "d_model {} not divisible by n_heads {}",
+            self.d_model,
+            self.n_heads
+        );
+        anyhow::ensure!(!self.time_steps.is_empty(), "need at least one time-step variant");
+        anyhow::ensure!(self.batch > 0 && self.dataset_n > 0 && self.n_classes > 0);
+        Ok(())
+    }
+}
+
+fn variant_json(spec: &SyntheticSpec, name: &str, arch: &str, t: usize) -> String {
+    format!(
+        r#"{{
+        "name": "{name}", "arch": "{arch}", "time_steps": {t}, "batch": {batch},
+        "hlo": "{name}.hlo.txt", "weights": "weights_{arch}.bin",
+        "param_names": [],
+        "inputs": [
+            {{"name": "images", "shape": [{batch}, {s}, {s}], "dtype": "f32"}},
+            {{"name": "seed", "shape": [], "dtype": "u32"}}
+        ],
+        "output": {{"shape": [{batch}, {classes}], "dtype": "f32"}}
+    }}"#,
+        batch = spec.batch,
+        s = spec.image_size,
+        classes = spec.n_classes,
+    )
+}
+
+fn dataset_bytes(spec: &SyntheticSpec) -> Vec<u8> {
+    let mut rng = Xoshiro256::new(spec.seed ^ 0x0DA7_A5E7);
+    let mut b = Vec::new();
+    b.extend(DATASET_MAGIC.to_le_bytes());
+    b.extend(1u32.to_le_bytes());
+    b.extend((spec.dataset_n as u32).to_le_bytes());
+    b.extend((spec.image_size as u32).to_le_bytes());
+    for i in 0..spec.dataset_n {
+        for _ in 0..spec.image_size * spec.image_size {
+            b.extend(rng.next_f32().to_le_bytes());
+        }
+        b.extend(((i % spec.n_classes) as u32).to_le_bytes());
+    }
+    b
+}
+
+/// Write the full artifacts directory (creating it if needed).  The
+/// result serves on the native backend exactly like a `make artifacts`
+/// tree — minus the `.hlo.txt` files the native engine never reads.
+pub fn write_artifacts(dir: &Path, spec: &SyntheticSpec) -> Result<()> {
+    spec.validate()?;
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating artifacts dir {dir:?}"))?;
+
+    let weights = build_weight_bytes(
+        spec.patch_dim(),
+        spec.d_model,
+        spec.n_tokens(),
+        spec.d_mlp,
+        spec.n_layers,
+        spec.n_classes,
+        spec.seed,
+    );
+    for arch in ["ssa", "spikformer", "ann"] {
+        std::fs::write(dir.join(format!("weights_{arch}.bin")), &weights)
+            .with_context(|| format!("writing weights_{arch}.bin"))?;
+    }
+    std::fs::write(dir.join("dataset_test.bin"), dataset_bytes(spec))
+        .context("writing dataset_test.bin")?;
+
+    let mut variants = Vec::new();
+    for &t in &spec.time_steps {
+        variants.push(variant_json(spec, &format!("ssa_t{t}"), "ssa", t));
+        variants.push(variant_json(spec, &format!("spikformer_t{t}"), "spikformer", t));
+    }
+    variants.push(variant_json(spec, "ann", "ann", 0));
+    let manifest = format!(
+        r#"{{
+    "version": 1, "image_size": {s}, "patch_size": {p}, "n_classes": {classes},
+    "golden_seed": 42,
+    "model": {{"n_heads": {heads}, "lif_beta": 0.9, "lif_theta": 1.0, "prng_sharing": "per-row"}},
+    "dataset": {{"test": "dataset_test.bin", "n": {n}}},
+    "variants": [{variants}]
+}}"#,
+        s = spec.image_size,
+        p = spec.patch_size,
+        classes = spec.n_classes,
+        heads = spec.n_heads,
+        n = spec.dataset_n,
+        variants = variants.join(", "),
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).context("writing manifest.json")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Dataset, Manifest};
+
+    #[test]
+    fn synthesized_artifacts_parse_and_index() {
+        let dir = std::env::temp_dir()
+            .join(format!("ssa-synth-ut-{}", std::process::id()));
+        let spec = SyntheticSpec { time_steps: vec![2, 4], ..SyntheticSpec::default() };
+        write_artifacts(&dir, &spec).expect("write artifacts");
+        let m = Manifest::load(&dir).expect("manifest parses");
+        assert_eq!(m.image_size, 16);
+        assert_eq!(m.variants.len(), 5, "2 T values x 2 spiking archs + ann");
+        assert!(m.variant("ssa_t2").is_ok());
+        assert!(m.variant("spikformer_t4").is_ok());
+        assert!(m.variant("ann").is_ok());
+        assert_eq!(m.model.n_heads, Some(4));
+        let ds = Dataset::load(&m.dataset_test).expect("dataset parses");
+        assert_eq!(ds.len(), 64);
+        assert_eq!(ds.image_size, 16);
+        assert!(ds.labels.iter().all(|&l| l < 10));
+        assert!(ds.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        let dir = std::env::temp_dir().join("ssa-synth-never-written");
+        let bad = SyntheticSpec { patch_size: 5, ..SyntheticSpec::default() };
+        assert!(write_artifacts(&dir, &bad).is_err());
+        let bad2 = SyntheticSpec { n_heads: 3, ..SyntheticSpec::default() };
+        assert!(write_artifacts(&dir, &bad2).is_err());
+    }
+}

@@ -8,9 +8,13 @@ use anyhow::{bail, Result};
 use ssa_repro::cli::{Args, USAGE};
 use ssa_repro::config::{AttnConfig, BackendKind, PrngSharing};
 use ssa_repro::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, SeedPolicy, Target};
+use ssa_repro::coordinator::router::variant_key;
 use ssa_repro::experiments::{figures, headline, table1, table2, table3};
 use ssa_repro::hw::{simulate, SpikeStreams};
-use ssa_repro::runtime::Dataset;
+use ssa_repro::loadgen::{
+    self, ArrivalMode, BenchReport, BenchRun, ImageSource, LoadSpec, Scenario, SyntheticSpec,
+};
+use ssa_repro::runtime::{Dataset, Manifest};
 
 fn main() {
     ssa_repro::util::logging::init_from_env();
@@ -31,6 +35,7 @@ fn run(args: &Args) -> Result<()> {
     match args.subcommand() {
         Some("info") => info(),
         Some("serve") => serve(args),
+        Some("serve-bench") => serve_bench(args),
         Some("simulate") => simulate_cmd(args),
         Some("experiments") => experiments(args),
         _ => {
@@ -66,11 +71,12 @@ fn serve(args: &Args) -> Result<()> {
     let ensemble: u32 = args.opt_parse("ensemble", 1)?;
     let max_batch: usize = args.opt_parse("max-batch", 8)?;
     let max_delay_ms: u64 = args.opt_parse("max-delay-ms", 5)?;
+    let workers: usize = args.opt_parse("workers", 1)?;
     let backend = backend_kind(args)?;
 
-    let target = parse_target(&target_s)?;
+    let target = Target::parse(&target_s)?;
     let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(max_delay_ms) };
-    let mut cfg = CoordinatorConfig::new(dir).with_backend(backend);
+    let mut cfg = CoordinatorConfig::new(dir).with_backend(backend).with_workers(workers);
     cfg.policy = policy;
     cfg.preload = vec![target_s.clone()];
 
@@ -80,8 +86,10 @@ fn serve(args: &Args) -> Result<()> {
         if ensemble > 1 { SeedPolicy::Ensemble(ensemble) } else { SeedPolicy::PerBatch };
 
     println!(
-        "serving {n_requests} requests against {target_s} on the {} backend ...",
-        coord.backend().name()
+        "serving {n_requests} requests against {target_s} on the {} backend \
+         ({} worker(s)) ...",
+        coord.backend().name(),
+        coord.workers()
     );
     let mut correct = 0usize;
     let mut receivers = Vec::new();
@@ -106,15 +114,108 @@ fn serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn parse_target(s: &str) -> Result<Target> {
-    if s == "ann" {
-        return Ok(Target::ann());
+/// The `serve-bench` subcommand: start a coordinator per requested worker
+/// count, drive it with the scenario load, and record everything —
+/// client-side latency/throughput plus the coordinator's batching and
+/// per-worker-utilization telemetry — into `BENCH_serving.json`.
+fn serve_bench(args: &Args) -> Result<()> {
+    let backend = backend_kind(args)?;
+    let duration = Duration::from_secs_f64(args.opt_parse("duration", 5.0f64)?);
+    let max_batch: usize = args.opt_parse("max-batch", 8)?;
+    let max_delay_ms: u64 = args.opt_parse("max-delay-ms", 5)?;
+    let seed: u64 = args.opt_parse("seed", 0x10AD_5EEDu64)?;
+
+    let workers_spec = args.opt_or("workers", "1");
+    let workers: Vec<usize> = workers_spec
+        .split(',')
+        .map(|w| {
+            w.trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("invalid --workers {workers_spec:?}: {e}"))
+        })
+        .collect::<Result<_>>()?;
+
+    let mode = match (args.opt("rps"), args.opt("concurrency")) {
+        (Some(_), Some(_)) => {
+            bail!("--rps (open loop) and --concurrency (closed loop) are mutually exclusive")
+        }
+        (Some(r), None) => ArrivalMode::Open {
+            rps: r.parse().map_err(|e| anyhow::anyhow!("invalid --rps {r:?}: {e}"))?,
+        },
+        (None, Some(c)) => ArrivalMode::Closed {
+            concurrency: c
+                .parse()
+                .map_err(|e| anyhow::anyhow!("invalid --concurrency {c:?}: {e}"))?,
+        },
+        (None, None) => ArrivalMode::Closed { concurrency: 8 },
+    };
+
+    let default_policy = loadgen::parse_seed_policy(&args.opt_or("seed-policy", "perbatch"))?;
+    let scenario = Scenario::parse(&args.opt_or("mix", "ssa_t4"), default_policy)?;
+
+    let dir = if args.flag("synthetic") {
+        let dir = std::env::temp_dir()
+            .join(format!("ssa-serve-bench-{}", std::process::id()));
+        loadgen::write_artifacts(&dir, &SyntheticSpec::default())?;
+        println!("synthesized artifacts at {}", dir.display());
+        dir
+    } else {
+        artifacts_dir(args)
+    };
+
+    let manifest = Manifest::load(&dir)?;
+    let images = match Dataset::load(&manifest.dataset_test) {
+        Ok(ds) => ImageSource::from_dataset(ds)?,
+        Err(e) => {
+            println!("dataset unavailable ({e:#}); using synthetic images");
+            ImageSource::synthetic(manifest.image_size, 64, seed ^ 0x1A6E)
+        }
+    };
+    let preload: Vec<String> = {
+        let mut keys: Vec<String> =
+            scenario.entries.iter().map(|e| variant_key(&e.target)).collect();
+        keys.sort();
+        keys.dedup();
+        keys
+    };
+
+    let spec = LoadSpec { mode, duration, scenario: scenario.clone(), seed };
+    let mut report = BenchReport {
+        scenario: scenario.name.clone(),
+        mode: mode.describe(),
+        backend: backend.name().to_string(),
+        duration_s: duration.as_secs_f64(),
+        runs: Vec::new(),
+    };
+    for &w in &workers {
+        let mut cfg = CoordinatorConfig::new(dir.clone())
+            .with_backend(backend)
+            .with_workers(w);
+        cfg.policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(max_delay_ms) };
+        cfg.preload = preload.clone();
+        let coord = Coordinator::start(cfg)?;
+        println!(
+            "serve-bench: {} for {:.1}s on the {} backend, {} worker(s) ...",
+            mode.describe(),
+            duration.as_secs_f64(),
+            coord.backend().name(),
+            coord.workers()
+        );
+        let stats = loadgen::run(&coord, &spec, &images)?;
+        report.runs.push(BenchRun::new(
+            coord.workers(),
+            stats,
+            coord.metrics().report(),
+            coord.metrics().worker_report(),
+        ));
+        coord.shutdown();
     }
-    if let Some((arch, t)) = s.rsplit_once("_t") {
-        let t: usize = t.parse()?;
-        return Ok(Target { arch: arch.to_string(), time_steps: t });
-    }
-    bail!("cannot parse target {s:?} (expected e.g. `ann`, `ssa_t10`)");
+
+    print!("{}", report.render());
+    let out = PathBuf::from(args.opt_or("out", "BENCH_serving.json"));
+    report.write(&out)?;
+    println!("wrote {}", out.display());
+    Ok(())
 }
 
 fn simulate_cmd(args: &Args) -> Result<()> {

@@ -1,0 +1,163 @@
+//! Multi-worker replica pool.
+//!
+//! The coordinator used to drain every batch on a single inference
+//! thread — a constraint inherited from PJRT's `Rc`-based `!Send`
+//! handles.  The pool generalizes that design instead of fighting it:
+//! `N` worker threads each construct their *own* backend instance and
+//! own an independent replica of every variant they serve, pulling
+//! batches from the shared [`Router`] queue.  No model state crosses a
+//! thread boundary, so the backend traits stay `!Send`-friendly and the
+//! native engine scales across cores with no locking on the hot path.
+//!
+//! Invariants:
+//! * `effective_workers` clamps the pool to the engine's capability —
+//!   the XLA engine is pinned to one worker, the native engine
+//!   replicates freely.
+//! * PerBatch/Ensemble seeds come from one pool-wide `AtomicU32`, so no
+//!   two workers ever assign the same "fresh" seed.
+//! * `Fixed(s)` requests are bit-identical for any worker count on
+//!   engines with per-row seed support (see `worker::serve_batch`).
+//! * Shutdown is graceful: closing the router lets every worker drain
+//!   the remaining queue before [`WorkerPool::join`] returns.
+
+mod worker;
+
+use std::sync::atomic::AtomicU32;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::config::BackendKind;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router::Router;
+use crate::runtime::Manifest;
+
+/// Pool sizing + per-worker startup configuration.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Requested worker count (clamped by [`effective_workers`]).
+    pub workers: usize,
+    pub backend: BackendKind,
+    /// Variant keys every worker loads eagerly at startup.
+    pub preload: Vec<String>,
+    /// First value of the pool-shared PerBatch/Ensemble seed counter.
+    pub initial_batch_seed: u32,
+}
+
+/// The worker count actually spawned: at least 1, at most what the
+/// engine supports (`BackendKind::max_workers`).
+pub fn effective_workers(backend: BackendKind, requested: usize) -> usize {
+    requested.clamp(1, backend.max_workers())
+}
+
+/// Handle to the running workers.  The router is the work feed *and* the
+/// shutdown signal: close it, then [`Self::join`].
+pub struct WorkerPool {
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn the workers and block until every one reports ready (backend
+    /// constructed, preloads loaded).  On any startup failure the router
+    /// is closed, already-started workers are joined, and the error is
+    /// returned — no half-alive pool escapes.
+    pub fn start(
+        cfg: &PoolConfig,
+        manifest: &Manifest,
+        router: &Arc<Router>,
+        metrics: &Arc<Metrics>,
+    ) -> Result<Self> {
+        let workers = effective_workers(cfg.backend, cfg.workers);
+        if workers != cfg.workers {
+            crate::log_warn!(
+                "worker pool: clamping {} requested worker(s) to {workers} ({} backend)",
+                cfg.workers,
+                cfg.backend.name()
+            );
+        }
+        let batch_seed = Arc::new(AtomicU32::new(cfg.initial_batch_seed));
+        let mut handles = Vec::with_capacity(workers);
+        let mut readies = Vec::with_capacity(workers);
+        // any failure below (spawn OR worker startup) must not leak the
+        // already-running workers: close the router so they exit their
+        // drain loop, join them, then surface the error
+        let mut startup_err: Option<anyhow::Error> = None;
+        for worker_id in 0..workers {
+            let (tx, rx) = mpsc::channel::<Result<()>>();
+            let ctx = worker::WorkerContext {
+                worker_id,
+                manifest: manifest.clone(),
+                router: Arc::clone(router),
+                metrics: Arc::clone(metrics),
+                preload: cfg.preload.clone(),
+                backend: cfg.backend,
+                batch_seed: Arc::clone(&batch_seed),
+            };
+            match std::thread::Builder::new()
+                .name(format!("ssa-worker-{worker_id}"))
+                .spawn(move || worker::run(ctx, tx))
+            {
+                Ok(handle) => {
+                    handles.push(handle);
+                    readies.push(rx);
+                }
+                Err(e) => {
+                    startup_err = Some(
+                        anyhow::Error::from(e)
+                            .context(format!("spawning pool worker {worker_id}")),
+                    );
+                    break;
+                }
+            }
+        }
+        if startup_err.is_none() {
+            for (worker_id, rx) in readies.into_iter().enumerate() {
+                let up = rx
+                    .recv()
+                    .with_context(|| format!("pool worker {worker_id} died during startup"))
+                    .and_then(|r| r);
+                if let Err(e) = up {
+                    startup_err =
+                        Some(e.context(format!("starting pool worker {worker_id}")));
+                    break;
+                }
+            }
+        }
+        if let Some(e) = startup_err {
+            router.close();
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+        Ok(Self { handles })
+    }
+
+    /// Workers actually running (after clamping).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Join every worker.  The router must be closed first, otherwise
+    /// the workers never leave their drain loop.  Idempotent.
+    pub fn join(&mut self) {
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_workers_clamps_to_engine_capability() {
+        assert_eq!(effective_workers(BackendKind::Native, 0), 1);
+        assert_eq!(effective_workers(BackendKind::Native, 1), 1);
+        assert_eq!(effective_workers(BackendKind::Native, 8), 8);
+        assert_eq!(effective_workers(BackendKind::Xla, 8), 1, "PJRT stays pinned");
+        assert_eq!(effective_workers(BackendKind::Xla, 0), 1);
+    }
+}

@@ -1,0 +1,198 @@
+//! The per-worker drain loop.
+//!
+//! Each worker thread owns an *independent* execution engine plus its own
+//! replica cache of loaded variants — nothing model-related is shared, so
+//! the `InferenceBackend` / `LoadedVariant` traits never need `Send`
+//! (PJRT handles are `Rc`-based) and native replicas scale across cores
+//! with zero lock traffic on the inference path.  The only cross-worker
+//! state is the router queue, the metrics registry, and the
+//! PerBatch/Ensemble seed counter (an `AtomicU32`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::attention::model::image_seed;
+use crate::config::BackendKind;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{ClassifyRequest, ClassifyResponse, SeedPolicy};
+use crate::coordinator::router::Router;
+use crate::runtime::{create_backend, LoadedVariant, Manifest};
+
+/// Everything one worker needs, moved into its thread at spawn.
+pub(crate) struct WorkerContext {
+    pub worker_id: usize,
+    pub manifest: Manifest,
+    pub router: Arc<Router>,
+    pub metrics: Arc<Metrics>,
+    pub preload: Vec<String>,
+    pub backend: BackendKind,
+    /// Shared PerBatch/Ensemble seed counter (per-pool, not per-worker,
+    /// so two workers never assign the same "fresh" seed).
+    pub batch_seed: Arc<AtomicU32>,
+}
+
+/// Worker body: construct the backend *inside* the thread, preload
+/// replicas, signal readiness, then drain the router until it closes.
+pub(crate) fn run(ctx: WorkerContext, ready: mpsc::Sender<Result<()>>) {
+    let backend = match create_backend(ctx.backend) {
+        Ok(b) => b,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let mut replicas: HashMap<String, Box<dyn LoadedVariant>> = HashMap::new();
+    for key in &ctx.preload {
+        match ctx.manifest.variant(key).and_then(|v| backend.load(&ctx.manifest, v)) {
+            Ok(m) => {
+                replicas.insert(key.clone(), m);
+            }
+            Err(e) => {
+                let _ = ready.send(Err(e));
+                return;
+            }
+        }
+    }
+    ctx.metrics.register_worker(ctx.worker_id);
+    crate::log_info!(
+        "pool worker {}: {} backend up, {} replica(s) preloaded",
+        ctx.worker_id,
+        backend.name(),
+        replicas.len()
+    );
+    let _ = ready.send(Ok(()));
+
+    let max_batch = ctx.router.policy().max_batch;
+    while let Some((key, batch)) = ctx.router.next_batch() {
+        if batch.is_empty() {
+            continue; // the router never emits these; guard serve_batch anyway
+        }
+        // lazy-load this worker's replica on first use
+        if !replicas.contains_key(&key) {
+            match ctx.manifest.variant(&key).and_then(|v| backend.load(&ctx.manifest, v)) {
+                Ok(m) => {
+                    replicas.insert(key.clone(), m);
+                }
+                Err(e) => {
+                    crate::log_error!("worker {}: loading variant {key}: {e:#}", ctx.worker_id);
+                    ctx.metrics.record_error(&key);
+                    continue; // reply senders drop -> callers see RecvError
+                }
+            }
+        }
+        let model = replicas[&key].as_ref();
+        let t0 = Instant::now();
+        // a failed batch still charges busy time, but its requests were
+        // never answered — count 0 served so per-worker request totals
+        // always agree with the per-target totals
+        let served = match serve_batch(model, &batch, &ctx.metrics, &key, max_batch, &ctx.batch_seed)
+        {
+            Ok(()) => batch.len(),
+            Err(e) => {
+                crate::log_error!("worker {}: serving batch on {key}: {e:#}", ctx.worker_id);
+                ctx.metrics.record_error(&key);
+                0
+            }
+        };
+        ctx.metrics
+            .record_worker(ctx.worker_id, served, t0.elapsed().as_secs_f64() * 1e6);
+    }
+    crate::log_debug!("pool worker {}: router closed, exiting", ctx.worker_id);
+}
+
+fn serve_batch(
+    model: &dyn LoadedVariant,
+    batch: &[ClassifyRequest],
+    metrics: &Metrics,
+    key: &str,
+    max_batch: usize,
+    batch_seed: &AtomicU32,
+) -> Result<()> {
+    let model_batch = model.batch();
+    anyhow::ensure!(
+        batch.len() <= model_batch,
+        "batch {} exceeds model batch {model_batch}",
+        batch.len()
+    );
+    // the router only groups requests sharing one seed policy; reject
+    // a mixed batch outright rather than mis-seeding the tail requests
+    let policy = batch[0].seed_policy;
+    anyhow::ensure!(
+        batch.iter().all(|r| r.seed_policy == policy),
+        "mixed seed policies in one batch (router invariant violated)"
+    );
+
+    // assemble; pad only for fixed-shape engines (XLA) — the native
+    // engine accepts partial batches, so padding rows (whose results are
+    // never replied to) would just burn forward-pass compute
+    let rows = if model.pad_to_model_batch() { model_batch } else { batch.len() };
+    let px = batch[0].image.len();
+    let mut images = Vec::with_capacity(rows * px);
+    for r in batch {
+        anyhow::ensure!(r.image.len() == px, "ragged image sizes in batch");
+        images.extend_from_slice(&r.image);
+    }
+    for _ in batch.len()..rows {
+        images.extend_from_slice(&batch.last().unwrap().image);
+    }
+
+    // allocate seeds from the pool-shared counter
+    let (seeds, seed_reported) = match policy {
+        SeedPolicy::Fixed(s) => (vec![s], s),
+        SeedPolicy::PerBatch => {
+            let s = batch_seed.fetch_add(1, Ordering::Relaxed);
+            (vec![s], s)
+        }
+        SeedPolicy::Ensemble(n) => {
+            let n = n.max(1);
+            let s0 = batch_seed.fetch_add(n, Ordering::Relaxed);
+            ((0..n).map(|i| s0.wrapping_add(i)).collect(), s0)
+        }
+    };
+
+    // run (ensemble averages logits across seeds)
+    let classes = model.variant().output_shape[1];
+    let logits_acc = match policy {
+        // Fixed-seed determinism contract: on engines with per-row seed
+        // support, every row runs under the stream a *singleton* batch
+        // would use (row 0 of `s`), so the result for (image, Fixed(s))
+        // is bit-identical under any batch placement or worker count.
+        SeedPolicy::Fixed(s) if model.supports_row_seeds() => {
+            model.infer_rows(&images, &vec![image_seed(s, 0); rows])?
+        }
+        _ => {
+            let mut acc = vec![0.0f32; rows * classes];
+            for &seed in &seeds {
+                let logits = model.infer(&images, seed)?;
+                for (a, l) in acc.iter_mut().zip(&logits) {
+                    *a += l / seeds.len() as f32;
+                }
+            }
+            acc
+        }
+    };
+
+    // reply per request
+    let now = Instant::now();
+    let mut lats = Vec::with_capacity(batch.len());
+    for (i, req) in batch.iter().enumerate() {
+        let row = &logits_acc[i * classes..(i + 1) * classes];
+        let class = crate::util::argmax(row).unwrap_or(0);
+        let latency_us = now.duration_since(req.submitted_at).as_secs_f64() * 1e6;
+        lats.push(latency_us);
+        let _ = req.reply.send(ClassifyResponse {
+            id: req.id,
+            class,
+            logits: row.to_vec(),
+            latency_us,
+            batch_size: batch.len(),
+            seed: seed_reported,
+        });
+    }
+    metrics.record_batch(key, batch.len(), max_batch, &lats);
+    Ok(())
+}

@@ -41,8 +41,37 @@ pub trait LoadedVariant {
     }
 
     /// Run one inference: `images` is a row-major `[batch, S, S]` f32
-    /// buffer in [0,1]; returns `[batch, n_classes]` logits.
+    /// buffer in [0,1]; returns `[batch, n_classes]` logits.  `batch`
+    /// must equal [`Self::batch`] unless the engine accepts partial
+    /// batches ([`Self::pad_to_model_batch`] is false).
     fn infer(&self, images: &[f32], seed: u32) -> Result<Vec<f32>>;
+
+    /// Whether callers must pad input buffers to the full model batch.
+    /// XLA graphs have fixed input shapes (true, the default); the
+    /// native engine loops rows and accepts any batch size (false), so
+    /// the pool never runs forward passes for padding rows that are
+    /// never replied to.
+    fn pad_to_model_batch(&self) -> bool {
+        true
+    }
+
+    /// True when the engine can run each batch row under an explicitly
+    /// chosen seed stream ([`Self::infer_rows`]).  The native engine can;
+    /// XLA graphs take a single scalar seed input, so they cannot.  The
+    /// worker pool uses this to give `Fixed(s)` requests bit-identical
+    /// results regardless of batch placement or worker count.
+    fn supports_row_seeds(&self) -> bool {
+        false
+    }
+
+    /// Run one inference where row `i` of `images` draws from the
+    /// pre-expanded stream `row_seeds[i]` (see
+    /// `attention::model::image_seed`).  Only meaningful when
+    /// [`Self::supports_row_seeds`] is true; the default errors.
+    fn infer_rows(&self, images: &[f32], row_seeds: &[u64]) -> Result<Vec<f32>> {
+        let _ = (images, row_seeds);
+        anyhow::bail!("this engine does not support per-row seed streams")
+    }
 
     /// Argmax class per batch row (total-order; never panics on NaN).
     fn classify(&self, images: &[f32], seed: u32) -> Result<Vec<usize>> {

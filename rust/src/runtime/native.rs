@@ -160,7 +160,36 @@ impl LoadedVariant for NativeVariant {
         &self.variant
     }
 
+    /// The native engine loops rows, so any batch size up to the model
+    /// batch serves; row count is derived from the buffer (a ragged
+    /// buffer still fails the model's exact-size check, and oversized
+    /// buffers are rejected to keep parity with fixed-shape engines).
     fn infer(&self, images: &[f32], seed: u32) -> Result<Vec<f32>> {
-        self.model.infer(images, self.variant.batch, seed)
+        let px = self.model.geometry().image_size.pow(2);
+        let rows = images.len() / px.max(1);
+        anyhow::ensure!(
+            rows <= self.variant.batch,
+            "{rows} rows exceed variant batch {}",
+            self.variant.batch
+        );
+        self.model.infer(images, rows, seed)
+    }
+
+    fn pad_to_model_batch(&self) -> bool {
+        false
+    }
+
+    fn supports_row_seeds(&self) -> bool {
+        true
+    }
+
+    fn infer_rows(&self, images: &[f32], row_seeds: &[u64]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            row_seeds.len() <= self.variant.batch,
+            "{} rows exceed variant batch {}",
+            row_seeds.len(),
+            self.variant.batch
+        );
+        self.model.infer_rows(images, row_seeds.len(), row_seeds)
     }
 }

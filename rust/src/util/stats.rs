@@ -64,6 +64,134 @@ pub fn percentile(samples: &[f64], p: f64) -> f64 {
     sorted[rank]
 }
 
+/// Geometric bucket resolution of [`LogHistogram`] (buckets per octave).
+const BUCKETS_PER_OCTAVE: usize = 8;
+/// Octaves covered: [1us, 2^40us) ≈ 1us .. 12.7 days.
+const OCTAVES: usize = 40;
+/// Bucket 0 holds sub-microsecond samples; the last bucket overflows.
+const N_BUCKETS: usize = 1 + BUCKETS_PER_OCTAVE * OCTAVES;
+
+/// Fixed-size log-bucketed histogram for positive latency-style samples.
+///
+/// The coordinator keeps one per target: a per-sample `Vec` grows without
+/// bound under sustained load, while this stays a constant ~2.6 KB at any
+/// traffic volume.  Buckets are geometric (8 per octave over
+/// [1us, 2^40us)), bounding percentile error to about half a bucket
+/// (±4.4%); count/mean/min/max are tracked exactly.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; N_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket(v: f64) -> usize {
+        if v < 1.0 {
+            0
+        } else {
+            (1 + (v.log2() * BUCKETS_PER_OCTAVE as f64) as usize).min(N_BUCKETS - 1)
+        }
+    }
+
+    /// Geometric midpoint of a bucket (what percentiles report).
+    fn representative(bucket: usize) -> f64 {
+        if bucket == 0 {
+            0.5
+        } else {
+            2f64.powf((bucket - 1) as f64 / BUCKETS_PER_OCTAVE as f64 + 0.5 / BUCKETS_PER_OCTAVE as f64)
+        }
+    }
+
+    /// Record one sample.  Non-finite / negative values are dropped
+    /// (defensive: a single NaN must never poison the percentiles).
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            return;
+        }
+        self.counts[Self::bucket(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Nearest-rank percentile (same rank convention as [`percentile`]),
+    /// resolved to the containing bucket's midpoint and clamped into the
+    /// exact observed [min, max] range.  0.0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 100.0) / 100.0) * (self.count - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return Self::representative(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram into this one (merging per-thread stats).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Latency summary used by coordinator metrics and bench reports.
 #[derive(Clone, Debug)]
 pub struct LatencySummary {
@@ -76,18 +204,16 @@ pub struct LatencySummary {
 }
 
 impl LatencySummary {
-    pub fn from_micros(samples: &[f64]) -> Self {
-        let mut r = Running::new();
-        for &s in samples {
-            r.push(s);
-        }
+    /// Summary of a [`LogHistogram`]: exact count/mean/max, percentiles
+    /// at bucket resolution.
+    pub fn from_histogram(h: &LogHistogram) -> Self {
         Self {
-            count: samples.len(),
-            mean_us: r.mean(),
-            p50_us: percentile(samples, 50.0),
-            p95_us: percentile(samples, 95.0),
-            p99_us: percentile(samples, 99.0),
-            max_us: r.max(),
+            count: h.count() as usize,
+            mean_us: h.mean(),
+            p50_us: h.percentile(50.0),
+            p95_us: h.percentile(95.0),
+            p99_us: h.percentile(99.0),
+            max_us: h.max(),
         }
     }
 }
@@ -133,5 +259,76 @@ mod tests {
     #[should_panic]
     fn percentile_empty_panics() {
         percentile(&[], 50.0);
+    }
+
+    #[test]
+    fn log_histogram_percentiles_track_exact_within_bucket_error() {
+        let samples: Vec<f64> = (1..=5000).map(|i| i as f64).collect();
+        let mut h = LogHistogram::new();
+        for &s in &samples {
+            h.record(s);
+        }
+        assert_eq!(h.count(), 5000);
+        assert!((h.mean() - 2500.5).abs() < 1e-9, "mean is exact");
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 5000.0);
+        for p in [50.0, 95.0, 99.0] {
+            let exact = percentile(&samples, p);
+            let approx = h.percentile(p);
+            // 8 buckets/octave => worst-case half-bucket error ~4.4%
+            assert!(
+                (approx - exact).abs() / exact < 0.05,
+                "p{p}: approx {approx} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn log_histogram_edge_samples() {
+        let mut h = LogHistogram::new();
+        assert_eq!(h.percentile(50.0), 0.0, "empty histogram reports 0");
+        h.record(0.25); // sub-microsecond underflow bucket
+        h.record(1e15); // beyond the top octave: overflow bucket
+        h.record(f64::NAN); // dropped
+        h.record(-3.0); // dropped
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.min(), 0.25);
+        assert_eq!(h.max(), 1e15);
+        // percentiles stay inside the observed range even for clamped buckets
+        let p99 = h.percentile(99.0);
+        assert!((0.25..=1e15).contains(&p99));
+    }
+
+    #[test]
+    fn log_histogram_merge_matches_single_stream() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut whole = LogHistogram::new();
+        for i in 1..=1000 {
+            let v = (i * 37 % 911) as f64 + 0.5;
+            if i % 2 == 0 { a.record(v) } else { b.record(v) }
+            whole.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        for p in [50.0, 95.0, 99.0] {
+            assert_eq!(a.percentile(p), whole.percentile(p), "p{p}");
+        }
+    }
+
+    #[test]
+    fn summary_from_histogram_has_identical_shape() {
+        let mut h = LogHistogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 10.0);
+        }
+        let s = LatencySummary::from_histogram(&h);
+        assert_eq!(s.count, 100);
+        assert_eq!(s.max_us, 1000.0);
+        assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us);
+        assert!((s.mean_us - 505.0).abs() < 1e-9);
     }
 }

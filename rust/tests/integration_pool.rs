@@ -1,0 +1,201 @@
+//! Worker-pool integration: a multi-worker coordinator serves correct
+//! results under concurrent load, drains gracefully on shutdown, and —
+//! the load-bearing contract — produces bit-identical fixed-seed results
+//! for any worker count.  Also smoke-tests the load-generation subsystem
+//! end-to-end against a live pool (closed and open loop), including the
+//! BENCH_serving.json report shape.
+//!
+//! Artifacts are synthesized by `loadgen::synthetic` — manifest + random
+//! weights + dataset, no Python, no XLA.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ssa_repro::config::BackendKind;
+use ssa_repro::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, SeedPolicy, Target,
+};
+use ssa_repro::loadgen::{
+    self, ArrivalMode, BenchReport, BenchRun, ImageSource, LoadSpec, Scenario, SyntheticSpec,
+};
+use ssa_repro::util::json::Json;
+
+const IMAGE: usize = 16;
+const PX: usize = IMAGE * IMAGE;
+
+/// Small-but-real geometry: 16x16 images, 1 encoder layer, T=4.
+fn artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("ssa-pool-it-{}-{tag}", std::process::id()));
+    let spec = SyntheticSpec {
+        d_model: 16,
+        n_heads: 2,
+        d_mlp: 32,
+        n_layers: 1,
+        dataset_n: 16,
+        ..SyntheticSpec::default()
+    };
+    loadgen::write_artifacts(&dir, &spec).expect("synthesize artifacts");
+    dir
+}
+
+fn start(dir: PathBuf, workers: usize, max_batch: usize, delay_ms: u64) -> Coordinator {
+    let mut cfg = CoordinatorConfig::new(dir)
+        .with_backend(BackendKind::Native)
+        .with_workers(workers);
+    cfg.policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(delay_ms) };
+    cfg.preload = vec!["ssa_t4".into()];
+    Coordinator::start(cfg).expect("pool coordinator must start")
+}
+
+fn image(i: usize) -> Vec<f32> {
+    (0..PX).map(|p| ((i * 31 + p * 7) % 97) as f32 / 96.0).collect()
+}
+
+// --- fixed-seed determinism across worker counts (satellite) ----------------
+
+#[test]
+fn fixed_seed_results_bit_identical_across_worker_counts() {
+    let dir = artifacts("determinism");
+    let run = |workers: usize| -> Vec<Vec<f32>> {
+        let coord = start(dir.clone(), workers, 4, 5);
+        assert_eq!(coord.workers(), workers);
+        // submit everything up front so batch composition genuinely races
+        // across workers in the multi-worker run
+        let rxs: Vec<_> = (0..24)
+            .map(|i| {
+                coord
+                    .submit(Target::ssa(4), image(i), SeedPolicy::Fixed(77))
+                    .expect("submit")
+            })
+            .collect();
+        let out = rxs.into_iter().map(|rx| rx.recv().expect("reply").logits).collect();
+        coord.shutdown();
+        out
+    };
+    let single = run(1);
+    let pooled = run(4);
+    assert_eq!(
+        single, pooled,
+        "Fixed(77) logits must be bit-identical for --workers 1 vs --workers 4"
+    );
+}
+
+// --- correctness under concurrent multi-target load --------------------------
+
+#[test]
+fn multi_worker_pool_serves_concurrent_mixed_load() {
+    let coord = Arc::new(start(artifacts("mixed-load"), 4, 4, 3));
+    let mut handles = Vec::new();
+    for t in 0..4usize {
+        let c = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || {
+            let targets =
+                [Target::ssa(4), Target::ann(), Target::spikformer(4), Target::ssa(4)];
+            let mut ok = 0;
+            for i in 0..16 {
+                let r = c
+                    .classify(
+                        targets[(t + i) % targets.len()].clone(),
+                        image(t * 16 + i),
+                        SeedPolicy::PerBatch,
+                    )
+                    .expect("classify");
+                assert_eq!(r.logits.len(), 10);
+                assert!(r.class < 10);
+                assert!(r.logits.iter().all(|v| v.is_finite()));
+                ok += 1;
+            }
+            ok
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 64);
+
+    // the pool accounted every batch to some worker, and all 4 registered
+    let workers = coord.metrics().worker_report();
+    assert_eq!(workers.len(), 4, "all pool workers register in metrics");
+    let worker_reqs: u64 = workers.iter().map(|w| w.requests).sum();
+    assert_eq!(worker_reqs, 64, "every request accounted to exactly one worker");
+    let coord = Arc::try_unwrap(coord).unwrap_or_else(|_| panic!("coordinator still shared"));
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_drains_queued_requests() {
+    let coord = start(artifacts("drain"), 4, 4, 2);
+    let rxs: Vec<_> = (0..40)
+        .map(|i| {
+            coord
+                .submit(Target::ssa(4), image(i), SeedPolicy::PerBatch)
+                .expect("submit")
+        })
+        .collect();
+    coord.shutdown(); // close + join: must drain, not drop
+    for (i, rx) in rxs.into_iter().enumerate() {
+        rx.recv().unwrap_or_else(|_| panic!("request {i} dropped during graceful shutdown"));
+    }
+}
+
+// --- load generation end-to-end ----------------------------------------------
+
+#[test]
+fn closed_loop_loadgen_drives_live_pool() {
+    let dir = artifacts("loadgen-closed");
+    let coord = start(dir, 2, 4, 2);
+    let scenario =
+        Scenario::parse("ssa_t4*2,ann", SeedPolicy::PerBatch).expect("scenario");
+    let spec = LoadSpec {
+        mode: ArrivalMode::Closed { concurrency: 4 },
+        duration: Duration::from_millis(300),
+        scenario,
+        seed: 42,
+    };
+    let images = ImageSource::synthetic(IMAGE, 16, 7);
+    let stats = loadgen::run(&coord, &spec, &images).expect("loadgen run");
+    assert!(stats.ok > 0, "closed loop must complete requests");
+    assert_eq!(stats.errors, 0, "no errors expected on a healthy pool");
+    assert_eq!(stats.ok, stats.latency.count(), "every ok reply has a latency sample");
+    assert!(stats.throughput_rps() > 0.0);
+
+    let report = BenchReport {
+        scenario: spec.scenario.name.clone(),
+        mode: spec.mode.describe(),
+        backend: "native".into(),
+        duration_s: 0.3,
+        runs: vec![BenchRun::new(
+            coord.workers(),
+            stats,
+            coord.metrics().report(),
+            coord.metrics().worker_report(),
+        )],
+    };
+    let parsed = Json::parse(&report.to_json().to_string()).expect("report JSON parses");
+    assert_eq!(parsed.str_field("bench").unwrap(), "serving");
+    let runs = parsed.get("runs").and_then(Json::as_arr).unwrap();
+    assert_eq!(runs[0].usize_field("workers").unwrap(), 2);
+    assert!(
+        !runs[0].get("worker_util").and_then(Json::as_arr).unwrap().is_empty(),
+        "per-worker utilization recorded"
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn open_loop_loadgen_sustains_poisson_arrivals() {
+    let dir = artifacts("loadgen-open");
+    let coord = start(dir, 2, 4, 2);
+    let spec = LoadSpec {
+        mode: ArrivalMode::Open { rps: 150.0 },
+        duration: Duration::from_millis(300),
+        scenario: Scenario::uniform(Target::ssa(4), SeedPolicy::PerBatch),
+        seed: 9,
+    };
+    let images = ImageSource::synthetic(IMAGE, 16, 8);
+    let stats = loadgen::run(&coord, &spec, &images).expect("loadgen run");
+    assert!(stats.offered > 0, "pacer must submit");
+    assert_eq!(stats.ok + stats.errors, stats.offered, "every submit resolves");
+    assert_eq!(stats.errors, 0);
+    coord.shutdown();
+}

@@ -1,0 +1,28 @@
+//! End-to-end native forward-pass benchmark (`cargo bench --bench
+//! forward_native`): single-row + full-batch latency for SSA, Spikformer,
+//! and ANN, the retained dense reference baseline, and per-stage
+//! attribution.  Thin wrapper over [`ssa_repro::bench_native`] — the
+//! `bench-native` CLI subcommand runs the same matrix and additionally
+//! writes `BENCH_native.json`.
+//!
+//! Env knobs (benches take no CLI args under `cargo bench`):
+//!   BENCH_BUDGET_S      wall budget per benchmark in seconds (default 1)
+//!   BENCH_NATIVE_OUT    also write BENCH_native.json to this path
+
+use std::path::Path;
+use std::time::Duration;
+
+use ssa_repro::bench_native::{run, BenchNativeOpts};
+
+fn main() {
+    let mut opts = BenchNativeOpts::default();
+    if let Some(b) = std::env::var("BENCH_BUDGET_S").ok().and_then(|v| v.parse().ok()) {
+        opts.budget = Duration::from_secs_f64(b);
+    }
+    let report = run(&opts).expect("bench-native run");
+    print!("{}", report.render());
+    if let Ok(out) = std::env::var("BENCH_NATIVE_OUT") {
+        report.write(Path::new(&out)).expect("write BENCH_native.json");
+        println!("wrote {out}");
+    }
+}

@@ -19,14 +19,59 @@
 //! out   = LIF(LIF(res W_1) W_2 + res)       (spiking MLP, residual)
 //! ```
 
+use std::time::Instant;
+
 use anyhow::Result;
 
 use crate::attention::lif::LifLayer;
 use crate::attention::spikformer::SpikformerAttention;
 use crate::attention::ssa::{seeds, SsaAttention, SsaStepOutput};
 use crate::config::{AttnConfig, LifConfig, PrngSharing};
-use crate::tensor::Tensor;
+use crate::tensor::{spike_matmul_into, Tensor};
 use crate::util::bitpack::BitMatrix;
+
+/// Wall-clock attribution of forward-pass work across pipeline stages,
+/// in microseconds (accumulated over however many steps/layers ran).
+/// Filled by [`SsaEncoderLayer::step_into`] and
+/// [`crate::attention::model::NativeModel::infer_image_timed`]; rendered
+/// into `BENCH_native.json` by the `bench-native` harness.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageTimings {
+    /// Input rate coding + spiking patch embedding.
+    pub embed_us: f64,
+    /// Q/K/V projections and their LIF sheets (eq. 4).
+    pub qkv_us: f64,
+    /// Attention proper + output projection + residual LIF (eqs. 5-6).
+    pub attn_us: f64,
+    /// Spiking MLP including the residual merge.
+    pub mlp_us: f64,
+    /// Spike-count pooling + classifier head.
+    pub readout_us: f64,
+}
+
+impl StageTimings {
+    pub fn total_us(&self) -> f64 {
+        self.embed_us + self.qkv_us + self.attn_us + self.mlp_us + self.readout_us
+    }
+
+    pub fn accumulate(&mut self, other: &StageTimings) {
+        self.embed_us += other.embed_us;
+        self.qkv_us += other.qkv_us;
+        self.attn_us += other.attn_us;
+        self.mlp_us += other.mlp_us;
+        self.readout_us += other.readout_us;
+    }
+
+    pub fn scaled(&self, f: f64) -> StageTimings {
+        StageTimings {
+            embed_us: self.embed_us * f,
+            qkv_us: self.qkv_us * f,
+            attn_us: self.attn_us * f,
+            mlp_us: self.mlp_us * f,
+            readout_us: self.readout_us * f,
+        }
+    }
+}
 
 /// Geometry of one head as a standalone single-head attention block.
 pub fn head_config(cfg: &AttnConfig) -> AttnConfig {
@@ -43,6 +88,12 @@ pub fn head_config(cfg: &AttnConfig) -> AttnConfig {
 pub struct MultiHeadSsa {
     cfg: AttnConfig,
     heads: Vec<SsaAttention>,
+    // scratch arena (zero-alloc steady state): the current head's Q/K/V
+    // column slabs plus every head's step output, reused across steps
+    qh: BitMatrix,
+    kh: BitMatrix,
+    vh: BitMatrix,
+    head_out: Vec<SsaStepOutput>,
 }
 
 /// One multi-head step: per-head raw outputs plus the `[N, D]` merge.
@@ -58,7 +109,15 @@ impl MultiHeadSsa {
         let heads = (0..cfg.n_heads)
             .map(|h| SsaAttention::new(hc, sharing, seeds::head(base_seed, layer, h)))
             .collect();
-        Self { cfg, heads }
+        let (n, d_k) = (cfg.n_tokens, cfg.d_head);
+        Self {
+            cfg,
+            heads,
+            qh: BitMatrix::zeros(n, d_k),
+            kh: BitMatrix::zeros(n, d_k),
+            vh: BitMatrix::zeros(n, d_k),
+            head_out: (0..cfg.n_heads).map(|_| SsaStepOutput::new(n, d_k)).collect(),
+        }
     }
 
     pub fn n_heads(&self) -> usize {
@@ -72,21 +131,40 @@ impl MultiHeadSsa {
 
     /// One time step over `q, k, v: [N, D]` spike matrices.
     pub fn step(&mut self, q: &BitMatrix, k: &BitMatrix, v: &BitMatrix) -> MultiHeadStep {
-        let d_k = self.cfg.d_head;
-        let per_head: Vec<SsaStepOutput> = self
-            .heads
-            .iter_mut()
-            .enumerate()
-            .map(|(h, ssa)| {
-                let qh = q.col_slice(h * d_k, d_k);
-                let kh = k.col_slice(h * d_k, d_k);
-                let vh = v.col_slice(h * d_k, d_k);
-                ssa.step(&qh, &kh, &vh)
-            })
-            .collect();
-        let attns: Vec<&BitMatrix> = per_head.iter().map(|o| &o.attn).collect();
-        let merged = BitMatrix::hconcat(&attns);
+        let mut merged = BitMatrix::zeros(self.cfg.n_tokens, self.cfg.d_model);
+        let mut per_head = Vec::with_capacity(self.heads.len());
+        self.step_into(q, k, v, &mut merged, Some(&mut per_head));
         MultiHeadStep { per_head, merged }
+    }
+
+    /// [`Self::step`] writing the `[N, D]` merge into a pre-sized frame —
+    /// heads run over block-owned slab/output scratch and the merge is a
+    /// word-level column paste, so the steady state allocates nothing.
+    /// Head order (and therefore every PRNG draw) matches [`Self::step`].
+    /// When `tap` is set, this step's per-head outputs are appended to it
+    /// (bit-exactness test hook; clones, cold path).
+    pub fn step_into(
+        &mut self,
+        q: &BitMatrix,
+        k: &BitMatrix,
+        v: &BitMatrix,
+        merged: &mut BitMatrix,
+        tap: Option<&mut Vec<SsaStepOutput>>,
+    ) {
+        let d_k = self.cfg.d_head;
+        for h in 0..self.heads.len() {
+            q.col_slice_into(h * d_k, d_k, &mut self.qh);
+            k.col_slice_into(h * d_k, d_k, &mut self.kh);
+            v.col_slice_into(h * d_k, d_k, &mut self.vh);
+            self.heads[h].step_into(&self.qh, &self.kh, &self.vh, &mut self.head_out[h]);
+        }
+        merged.clear();
+        for (h, o) in self.head_out.iter().enumerate() {
+            merged.paste_cols(&o.attn, h * d_k);
+        }
+        if let Some(tap) = tap {
+            tap.extend(self.head_out.iter().cloned());
+        }
     }
 }
 
@@ -94,8 +172,16 @@ impl MultiHeadSsa {
 enum LayerAttention {
     Ssa(MultiHeadSsa),
     /// Per-head Spikformer blocks; elementwise LIF means per-head LIF +
-    /// concat is identical to the Python merge-then-LIF order.
-    Spikformer(Vec<SpikformerAttention>),
+    /// concat is identical to the Python merge-then-LIF order.  The slab
+    /// and per-head output scratch ride in the variant so the Spikformer
+    /// path is allocation-free per step too.
+    Spikformer {
+        heads: Vec<SpikformerAttention>,
+        qh: BitMatrix,
+        kh: BitMatrix,
+        vh: BitMatrix,
+        part: BitMatrix,
+    },
 }
 
 /// Weights of one encoder layer (names match `aot.py`'s `layer{l}/*`).
@@ -110,8 +196,10 @@ pub struct LayerWeights {
 }
 
 /// Per-request state of one spiking encoder layer (LIF membranes + the
-/// attention PRNG banks).  Weights stay in the model; state is cheap and
-/// rebuilt per inference so requests are independent and seed-addressed.
+/// attention PRNG banks + the per-layer scratch arena).  Weights stay in
+/// the model; state is cheap and rebuilt per inference so requests are
+/// independent and seed-addressed, while the scratch below is reused on
+/// every time step — steady-state `step_into` allocates nothing.
 pub struct SsaEncoderLayer {
     attn: LayerAttention,
     lif_q: LifLayer,
@@ -120,9 +208,44 @@ pub struct SsaEncoderLayer {
     lif_res: LifLayer,
     lif_mlp1: LifLayer,
     lif_mlp2: LifLayer,
+    // scratch arena — see DESIGN.md "hot-path memory layout"
+    cur: Tensor,       // [N, D] projection / residual current
+    mlp_cur: Tensor,   // [N, d_mlp] hidden current
+    q_s: BitMatrix,    // [N, D]
+    k_s: BitMatrix,    // [N, D]
+    v_s: BitMatrix,    // [N, D]
+    attn_s: BitMatrix, // [N, D] merged attention spikes
+    res_s: BitMatrix,  // [N, D] post-residual spikes
+    m1_s: BitMatrix,   // [N, d_mlp] hidden spikes
 }
 
 impl SsaEncoderLayer {
+    fn with_attention(
+        attn: LayerAttention,
+        cfg: AttnConfig,
+        lif: LifConfig,
+        d_mlp: usize,
+    ) -> Self {
+        let (n, d) = (cfg.n_tokens, cfg.d_model);
+        Self {
+            attn,
+            lif_q: LifLayer::new(n, d, lif),
+            lif_k: LifLayer::new(n, d, lif),
+            lif_v: LifLayer::new(n, d, lif),
+            lif_res: LifLayer::new(n, d, lif),
+            lif_mlp1: LifLayer::new(n, d_mlp, lif),
+            lif_mlp2: LifLayer::new(n, d, lif),
+            cur: Tensor::zeros(&[n, d]),
+            mlp_cur: Tensor::zeros(&[n, d_mlp]),
+            q_s: BitMatrix::zeros(n, d),
+            k_s: BitMatrix::zeros(n, d),
+            v_s: BitMatrix::zeros(n, d),
+            attn_s: BitMatrix::zeros(n, d),
+            res_s: BitMatrix::zeros(n, d),
+            m1_s: BitMatrix::zeros(n, d_mlp),
+        }
+    }
+
     /// `base_seed` is the request-level seed; head banks derive from it
     /// through [`seeds::head`] with this layer's index.
     pub fn new_ssa(
@@ -133,15 +256,12 @@ impl SsaEncoderLayer {
         layer: usize,
         d_mlp: usize,
     ) -> Self {
-        Self {
-            attn: LayerAttention::Ssa(MultiHeadSsa::new(cfg, sharing, base_seed, layer)),
-            lif_q: LifLayer::new(cfg.n_tokens, cfg.d_model, lif),
-            lif_k: LifLayer::new(cfg.n_tokens, cfg.d_model, lif),
-            lif_v: LifLayer::new(cfg.n_tokens, cfg.d_model, lif),
-            lif_res: LifLayer::new(cfg.n_tokens, cfg.d_model, lif),
-            lif_mlp1: LifLayer::new(cfg.n_tokens, d_mlp, lif),
-            lif_mlp2: LifLayer::new(cfg.n_tokens, cfg.d_model, lif),
-        }
+        Self::with_attention(
+            LayerAttention::Ssa(MultiHeadSsa::new(cfg, sharing, base_seed, layer)),
+            cfg,
+            lif,
+            d_mlp,
+        )
     }
 
     pub fn new_spikformer(
@@ -151,17 +271,14 @@ impl SsaEncoderLayer {
         d_mlp: usize,
     ) -> Self {
         let hc = head_config(&cfg);
-        let heads =
-            (0..cfg.n_heads).map(|_| SpikformerAttention::new(hc, scale, lif)).collect();
-        Self {
-            attn: LayerAttention::Spikformer(heads),
-            lif_q: LifLayer::new(cfg.n_tokens, cfg.d_model, lif),
-            lif_k: LifLayer::new(cfg.n_tokens, cfg.d_model, lif),
-            lif_v: LifLayer::new(cfg.n_tokens, cfg.d_model, lif),
-            lif_res: LifLayer::new(cfg.n_tokens, cfg.d_model, lif),
-            lif_mlp1: LifLayer::new(cfg.n_tokens, d_mlp, lif),
-            lif_mlp2: LifLayer::new(cfg.n_tokens, cfg.d_model, lif),
-        }
+        let attn = LayerAttention::Spikformer {
+            heads: (0..cfg.n_heads).map(|_| SpikformerAttention::new(hc, scale, lif)).collect(),
+            qh: BitMatrix::zeros(cfg.n_tokens, cfg.d_head),
+            kh: BitMatrix::zeros(cfg.n_tokens, cfg.d_head),
+            vh: BitMatrix::zeros(cfg.n_tokens, cfg.d_head),
+            part: BitMatrix::zeros(cfg.n_tokens, cfg.d_head),
+        };
+        Self::with_attention(attn, cfg, lif, d_mlp)
     }
 
     /// One network time step; `spikes` is the `[N, D]` layer input and the
@@ -169,6 +286,90 @@ impl SsaEncoderLayer {
     /// `tap_heads` is set, the per-head SSA outputs of this step are
     /// appended to it (bit-exactness test hook; empty for Spikformer).
     pub fn step(
+        &mut self,
+        spikes: &BitMatrix,
+        w: &LayerWeights,
+        tap_heads: Option<&mut Vec<SsaStepOutput>>,
+    ) -> Result<BitMatrix> {
+        let mut out = BitMatrix::zeros(spikes.rows(), spikes.cols());
+        self.step_into(spikes, w, &mut out, tap_heads, None)?;
+        Ok(out)
+    }
+
+    /// [`Self::step`] writing the output frame into `out` — the
+    /// spike-native zero-allocation hot path.  Every dense product is a
+    /// [`spike_matmul_into`] over the packed input bits (same ascending-k
+    /// accumulation as the retained dense path, so f32 results are
+    /// bit-identical — see the invariant on `spike_matmul_into`), every
+    /// intermediate lives in the layer's scratch arena, and residual
+    /// merges add spike bits in place.  `timings`, when set, accumulates
+    /// per-stage wall time (qkv / attn / mlp) for the bench harness.
+    pub fn step_into(
+        &mut self,
+        spikes: &BitMatrix,
+        w: &LayerWeights,
+        out: &mut BitMatrix,
+        tap_heads: Option<&mut Vec<SsaStepOutput>>,
+        timings: Option<&mut StageTimings>,
+    ) -> Result<()> {
+        let mut clock = timings.map(|tm| (tm, Instant::now()));
+
+        // eq. (4): Q/K/V projections through per-projection LIF sheets
+        spike_matmul_into(spikes, &w.wq, &mut self.cur);
+        self.lif_q.step_into(&self.cur, &mut self.q_s);
+        spike_matmul_into(spikes, &w.wk, &mut self.cur);
+        self.lif_k.step_into(&self.cur, &mut self.k_s);
+        spike_matmul_into(spikes, &w.wv, &mut self.cur);
+        self.lif_v.step_into(&self.cur, &mut self.v_s);
+        if let Some((tm, t0)) = clock.as_mut() {
+            tm.qkv_us += t0.elapsed().as_secs_f64() * 1e6;
+            *t0 = Instant::now();
+        }
+
+        match &mut self.attn {
+            LayerAttention::Ssa(mh) => {
+                mh.step_into(&self.q_s, &self.k_s, &self.v_s, &mut self.attn_s, tap_heads);
+            }
+            LayerAttention::Spikformer { heads, qh, kh, vh, part } => {
+                let d_k = self.q_s.cols() / heads.len();
+                self.attn_s.clear();
+                for (h, sf) in heads.iter_mut().enumerate() {
+                    self.q_s.col_slice_into(h * d_k, d_k, qh);
+                    self.k_s.col_slice_into(h * d_k, d_k, kh);
+                    self.v_s.col_slice_into(h * d_k, d_k, vh);
+                    sf.step_into(qh, kh, vh, part);
+                    self.attn_s.paste_cols(part, h * d_k);
+                }
+            }
+        }
+
+        // residual merge in the current domain, then re-binarize
+        spike_matmul_into(&self.attn_s, &w.wo, &mut self.cur);
+        self.cur.add_assign_bits(spikes);
+        self.lif_res.step_into(&self.cur, &mut self.res_s);
+        if let Some((tm, t0)) = clock.as_mut() {
+            tm.attn_us += t0.elapsed().as_secs_f64() * 1e6;
+            *t0 = Instant::now();
+        }
+
+        // spiking MLP with residual current
+        spike_matmul_into(&self.res_s, &w.w1, &mut self.mlp_cur);
+        self.lif_mlp1.step_into(&self.mlp_cur, &mut self.m1_s);
+        spike_matmul_into(&self.m1_s, &w.w2, &mut self.cur);
+        self.cur.add_assign_bits(&self.res_s);
+        self.lif_mlp2.step_into(&self.cur, out);
+        if let Some((tm, t0)) = clock.as_mut() {
+            tm.mlp_us += t0.elapsed().as_secs_f64() * 1e6;
+        }
+        Ok(())
+    }
+
+    /// Retained pre-rewrite dense path: unpacks every spike frame to f32
+    /// and drives `Tensor::matmul`, allocating every intermediate per
+    /// step.  Bit-identical to [`Self::step_into`] by construction (same
+    /// accumulation order everywhere) — kept as the regression oracle and
+    /// the old-vs-new baseline the `bench-native` harness measures.
+    pub fn step_dense(
         &mut self,
         spikes: &BitMatrix,
         w: &LayerWeights,
@@ -189,7 +390,7 @@ impl SsaEncoderLayer {
                 }
                 out.merged
             }
-            LayerAttention::Spikformer(heads) => {
+            LayerAttention::Spikformer { heads, .. } => {
                 let d_k = q_s.cols() / heads.len();
                 let parts: Vec<BitMatrix> = heads
                     .iter_mut()

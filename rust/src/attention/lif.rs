@@ -30,20 +30,36 @@ impl LifLayer {
 
     /// Advance one step with input currents `[rows, cols]`; returns spikes.
     pub fn step(&mut self, current: &Tensor) -> BitMatrix {
-        assert_eq!(current.shape(), &[self.rows, self.cols]);
         let mut spikes = BitMatrix::zeros(self.rows, self.cols);
+        self.step_into(current, &mut spikes);
+        spikes
+    }
+
+    /// [`Self::step`] into a pre-sized spike frame — the zero-allocation
+    /// hot path.  Membranes and currents stream through row slices and
+    /// fired bits are ORed into the row's packed words directly; the per
+    /// element float sequence (`beta*v + I`, threshold, subtract) is
+    /// unchanged, so spikes and membrane state stay bit-identical to the
+    /// allocating form.
+    pub fn step_into(&mut self, current: &Tensor, out: &mut BitMatrix) {
+        assert_eq!(current.shape(), &[self.rows, self.cols]);
+        assert_eq!((out.rows(), out.cols()), (self.rows, self.cols), "LIF out shape");
+        out.clear();
+        let (beta, theta) = (self.cfg.beta, self.cfg.theta);
+        let cur = current.data();
         for r in 0..self.rows {
-            for c in 0..self.cols {
-                let idx = r * self.cols + c;
-                let mut v = self.cfg.beta * self.v[idx] + current.at2(r, c);
-                if v >= self.cfg.theta {
-                    spikes.set(r, c, true);
-                    v -= self.cfg.theta;
+            let v_row = &mut self.v[r * self.cols..(r + 1) * self.cols];
+            let c_row = &cur[r * self.cols..(r + 1) * self.cols];
+            let words = out.row_words_mut(r);
+            for (c, (v, &i_in)) in v_row.iter_mut().zip(c_row).enumerate() {
+                let mut m = beta * *v + i_in;
+                if m >= theta {
+                    words[c / 64] |= 1u64 << (c % 64);
+                    m -= theta;
                 }
-                self.v[idx] = v;
+                *v = m;
             }
         }
-        spikes
     }
 }
 

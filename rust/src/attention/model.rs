@@ -18,15 +18,18 @@
 //! SSA bank seeds via `ssa::seeds::head` (the contract the bit-exactness
 //! tests pin down).
 
+use std::time::Instant;
+
 use anyhow::{bail, Context, Result};
 
 use crate::attention::ann::softmax_attention;
-use crate::attention::block::{LayerWeights, SsaEncoderLayer};
+use crate::attention::block::{LayerWeights, SsaEncoderLayer, StageTimings};
 use crate::attention::lif::LifLayer;
-use crate::attention::stochastic::encode_frame;
+use crate::attention::stochastic::{encode_frame, encode_frame_into};
 use crate::config::{AttnConfig, LifConfig, PrngSharing};
 use crate::runtime::Weights;
-use crate::tensor::Tensor;
+use crate::tensor::{spike_matmul_into, Tensor};
+use crate::util::bitpack::BitMatrix;
 use crate::util::rng::{SplitMix64, Xoshiro256};
 
 /// Architecture family of a native model.
@@ -195,7 +198,39 @@ impl NativeModel {
         let patches = patchify(image, self.geo.image_size, self.geo.patch_size);
         match self.arch {
             Arch::Ann => Ok(self.ann_forward(&patches)),
-            Arch::Ssa | Arch::Spikformer => self.spiking_forward(&patches, seed),
+            Arch::Ssa | Arch::Spikformer => self.spiking_forward(&patches, seed, None),
+        }
+    }
+
+    /// [`Self::infer_image`] with per-stage wall-clock attribution (the
+    /// `bench-native` harness).  Logits are bit-identical to the untimed
+    /// call; for the deterministic ANN arch the stage breakdown is empty.
+    pub fn infer_image_timed(
+        &self,
+        image: &[f32],
+        seed: u64,
+    ) -> Result<(Vec<f32>, StageTimings)> {
+        let patches = patchify(image, self.geo.image_size, self.geo.patch_size);
+        let mut tm = StageTimings::default();
+        let logits = match self.arch {
+            Arch::Ann => self.ann_forward(&patches),
+            Arch::Ssa | Arch::Spikformer => {
+                self.spiking_forward(&patches, seed, Some(&mut tm))?
+            }
+        };
+        Ok((logits, tm))
+    }
+
+    /// [`Self::infer_image`] through the retained dense reference path
+    /// (pre spike-GEMM implementation: `to_f01` + `Tensor::matmul`,
+    /// allocating per step).  Produces bit-identical logits — pinned by
+    /// the forward regression tests — and serves as the old-vs-new
+    /// baseline in `BENCH_native.json`.
+    pub fn infer_image_reference(&self, image: &[f32], seed: u64) -> Result<Vec<f32>> {
+        let patches = patchify(image, self.geo.image_size, self.geo.patch_size);
+        match self.arch {
+            Arch::Ann => Ok(self.ann_forward(&patches)),
+            Arch::Ssa | Arch::Spikformer => self.spiking_forward_dense(&patches, seed),
         }
     }
 
@@ -246,13 +281,12 @@ impl NativeModel {
 
     // --- spiking forward (SSA / Spikformer) --------------------------------
 
-    fn spiking_forward(&self, patches: &Tensor, seed: u64) -> Result<Vec<f32>> {
+    /// Build the per-request layer stack (LIF membranes + PRNG banks +
+    /// scratch arenas) for one spiking inference at seed `seed`.
+    fn request_layers(&self, seed: u64) -> Vec<SsaEncoderLayer> {
         let geo = &self.geo;
         let cfg = geo.attn_config();
-        // per-request state
-        let mut input_rng = Xoshiro256::new(SplitMix64::new(seed ^ TAG_INPUT).next_u64());
-        let mut lif_embed = LifLayer::new(geo.n_tokens, geo.d_model, geo.lif);
-        let mut layers: Vec<SsaEncoderLayer> = (0..geo.n_layers)
+        (0..geo.n_layers)
             .map(|l| match self.arch {
                 Arch::Ssa => SsaEncoderLayer::new_ssa(
                     cfg,
@@ -270,7 +304,82 @@ impl NativeModel {
                 ),
                 Arch::Ann => unreachable!("ANN uses ann_forward"),
             })
-            .collect();
+            .collect()
+    }
+
+    /// The spike-native forward pass: all per-step buffers (input frame,
+    /// currents, layer ping-pong frames, pooled readout) are allocated
+    /// once per request and reused across the T-step loop, and every
+    /// dense product consumes packed spikes through `spike_matmul_into` —
+    /// steady-state inference performs zero heap allocations per time
+    /// step.  Bit-identical to [`Self::spiking_forward_dense`] (the
+    /// regression tests compare `f32::to_bits`).
+    fn spiking_forward(
+        &self,
+        patches: &Tensor,
+        seed: u64,
+        mut timings: Option<&mut StageTimings>,
+    ) -> Result<Vec<f32>> {
+        let geo = &self.geo;
+        // per-request state
+        let mut input_rng = Xoshiro256::new(SplitMix64::new(seed ^ TAG_INPUT).next_u64());
+        let mut lif_embed = LifLayer::new(geo.n_tokens, geo.d_model, geo.lif);
+        let mut layers = self.request_layers(seed);
+
+        // per-request scratch, reused every step
+        let mut x_t = BitMatrix::zeros(geo.n_tokens, geo.patch_dim);
+        let mut emb_cur = Tensor::zeros(&[geo.n_tokens, geo.d_model]);
+        let mut spikes = BitMatrix::zeros(geo.n_tokens, geo.d_model);
+        let mut spikes_next = BitMatrix::zeros(geo.n_tokens, geo.d_model);
+        let mut pooled = Tensor::zeros(&[1, geo.d_model]);
+        let mut logits_t = Tensor::zeros(&[1, geo.n_classes]);
+
+        let mut logits_acc = vec![0.0f64; geo.n_classes];
+        for _t in 0..geo.time_steps {
+            // input rate coding (eq. 2) + spiking patch embedding
+            let t0 = timings.is_some().then(Instant::now);
+            encode_frame_into(patches, &mut input_rng, &mut x_t);
+            spike_matmul_into(&x_t, &self.embed_w, &mut emb_cur);
+            emb_cur.add_assign(&self.embed_pos);
+            lif_embed.step_into(&emb_cur, &mut spikes);
+            if let (Some(tm), Some(t0)) = (timings.as_deref_mut(), t0) {
+                tm.embed_us += t0.elapsed().as_secs_f64() * 1e6;
+            }
+
+            for (l, layer) in layers.iter_mut().enumerate() {
+                layer.step_into(
+                    &spikes,
+                    &self.layers[l],
+                    &mut spikes_next,
+                    None,
+                    timings.as_deref_mut(),
+                )?;
+                std::mem::swap(&mut spikes, &mut spikes_next);
+            }
+
+            // readout: mean-pooled spike counts -> class currents
+            let t0 = timings.is_some().then(Instant::now);
+            mean_pool_bits_into(&spikes, &mut pooled);
+            pooled.matmul_into(&self.head_w, &mut logits_t);
+            for (acc, &v) in logits_acc.iter_mut().zip(logits_t.data()) {
+                *acc += v as f64;
+            }
+            if let (Some(tm), Some(t0)) = (timings.as_deref_mut(), t0) {
+                tm.readout_us += t0.elapsed().as_secs_f64() * 1e6;
+            }
+        }
+        let t = geo.time_steps as f64;
+        Ok(logits_acc.into_iter().map(|v| (v / t) as f32).collect())
+    }
+
+    /// Retained pre-rewrite forward pass (dense `to_f01` + `Tensor::matmul`
+    /// + per-step allocation everywhere) — the bit-exactness oracle and
+    /// the `bench-native` old-vs-new baseline.
+    fn spiking_forward_dense(&self, patches: &Tensor, seed: u64) -> Result<Vec<f32>> {
+        let geo = &self.geo;
+        let mut input_rng = Xoshiro256::new(SplitMix64::new(seed ^ TAG_INPUT).next_u64());
+        let mut lif_embed = LifLayer::new(geo.n_tokens, geo.d_model, geo.lif);
+        let mut layers = self.request_layers(seed);
 
         let mut logits_acc = vec![0.0f64; geo.n_classes];
         for _t in 0..geo.time_steps {
@@ -281,7 +390,7 @@ impl NativeModel {
             let mut spikes = lif_embed.step(&emb_cur);
 
             for (l, layer) in layers.iter_mut().enumerate() {
-                spikes = layer.step(&spikes, &self.layers[l], None)?;
+                spikes = layer.step_dense(&spikes, &self.layers[l], None)?;
             }
 
             // readout: mean-pooled spike counts -> class currents
@@ -329,6 +438,23 @@ const TAG_IMAGE: u64 = 0x494D_4147_4500_0000; // "IMAGE"
 /// (`(seed, index)` pairs map to distinct SplitMix64 streams).
 pub fn image_seed(seed: u32, index: usize) -> u64 {
     SplitMix64::new((seed as u64) ^ TAG_IMAGE ^ ((index as u64) << 32)).next_u64()
+}
+
+/// Column-wise mean of a packed spike frame into a pre-sized `[1, cols]`
+/// tensor.  Walks set bits only; counting `1.0`s in ascending-row order
+/// and dividing once matches `mean_pool_rows(to_f01(..))` bit-for-bit
+/// (adding the frame's `0.0` entries is the identity on these sums).
+fn mean_pool_bits_into(spikes: &BitMatrix, out: &mut Tensor) {
+    let (rows, cols) = (spikes.rows(), spikes.cols());
+    assert_eq!(out.shape(), &[1, cols], "mean_pool_bits_into shape");
+    let data = out.data_mut();
+    data.fill(0.0);
+    for r in 0..rows {
+        spikes.for_each_set_bit(r, |c| data[c] += 1.0);
+    }
+    for v in data.iter_mut() {
+        *v /= rows as f32;
+    }
 }
 
 fn mean_pool_rows(data: &[f32], rows: usize, cols: usize) -> Tensor {
@@ -418,6 +544,33 @@ mod tests {
         assert_eq!(p.data()[0..4], [0.0, 1.0, 4.0, 5.0]); // token (0,0)
         assert_eq!(p.data()[4..8], [2.0, 3.0, 6.0, 7.0]); // token (0,1)
         assert_eq!(p.data()[12..16], [10.0, 11.0, 14.0, 15.0]); // token (1,1)
+    }
+
+    #[test]
+    fn spike_native_forward_bit_identical_to_dense_reference() {
+        // The load-bearing perf invariant: the zero-allocation spike-GEMM
+        // path must reproduce the retained dense path bit-for-bit.
+        for arch in [Arch::Ssa, Arch::Spikformer] {
+            let m = tiny_model(arch);
+            for seed in [0u64, 7, 0xDEAD_BEEF] {
+                let img: Vec<f32> = (0..64).map(|i| (i % 9) as f32 / 9.0).collect();
+                let fast = m.infer_image(&img, seed).unwrap();
+                let dense = m.infer_image_reference(&img, seed).unwrap();
+                for (a, b) in fast.iter().zip(&dense) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{arch:?} seed={seed}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn timed_forward_matches_untimed_and_attributes_stages() {
+        let m = tiny_model(Arch::Ssa);
+        let img = vec![0.5f32; 64];
+        let (logits, tm) = m.infer_image_timed(&img, 11).unwrap();
+        assert_eq!(logits, m.infer_image(&img, 11).unwrap());
+        assert!(tm.total_us() > 0.0, "stages must record wall time");
+        assert!(tm.qkv_us > 0.0 && tm.attn_us > 0.0 && tm.mlp_us > 0.0);
     }
 
     #[test]

@@ -18,12 +18,25 @@ pub struct SpikformerAttention {
     cfg: AttnConfig,
     scale: f32,
     lif: LifLayer,
+    // scratch (zero-alloc hot path): integer score matrix, integer
+    // pre-activation accumulator, and its f32 conversion for the LIF sheet
+    scores: Vec<u32>,
+    pre_u: Vec<u64>,
+    pre: Tensor,
 }
 
 impl SpikformerAttention {
     pub fn new(cfg: AttnConfig, scale: f32, lif_cfg: LifConfig) -> Self {
         cfg.validate().expect("invalid attention config");
-        Self { cfg, scale, lif: LifLayer::new(cfg.n_tokens, cfg.d_head, lif_cfg) }
+        let (n, d_k) = (cfg.n_tokens, cfg.d_head);
+        Self {
+            cfg,
+            scale,
+            lif: LifLayer::new(n, d_k, lif_cfg),
+            scores: vec![0; n * n],
+            pre_u: vec![0; n * d_k],
+            pre: Tensor::zeros(&[n, d_k]),
+        }
     }
 
     pub fn reset(&mut self) {
@@ -32,30 +45,49 @@ impl SpikformerAttention {
 
     /// One time step: integer `Q K^T V`, scaled, re-binarized via LIF.
     pub fn step(&mut self, q: &BitMatrix, k: &BitMatrix, v: &BitMatrix) -> BitMatrix {
+        let mut out = BitMatrix::zeros(self.cfg.n_tokens, self.cfg.d_head);
+        self.step_into(q, k, v, &mut out);
+        out
+    }
+
+    /// [`Self::step`] into a pre-sized spike frame (zero-allocation form).
+    /// The `scores x V` product walks V's set bits directly (no per-step
+    /// transpose); both products are exact integer sums, so reordering
+    /// them changes nothing, and the single f32 conversion
+    /// (`total as f32 * scale`) is the same op the allocating form
+    /// performed — outputs and LIF membranes stay bit-identical.
+    pub fn step_into(
+        &mut self,
+        q: &BitMatrix,
+        k: &BitMatrix,
+        v: &BitMatrix,
+        out: &mut BitMatrix,
+    ) {
         let n = self.cfg.n_tokens;
         let d_k = self.cfg.d_head;
         // scores[i][j] = sum_d q[i,d]*k[j,d]  (integer MACs in hardware)
-        let mut scores = vec![0u32; n * n];
         for i in 0..n {
             for j in 0..n {
-                scores[i * n + j] = q.and_popcount(i, k, j);
+                self.scores[i * n + j] = q.and_popcount(i, k, j);
             }
         }
-        // pre[i][d] = sum_j scores[i][j] * v[j,d]
-        let v_t = v.transpose();
-        let mut pre = Tensor::zeros(&[n, d_k]);
+        // pre[i][d] = sum_j scores[i][j] * v[j,d], accumulated by
+        // scattering each nonzero score over row j's set bits
+        self.pre_u.fill(0);
         for i in 0..n {
-            for d in 0..d_k {
-                let mut acc = 0u64;
-                for j in 0..n {
-                    if v_t.get(d, j) {
-                        acc += scores[i * n + j] as u64;
-                    }
+            let pre_row = &mut self.pre_u[i * d_k..(i + 1) * d_k];
+            for j in 0..n {
+                let s = self.scores[i * n + j] as u64;
+                if s == 0 {
+                    continue;
                 }
-                pre.set2(i, d, acc as f32 * self.scale);
+                v.for_each_set_bit(j, |d| pre_row[d] += s);
             }
         }
-        self.lif.step(&pre)
+        for (p, &u) in self.pre.data_mut().iter_mut().zip(&self.pre_u) {
+            *p = u as f32 * self.scale;
+        }
+        self.lif.step_into(&self.pre, out);
     }
 }
 

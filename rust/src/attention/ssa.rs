@@ -127,38 +127,54 @@ impl PrngBank {
     }
 
     /// Words for the S-sample event: `out[i*n + j]` for SAU (i,j).
+    ///
+    /// `out` is resized once and then slice-filled in place — after the
+    /// first call at a given `n` this draws LFSR words into existing
+    /// storage with no allocation and no per-element `push` (the fill
+    /// sits inside every T-step loop).  Draw order is unchanged.
     pub fn s_words_n(&mut self, n: usize, out: &mut Vec<u16>) {
-        out.clear();
+        out.resize(n * n, 0);
         match self {
             PrngBank::Independent { sau, .. } => {
-                out.extend(sau.iter_mut().map(|l| l.next_u16()));
+                debug_assert_eq!(sau.len(), n * n);
+                for (o, l) in out.iter_mut().zip(sau.iter_mut()) {
+                    *o = l.next_u16();
+                }
             }
             PrngBank::PerRow { rows } => {
-                for lfsr in rows.iter_mut() {
+                debug_assert_eq!(rows.len(), n);
+                for (i, lfsr) in rows.iter_mut().enumerate() {
                     let w = lfsr.next_u16();
-                    out.extend(std::iter::repeat(w).take(n));
+                    out[i * n..(i + 1) * n].fill(w);
                 }
             }
             PrngBank::Global { lfsr } => {
                 let w = lfsr.next_u16();
-                out.extend(std::iter::repeat(w).take(n * n));
+                out.fill(w);
             }
         }
     }
 
-    /// Words for one Attn-sample event (one per row).
+    /// Words for one Attn-sample event (one per row).  Same pre-sized
+    /// slice-fill discipline as [`Self::s_words_n`].
     pub fn attn_words(&mut self, n: usize, out: &mut Vec<u16>) {
-        out.clear();
+        out.resize(n, 0);
         match self {
             PrngBank::Independent { attn, .. } => {
-                out.extend(attn.iter_mut().map(|l| l.next_u16()));
+                debug_assert_eq!(attn.len(), n);
+                for (o, l) in out.iter_mut().zip(attn.iter_mut()) {
+                    *o = l.next_u16();
+                }
             }
             PrngBank::PerRow { rows } => {
-                out.extend(rows.iter_mut().map(|l| l.next_u16()));
+                debug_assert_eq!(rows.len(), n);
+                for (o, l) in out.iter_mut().zip(rows.iter_mut()) {
+                    *o = l.next_u16();
+                }
             }
             PrngBank::Global { lfsr } => {
                 let w = lfsr.next_u16();
-                out.extend(std::iter::repeat(w).take(n));
+                out.fill(w);
             }
         }
     }
@@ -172,6 +188,7 @@ pub struct SsaAttention {
     // scratch buffers (zero-alloc hot path, §Perf)
     s_words: Vec<u16>,
     attn_words: Vec<u16>,
+    v_t: BitMatrix,
 }
 
 /// Output of one SSA time step.
@@ -183,11 +200,22 @@ pub struct SsaStepOutput {
     pub attn: BitMatrix,
 }
 
+impl SsaStepOutput {
+    /// Pre-sized output/scratch for [`SsaAttention::step_into`].
+    pub fn new(n_tokens: usize, d_head: usize) -> Self {
+        Self {
+            s: BitMatrix::zeros(n_tokens, n_tokens),
+            attn: BitMatrix::zeros(n_tokens, d_head),
+        }
+    }
+}
+
 impl SsaAttention {
     pub fn new(cfg: AttnConfig, sharing: PrngSharing, base_seed: u64) -> Self {
         cfg.validate().expect("invalid attention config");
         Self {
             bank: PrngBank::new(sharing, base_seed, cfg.n_tokens),
+            v_t: BitMatrix::zeros(cfg.d_head, cfg.n_tokens),
             cfg,
             s_words: Vec::new(),
             attn_words: Vec::new(),
@@ -209,6 +237,22 @@ impl SsaAttention {
     /// the paper's AND-gate array (this is what Table III's SSA-CPU row
     /// measures).
     pub fn step(&mut self, q: &BitMatrix, k: &BitMatrix, v: &BitMatrix) -> SsaStepOutput {
+        let mut out = SsaStepOutput::new(self.cfg.n_tokens, self.cfg.d_head);
+        self.step_into(q, k, v, &mut out);
+        out
+    }
+
+    /// [`Self::step`] into a pre-sized output (zero-allocation form):
+    /// `S^t` / `Attn^t` words are assembled directly into `out` and the
+    /// per-step `V` transpose lands in block-owned scratch.  LFSR draw
+    /// order and every produced bit are identical to [`Self::step`].
+    pub fn step_into(
+        &mut self,
+        q: &BitMatrix,
+        k: &BitMatrix,
+        v: &BitMatrix,
+        out: &mut SsaStepOutput,
+    ) {
         let n = self.cfg.n_tokens;
         let d_k = self.cfg.d_head;
         for (name, m) in [("q", q), ("k", k), ("v", v)] {
@@ -218,53 +262,72 @@ impl SsaAttention {
                 "{name} must be [N={n}, D_K={d_k}]"
             );
         }
+        assert_eq!((out.s.rows(), out.s.cols()), (n, n), "out.s must be [N, N]");
+        assert_eq!(
+            (out.attn.rows(), out.attn.cols()),
+            (n, d_k),
+            "out.attn must be [N, D_K]"
+        );
 
         // Phase 1 — eq. (5): counts via AND+popcount, then Bernoulli bank.
         // S rows are assembled word-wise (§Perf L3: no per-bit set calls).
         self.bank.s_words_n(n, &mut self.s_words);
-        let s_wpr = n.div_ceil(64);
-        let mut s_data = vec![0u64; n * s_wpr];
+        out.s.clear();
         for i in 0..n {
+            let s_row = out.s.row_words_mut(i);
             for j in 0..n {
                 let count = q.and_popcount(i, k, j);
                 if bern_compare(self.s_words[i * n + j], count, d_k as u32) {
-                    s_data[i * s_wpr + j / 64] |= 1u64 << (j % 64);
+                    s_row[j / 64] |= 1u64 << (j % 64);
                 }
             }
         }
-        let s = BitMatrix::from_words(n, n, s_data);
 
         // Phase 2 — eq. (6): row adders + row encoders, one event per d.
         // V is streamed column-wise in hardware; transpose once per step.
-        let v_t = v.transpose(); // [D_K, N]
-        let a_wpr = d_k.div_ceil(64);
-        let mut a_data = vec![0u64; n * a_wpr];
+        v.transpose_into(&mut self.v_t); // [D_K, N]
+        out.attn.clear();
         for d in 0..d_k {
             self.bank.attn_words(n, &mut self.attn_words);
             for i in 0..n {
-                let count = s.and_popcount(i, &v_t, d);
+                let count = out.s.and_popcount(i, &self.v_t, d);
                 if bern_compare(self.attn_words[i], count, n as u32) {
-                    a_data[i * a_wpr + d / 64] |= 1u64 << (d % 64);
+                    out.attn.row_words_mut(i)[d / 64] |= 1u64 << (d % 64);
                 }
             }
         }
-        let attn = BitMatrix::from_words(n, d_k, a_data);
-        SsaStepOutput { s, attn }
     }
 }
 
 /// Deterministic expectation of one SSA step given fixed spikes (the A4
 /// ablation and the E4 equivalence tests): `((Q K^T)/D_K (V))/N`.
 pub fn ssa_expectation(q: &BitMatrix, k: &BitMatrix, v: &BitMatrix) -> Vec<f64> {
+    let mut s_prob = Vec::new();
+    let mut out = Vec::new();
+    ssa_expectation_into(q, k, v, &mut s_prob, &mut out);
+    out
+}
+
+/// [`ssa_expectation`] with caller-owned temporaries: `s_prob` (`[N,N]`)
+/// and `out` (`[N,D_K]`) are resized on first use and overwritten in
+/// place, so callers evaluating the expectation inside a T-step loop
+/// (the simulator driver, fig. 1) stop reallocating both per step.
+pub fn ssa_expectation_into(
+    q: &BitMatrix,
+    k: &BitMatrix,
+    v: &BitMatrix,
+    s_prob: &mut Vec<f64>,
+    out: &mut Vec<f64>,
+) {
     let n = q.rows();
     let d_k = q.cols();
-    let mut s_prob = vec![0.0f64; n * n];
+    s_prob.resize(n * n, 0.0);
+    out.resize(n * d_k, 0.0);
     for i in 0..n {
         for j in 0..n {
             s_prob[i * n + j] = q.and_popcount(i, k, j) as f64 / d_k as f64;
         }
     }
-    let mut out = vec![0.0f64; n * d_k];
     for i in 0..n {
         for d in 0..d_k {
             let mut acc = 0.0;
@@ -276,7 +339,6 @@ pub fn ssa_expectation(q: &BitMatrix, k: &BitMatrix, v: &BitMatrix) -> Vec<f64> 
             out[i * d_k + d] = acc / n as f64;
         }
     }
-    out
 }
 
 #[cfg(test)]

@@ -17,9 +17,20 @@ pub fn norm01(x: f32) -> f32 {
 
 /// Bernoulli-encode a `[rows, cols]` tensor of rates into one spike frame.
 pub fn encode_frame(rates: &Tensor, rng: &mut Xoshiro256) -> BitMatrix {
+    let mut out = BitMatrix::zeros(rates.shape()[0], rates.shape()[1]);
+    encode_frame_into(rates, rng, &mut out);
+    out
+}
+
+/// [`encode_frame`] into a pre-sized frame (zero-alloc hot path).  Draws
+/// one `next_f32` per element in row-major order regardless of outcome,
+/// so the RNG stream — and therefore every downstream bit — is identical
+/// to the allocating form.
+pub fn encode_frame_into(rates: &Tensor, rng: &mut Xoshiro256, out: &mut BitMatrix) {
     assert_eq!(rates.ndim(), 2);
     let (rows, cols) = (rates.shape()[0], rates.shape()[1]);
-    let mut out = BitMatrix::zeros(rows, cols);
+    assert_eq!((out.rows(), out.cols()), (rows, cols), "encode_frame_into shape");
+    out.clear();
     for r in 0..rows {
         for c in 0..cols {
             if rng.next_f32() < norm01(rates.at2(r, c)) {
@@ -27,7 +38,6 @@ pub fn encode_frame(rates: &Tensor, rng: &mut Xoshiro256) -> BitMatrix {
             }
         }
     }
-    out
 }
 
 /// Decode a spike-train history back to rates: mean over `frames`.

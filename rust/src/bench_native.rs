@@ -1,0 +1,329 @@
+//! End-to-end forward-pass benchmark of the native models and the
+//! `BENCH_native.json` perf artifact.
+//!
+//! Shared by the `bench-native` CLI subcommand and the
+//! `benches/forward_native.rs` bench binary: builds synthetic models at a
+//! serving-representative geometry, times the single-row and full-batch
+//! forward passes on every architecture (SSA / Spikformer / ANN), times
+//! the retained dense reference path for the spiking arches (the
+//! pre-spike-GEMM implementation kept as `infer_image_reference`), and
+//! attributes single-row wall time across pipeline stages
+//! ([`StageTimings`]: embed / QKV / attention / MLP / readout).
+//!
+//! The emitted `BENCH_native.json` is the forward-pass twin of
+//! `BENCH_serving.json` and establishes the native perf trajectory; CI
+//! uploads it as a workflow artifact on every run.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::attention::block::StageTimings;
+use crate::attention::model::{image_seed, Arch, ModelGeometry, NativeModel};
+use crate::bench::{BenchOpts, BenchResult, BenchSet};
+use crate::config::{LifConfig, PrngSharing};
+use crate::runtime::weights::test_support::build_weights;
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+
+/// Knobs for one bench-native run.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchNativeOpts {
+    /// Wall budget per benchmark (each arch runs several benchmarks).
+    pub budget: Duration,
+    pub warmup: Duration,
+    /// Rows in the full-batch measurement.
+    pub batch: usize,
+    /// Weight/image fabrication seed.
+    pub seed: u64,
+    /// Encoder layers of the synthetic model.
+    pub layers: usize,
+    /// SNN time steps T.
+    pub time_steps: usize,
+}
+
+impl Default for BenchNativeOpts {
+    fn default() -> Self {
+        Self {
+            budget: Duration::from_secs(1),
+            warmup: Duration::from_millis(200),
+            batch: 8,
+            seed: 0xBE7C,
+            layers: 2,
+            time_steps: 10,
+        }
+    }
+}
+
+/// The vit-tiny serving geometry the bench runs at: 16x16 images, 4x4
+/// patches -> N=16 tokens, D=64, H=4, M=128, 10 classes.
+pub fn bench_geometry(layers: usize, time_steps: usize) -> ModelGeometry {
+    ModelGeometry {
+        image_size: 16,
+        patch_size: 4,
+        n_tokens: 16,
+        patch_dim: 16,
+        d_model: 64,
+        n_heads: 4,
+        d_head: 16,
+        d_mlp: 128,
+        n_layers: layers,
+        n_classes: 10,
+        time_steps,
+        lif: LifConfig::default(),
+        prng_sharing: PrngSharing::PerRow,
+        spikformer_scale: 0.25,
+    }
+}
+
+/// One architecture's measurements.
+pub struct ArchBench {
+    pub arch: &'static str,
+    pub single_row: BenchResult,
+    pub batch: BenchResult,
+    pub batch_rows: usize,
+    /// Dense reference timing (spiking arches only).
+    pub reference_single_row: Option<BenchResult>,
+    /// `reference.mean_us / single_row.mean_us` — old vs new.
+    pub speedup_old_vs_new: Option<f64>,
+    /// Mean per-inference stage attribution (spiking arches only).
+    pub stages: Option<StageTimings>,
+}
+
+impl ArchBench {
+    fn to_json(&self) -> Json {
+        let res = |r: &BenchResult| {
+            Json::obj(vec![
+                ("samples", Json::from(r.samples)),
+                ("mean_us", Json::num(r.mean_us)),
+                ("p50_us", Json::num(r.p50_us)),
+                ("min_us", Json::num(r.min_us)),
+                (
+                    "rows_per_s",
+                    r.throughput().map(Json::num).unwrap_or(Json::Null),
+                ),
+            ])
+        };
+        let stages = match &self.stages {
+            None => Json::Null,
+            Some(s) => Json::obj(vec![
+                ("embed_us", Json::num(s.embed_us)),
+                ("qkv_us", Json::num(s.qkv_us)),
+                ("attn_us", Json::num(s.attn_us)),
+                ("mlp_us", Json::num(s.mlp_us)),
+                ("readout_us", Json::num(s.readout_us)),
+            ]),
+        };
+        Json::obj(vec![
+            ("arch", Json::str(self.arch)),
+            ("single_row", res(&self.single_row)),
+            ("batch_rows", Json::from(self.batch_rows)),
+            ("batch", res(&self.batch)),
+            (
+                "reference_single_row",
+                self.reference_single_row.as_ref().map(res).unwrap_or(Json::Null),
+            ),
+            (
+                "speedup_old_vs_new",
+                self.speedup_old_vs_new.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("stages_us", stages),
+        ])
+    }
+}
+
+/// The full bench-native result.
+pub struct NativeBenchReport {
+    pub geometry: ModelGeometry,
+    pub batch: usize,
+    pub arches: Vec<ArchBench>,
+}
+
+impl NativeBenchReport {
+    /// The headline number: SSA single-row old-vs-new speedup.
+    pub fn ssa_speedup(&self) -> Option<f64> {
+        self.arches
+            .iter()
+            .find(|a| a.arch == "ssa")
+            .and_then(|a| a.speedup_old_vs_new)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let g = &self.geometry;
+        Json::obj(vec![
+            ("bench", Json::str("forward_native")),
+            (
+                "geometry",
+                Json::obj(vec![
+                    ("image_size", Json::from(g.image_size)),
+                    ("patch_size", Json::from(g.patch_size)),
+                    ("n_tokens", Json::from(g.n_tokens)),
+                    ("d_model", Json::from(g.d_model)),
+                    ("n_heads", Json::from(g.n_heads)),
+                    ("d_mlp", Json::from(g.d_mlp)),
+                    ("n_layers", Json::from(g.n_layers)),
+                    ("n_classes", Json::from(g.n_classes)),
+                    ("time_steps", Json::from(g.time_steps)),
+                ]),
+            ),
+            ("batch", Json::from(self.batch)),
+            ("arches", Json::Arr(self.arches.iter().map(ArchBench::to_json).collect())),
+            (
+                "ssa_speedup_old_vs_new",
+                self.ssa_speedup().map(Json::num).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing bench report {path:?}"))
+    }
+
+    /// Human-readable summary for the CLI.
+    pub fn render(&self) -> String {
+        let g = &self.geometry;
+        let mut s = format!(
+            "=== bench-native: N={} D={} H={} M={} layers={} T={} | batch {} ===\n",
+            g.n_tokens, g.d_model, g.n_heads, g.d_mlp, g.n_layers, g.time_steps, self.batch
+        );
+        for a in &self.arches {
+            s.push_str(&format!(
+                "{:<11} single row {:>9.1} us ({:>8.1} rows/s)   \
+                 batch x{} {:>9.1} us ({:>8.1} rows/s)",
+                a.arch,
+                a.single_row.mean_us,
+                a.single_row.throughput().unwrap_or(0.0),
+                self.batch,
+                a.batch.mean_us,
+                a.batch.throughput().unwrap_or(0.0),
+            ));
+            if let (Some(r), Some(x)) = (&a.reference_single_row, a.speedup_old_vs_new) {
+                s.push_str(&format!("   dense ref {:>9.1} us -> {x:.2}x", r.mean_us));
+            }
+            s.push('\n');
+            if let Some(tm) = &a.stages {
+                s.push_str(&format!(
+                    "            stages/us: embed {:.1} | qkv {:.1} | attn {:.1} \
+                     | mlp {:.1} | readout {:.1}\n",
+                    tm.embed_us, tm.qkv_us, tm.attn_us, tm.mlp_us, tm.readout_us
+                ));
+            }
+        }
+        if let Some(x) = self.ssa_speedup() {
+            s.push_str(&format!("ssa single-row speedup old-vs-new: {x:.2}x\n"));
+        }
+        s
+    }
+}
+
+/// Run the full bench matrix and assemble the report.
+pub fn run(opts: &BenchNativeOpts) -> Result<NativeBenchReport> {
+    anyhow::ensure!(opts.batch >= 1, "--batch must be >= 1");
+    anyhow::ensure!(opts.layers >= 1, "--layers must be >= 1");
+    anyhow::ensure!(opts.time_steps >= 1, "--t must be >= 1");
+    let geo = bench_geometry(opts.layers, opts.time_steps);
+    let weights = build_weights(
+        geo.patch_dim,
+        geo.d_model,
+        geo.n_tokens,
+        geo.d_mlp,
+        geo.n_layers,
+        geo.n_classes,
+        opts.seed,
+    );
+    let px = geo.image_size * geo.image_size;
+    let mut rng = Xoshiro256::new(opts.seed ^ 0x1111);
+    let images: Vec<f32> = (0..opts.batch * px).map(|_| rng.next_f32()).collect();
+    let row_img = &images[0..px];
+
+    let mut set = BenchSet::new("forward_native").with_opts(BenchOpts {
+        warmup: opts.warmup,
+        budget: opts.budget,
+        min_samples: 5,
+        max_samples: 100_000,
+    });
+    set.start();
+    let mut arches = Vec::new();
+    for (arch, name) in
+        [(Arch::Ssa, "ssa"), (Arch::Spikformer, "spikformer"), (Arch::Ann, "ann")]
+    {
+        let model = NativeModel::from_weights(geo, arch, &weights)
+            .context("binding synthetic bench model")?;
+        let single = set
+            .bench_units(&format!("{name} single row"), Some(1.0), || {
+                std::hint::black_box(model.infer_image(row_img, image_seed(7, 0)).unwrap());
+            })
+            .clone();
+        let batch = set
+            .bench_units(
+                &format!("{name} batch x{}", opts.batch),
+                Some(opts.batch as f64),
+                || {
+                    std::hint::black_box(model.infer(&images, opts.batch, 7).unwrap());
+                },
+            )
+            .clone();
+        let (reference, speedup, stages) = if arch == Arch::Ann {
+            (None, None, None)
+        } else {
+            let r = set
+                .bench_units(&format!("{name} single row (dense reference)"), Some(1.0), || {
+                    std::hint::black_box(
+                        model.infer_image_reference(row_img, image_seed(7, 0)).unwrap(),
+                    );
+                })
+                .clone();
+            let speedup = r.mean_us / single.mean_us;
+            let reps = 16u64;
+            let mut acc = StageTimings::default();
+            for i in 0..reps {
+                let (_, tm) = model.infer_image_timed(row_img, image_seed(7, i as usize))?;
+                acc.accumulate(&tm);
+            }
+            (Some(r), Some(speedup), Some(acc.scaled(1.0 / reps as f64)))
+        };
+        arches.push(ArchBench {
+            arch: name,
+            single_row: single,
+            batch,
+            batch_rows: opts.batch,
+            reference_single_row: reference,
+            speedup_old_vs_new: speedup,
+            stages,
+        });
+    }
+    set.finish();
+    Ok(NativeBenchReport { geometry: geo, batch: opts.batch, arches })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_budget_run_produces_complete_report() {
+        let opts = BenchNativeOpts {
+            budget: Duration::from_millis(30),
+            warmup: Duration::from_millis(5),
+            batch: 2,
+            layers: 1,
+            time_steps: 2,
+            ..Default::default()
+        };
+        let report = run(&opts).expect("bench-native run");
+        assert_eq!(report.arches.len(), 3);
+        let parsed = Json::parse(&report.to_json().to_string()).expect("report JSON parses");
+        assert_eq!(parsed.str_field("bench").unwrap(), "forward_native");
+        let arches = parsed.get("arches").and_then(Json::as_arr).unwrap();
+        assert_eq!(arches.len(), 3);
+        assert_eq!(arches[0].str_field("arch").unwrap(), "ssa");
+        assert!(arches[0].get("stages_us").unwrap().get("qkv_us").is_some());
+        assert!(
+            parsed.get("ssa_speedup_old_vs_new").and_then(Json::as_f64).unwrap() > 0.0,
+            "SSA speedup must be recorded"
+        );
+        assert!(report.render().contains("ssa"));
+    }
+}

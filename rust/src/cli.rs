@@ -6,6 +6,8 @@
 //!                       [--target ssa_t10] [--ensemble K] [--workers N]
 //! ssa-repro serve-bench [--synthetic] [--workers 1,4] [--concurrency C | --rps R]
 //!                       [--duration SECS] [--mix "ssa_t4*3,ann@fixed:7"]
+//! ssa-repro bench-native [--budget SECS] [--batch B] [--layers L] [--t T]
+//!                        [--out BENCH_native.json]
 //! ssa-repro simulate    [--n 16] [--dk 16] [--t 10] [--sharing per-row] [--trace]
 //! ssa-repro experiments <table1|table2|table3|headline|fig1|fig2|fig3|all>
 //!                       [--artifacts DIR] [--cross-check N] [--backend native|xla]
@@ -98,6 +100,9 @@ USAGE:
                         [--seed-policy perbatch|fixed:N|ensemble:K]
                         [--max-batch B] [--max-delay-ms D] [--seed S]
                         [--out BENCH_serving.json]
+  ssa-repro bench-native [--budget SECS] [--warmup SECS] [--batch B]
+                        [--layers L] [--t T] [--seed S]
+                        [--out BENCH_native.json]
   ssa-repro simulate    [--n 16] [--dk 16] [--t 10]
                         [--sharing independent|per-row|global] [--trace]
   ssa-repro experiments table1|table2|table3|headline|fig1|fig2|fig3|all
@@ -122,6 +127,22 @@ serve-bench (load generation -> BENCH_serving.json):
                    comma-separated entry (e.g. \"ssa_t4*3,ann@fixed:7\")
   --synthetic      fabricate a servable artifacts dir (manifest, random
                    weights, synthetic dataset) — no Python needed
+
+bench-native (forward-pass perf -> BENCH_native.json):
+  Benchmarks the native forward pass end-to-end on synthetic weights at
+  the vit-tiny serving geometry: single-row and full-batch latency for
+  every arch (ssa, spikformer, ann), the retained dense reference path
+  (pre spike-GEMM implementation) for the spiking arches, and per-stage
+  single-row attribution.  BENCH_native.json fields:
+    geometry              model dims (n_tokens, d_model, layers, T, ...)
+    arches[].single_row   {mean_us, p50_us, min_us, rows_per_s}
+    arches[].batch        same, amortized over --batch rows
+    arches[].reference_single_row
+                          dense to_f01 + matmul baseline (spiking arches)
+    arches[].speedup_old_vs_new
+                          reference mean_us / spike-native mean_us
+    arches[].stages_us    {embed, qkv, attn, mlp, readout} per inference
+    ssa_speedup_old_vs_new  the headline perf-trajectory number
 
 Backends (see rust/DESIGN.md):
   native  pure-Rust spiking forward pass — needs only manifest.json +

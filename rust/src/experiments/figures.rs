@@ -3,7 +3,7 @@
 //! * Fig. 2: SAU array ≡ eqs. (5)-(6) (bit-exactness report);
 //! * Fig. 3: the pipelined dataflow schedule as a cycle trace.
 
-use crate::attention::ssa::ssa_expectation;
+use crate::attention::ssa::ssa_expectation_into;
 use crate::config::{AttnConfig, PrngSharing};
 use crate::hw::{simulate, SpikeStreams};
 
@@ -28,8 +28,16 @@ pub fn fig1_equivalence(cfg: AttnConfig, seeds: u64) -> String {
             let d_k = c.d_head;
             let mut mean = vec![0.0f64; n * d_k];
             let mut expect = vec![0.0f64; n * d_k];
+            // expectation temporaries reused across the T-step loop
+            let (mut s_prob, mut e) = (Vec::new(), Vec::new());
             for step in 0..t {
-                let e = ssa_expectation(&streams.q[step], &streams.k[step], &streams.v[step]);
+                ssa_expectation_into(
+                    &streams.q[step],
+                    &streams.k[step],
+                    &streams.v[step],
+                    &mut s_prob,
+                    &mut e,
+                );
                 for i in 0..n * d_k {
                     expect[i] += e[i] / t as f64;
                     mean[i] += run.attn[step].get(i / d_k, i % d_k) as u8 as f64 / t as f64;

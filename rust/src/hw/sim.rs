@@ -2,7 +2,7 @@
 //! SAU array, and assemble a [`SimReport`] (cycles, activity, FPGA
 //! projection, agreement with the software model).
 
-use crate::attention::ssa::{ssa_expectation, SsaAttention};
+use crate::attention::ssa::{ssa_expectation_into, SsaAttention};
 use crate::attention::stochastic::encode_frame;
 use crate::config::{AttnConfig, PrngSharing};
 use crate::tensor::Tensor;
@@ -88,12 +88,20 @@ pub fn simulate(
     let n = cfg.n_tokens;
     let d_k = cfg.d_head;
     let mut attn_mean = vec![0.0f64; n * d_k];
+    // expectation temporaries hoisted out of the T-step loop (reused)
+    let (mut s_prob, mut expect) = (Vec::new(), Vec::new());
     for t in 0..t_steps {
         let out = sw.step(&streams.q[t], &streams.k[t], &streams.v[t]);
         if out.s != run.s[t] || out.attn != run.attn[t] {
             matches = false;
         }
-        let expect = ssa_expectation(&streams.q[t], &streams.k[t], &streams.v[t]);
+        ssa_expectation_into(
+            &streams.q[t],
+            &streams.k[t],
+            &streams.v[t],
+            &mut s_prob,
+            &mut expect,
+        );
         for i in 0..n {
             for d in 0..d_k {
                 let got = run.attn[t].get(i, d) as u8 as f64;

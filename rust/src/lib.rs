@@ -16,6 +16,7 @@
 
 pub mod attention;
 pub mod bench;
+pub mod bench_native;
 pub mod cli;
 pub mod coordinator;
 pub mod energy;

@@ -36,6 +36,7 @@ fn run(args: &Args) -> Result<()> {
         Some("info") => info(),
         Some("serve") => serve(args),
         Some("serve-bench") => serve_bench(args),
+        Some("bench-native") => bench_native_cmd(args),
         Some("simulate") => simulate_cmd(args),
         Some("experiments") => experiments(args),
         _ => {
@@ -213,6 +214,26 @@ fn serve_bench(args: &Args) -> Result<()> {
 
     print!("{}", report.render());
     let out = PathBuf::from(args.opt_or("out", "BENCH_serving.json"));
+    report.write(&out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// The `bench-native` subcommand: end-to-end forward-pass benchmarks of
+/// the native models (single row + full batch, all arches, per-stage
+/// attribution, old-vs-new speedup) -> `BENCH_native.json`.
+fn bench_native_cmd(args: &Args) -> Result<()> {
+    let opts = ssa_repro::bench_native::BenchNativeOpts {
+        budget: Duration::from_secs_f64(args.opt_parse("budget", 1.0f64)?),
+        warmup: Duration::from_secs_f64(args.opt_parse("warmup", 0.2f64)?),
+        batch: args.opt_parse("batch", 8usize)?,
+        seed: args.opt_parse("seed", 0xBE7Cu64)?,
+        layers: args.opt_parse("layers", 2usize)?,
+        time_steps: args.opt_parse("t", 10usize)?,
+    };
+    let report = ssa_repro::bench_native::run(&opts)?;
+    print!("{}", report.render());
+    let out = PathBuf::from(args.opt_or("out", "BENCH_native.json"));
     report.write(&out)?;
     println!("wrote {}", out.display());
     Ok(())

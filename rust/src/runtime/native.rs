@@ -161,12 +161,22 @@ impl LoadedVariant for NativeVariant {
     }
 
     /// The native engine loops rows, so any batch size up to the model
-    /// batch serves; row count is derived from the buffer (a ragged
-    /// buffer still fails the model's exact-size check, and oversized
-    /// buffers are rejected to keep parity with fixed-shape engines).
+    /// batch serves.  The row count is derived from the buffer length,
+    /// which therefore must be an exact multiple of the per-image pixel
+    /// count — a ragged buffer is rejected here with a clear error
+    /// instead of being silently floored into a wrong row count that
+    /// only the model's downstream size check would catch.
     fn infer(&self, images: &[f32], seed: u32) -> Result<Vec<f32>> {
         let px = self.model.geometry().image_size.pow(2);
-        let rows = images.len() / px.max(1);
+        anyhow::ensure!(
+            px > 0 && images.len() % px == 0,
+            "image buffer of {} f32s is not a whole number of {px}-pixel \
+             ({}x{}) images",
+            images.len(),
+            self.model.geometry().image_size,
+            self.model.geometry().image_size
+        );
+        let rows = images.len() / px;
         anyhow::ensure!(
             rows <= self.variant.batch,
             "{rows} rows exceed variant batch {}",

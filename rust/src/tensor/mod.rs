@@ -3,8 +3,18 @@
 //! Deliberately small: row-major `f32` storage, shape checking, the handful
 //! of ops the attention models need (matmul, transpose, softmax), and
 //! conversion helpers to/from `xla::Literal` living in `runtime::bridge`.
+//!
+//! The spike-domain GEMM ([`spike_matmul`] / [`spike_matmul_into`]) is the
+//! multiplication-free hot path of the native backend: a packed `{0,1}`
+//! spike matrix times a dense weight matrix reduces to accumulating the
+//! weight rows selected by set bits — the CPU analogue of the paper's
+//! "spikes replace MACs with adds" argument (§Perf, and Spikformer's
+//! multiplication-free attention claim).  Its accumulation order is the
+//! bit-exactness contract documented on [`spike_matmul_into`].
 
 use std::fmt;
+
+use crate::util::bitpack::BitMatrix;
 
 /// Row-major dense f32 tensor.
 #[derive(Clone, PartialEq)]
@@ -92,13 +102,24 @@ impl Tensor {
     pub fn matmul(&self, other: &Tensor) -> Tensor {
         assert_eq!(self.ndim(), 2);
         assert_eq!(other.ndim(), 2);
+        let mut out = Tensor::zeros(&[self.shape[0], other.shape[1]]);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// [`Self::matmul`] into a pre-sized `[m,n]` output (overwrites it).
+    /// Same ascending-k zero-skip accumulation — results are bit-identical.
+    pub fn matmul_into(&self, other: &Tensor, out: &mut Tensor) {
+        assert_eq!(self.ndim(), 2);
+        assert_eq!(other.ndim(), 2);
         let (m, k) = (self.shape[0], self.shape[1]);
         let (k2, n) = (other.shape[0], other.shape[1]);
         assert_eq!(k, k2, "matmul inner dim: {k} vs {k2}");
-        let mut out = vec![0.0f32; m * n];
+        assert_eq!(out.shape(), &[m, n], "matmul_into output shape");
+        out.data.fill(0.0);
         for i in 0..m {
             let a_row = &self.data[i * k..(i + 1) * k];
-            let o_row = &mut out[i * n..(i + 1) * n];
+            let o_row = &mut out.data[i * n..(i + 1) * n];
             for (kk, &a) in a_row.iter().enumerate() {
                 if a == 0.0 {
                     continue; // spike matrices are sparse in practice
@@ -109,7 +130,33 @@ impl Tensor {
                 }
             }
         }
-        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// Elementwise `self += other` (same shape), in place.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// `self[r, c] += 1.0` wherever `bits[r, c]` is set — the in-place
+    /// residual merge `cur + spikes` without unpacking the spike frame.
+    /// Bit-identical to `add(&Tensor::from_vec(_, bits.to_f01()))`: adding
+    /// the frame's `0.0` entries is the identity (no accumulation in this
+    /// codebase produces `-0.0`, the only value `+ 0.0` would alter).
+    pub fn add_assign_bits(&mut self, bits: &BitMatrix) {
+        assert_eq!(self.ndim(), 2);
+        assert_eq!(
+            (self.shape[0], self.shape[1]),
+            (bits.rows(), bits.cols()),
+            "add_assign_bits shape"
+        );
+        let cols = self.shape[1];
+        for r in 0..bits.rows() {
+            let row = &mut self.data[r * cols..(r + 1) * cols];
+            bits.for_each_set_bit(r, |c| row[c] += 1.0);
+        }
     }
 
     /// 2-D transpose.
@@ -181,6 +228,45 @@ impl Tensor {
     }
 }
 
+/// Spike-domain GEMM: `[m,k] {0,1} spikes x [k,n] dense -> [m,n]`.
+/// See [`spike_matmul_into`] for the bit-exactness contract.
+pub fn spike_matmul(spikes: &BitMatrix, w: &Tensor) -> Tensor {
+    assert_eq!(w.ndim(), 2);
+    let mut out = Tensor::zeros(&[spikes.rows(), w.shape()[1]]);
+    spike_matmul_into(spikes, w, &mut out);
+    out
+}
+
+/// Multiplication-free GEMM on packed spikes, into a pre-sized output
+/// (overwrites it): for every set bit `k` of row `i` — found by
+/// `trailing_zeros` over the packed `u64` words — accumulate weight row
+/// `w[k, :]` into `out[i, :]`.
+///
+/// **Accumulation-order invariant:** set bits are visited in ascending
+/// `k` (ascending words, ascending bits within a word), which is exactly
+/// the ascending-`k` order of [`Tensor::matmul`]'s zero-skip loop on the
+/// unpacked `{0,1}` frame, and `acc += w` replaces `acc += 1.0 * w`.
+/// f32 addition is order-sensitive, so this is what makes the packed
+/// path *bit-identical* to the dense reference (pinned by the
+/// `prop_spike_matmul_bit_identical_to_dense_reference` property test
+/// and the forward-pass regression suite).
+pub fn spike_matmul_into(spikes: &BitMatrix, w: &Tensor, out: &mut Tensor) {
+    assert_eq!(w.ndim(), 2);
+    let (k, n) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(spikes.cols(), k, "spike_matmul inner dim: {} vs {k}", spikes.cols());
+    assert_eq!(out.shape(), &[spikes.rows(), n], "spike_matmul_into output shape");
+    out.data.fill(0.0);
+    for i in 0..spikes.rows() {
+        let o_row = &mut out.data[i * n..(i + 1) * n];
+        spikes.for_each_set_bit(i, |kk| {
+            let w_row = &w.data[kk * n..(kk + 1) * n];
+            for (o, &b) in o_row.iter_mut().zip(w_row) {
+                *o += b;
+            }
+        });
+    }
+}
+
 impl fmt::Debug for Tensor {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "Tensor{:?}", self.shape)?;
@@ -241,5 +327,58 @@ mod tests {
         let a = Tensor::zeros(&[2, 3]);
         let b = Tensor::zeros(&[2, 3]);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn spike_matmul_bit_identical_to_dense_on_f01() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(77);
+        for (m, k, n) in [(1, 1, 1), (3, 70, 5), (4, 64, 8), (2, 129, 3)] {
+            let s: Vec<f32> =
+                (0..m * k).map(|_| if rng.bernoulli(0.4) { 1.0 } else { 0.0 }).collect();
+            let w = Tensor::from_vec(
+                &[k, n],
+                (0..k * n).map(|_| rng.next_normal() as f32).collect(),
+            );
+            let bits = BitMatrix::from_f01(m, k, &s);
+            let dense = Tensor::from_vec(&[m, k], s).matmul(&w);
+            let packed = spike_matmul(&bits, &w);
+            assert_eq!(packed.shape(), &[m, n]);
+            for (a, b) in dense.data().iter().zip(packed.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "({m},{k},{n})");
+            }
+            // the _into form must fully overwrite dirty scratch
+            let mut dirty = Tensor::full(&[m, n], 9.0);
+            spike_matmul_into(&bits, &w, &mut dirty);
+            assert_eq!(dirty.data(), packed.data());
+        }
+    }
+
+    #[test]
+    fn add_assign_bits_matches_dense_add() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(5);
+        let s: Vec<f32> =
+            (0..3 * 70).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+        let bits = BitMatrix::from_f01(3, 70, &s);
+        let base = Tensor::from_vec(
+            &[3, 70],
+            (0..3 * 70).map(|_| rng.next_normal() as f32).collect(),
+        );
+        let want = base.add(&Tensor::from_vec(&[3, 70], s));
+        let mut got = base.clone();
+        got.add_assign_bits(&bits);
+        for (a, b) in want.data().iter().zip(got.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn matmul_into_overwrites_and_matches() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let mut out = Tensor::full(&[2, 2], 42.0);
+        a.matmul_into(&b, &mut out);
+        assert_eq!(out.data(), a.matmul(&b).data());
     }
 }

@@ -86,6 +86,41 @@ impl BitMatrix {
         &self.data[r * self.words_per_row..(r + 1) * self.words_per_row]
     }
 
+    /// Number of `u64` words backing each row.
+    #[inline]
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// Mutable word view of one row — the §Perf L3 write path for hot
+    /// loops that assemble rows word-wise.  Callers must keep the padding
+    /// bits at and beyond `cols` zero (every other op relies on it).
+    #[inline]
+    pub fn row_words_mut(&mut self, r: usize) -> &mut [u64] {
+        &mut self.data[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    /// Zero every bit, keeping the allocation (scratch reuse).
+    #[inline]
+    pub fn clear(&mut self) {
+        self.data.fill(0);
+    }
+
+    /// Call `f(c)` for every set column `c` of row `r`, in **ascending
+    /// column order** (ascending words, `trailing_zeros` within a word).
+    /// The ascending guarantee is load-bearing: the spike-domain GEMM's
+    /// bit-exactness contract (`tensor::spike_matmul_into`) rides on it.
+    #[inline]
+    pub fn for_each_set_bit(&self, r: usize, mut f: impl FnMut(usize)) {
+        for (wi, &word) in self.row_words(r).iter().enumerate() {
+            let mut w = word;
+            while w != 0 {
+                f(wi * 64 + w.trailing_zeros() as usize);
+                w &= w - 1;
+            }
+        }
+    }
+
     /// `popcount(row_a AND row_b)` — the SAU dot product (paper eq. 5 sum).
     #[inline]
     pub fn and_popcount(&self, r: usize, other: &BitMatrix, r_other: usize) -> u32 {
@@ -129,16 +164,64 @@ impl BitMatrix {
     /// Copy of columns `[start, start + width)` (head splitting: one
     /// attention head owns a contiguous D_K-column slab of `[N, D]`).
     pub fn col_slice(&self, start: usize, width: usize) -> BitMatrix {
-        assert!(start + width <= self.cols, "col_slice out of range");
         let mut out = BitMatrix::zeros(self.rows, width);
+        self.col_slice_into(start, width, &mut out);
+        out
+    }
+
+    /// [`Self::col_slice`] into a pre-sized `[rows, width]` matrix —
+    /// word-shift extraction, no per-bit calls, no allocation.
+    pub fn col_slice_into(&self, start: usize, width: usize, out: &mut BitMatrix) {
+        assert!(start + width <= self.cols, "col_slice out of range");
+        assert_eq!((out.rows, out.cols), (self.rows, width), "col_slice_into shape");
+        let shift = start % 64;
+        let first = start / 64;
+        let tail_mask =
+            if width % 64 == 0 { !0u64 } else { !0u64 >> (64 - width % 64) };
         for r in 0..self.rows {
-            for c in 0..width {
-                if self.get(r, start + c) {
-                    out.set(r, c, true);
+            let src = self.row_words(r);
+            let dst =
+                &mut out.data[r * out.words_per_row..(r + 1) * out.words_per_row];
+            for (wi, d) in dst.iter_mut().enumerate() {
+                let lo = src.get(first + wi).copied().unwrap_or(0) >> shift;
+                let hi = if shift == 0 {
+                    0
+                } else {
+                    src.get(first + wi + 1).copied().unwrap_or(0) << (64 - shift)
+                };
+                *d = lo | hi;
+            }
+            if let Some(last) = dst.last_mut() {
+                *last &= tail_mask;
+            }
+        }
+    }
+
+    /// OR `src` into `self` starting at column `at` (rows aligned) — the
+    /// word-level paste behind `hconcat`, and the zero-allocation head
+    /// merge on the SSA hot path.
+    pub fn paste_cols(&mut self, src: &BitMatrix, at: usize) {
+        assert_eq!(src.rows, self.rows, "paste_cols row mismatch");
+        assert!(at + src.cols <= self.cols, "paste_cols out of range");
+        let off = at % 64;
+        let w0 = at / 64;
+        for r in 0..self.rows {
+            let s = &src.data[r * src.words_per_row..(r + 1) * src.words_per_row];
+            let dst =
+                &mut self.data[r * self.words_per_row..(r + 1) * self.words_per_row];
+            for (wi, &w) in s.iter().enumerate() {
+                if w == 0 {
+                    continue;
+                }
+                dst[w0 + wi] |= w << off;
+                if off != 0 {
+                    let spill = w >> (64 - off);
+                    if spill != 0 {
+                        dst[w0 + wi + 1] |= spill;
+                    }
                 }
             }
         }
-        out
     }
 
     /// Horizontal concatenation (head merging: `[N, D_K] x H -> [N, D]`).
@@ -147,32 +230,41 @@ impl BitMatrix {
         let rows = parts[0].rows;
         let cols: usize = parts.iter().map(|p| p.cols).sum();
         let mut out = BitMatrix::zeros(rows, cols);
+        Self::hconcat_into(parts, &mut out);
+        out
+    }
+
+    /// [`Self::hconcat`] into a pre-sized output matrix.
+    pub fn hconcat_into(parts: &[&BitMatrix], out: &mut BitMatrix) {
+        assert!(!parts.is_empty(), "hconcat of no parts");
+        let cols: usize = parts.iter().map(|p| p.cols).sum();
+        assert_eq!((out.rows, out.cols), (parts[0].rows, cols), "hconcat_into shape");
+        out.clear();
         let mut base = 0;
         for p in parts {
-            assert_eq!(p.rows, rows, "hconcat row mismatch");
-            for r in 0..rows {
-                for c in 0..p.cols {
-                    if p.get(r, c) {
-                        out.set(r, base + c, true);
-                    }
-                }
-            }
+            out.paste_cols(p, base);
             base += p.cols;
         }
-        out
     }
 
     /// Transposed copy (used to lay K out for row-streaming).
     pub fn transpose(&self) -> BitMatrix {
         let mut t = BitMatrix::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                if self.get(r, c) {
-                    t.set(c, r, true);
-                }
-            }
-        }
+        self.transpose_into(&mut t);
         t
+    }
+
+    /// [`Self::transpose`] into a pre-sized `[cols, rows]` matrix —
+    /// iterates set bits only (`trailing_zeros`), no allocation.
+    pub fn transpose_into(&self, out: &mut BitMatrix) {
+        assert_eq!((out.rows, out.cols), (self.cols, self.rows), "transpose_into shape");
+        out.clear();
+        let wpr = out.words_per_row;
+        for r in 0..self.rows {
+            let bit = 1u64 << (r % 64);
+            let wr = r / 64;
+            self.for_each_set_bit(r, |c| out.data[c * wpr + wr] |= bit);
+        }
     }
 }
 
@@ -238,6 +330,51 @@ mod tests {
         assert_eq!((a.rows(), a.cols()), (4, 30));
         assert!(a.get(1, 5) == m.get(1, 5) && b.get(2, 0) == m.get(2, 30));
         assert_eq!(BitMatrix::hconcat(&[&a, &b, &c]), m);
+    }
+
+    #[test]
+    fn into_variants_overwrite_dirty_scratch() {
+        // The zero-alloc hot path reuses buffers across time steps: every
+        // _into op must fully overwrite stale contents, padding included.
+        let mut rng = Xoshiro256::new(23);
+        let vals = |rng: &mut Xoshiro256, n: usize| -> Vec<f32> {
+            (0..n).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect()
+        };
+        let a = BitMatrix::from_f01(5, 130, &vals(&mut rng, 5 * 130));
+        let b = BitMatrix::from_f01(5, 130, &vals(&mut rng, 5 * 130));
+        let mut slice = BitMatrix::from_f01(5, 67, &[1.0; 5 * 67]); // dirty
+        a.col_slice_into(61, 67, &mut slice);
+        assert_eq!(slice, a.col_slice(61, 67));
+        b.col_slice_into(0, 67, &mut slice);
+        assert_eq!(slice, b.col_slice(0, 67));
+
+        let mut t = BitMatrix::from_f01(130, 5, &[1.0; 130 * 5]); // dirty
+        a.transpose_into(&mut t);
+        assert_eq!(t, a.transpose());
+
+        let p0 = a.col_slice(0, 61);
+        let p1 = a.col_slice(61, 69);
+        let mut merged = BitMatrix::from_f01(5, 130, &[1.0; 5 * 130]); // dirty
+        BitMatrix::hconcat_into(&[&p0, &p1], &mut merged);
+        assert_eq!(merged, a);
+    }
+
+    #[test]
+    fn paste_cols_at_word_straddling_offsets() {
+        let mut rng = Xoshiro256::new(29);
+        let vals: Vec<f32> =
+            (0..3 * 70).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+        let part = BitMatrix::from_f01(3, 70, &vals);
+        for at in [0usize, 1, 63, 64, 65, 120] {
+            let mut out = BitMatrix::zeros(3, 70 + at + 3);
+            out.paste_cols(&part, at);
+            for r in 0..3 {
+                for c in 0..70 {
+                    assert_eq!(out.get(r, at + c), part.get(r, c), "at={at} r={r} c={c}");
+                }
+            }
+            assert_eq!(out.count_ones(), part.count_ones(), "at={at}");
+        }
     }
 
     #[test]

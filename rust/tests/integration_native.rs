@@ -21,6 +21,7 @@ use ssa_repro::coordinator::{
     BatchPolicy, Coordinator, CoordinatorConfig, SeedPolicy, Target,
 };
 use ssa_repro::runtime::weights::test_support::build_weight_bytes;
+use ssa_repro::runtime::{InferenceBackend, Manifest, NativeBackend};
 use ssa_repro::tensor::Tensor;
 use ssa_repro::util::rng::Xoshiro256;
 
@@ -111,6 +112,35 @@ fn native_coordinator_serves_all_archs_end_to_end() {
     let report = coord.metrics_report();
     assert!(report.contains("ssa_t4"), "metrics must track the native batches");
     coord.shutdown();
+}
+
+#[test]
+fn ragged_image_buffers_are_rejected_with_a_clear_error() {
+    // Regression: row derivation used to floor `len / px`, silently
+    // truncating ragged buffers; it must fail fast with a clear message.
+    let dir = synth_artifacts("ragged");
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let variant = manifest
+        .variants
+        .iter()
+        .find(|v| v.name == "ssa_t4")
+        .expect("ssa_t4 variant");
+    let loaded = NativeBackend::new().load(&manifest, variant).expect("load");
+    for bad_len in [1usize, PX - 1, PX + 1, 2 * PX + 7] {
+        let buf = vec![0.5f32; bad_len];
+        let err = loaded.infer(&buf, 1).expect_err("ragged buffer must be rejected");
+        assert!(
+            format!("{err:#}").contains("whole number"),
+            "bad_len={bad_len}: error must explain the raggedness, got: {err:#}"
+        );
+    }
+    // exact multiples up to the variant batch still serve
+    let two = vec![0.5f32; 2 * PX];
+    let logits = loaded.infer(&two, 1).expect("2 whole images");
+    assert_eq!(logits.len(), 6);
+    // and oversized whole-image buffers are still rejected (batch = 4)
+    let five = vec![0.5f32; 5 * PX];
+    assert!(loaded.infer(&five, 1).is_err());
 }
 
 #[test]

@@ -7,7 +7,7 @@ use ssa_repro::attention::ssa::bern_compare;
 use ssa_repro::config::LifConfig;
 use ssa_repro::prop::{check, ensure, Gen};
 use ssa_repro::runtime::{Dataset, Weights};
-use ssa_repro::tensor::Tensor;
+use ssa_repro::tensor::{spike_matmul, spike_matmul_into, Tensor};
 use ssa_repro::util::bitpack::BitMatrix;
 use ssa_repro::util::json::Json;
 
@@ -38,6 +38,55 @@ fn prop_bitmatrix_roundtrip_and_transpose() {
         let m = BitMatrix::from_f01(rows, cols, &vals);
         ensure(m.to_f01() == vals, "roundtrip failed")?;
         ensure(m.transpose().transpose() == m, "transpose not involutive")
+    });
+}
+
+#[test]
+fn prop_spike_matmul_bit_identical_to_dense_reference() {
+    // The accumulation-order contract of the spike-domain GEMM: for any
+    // geometry (including non-multiple-of-64 inner dims, i.e. partially
+    // filled last words) and any sparsity — the paper's spike rates span
+    // dead-silent to saturated — the packed trailing_zeros walk must
+    // reproduce the dense {0,1} x matmul result to the exact f32 bit.
+    check("spike_matmul == dense f01 matmul (bitwise)", 200, |g| {
+        let m = g.usize_in(1, 20);
+        let heads = g.usize_in(1, 4);
+        let d_head = g.usize_in(1, 48);
+        let k = heads * d_head; // multi-head-shaped inner dims too
+        let n = g.usize_in(1, 24);
+        let sparsity = [0.0, 0.1, 0.5, 1.0][g.usize_in(0, 3)];
+        let s = g.spikes(m * k, sparsity);
+        let bits = BitMatrix::from_f01(m, k, &s);
+        let w = Tensor::from_vec(
+            &[k, n],
+            (0..k * n).map(|_| g.f32_01() * 4.0 - 2.0).collect(),
+        );
+        let dense = Tensor::from_vec(&[m, k], s).matmul(&w);
+        let packed = spike_matmul(&bits, &w);
+        for (idx, (a, b)) in dense.data().iter().zip(packed.data()).enumerate() {
+            ensure(
+                a.to_bits() == b.to_bits(),
+                format!("m={m} k={k} n={n} rate={sparsity}: elem {idx}: {a} != {b}"),
+            )?;
+        }
+        // per-head column slabs see the same contract (the layer hot path
+        // slices [m, k] into `heads` slabs of d_head columns)
+        let h = g.usize_in(0, heads - 1);
+        let slab = bits.col_slice(h * d_head, d_head);
+        let wh = Tensor::from_vec(
+            &[d_head, n],
+            (0..d_head * n).map(|_| g.f32_01() * 4.0 - 2.0).collect(),
+        );
+        let want = Tensor::from_vec(&[m, d_head], slab.to_f01()).matmul(&wh);
+        let mut got = Tensor::full(&[m, n], f32::NAN); // dirty scratch
+        spike_matmul_into(&slab, &wh, &mut got);
+        for (idx, (a, b)) in want.data().iter().zip(got.data()).enumerate() {
+            ensure(
+                a.to_bits() == b.to_bits(),
+                format!("head slab h={h}: elem {idx}: {a} != {b}"),
+            )?;
+        }
+        Ok(())
     });
 }
 

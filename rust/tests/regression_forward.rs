@@ -1,0 +1,113 @@
+//! Forward-pass bit-exactness regression for the spike-native rewrite.
+//!
+//! The spike-domain GEMM + scratch-arena hot path must be *byte-identical*
+//! to the pre-rewrite implementation for fixed seeds.  The pre-rewrite
+//! path is retained verbatim as `NativeModel::infer_image_reference`
+//! (dense `to_f01` + `Tensor::matmul`, allocating per step), so these
+//! tests compare `f32::to_bits` of every logit the two paths produce —
+//! across architectures, seeds, batch placements, and `infer_rows`'s
+//! pinned-stream seam the worker pool depends on.
+
+use ssa_repro::attention::model::{image_seed, Arch, ModelGeometry, NativeModel};
+use ssa_repro::config::{LifConfig, PrngSharing};
+use ssa_repro::runtime::weights::test_support::build_weights;
+use ssa_repro::util::rng::Xoshiro256;
+
+/// 8x8 images, 4x4 patches -> N=4, D=16, H=2, M=32, 2 layers, 3 classes.
+fn geometry(sharing: PrngSharing) -> ModelGeometry {
+    ModelGeometry {
+        image_size: 8,
+        patch_size: 4,
+        n_tokens: 4,
+        patch_dim: 16,
+        d_model: 16,
+        n_heads: 2,
+        d_head: 8,
+        d_mlp: 32,
+        n_layers: 2,
+        n_classes: 3,
+        time_steps: 5,
+        lif: LifConfig::default(),
+        prng_sharing: sharing,
+        spikformer_scale: 0.25,
+    }
+}
+
+fn model(arch: Arch, sharing: PrngSharing) -> NativeModel {
+    let geo = geometry(sharing);
+    let w = build_weights(
+        geo.patch_dim,
+        geo.d_model,
+        geo.n_tokens,
+        geo.d_mlp,
+        geo.n_layers,
+        geo.n_classes,
+        0xFACE,
+    );
+    NativeModel::from_weights(geo, arch, &w).expect("bind regression model")
+}
+
+fn images(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n * 64).map(|_| rng.next_f32()).collect()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: logit {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn infer_rows_byte_identical_to_dense_reference() {
+    for (arch, name) in [(Arch::Ssa, "ssa"), (Arch::Spikformer, "spikformer")] {
+        for sharing in [PrngSharing::PerRow, PrngSharing::Independent, PrngSharing::Global]
+        {
+            let m = model(arch, sharing);
+            let batch = 3;
+            let imgs = images(batch, 0x1234);
+            let row_seeds = [7u64, 7, 0xDEAD_BEEF];
+            let fast = m.infer_rows(&imgs, batch, &row_seeds).unwrap();
+            let mut dense = Vec::new();
+            for i in 0..batch {
+                dense.extend(
+                    m.infer_image_reference(&imgs[i * 64..(i + 1) * 64], row_seeds[i])
+                        .unwrap(),
+                );
+            }
+            assert_bits_eq(&fast, &dense, &format!("{name}/{sharing:?}"));
+        }
+    }
+}
+
+#[test]
+fn batched_infer_byte_identical_to_dense_reference() {
+    let m = model(Arch::Ssa, PrngSharing::PerRow);
+    let batch = 4;
+    let imgs = images(batch, 0x9999);
+    for seed in [0u32, 42, u32::MAX] {
+        let fast = m.infer(&imgs, batch, seed).unwrap();
+        let mut dense = Vec::new();
+        for i in 0..batch {
+            dense.extend(
+                m.infer_image_reference(&imgs[i * 64..(i + 1) * 64], image_seed(seed, i))
+                    .unwrap(),
+            );
+        }
+        assert_bits_eq(&fast, &dense, &format!("seed {seed}"));
+    }
+}
+
+#[test]
+fn repeated_requests_on_one_model_stay_deterministic() {
+    // Scratch arenas are rebuilt per request; back-to-back requests on the
+    // same model must not leak state between inferences.
+    let m = model(Arch::Ssa, PrngSharing::PerRow);
+    let imgs = images(1, 5);
+    let img = imgs.as_slice();
+    let a = m.infer_image(img, 99).unwrap();
+    let _ = m.infer_image(img, 100).unwrap(); // interleave a different stream
+    let b = m.infer_image(img, 99).unwrap();
+    assert_bits_eq(&a, &b, "replay after interleaved request");
+}

@@ -1,0 +1,89 @@
+//! Serve the coordinator over TCP and drive it from the same process —
+//! the library-level equivalent of running `ssa-repro serve --listen`
+//! in one terminal and `ssa-repro classify-remote` in another.
+//!
+//! ```bash
+//! cargo run --release --example net_loopback
+//! ```
+//!
+//! Demonstrates the full wire life cycle: start a [`NetServer`] on a
+//! loopback socket (port 0 = pick a free port), ping it for its facts,
+//! classify a few images (pipelined on one connection), read the
+//! plaintext metrics report, then shut the server down gracefully over
+//! the wire and verify the drain.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use ssa_repro::config::BackendKind;
+use ssa_repro::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, SeedPolicy, Target,
+};
+use ssa_repro::loadgen::{self, SyntheticSpec};
+use ssa_repro::net::{NetClient, NetServer, NetServerConfig};
+
+fn main() -> Result<()> {
+    ssa_repro::util::logging::init_from_env();
+
+    // a complete servable artifacts dir — manifest + weights + dataset,
+    // no Python, no XLA
+    let dir = std::env::temp_dir().join("ssa-example-net-loopback");
+    loadgen::write_artifacts(&dir, &SyntheticSpec::default())?;
+
+    // coordinator with a 2-worker native replica pool
+    let mut cfg = CoordinatorConfig::new(dir)
+        .with_backend(BackendKind::Native)
+        .with_workers(2);
+    cfg.policy = BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(2) };
+    cfg.preload = vec!["ssa_t4".into()];
+    let coord = Arc::new(Coordinator::start(cfg)?);
+
+    // the TCP front-end: port 0 picks a free port
+    let server = NetServer::start(
+        Arc::clone(&coord),
+        NetServerConfig::new("127.0.0.1:0").with_max_inflight(64),
+    )?;
+    let addr = server.local_addr().to_string();
+    println!("listening on tcp://{addr}");
+
+    // an ordinary remote client
+    let client = NetClient::connect(&addr)?;
+    let info = client.ping()?;
+    println!(
+        "server facts: {} backend, {} worker(s), targets {}",
+        info.backend,
+        info.workers,
+        info.targets.join(", ")
+    );
+
+    // pipelined classifies: submit everything, then collect out of order
+    let px = info.image_size * info.image_size;
+    let pending: Vec<_> = (0..8u32)
+        .map(|i| {
+            let image: Vec<f32> =
+                (0..px).map(|p| ((p as u32 ^ i) % 97) as f32 / 96.0).collect();
+            client.submit(Target::ssa(4), &image, SeedPolicy::Fixed(7))
+        })
+        .collect::<Result<_>>()?;
+    for (i, p) in pending.into_iter().enumerate() {
+        let resp = p.wait()?;
+        println!(
+            "[{i}] class {} (batch {}, rtt {:.0} us)",
+            resp.class, resp.batch_size, resp.latency_us
+        );
+    }
+
+    println!("{}", client.metrics()?);
+
+    // graceful wire shutdown: ack, drain, close
+    client.shutdown_server()?;
+    server.wait_shutdown_requested();
+    server.shutdown();
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+    println!("server drained and closed");
+    Ok(())
+}

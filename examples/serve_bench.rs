@@ -46,6 +46,7 @@ fn main() -> Result<()> {
         scenario: scenario.name.clone(),
         mode: spec.mode.describe(),
         backend: "native".into(),
+        transport: "in-process".into(),
         duration_s: spec.duration.as_secs_f64(),
         runs: Vec::new(),
     };

@@ -4,14 +4,23 @@
 //! ssa-repro info
 //! ssa-repro serve       [--artifacts DIR] [--backend native|xla] [--requests N]
 //!                       [--target ssa_t10] [--ensemble K] [--workers N]
+//!                       [--listen ADDR] [--max-inflight N] [--synthetic]
+//! ssa-repro classify-remote --addr HOST:PORT [--target T] [--n N]
+//!                       [--metrics] [--shutdown]
 //! ssa-repro serve-bench [--synthetic] [--workers 1,4] [--concurrency C | --rps R]
 //!                       [--duration SECS] [--mix "ssa_t4*3,ann@fixed:7"]
+//!                       [--remote HOST:PORT]
 //! ssa-repro bench-native [--budget SECS] [--batch B] [--layers L] [--t T]
 //!                        [--out BENCH_native.json]
 //! ssa-repro simulate    [--n 16] [--dk 16] [--t 10] [--sharing per-row] [--trace]
 //! ssa-repro experiments <table1|table2|table3|headline|fig1|fig2|fig3|all>
 //!                       [--artifacts DIR] [--cross-check N] [--backend native|xla]
 //! ```
+//!
+//! Every option a subcommand accepts is registered in [`KNOWN_FLAGS`];
+//! [`check_known_flags`] rejects typos up front, and the unit tests pin
+//! [`USAGE`] to the registry so the embedded help can't drift from what
+//! actually parses.
 
 use std::collections::HashMap;
 
@@ -77,6 +86,23 @@ impl Args {
         self.positional.first().map(String::as_str)
     }
 
+    /// Every `--name` present on the command line — value options and
+    /// boolean flags alike — for validation against [`KNOWN_FLAGS`].
+    pub fn option_names(&self) -> impl Iterator<Item = &str> {
+        self.opts
+            .keys()
+            .map(String::as_str)
+            .chain(self.flags.iter().map(String::as_str))
+    }
+
+    /// The `--name`s that arrived *without* a value (boolean form).  Used
+    /// to catch a value option whose value was forgotten: `--remote` at
+    /// the end of the line parses as a flag, and silently ignoring it
+    /// would run a different benchmark than the user asked for.
+    pub fn bare_flags(&self) -> impl Iterator<Item = &str> {
+        self.flags.iter().map(String::as_str)
+    }
+
     pub fn sub_arg(&self, i: usize) -> Result<&str> {
         self.positional
             .get(i)
@@ -90,15 +116,22 @@ ssa-repro — Stochastic Spiking Attention (AICAS 2024) reproduction
 
 USAGE:
   ssa-repro info
-  ssa-repro serve       [--artifacts DIR] [--backend native|xla]
+  ssa-repro serve       [--artifacts DIR | --synthetic]
+                        [--backend native|xla]
                         [--requests N] [--target ssa_t10] [--workers N]
                         [--ensemble K] [--max-batch B] [--max-delay-ms D]
+                        [--listen HOST:PORT] [--max-inflight N]
+  ssa-repro classify-remote --addr HOST:PORT
+                        [--target ssa_t4] [--n N] [--seed S]
+                        [--seed-policy perbatch|fixed:N|ensemble:K]
+                        [--metrics] [--shutdown]
   ssa-repro serve-bench [--artifacts DIR | --synthetic]
                         [--backend native|xla] [--workers N[,M,...]]
                         [--concurrency C | --rps R] [--duration SECS]
                         [--mix \"ssa_t4*3,ann@fixed:7\"]
                         [--seed-policy perbatch|fixed:N|ensemble:K]
                         [--max-batch B] [--max-delay-ms D] [--seed S]
+                        [--remote HOST:PORT]
                         [--out BENCH_serving.json]
   ssa-repro bench-native [--budget SECS] [--warmup SECS] [--batch B]
                         [--layers L] [--t T] [--seed S]
@@ -115,16 +148,40 @@ Serving (see rust/DESIGN.md):
                    xla backend is pinned to 1 worker).  Fixed-seed
                    results are bit-identical for any worker count.
 
+Network serving (DESIGN.md section 3 specifies the wire protocol):
+  serve --listen HOST:PORT
+                   expose the coordinator over TCP (length-prefixed JSON
+                   frames; port 0 picks a free port and prints it).  The
+                   server runs until a client sends the shutdown op,
+                   then drains in-flight requests and exits cleanly.
+  --max-inflight N admission budget: classify requests admitted but not
+                   yet answered, server-wide (default 256); beyond it
+                   the server answers a typed `overloaded` error
+                   immediately instead of queueing
+  classify-remote  drive a listening server: ping it (backend, workers,
+                   geometry, targets), classify --n synthetic images
+                   (default target: the server's first), print round-trip
+                   latencies; --metrics fetches the server's plaintext
+                   metrics report, --shutdown requests a graceful drain
+
 serve-bench (load generation -> BENCH_serving.json):
   --concurrency C  closed loop: C clients, each submits the next request
                    as soon as the previous answers (capacity measurement)
   --rps R          open loop: Poisson arrivals at R req/s regardless of
                    completions (latency-under-offered-load measurement)
   --duration S     seconds of load per run (default 5)
-  --workers 1,4    comma list: one run per worker count; the report
-                   records the last-vs-first throughput speedup
+  --workers 1,4    comma-separated list: one full run per worker count
+                   (e.g. 1,4 measures the same load on a 1-worker and a
+                   4-worker pool); the report records the last-vs-first
+                   throughput speedup.  In-process runs only.
   --mix SPEC       weighted scenario mix, TARGET[@POLICY][*WEIGHT] per
                    comma-separated entry (e.g. \"ssa_t4*3,ann@fixed:7\")
+  --remote ADDR    drive a live `serve --listen` server over real
+                   sockets instead of an in-process coordinator; the
+                   reported percentiles are then network-path round
+                   trips and the JSON records transport tcp://ADDR
+                   (--workers/--backend/--max-batch are the server's
+                   business and are rejected or ignored here)
   --synthetic      fabricate a servable artifacts dir (manifest, random
                    weights, synthetic dataset) — no Python needed
 
@@ -152,6 +209,87 @@ Backends (see rust/DESIGN.md):
 
 Artifacts default to ./artifacts (build with `make artifacts`).
 Set SSA_LOG=debug for verbose logs.";
+
+/// Per-subcommand registry of every accepted `--option` / `--flag`.
+///
+/// This is the single source of truth the CLI validates against
+/// ([`check_known_flags`]); the unit tests additionally assert that the
+/// set of flags appearing in [`USAGE`] is *exactly* this set, so the
+/// embedded help text cannot document a flag that doesn't parse or
+/// silently grow an undocumented one.
+pub const KNOWN_FLAGS: &[(&str, &[&str])] = &[
+    ("info", &[]),
+    (
+        "serve",
+        &[
+            "artifacts",
+            "backend",
+            "requests",
+            "target",
+            "workers",
+            "ensemble",
+            "max-batch",
+            "max-delay-ms",
+            "listen",
+            "max-inflight",
+            "synthetic",
+        ],
+    ),
+    ("classify-remote", &["addr", "target", "n", "seed", "seed-policy", "metrics", "shutdown"]),
+    (
+        "serve-bench",
+        &[
+            "artifacts",
+            "synthetic",
+            "backend",
+            "workers",
+            "concurrency",
+            "rps",
+            "duration",
+            "mix",
+            "seed-policy",
+            "max-batch",
+            "max-delay-ms",
+            "seed",
+            "remote",
+            "out",
+        ],
+    ),
+    (
+        "bench-native",
+        &["budget", "warmup", "batch", "layers", "t", "seed", "out"],
+    ),
+    ("simulate", &["n", "dk", "t", "sharing", "trace"]),
+    ("experiments", &["artifacts", "cross-check", "backend"]),
+];
+
+/// The registered names that are genuinely boolean (presence-only).
+/// Every other name in [`KNOWN_FLAGS`] takes a value, and
+/// [`check_known_flags`] rejects it when the value is missing.
+pub const BOOLEAN_FLAGS: &[&str] = &["synthetic", "trace", "metrics", "shutdown"];
+
+/// Reject options no subcommand documents — a typo like `--worker 4`
+/// must fail loudly instead of silently falling back to a default — and
+/// value options missing their value (`serve-bench --remote` with no
+/// address parses as a boolean and would silently benchmark in-process).
+/// Unknown subcommands pass through (the dispatcher prints USAGE).
+pub fn check_known_flags(args: &Args) -> Result<()> {
+    let Some(sub) = args.subcommand() else { return Ok(()) };
+    let Some((_, known)) = KNOWN_FLAGS.iter().find(|(s, _)| *s == sub) else {
+        return Ok(());
+    };
+    for name in args.option_names() {
+        if !known.contains(&name) {
+            bail!("unknown option --{name} for `{sub}` — run `ssa-repro` for usage");
+        }
+    }
+    for name in args.bare_flags() {
+        if known.contains(&name) && !BOOLEAN_FLAGS.contains(&name) {
+            bail!("option --{name} requires a value — run `ssa-repro` for usage");
+        }
+    }
+    Ok(())
+}
 
 #[cfg(test)]
 mod tests {
@@ -195,5 +333,94 @@ mod tests {
     fn missing_positional_errors() {
         let a = parse("experiments");
         assert!(a.sub_arg(1).is_err());
+    }
+
+    /// Every `--flag` token appearing in USAGE and the exact contents of
+    /// `KNOWN_FLAGS` must be the same set: help text documents only what
+    /// parses, and everything that parses is documented.
+    #[test]
+    fn usage_and_known_flags_agree() {
+        use std::collections::BTreeSet;
+        let mut documented = BTreeSet::new();
+        let bytes = USAGE.as_bytes();
+        let mut i = 0;
+        while i + 1 < bytes.len() {
+            if bytes[i] == b'-' && bytes[i + 1] == b'-' {
+                let mut j = i + 2;
+                while j < bytes.len()
+                    && (bytes[j].is_ascii_lowercase()
+                        || bytes[j].is_ascii_digit()
+                        || bytes[j] == b'-')
+                {
+                    j += 1;
+                }
+                if j > i + 2 {
+                    documented.insert(std::str::from_utf8(&bytes[i + 2..j]).unwrap().to_string());
+                }
+                i = j;
+            } else {
+                i += 1;
+            }
+        }
+        let known: BTreeSet<String> = KNOWN_FLAGS
+            .iter()
+            .flat_map(|(_, fs)| fs.iter().map(|s| s.to_string()))
+            .collect();
+        for f in &documented {
+            assert!(known.contains(f), "--{f} appears in USAGE but no subcommand accepts it");
+        }
+        for f in &known {
+            assert!(documented.contains(f), "--{f} is accepted but missing from USAGE");
+        }
+    }
+
+    /// Representative invocations exercising every registered flag of
+    /// every subcommand must parse and validate.
+    #[test]
+    fn every_documented_flag_parses_and_validates() {
+        for line in [
+            "info",
+            "serve --artifacts a --backend native --requests 4 --target ssa_t10 \
+             --workers 2 --ensemble 2 --max-batch 4 --max-delay-ms 2",
+            "serve --listen 127.0.0.1:0 --synthetic --max-inflight 64",
+            "classify-remote --addr 127.0.0.1:7878 --target ssa_t4 \
+             --seed-policy fixed:7 --n 2 --seed 9 --metrics --shutdown",
+            "serve-bench --synthetic --workers 1,4 --concurrency 16 --duration 1 \
+             --mix ssa_t4 --seed-policy perbatch --max-batch 2 --max-delay-ms 5 \
+             --seed 7 --out b.json",
+            "serve-bench --artifacts a --backend native --rps 100 --duration 1",
+            "serve-bench --remote 127.0.0.1:7878 --concurrency 4 --duration 1",
+            "bench-native --budget 0.5 --warmup 0.1 --batch 4 --layers 1 --t 4 \
+             --seed 3 --out n.json",
+            "simulate --n 16 --dk 16 --t 10 --sharing per-row --trace",
+            "experiments table1 --artifacts a --cross-check 8 --backend native",
+        ] {
+            let a = parse(line);
+            check_known_flags(&a).unwrap_or_else(|e| panic!("{line}: {e}"));
+        }
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected() {
+        assert!(check_known_flags(&parse("serve --bogus")).is_err());
+        assert!(check_known_flags(&parse("serve --worker 4")).is_err(), "typo caught");
+        assert!(check_known_flags(&parse("serve-bench --lisen 1:2")).is_err());
+        assert!(check_known_flags(&parse("experiments table1")).is_ok());
+        assert!(check_known_flags(&parse("")).is_ok(), "no subcommand, no complaint");
+    }
+
+    /// A value option with its value forgotten parses as a boolean flag;
+    /// validation must refuse it rather than silently run without it.
+    #[test]
+    fn value_options_missing_their_value_are_rejected() {
+        assert!(check_known_flags(&parse("serve-bench --remote")).is_err());
+        assert!(check_known_flags(&parse("serve --synthetic --listen")).is_err());
+        assert!(check_known_flags(&parse("serve-bench --duration --synthetic")).is_err());
+        // genuine booleans keep working bare
+        assert!(check_known_flags(&parse("serve-bench --synthetic")).is_ok());
+        assert!(check_known_flags(&parse("simulate --trace")).is_ok());
+        assert!(
+            check_known_flags(&parse("classify-remote --addr h:1 --metrics --shutdown")).is_ok()
+        );
     }
 }

@@ -1,7 +1,11 @@
 //! L3 serving coordinator — the system shell around the compiled spiking
 //! models: target-aware router, dynamic batcher, a replica worker pool
-//! (each worker owns its backend state — see `crate::pool`),
+//! (each worker owns its backend state — see [`crate::pool`]),
 //! seed-ensemble execution, and serving metrics.  Python never runs here.
+//!
+//! The coordinator itself is transport-free; [`crate::net`] exposes the
+//! [`Coordinator::submit`] API over TCP (`serve --listen`), reusing the
+//! request/response vocabulary defined in [`request`].
 
 pub mod batcher;
 pub mod metrics;

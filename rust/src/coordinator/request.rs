@@ -1,6 +1,11 @@
 //! Request/response types crossing the coordinator's thread boundaries.
 //! Only plain data crosses threads — all PJRT state stays on the single
 //! inference thread (the `xla` crate's handles are `Rc`-based and !Send).
+//!
+//! The same types cross the *network* boundary: `src/net/protocol.rs`
+//! serializes [`Target`], [`SeedPolicy`], [`ClassifyResponse`], and
+//! [`ServeError`] onto the wire, so the TCP front-end speaks exactly the
+//! vocabulary of the in-process submit API.
 
 use std::sync::mpsc;
 use std::time::Instant;
@@ -15,14 +20,17 @@ pub struct Target {
 }
 
 impl Target {
+    /// The SSA variant at `t` time steps (`ssa_t{t}`).
     pub fn ssa(t: usize) -> Self {
         Self { arch: "ssa".into(), time_steps: t }
     }
 
+    /// The non-spiking ANN baseline (`ann`).
     pub fn ann() -> Self {
         Self { arch: "ann".into(), time_steps: 0 }
     }
 
+    /// The Spikformer baseline at `t` time steps (`spikformer_t{t}`).
     pub fn spikformer(t: usize) -> Self {
         Self { arch: "spikformer".into(), time_steps: t }
     }
@@ -62,25 +70,73 @@ pub enum SeedPolicy {
     Ensemble(u32),
 }
 
+impl SeedPolicy {
+    /// Parse the canonical string form: `perbatch`, `fixed:SEED`, or
+    /// `ensemble:K`.  Inverse of [`std::fmt::Display`]; used by the
+    /// `--seed-policy` / `--mix` CLI flags and the wire protocol.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        use anyhow::Context;
+        match s.split_once(':') {
+            None if s == "perbatch" => Ok(SeedPolicy::PerBatch),
+            Some(("fixed", v)) => Ok(SeedPolicy::Fixed(v.parse().context("fixed seed value")?)),
+            Some(("ensemble", v)) => Ok(SeedPolicy::Ensemble(v.parse().context("ensemble size")?)),
+            _ => anyhow::bail!(
+                "unknown seed policy {s:?} (expected `perbatch`, `fixed:SEED`, or `ensemble:K`)"
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for SeedPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SeedPolicy::PerBatch => write!(f, "perbatch"),
+            SeedPolicy::Fixed(s) => write!(f, "fixed:{s}"),
+            SeedPolicy::Ensemble(k) => write!(f, "ensemble:{k}"),
+        }
+    }
+}
+
+impl std::str::FromStr for SeedPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        SeedPolicy::parse(s)
+    }
+}
+
 /// One classification request (a single image).
 #[derive(Debug)]
 pub struct ClassifyRequest {
+    /// Coordinator-assigned request id, echoed in [`ClassifyResponse::id`].
     pub id: u64,
+    /// Which model variant serves this request.
     pub target: Target,
     /// Row-major `[S, S]` pixels in [0,1].
     pub image: Vec<f32>,
+    /// Seed selection for the stochastic forward pass.
     pub seed_policy: SeedPolicy,
+    /// Submission instant — the latency clock starts here.
     pub submitted_at: Instant,
+    /// Where the answer goes.  May be a per-request channel (in-process
+    /// submit) or a channel shared by a whole connection (network
+    /// front-end, which demuxes by [`ClassifyRequest::id`]).
     pub reply: mpsc::Sender<ClassifyResponse>,
 }
 
 /// The answer.
 #[derive(Clone, Debug)]
 pub struct ClassifyResponse {
+    /// Echo of [`ClassifyRequest::id`].
     pub id: u64,
+    /// Argmax class index.
     pub class: usize,
+    /// `[n_classes]` logits (ensemble-averaged when applicable).
     pub logits: Vec<f32>,
-    /// End-to-end latency in microseconds (submit -> reply).
+    /// End-to-end latency in microseconds.  In-process: submit → reply.
+    /// Over the network front-end the client rewrites this with its own
+    /// measured round-trip time, so loadgen percentiles always reflect
+    /// what the caller saw.
     pub latency_us: f64,
     /// How many requests shared the executed batch (batching telemetry).
     pub batch_size: usize,
@@ -88,12 +144,83 @@ pub struct ClassifyResponse {
     pub seed: u32,
 }
 
-/// Errors surfaced to the caller as a response-channel drop + log line.
-#[derive(Debug)]
+/// Errors surfaced to the caller.
+///
+/// In process these appear as a typed `Err` from `Coordinator::submit`
+/// (or a response-channel drop); over the wire they travel as typed
+/// error replies — see `net::protocol` — so a remote caller can
+/// distinguish backpressure ([`ServeError::Overloaded`]) from misuse
+/// ([`ServeError::BadImage`], [`ServeError::UnknownTarget`]).
+#[derive(Clone, Debug, PartialEq)]
 pub enum ServeError {
+    /// The coordinator (or the network server) is shutting down.
     Shutdown,
+    /// The manifest has no variant for the requested target key.
     UnknownTarget(String),
-    BadImage { got: usize, want: usize },
+    /// The submitted pixel buffer does not match the manifest geometry.
+    BadImage {
+        /// Pixels received.
+        got: usize,
+        /// Pixels the manifest's `S × S` geometry requires.
+        want: usize,
+    },
+    /// Admission control rejected the request: the server's bounded
+    /// in-flight budget is exhausted.  Back off and retry.
+    Overloaded,
+    /// The request could not be understood (network front-end only:
+    /// malformed frame, unknown op, missing field, ...).
+    BadRequest(String),
+    /// The server accepted the request but could not produce an answer
+    /// (a pool worker failed the batch).  Unlike [`ServeError::Overloaded`]
+    /// this is not the caller's fault and not load-dependent.
+    Internal(String),
+}
+
+impl ServeError {
+    /// Stable machine-readable code, the wire-protocol `error` field.
+    /// [`ServeError::from_code`] is the inverse.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::Shutdown => "shutdown",
+            ServeError::UnknownTarget(_) => "unknown_target",
+            ServeError::BadImage { .. } => "bad_image",
+            ServeError::Overloaded => "overloaded",
+            ServeError::BadRequest(_) => "bad_request",
+            ServeError::Internal(_) => "internal",
+        }
+    }
+
+    /// Rebuild from a wire `(code, detail)` pair.  Unknown codes decode
+    /// as [`ServeError::BadRequest`] so old clients fail soft against
+    /// newer servers.
+    pub fn from_code(code: &str, detail: &str) -> Self {
+        match code {
+            "shutdown" => ServeError::Shutdown,
+            "unknown_target" => ServeError::UnknownTarget(detail.to_string()),
+            "bad_image" => {
+                // detail is "got/want"; fall back to zeros on drift
+                let (got, want) = detail
+                    .split_once('/')
+                    .and_then(|(g, w)| Some((g.parse().ok()?, w.parse().ok()?)))
+                    .unwrap_or((0, 0));
+                ServeError::BadImage { got, want }
+            }
+            "overloaded" => ServeError::Overloaded,
+            "internal" => ServeError::Internal(detail.to_string()),
+            _ => ServeError::BadRequest(detail.to_string()),
+        }
+    }
+
+    /// The human-oriented counterpart of [`ServeError::code`], carrying
+    /// the variant's payload (parsed back by [`ServeError::from_code`]).
+    pub fn detail(&self) -> String {
+        match self {
+            ServeError::Shutdown | ServeError::Overloaded => String::new(),
+            ServeError::UnknownTarget(t) => t.clone(),
+            ServeError::BadImage { got, want } => format!("{got}/{want}"),
+            ServeError::BadRequest(m) | ServeError::Internal(m) => m.clone(),
+        }
+    }
 }
 
 impl std::fmt::Display for ServeError {
@@ -104,6 +231,9 @@ impl std::fmt::Display for ServeError {
             ServeError::BadImage { got, want } => {
                 write!(f, "image has {got} pixels, expected {want}")
             }
+            ServeError::Overloaded => write!(f, "server overloaded (in-flight budget exhausted)"),
+            ServeError::BadRequest(m) => write!(f, "bad request: {m}"),
+            ServeError::Internal(m) => write!(f, "internal server error: {m}"),
         }
     }
 }
@@ -122,5 +252,34 @@ mod tests {
         assert!(Target::parse("ssa").is_err());
         assert!(Target::parse("_t4").is_err());
         assert!(Target::parse("ssa_tx").is_err());
+    }
+
+    #[test]
+    fn seed_policy_display_parse_roundtrip() {
+        for p in [SeedPolicy::PerBatch, SeedPolicy::Fixed(42), SeedPolicy::Ensemble(4)] {
+            assert_eq!(SeedPolicy::parse(&p.to_string()).unwrap(), p);
+        }
+        assert!(SeedPolicy::parse("fixed").is_err());
+        assert!(SeedPolicy::parse("random:3").is_err());
+    }
+
+    #[test]
+    fn serve_error_code_roundtrip() {
+        let errs = [
+            ServeError::Shutdown,
+            ServeError::UnknownTarget("ssa_t9".into()),
+            ServeError::BadImage { got: 3, want: 256 },
+            ServeError::Overloaded,
+            ServeError::BadRequest("no op".into()),
+            ServeError::Internal("worker dropped the batch".into()),
+        ];
+        for e in errs {
+            assert_eq!(ServeError::from_code(e.code(), &e.detail()), e);
+        }
+        // unknown codes fail soft
+        assert_eq!(
+            ServeError::from_code("new_fancy_error", "x"),
+            ServeError::BadRequest("x".into())
+        );
     }
 }

@@ -122,6 +122,24 @@ impl Coordinator {
         image: Vec<f32>,
         seed_policy: SeedPolicy,
     ) -> Result<mpsc::Receiver<ClassifyResponse>, ServeError> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_with_reply(target, image, seed_policy, tx)?;
+        Ok(rx)
+    }
+
+    /// Submit one image with a caller-owned reply sender, returning the
+    /// assigned request id.  The sender may be shared by many in-flight
+    /// requests (the network front-end hands every request of one
+    /// connection the same channel and demuxes completions by the id
+    /// echoed in [`ClassifyResponse::id`]); `submit` is the
+    /// one-channel-per-request convenience wrapper.
+    pub fn submit_with_reply(
+        &self,
+        target: Target,
+        image: Vec<f32>,
+        seed_policy: SeedPolicy,
+        reply: mpsc::Sender<ClassifyResponse>,
+    ) -> Result<u64, ServeError> {
         let want = self.manifest.image_size * self.manifest.image_size;
         if image.len() != want {
             return Err(ServeError::BadImage { got: image.len(), want });
@@ -130,19 +148,19 @@ impl Coordinator {
         if self.manifest.variant(&key).is_err() {
             return Err(ServeError::UnknownTarget(key));
         }
-        let (tx, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = ClassifyRequest {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            id,
             target,
             image,
             seed_policy,
             submitted_at: Instant::now(),
-            reply: tx,
+            reply,
         };
         if !self.router.push(req) {
             return Err(ServeError::Shutdown);
         }
-        Ok(rx)
+        Ok(id)
     }
 
     /// Submit and block for the answer.

@@ -1,6 +1,6 @@
 //! Analytic CPU/GPU/FPGA device models for Table III.
 //!
-//! We have neither the paper's i7-12850HX nor an RTX A2000 (DESIGN.md §3),
+//! We have neither the paper's i7-12850HX nor an RTX A2000 (EXPERIMENTS.md §E3),
 //! so the CPU/GPU rows are regenerated from first-order throughput models
 //! calibrated once against the paper's clocks:
 //!

@@ -193,7 +193,7 @@ impl Headline {
 
 /// Cross-check the analytic SSA op counts against the cycle-accurate
 /// simulator's event counters for one head, scaled to H heads
-/// (test `energy_matches_sim` — DESIGN.md §6.4).
+/// (test `energy_matches_sim` — EXPERIMENTS.md §E5).
 pub fn ssa_ops_vs_sim(cfg: &AttnConfig, events: &ArrayEvents, heads: f64) -> (f64, f64) {
     let act = ActivityFactors::default();
     let (ops, _) = ssa_counts(cfg, &act);

@@ -1,4 +1,5 @@
-//! Experiment drivers — one per paper table/figure (DESIGN.md §4).
+//! Experiment drivers — one per paper table/figure (indexed in
+//! EXPERIMENTS.md).
 //!
 //! Each driver returns a rendered report string so the CLI, the examples,
 //! and the bench binaries share one implementation.

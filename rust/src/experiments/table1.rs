@@ -62,7 +62,7 @@ impl AccuracyTable {
         out.push_str(
             "(paper, MNIST/CIFAR-10 @ ViT-Small: ANN 99.02/83.66; \
              Spikformer T=10 98.34/83.41; SSA T=10 98.31/83.53 — see \
-             DESIGN.md §3 for the dataset substitution)\n",
+             EXPERIMENTS.md §E1 for the dataset substitution)\n",
         );
         out
     }

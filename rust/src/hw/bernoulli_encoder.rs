@@ -63,7 +63,7 @@ impl BernoulliEncoder {
     }
 
     /// The pow2 datapath as hardware would wire it: compare `count` against
-    /// the top `log2(m)` bits of the LFSR word.  Must equal [`sample`] for
+    /// the top `log2(m)` bits of the LFSR word.  Must equal [`Self::sample`] for
     /// pow2 moduli (tested) — this is the §III-D equivalence.
     #[inline]
     pub fn sample_pow2_datapath(&self, lfsr_word: u16, count: u32) -> bool {

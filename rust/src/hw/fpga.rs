@@ -2,7 +2,7 @@
 //!
 //! The paper implements one SSA block on a "lightweight FPGA (within
 //! Xilinx Zynq-7000 SoC)" at f_clk = 200 MHz and reports 3.3 µs latency
-//! and 1.47 W.  We cannot synthesize bitstreams here (DESIGN.md §3), so
+//! and 1.47 W.  We cannot synthesize bitstreams here (EXPERIMENTS.md §E3), so
 //! this module derives:
 //!
 //! * **latency** from the cycle-accurate schedule: `(T+1)·D_K` datapath

@@ -12,7 +12,12 @@
 //!   ([`hw`]), software golden models ([`attention`]), and the 45 nm
 //!   energy / device models ([`energy`]) that regenerate Tables II-III.
 //!
-//! See `DESIGN.md` for the system inventory and per-experiment index.
+//! Around the engine sit the serving shell ([`coordinator`], [`pool`]),
+//! the TCP front-end that exposes it over the network ([`net`]), and the
+//! load-generation harness that measures both paths ([`loadgen`]).
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index,
+//! and the top-level `README.md` for the CLI quickstart.
 
 pub mod attention;
 pub mod bench;
@@ -23,6 +28,7 @@ pub mod energy;
 pub mod experiments;
 pub mod hw;
 pub mod loadgen;
+pub mod net;
 pub mod pool;
 pub mod prop;
 pub mod config;

@@ -1,11 +1,18 @@
 //! Load-generation subsystem: open-loop (Poisson arrivals at a target
-//! RPS) and closed-loop (fixed concurrency) drivers for a live
-//! [`crate::coordinator::Coordinator`], with weighted scenario mixes over
-//! (target, seed-policy) pairs, deterministic replayable schedules, and a
-//! JSON bench report (`BENCH_serving.json`).  The `serve-bench` CLI
-//! subcommand is the front door; `synthetic` can fabricate a complete
-//! servable artifacts directory so the harness runs anywhere the native
-//! backend does (CI included).
+//! RPS) and closed-loop (fixed concurrency) drivers for a live serving
+//! target, with weighted scenario mixes over (target, seed-policy)
+//! pairs, deterministic replayable schedules, and a JSON bench report
+//! (`BENCH_serving.json`).
+//!
+//! The drivers are transport-agnostic ([`runner::LoadTarget`]): the same
+//! load hits either the in-process [`crate::coordinator::Coordinator`]
+//! or, via `serve-bench --remote ADDR`, a [`crate::net::NetClient`]
+//! talking to a `serve --listen` server over real sockets — so the
+//! report carries network-path latency percentiles measured by the same
+//! harness as the in-process numbers.  The `serve-bench` CLI subcommand
+//! is the front door; [`synthetic`] can fabricate a complete servable
+//! artifacts directory so the harness runs anywhere the native backend
+//! does (CI included).
 
 pub mod arrival;
 pub mod report;
@@ -14,10 +21,10 @@ pub mod synthetic;
 
 pub use arrival::{PoissonArrivals, WeightedPick};
 pub use report::{BenchReport, BenchRun};
-pub use runner::{run, ImageSource, LoadSpec, RunStats};
+pub use runner::{run, ImageSource, LoadSpec, LoadTarget, PendingResponse, RunStats};
 pub use synthetic::{write_artifacts, SyntheticSpec};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::coordinator::{SeedPolicy, Target};
 
@@ -103,18 +110,11 @@ impl Scenario {
     }
 }
 
-/// Parse `perbatch`, `fixed:SEED`, or `ensemble:K`.
+/// Parse `perbatch`, `fixed:SEED`, or `ensemble:K` — a thin alias for
+/// [`SeedPolicy::parse`], which is also what the wire protocol uses, so
+/// CLI flags and network frames accept the exact same spellings.
 pub fn parse_seed_policy(s: &str) -> Result<SeedPolicy> {
-    match s.split_once(':') {
-        None if s == "perbatch" => Ok(SeedPolicy::PerBatch),
-        Some(("fixed", v)) => Ok(SeedPolicy::Fixed(v.parse().context("fixed seed value")?)),
-        Some(("ensemble", v)) => {
-            Ok(SeedPolicy::Ensemble(v.parse().context("ensemble size")?))
-        }
-        _ => bail!(
-            "unknown seed policy {s:?} (expected `perbatch`, `fixed:SEED`, or `ensemble:K`)"
-        ),
-    }
+    SeedPolicy::parse(s)
 }
 
 #[cfg(test)]

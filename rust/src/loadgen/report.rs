@@ -96,12 +96,22 @@ impl BenchRun {
     }
 }
 
-/// The full serve-bench result: one run per requested worker count.
+/// The full serve-bench result: one run per requested worker count (or
+/// a single run when driving a remote server, which owns its own pool).
 pub struct BenchReport {
+    /// The `--mix` spec (or the single target) that generated the load.
     pub scenario: String,
+    /// Arrival mode description (`closed(concurrency=8)` / `open(rps=500)`).
     pub mode: String,
+    /// Execution engine name (`native` / `xla`).
     pub backend: String,
+    /// Request path: `in-process`, or `tcp://ADDR` when the load crossed
+    /// real sockets — in that case the latency percentiles are
+    /// network-path numbers (client-measured round trips).
+    pub transport: String,
+    /// Seconds of load per run.
     pub duration_s: f64,
+    /// One entry per measured (worker count, load) combination.
     pub runs: Vec<BenchRun>,
 }
 
@@ -126,6 +136,7 @@ impl BenchReport {
             ("scenario", Json::str(&self.scenario)),
             ("mode", Json::str(&self.mode)),
             ("backend", Json::str(&self.backend)),
+            ("transport", Json::str(&self.transport)),
             ("duration_s", Json::num(self.duration_s)),
             ("runs", Json::Arr(self.runs.iter().map(BenchRun::to_json).collect())),
             (
@@ -143,8 +154,8 @@ impl BenchReport {
     /// Human-readable run summary for the CLI.
     pub fn render(&self) -> String {
         let mut s = format!(
-            "=== serve-bench: {} | {} | {} backend | {:.1}s per run ===\n",
-            self.scenario, self.mode, self.backend, self.duration_s
+            "=== serve-bench: {} | {} | {} backend | {} | {:.1}s per run ===\n",
+            self.scenario, self.mode, self.backend, self.transport, self.duration_s
         );
         for r in &self.runs {
             s.push_str(&format!(
@@ -195,6 +206,7 @@ mod tests {
             scenario: "ssa_t4".into(),
             mode: "closed(concurrency=4)".into(),
             backend: "native".into(),
+            transport: "in-process".into(),
             duration_s: 1.0,
             runs: vec![
                 BenchRun::new(1, stats(100, 1000), vec![], vec![]),
@@ -217,6 +229,7 @@ mod tests {
         let text = r.to_json().to_string();
         let parsed = Json::parse(&text).expect("report JSON must parse");
         assert_eq!(parsed.str_field("bench").unwrap(), "serving");
+        assert_eq!(parsed.str_field("transport").unwrap(), "in-process");
         let runs = parsed.get("runs").and_then(Json::as_arr).unwrap();
         assert_eq!(runs.len(), 2);
         assert_eq!(runs[1].usize_field("workers").unwrap(), 4);

@@ -1,21 +1,119 @@
-//! Drives a live coordinator with a scenario load and collects stats.
+//! Drives a live serving target with a scenario load and collects stats.
 //!
-//! Both drivers use the coordinator's public submit/classify API only —
-//! the load generator is an ordinary (if pushy) client, so whatever it
-//! measures is what real callers would see.
+//! Both drivers speak the [`LoadTarget`] seam only — the load generator
+//! is an ordinary (if pushy) client, so whatever it measures is what
+//! real callers would see.  Two targets implement the seam:
+//!
+//! * [`Coordinator`] — in-process submit API (the PR-3 path);
+//! * [`crate::net::NetClient`] — the same API over a TCP connection
+//!   (`serve-bench --remote`), where response latency is the
+//!   client-measured round trip, so the reported percentiles are
+//!   network-path numbers.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::coordinator::{ClassifyResponse, Coordinator};
+use crate::coordinator::{ClassifyResponse, Coordinator, SeedPolicy, Target};
+use crate::net::NetClient;
 use crate::runtime::Dataset;
 use crate::util::rng::Xoshiro256;
 use crate::util::stats::LogHistogram;
 
 use super::arrival::{PoissonArrivals, WeightedPick};
 use super::{ArrivalMode, Scenario};
+
+/// One submitted-but-unanswered request, local or remote.
+pub enum PendingResponse {
+    /// In-process: a per-request reply channel from `Coordinator::submit`.
+    Local(mpsc::Receiver<ClassifyResponse>),
+    /// Remote: a pipelined wire request awaiting its demuxed reply.
+    Remote(crate::net::PendingReply),
+}
+
+impl PendingResponse {
+    /// Block for the answer; `None` means the request was dropped or
+    /// refused (serve error, worker failure, connection loss) — load
+    /// drivers count it as an error either way.
+    pub fn wait(self) -> Option<ClassifyResponse> {
+        match self {
+            PendingResponse::Local(rx) => rx.recv().ok(),
+            PendingResponse::Remote(p) => p.wait().ok(),
+        }
+    }
+}
+
+/// What the load drivers need from a serving target.  Implementations
+/// must be shareable across client threads (`Sync`).
+pub trait LoadTarget: Sync {
+    /// Short transport label for reports (`in-process`, `tcp://...`).
+    fn transport(&self) -> String;
+
+    /// Submit one request without waiting for its answer.
+    fn submit_load(
+        &self,
+        target: Target,
+        image: Vec<f32>,
+        seed_policy: SeedPolicy,
+    ) -> Result<PendingResponse>;
+
+    /// Submit and block — the closed-loop primitive.
+    fn classify_load(
+        &self,
+        target: Target,
+        image: Vec<f32>,
+        seed_policy: SeedPolicy,
+    ) -> Result<ClassifyResponse> {
+        self.submit_load(target, image, seed_policy)?
+            .wait()
+            .context("request dropped before a reply arrived")
+    }
+
+    /// Called once when the measurement window opens (the in-process
+    /// target resets its metrics so preload time is not charged; a
+    /// remote target has nothing to reset client-side).
+    fn begin_window(&self) {}
+}
+
+impl LoadTarget for Coordinator {
+    fn transport(&self) -> String {
+        "in-process".to_string()
+    }
+
+    fn submit_load(
+        &self,
+        target: Target,
+        image: Vec<f32>,
+        seed_policy: SeedPolicy,
+    ) -> Result<PendingResponse> {
+        Ok(PendingResponse::Local(
+            self.submit(target, image, seed_policy).map_err(anyhow::Error::from)?,
+        ))
+    }
+
+    fn begin_window(&self) {
+        // measure only the load window: startup / replica-preload time
+        // must not deflate the utilization and throughput the report
+        // publishes
+        self.metrics().reset_window();
+    }
+}
+
+impl LoadTarget for NetClient {
+    fn transport(&self) -> String {
+        format!("tcp://{}", self.peer())
+    }
+
+    fn submit_load(
+        &self,
+        target: Target,
+        image: Vec<f32>,
+        seed_policy: SeedPolicy,
+    ) -> Result<PendingResponse> {
+        Ok(PendingResponse::Remote(self.submit(target, &image, seed_policy)?))
+    }
+}
 
 /// The image pool requests draw from (real test split or synthetic).
 #[derive(Clone)]
@@ -92,25 +190,26 @@ impl RunStats {
     }
 }
 
-/// Run one load-generation pass against a live coordinator.
-pub fn run(coord: &Coordinator, spec: &LoadSpec, images: &ImageSource) -> Result<RunStats> {
+/// Run one load-generation pass against a live serving target (the
+/// in-process [`Coordinator`] or a remote [`NetClient`]).
+pub fn run<T: LoadTarget + ?Sized>(
+    api: &T,
+    spec: &LoadSpec,
+    images: &ImageSource,
+) -> Result<RunStats> {
     anyhow::ensure!(!images.is_empty(), "image source is empty");
     anyhow::ensure!(!spec.duration.is_zero(), "--duration must be positive");
     let weights: Vec<f64> = spec.scenario.entries.iter().map(|e| e.weight).collect();
     let pick = WeightedPick::new(&weights)?;
-    // measure only the load window: startup / replica-preload time must
-    // not deflate the utilization and throughput the report publishes
-    coord.metrics().reset_window();
+    api.begin_window();
     match spec.mode {
-        ArrivalMode::Closed { concurrency } => {
-            run_closed(coord, spec, images, &pick, concurrency)
-        }
-        ArrivalMode::Open { rps } => run_open(coord, spec, images, &pick, rps),
+        ArrivalMode::Closed { concurrency } => run_closed(api, spec, images, &pick, concurrency),
+        ArrivalMode::Open { rps } => run_open(api, spec, images, &pick, rps),
     }
 }
 
-fn run_closed(
-    coord: &Coordinator,
+fn run_closed<T: LoadTarget + ?Sized>(
+    api: &T,
     spec: &LoadSpec,
     images: &ImageSource,
     pick: &WeightedPick,
@@ -132,7 +231,7 @@ fn run_closed(
                         let e = &spec.scenario.entries[pick.pick(&mut rng)];
                         let idx = rng.next_below(images.len() as u64) as usize;
                         st.offered += 1;
-                        match coord.classify(
+                        match api.classify_load(
                             e.target.clone(),
                             images.image(idx).to_vec(),
                             e.seed_policy,
@@ -156,8 +255,8 @@ fn run_closed(
     Ok(total)
 }
 
-fn run_open(
-    coord: &Coordinator,
+fn run_open<T: LoadTarget + ?Sized>(
+    api: &T,
     spec: &LoadSpec,
     images: &ImageSource,
     pick: &WeightedPick,
@@ -165,7 +264,7 @@ fn run_open(
 ) -> Result<RunStats> {
     let mut arrivals = PoissonArrivals::new(rps, spec.seed)?;
     let mut rng = Xoshiro256::new(spec.seed ^ 0x0A11_CE5A_11CE_5A11);
-    let (tx, rx) = mpsc::channel::<mpsc::Receiver<ClassifyResponse>>();
+    let (tx, rx) = mpsc::channel::<PendingResponse>();
     let t0 = Instant::now();
     let horizon_us = spec.duration.as_secs_f64() * 1e6;
     let mut stats = RunStats::default();
@@ -177,13 +276,13 @@ fn run_open(
             let mut ok = 0u64;
             let mut errors = 0u64;
             let mut hist = LogHistogram::new();
-            while let Ok(resp_rx) = rx.recv() {
-                match resp_rx.recv() {
-                    Ok(resp) => {
+            while let Ok(pending) = rx.recv() {
+                match pending.wait() {
+                    Some(resp) => {
                         ok += 1;
                         hist.record(resp.latency_us);
                     }
-                    Err(_) => errors += 1, // pool dropped the reply (serve error)
+                    None => errors += 1, // dropped or refused reply
                 }
             }
             (ok, errors, hist)
@@ -203,9 +302,10 @@ fn run_open(
             let e = &spec.scenario.entries[pick.pick(&mut rng)];
             let idx = rng.next_below(images.len() as u64) as usize;
             stats.offered += 1;
-            match coord.submit(e.target.clone(), images.image(idx).to_vec(), e.seed_policy) {
-                Ok(resp_rx) => {
-                    let _ = tx.send(resp_rx);
+            match api.submit_load(e.target.clone(), images.image(idx).to_vec(), e.seed_policy)
+            {
+                Ok(pending) => {
+                    let _ = tx.send(pending);
                 }
                 Err(_) => stats.errors += 1,
             }

@@ -1,19 +1,22 @@
 //! `ssa-repro` — CLI entry point.  See `cli::USAGE`.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
-use ssa_repro::cli::{Args, USAGE};
+use ssa_repro::cli::{check_known_flags, Args, USAGE};
 use ssa_repro::config::{AttnConfig, BackendKind, PrngSharing};
 use ssa_repro::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, SeedPolicy, Target};
 use ssa_repro::coordinator::router::variant_key;
 use ssa_repro::experiments::{figures, headline, table1, table2, table3};
 use ssa_repro::hw::{simulate, SpikeStreams};
 use ssa_repro::loadgen::{
-    self, ArrivalMode, BenchReport, BenchRun, ImageSource, LoadSpec, Scenario, SyntheticSpec,
+    self, ArrivalMode, BenchReport, BenchRun, ImageSource, LoadSpec, LoadTarget, Scenario,
+    SyntheticSpec,
 };
+use ssa_repro::net::{NetClient, NetServer, NetServerConfig};
 use ssa_repro::runtime::{Dataset, Manifest};
 
 fn main() {
@@ -32,10 +35,12 @@ fn main() {
 }
 
 fn run(args: &Args) -> Result<()> {
+    check_known_flags(args)?;
     match args.subcommand() {
         Some("info") => info(),
         Some("serve") => serve(args),
         Some("serve-bench") => serve_bench(args),
+        Some("classify-remote") => classify_remote(args),
         Some("bench-native") => bench_native_cmd(args),
         Some("simulate") => simulate_cmd(args),
         Some("experiments") => experiments(args),
@@ -65,15 +70,28 @@ fn backend_kind(args: &Args) -> Result<BackendKind> {
     }
 }
 
+/// Fabricate a complete servable artifacts directory (`--synthetic`).
+fn synthesize_artifacts(tag: &str) -> Result<PathBuf> {
+    let dir = std::env::temp_dir().join(format!("ssa-{tag}-{}", std::process::id()));
+    loadgen::write_artifacts(&dir, &SyntheticSpec::default())?;
+    println!("synthesized artifacts at {}", dir.display());
+    Ok(dir)
+}
+
 fn serve(args: &Args) -> Result<()> {
-    let dir = artifacts_dir(args);
-    let n_requests: usize = args.opt_parse("requests", 64)?;
-    let target_s = args.opt_or("target", "ssa_t10");
-    let ensemble: u32 = args.opt_parse("ensemble", 1)?;
+    let synthetic = args.flag("synthetic");
+    // the synthetic manifest carries ssa_t4 (not ssa_t10)
+    let default_target = if synthetic { "ssa_t4" } else { "ssa_t10" };
+    let target_s = args.opt_or("target", default_target);
     let max_batch: usize = args.opt_parse("max-batch", 8)?;
     let max_delay_ms: u64 = args.opt_parse("max-delay-ms", 5)?;
     let workers: usize = args.opt_parse("workers", 1)?;
     let backend = backend_kind(args)?;
+    let dir = if synthetic {
+        synthesize_artifacts("serve")?
+    } else {
+        artifacts_dir(args)
+    };
 
     let target = Target::parse(&target_s)?;
     let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(max_delay_ms) };
@@ -81,6 +99,19 @@ fn serve(args: &Args) -> Result<()> {
     cfg.policy = policy;
     cfg.preload = vec![target_s.clone()];
 
+    if let Some(listen) = args.opt("listen") {
+        for inapplicable in ["requests", "ensemble"] {
+            anyhow::ensure!(
+                args.opt(inapplicable).is_none(),
+                "--{inapplicable} drives the in-process demo and does nothing under \
+                 --listen (remote clients choose their own load and seed policies)"
+            );
+        }
+        return serve_listen(args, cfg, listen);
+    }
+
+    let n_requests: usize = args.opt_parse("requests", 64)?;
+    let ensemble: u32 = args.opt_parse("ensemble", 1)?;
     let coord = Coordinator::start(cfg)?;
     let ds = Dataset::load(&coord.manifest().dataset_test)?;
     let seed_policy =
@@ -115,26 +146,84 @@ fn serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// The `serve-bench` subcommand: start a coordinator per requested worker
-/// count, drive it with the scenario load, and record everything —
-/// client-side latency/throughput plus the coordinator's batching and
-/// per-worker-utilization telemetry — into `BENCH_serving.json`.
-fn serve_bench(args: &Args) -> Result<()> {
-    let backend = backend_kind(args)?;
-    let duration = Duration::from_secs_f64(args.opt_parse("duration", 5.0f64)?);
-    let max_batch: usize = args.opt_parse("max-batch", 8)?;
-    let max_delay_ms: u64 = args.opt_parse("max-delay-ms", 5)?;
-    let seed: u64 = args.opt_parse("seed", 0x10AD_5EEDu64)?;
+/// `serve --listen ADDR`: run the coordinator behind the TCP front-end
+/// until a client sends the wire `shutdown` op, then drain and exit.
+fn serve_listen(args: &Args, cfg: CoordinatorConfig, listen: &str) -> Result<()> {
+    let max_inflight: usize = args.opt_parse("max-inflight", 256)?;
+    let coord = Arc::new(Coordinator::start(cfg)?);
+    let server = NetServer::start(
+        Arc::clone(&coord),
+        NetServerConfig::new(listen).with_max_inflight(max_inflight),
+    )?;
+    println!(
+        "serving on tcp://{} — {} backend, {} worker(s), {} in-flight budget",
+        server.local_addr(),
+        coord.backend().name(),
+        coord.workers(),
+        max_inflight
+    );
+    println!("stop with: ssa-repro classify-remote --addr {} --shutdown", server.local_addr());
+    server.wait_shutdown_requested();
+    println!("shutdown requested — draining connections");
+    server.shutdown();
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+    println!("closed");
+    Ok(())
+}
 
-    let workers_spec = args.opt_or("workers", "1");
-    let workers: Vec<usize> = workers_spec
-        .split(',')
-        .map(|w| {
-            w.trim()
-                .parse()
-                .map_err(|e| anyhow::anyhow!("invalid --workers {workers_spec:?}: {e}"))
-        })
-        .collect::<Result<_>>()?;
+/// `classify-remote`: drive a `serve --listen` server over TCP —
+/// classify `--n` synthetic images, optionally fetch `--metrics`,
+/// optionally request a graceful `--shutdown`.
+fn classify_remote(args: &Args) -> Result<()> {
+    let addr = args.opt("addr").context("classify-remote requires --addr HOST:PORT")?;
+    let n: usize = args.opt_parse("n", 1)?;
+    let seed_policy = loadgen::parse_seed_policy(&args.opt_or("seed-policy", "perbatch"))?;
+    let client = NetClient::connect(addr)?;
+    let info = client.ping()?;
+    println!(
+        "server at {addr}: {} backend, {} worker(s), image {}x{}, targets: {}",
+        info.backend,
+        info.workers,
+        info.image_size,
+        info.image_size,
+        info.targets.join(", ")
+    );
+    let target_s = match args.opt("target") {
+        Some(t) => t.to_string(),
+        None => info.targets.first().cloned().context("server reports no servable targets")?,
+    };
+    let target = Target::parse(&target_s)?;
+    // same deterministic pseudo-image pool the load generator draws from
+    let images =
+        ImageSource::synthetic(info.image_size, n.max(1), args.opt_parse("seed", 0xC1A5u64)?);
+    for i in 0..n {
+        let resp = client.classify(target.clone(), images.image(i), seed_policy)?;
+        println!(
+            "[{i}] {target_s} -> class {} (seed {}, batch {}, rtt {:.0} us)",
+            resp.class, resp.seed, resp.batch_size, resp.latency_us
+        );
+    }
+    if args.flag("metrics") {
+        println!("server-side metrics (cumulative since server start):");
+        println!("{}", client.metrics()?);
+    }
+    if args.flag("shutdown") {
+        client.shutdown_server()?;
+        println!("server acknowledged shutdown");
+    }
+    Ok(())
+}
+
+/// The `serve-bench` subcommand: drive either fresh in-process
+/// coordinators (one per `--workers` entry) or, with `--remote ADDR`, a
+/// live `serve --listen` server over real sockets, and record everything
+/// into `BENCH_serving.json` — for remote runs the latency percentiles
+/// are network-path numbers (client-measured round trips).
+fn serve_bench(args: &Args) -> Result<()> {
+    let duration = Duration::from_secs_f64(args.opt_parse("duration", 5.0f64)?);
+    let seed: u64 = args.opt_parse("seed", 0x10AD_5EEDu64)?;
 
     let mode = match (args.opt("rps"), args.opt("concurrency")) {
         (Some(_), Some(_)) => {
@@ -153,13 +242,81 @@ fn serve_bench(args: &Args) -> Result<()> {
 
     let default_policy = loadgen::parse_seed_policy(&args.opt_or("seed-policy", "perbatch"))?;
     let scenario = Scenario::parse(&args.opt_or("mix", "ssa_t4"), default_policy)?;
+    let spec = LoadSpec { mode, duration, scenario: scenario.clone(), seed };
+    let out = PathBuf::from(args.opt_or("out", "BENCH_serving.json"));
+
+    let report = if let Some(remote) = args.opt("remote") {
+        serve_bench_remote(args, remote, &spec)?
+    } else {
+        serve_bench_local(args, &spec)?
+    };
+
+    print!("{}", report.render());
+    report.write(&out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// Network-path serve-bench: one run against a live remote server.
+fn serve_bench_remote(args: &Args, remote: &str, spec: &LoadSpec) -> Result<BenchReport> {
+    anyhow::ensure!(
+        args.opt("workers").is_none(),
+        "--workers applies to in-process runs only; the remote server owns its pool size"
+    );
+    let client = NetClient::connect(remote)?;
+    let info = client.ping()?;
+    for e in &spec.scenario.entries {
+        let key = variant_key(&e.target);
+        anyhow::ensure!(
+            info.targets.iter().any(|t| *t == key),
+            "remote server does not serve {key} (targets: {})",
+            info.targets.join(", ")
+        );
+    }
+    let images = ImageSource::synthetic(info.image_size, 64, spec.seed ^ 0x1A6E);
+    let mut report = BenchReport {
+        scenario: spec.scenario.name.clone(),
+        mode: spec.mode.describe(),
+        backend: info.backend.clone(),
+        transport: client.transport(),
+        duration_s: spec.duration.as_secs_f64(),
+        runs: Vec::new(),
+    };
+    println!(
+        "serve-bench: {} for {:.1}s against {} ({} worker(s) remote) ...",
+        spec.mode.describe(),
+        spec.duration.as_secs_f64(),
+        client.transport(),
+        info.workers
+    );
+    let stats = loadgen::run(&client, spec, &images)?;
+    report.runs.push(BenchRun::new(info.workers, stats, Vec::new(), Vec::new()));
+    // the server's own telemetry is one metrics op away; unlike the
+    // in-process path there is no reset op, so these counters cover the
+    // server's whole lifetime, not just this run's measurement window
+    println!("server-side metrics (cumulative since server start, NOT windowed to this run):");
+    println!("{}", client.metrics()?);
+    Ok(report)
+}
+
+/// In-process serve-bench: a fresh coordinator per `--workers` entry.
+fn serve_bench_local(args: &Args, spec: &LoadSpec) -> Result<BenchReport> {
+    let backend = backend_kind(args)?;
+    let max_batch: usize = args.opt_parse("max-batch", 8)?;
+    let max_delay_ms: u64 = args.opt_parse("max-delay-ms", 5)?;
+
+    let workers_spec = args.opt_or("workers", "1");
+    let workers: Vec<usize> = workers_spec
+        .split(',')
+        .map(|w| {
+            w.trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("invalid --workers {workers_spec:?}: {e}"))
+        })
+        .collect::<Result<_>>()?;
 
     let dir = if args.flag("synthetic") {
-        let dir = std::env::temp_dir()
-            .join(format!("ssa-serve-bench-{}", std::process::id()));
-        loadgen::write_artifacts(&dir, &SyntheticSpec::default())?;
-        println!("synthesized artifacts at {}", dir.display());
-        dir
+        synthesize_artifacts("serve-bench")?
     } else {
         artifacts_dir(args)
     };
@@ -169,23 +326,23 @@ fn serve_bench(args: &Args) -> Result<()> {
         Ok(ds) => ImageSource::from_dataset(ds)?,
         Err(e) => {
             println!("dataset unavailable ({e:#}); using synthetic images");
-            ImageSource::synthetic(manifest.image_size, 64, seed ^ 0x1A6E)
+            ImageSource::synthetic(manifest.image_size, 64, spec.seed ^ 0x1A6E)
         }
     };
     let preload: Vec<String> = {
         let mut keys: Vec<String> =
-            scenario.entries.iter().map(|e| variant_key(&e.target)).collect();
+            spec.scenario.entries.iter().map(|e| variant_key(&e.target)).collect();
         keys.sort();
         keys.dedup();
         keys
     };
 
-    let spec = LoadSpec { mode, duration, scenario: scenario.clone(), seed };
     let mut report = BenchReport {
-        scenario: scenario.name.clone(),
-        mode: mode.describe(),
+        scenario: spec.scenario.name.clone(),
+        mode: spec.mode.describe(),
         backend: backend.name().to_string(),
-        duration_s: duration.as_secs_f64(),
+        transport: "in-process".to_string(),
+        duration_s: spec.duration.as_secs_f64(),
         runs: Vec::new(),
     };
     for &w in &workers {
@@ -197,12 +354,12 @@ fn serve_bench(args: &Args) -> Result<()> {
         let coord = Coordinator::start(cfg)?;
         println!(
             "serve-bench: {} for {:.1}s on the {} backend, {} worker(s) ...",
-            mode.describe(),
-            duration.as_secs_f64(),
+            spec.mode.describe(),
+            spec.duration.as_secs_f64(),
             coord.backend().name(),
             coord.workers()
         );
-        let stats = loadgen::run(&coord, &spec, &images)?;
+        let stats = loadgen::run(&coord, spec, &images)?;
         report.runs.push(BenchRun::new(
             coord.workers(),
             stats,
@@ -211,12 +368,7 @@ fn serve_bench(args: &Args) -> Result<()> {
         ));
         coord.shutdown();
     }
-
-    print!("{}", report.render());
-    let out = PathBuf::from(args.opt_or("out", "BENCH_serving.json"));
-    report.write(&out)?;
-    println!("wrote {}", out.display());
-    Ok(())
+    Ok(report)
 }
 
 /// The `bench-native` subcommand: end-to-end forward-pass benchmarks of

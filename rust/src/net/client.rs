@@ -1,0 +1,258 @@
+//! Blocking TCP client with pipelined submits.
+//!
+//! One [`NetClient`] owns one connection.  Any number of threads may
+//! share it (`&self` everywhere): writers serialize frames under a
+//! mutex, and a background reader thread routes every reply to the
+//! waiter that registered its id — so `N` threads calling
+//! [`NetClient::classify`] concurrently keep `N` requests in flight on
+//! a single connection, exactly the shape `serve-bench --remote` load
+//! generation needs.
+//!
+//! [`NetClient::submit`] is the asynchronous half: it returns a
+//! [`PendingReply`] immediately (open-loop load generation submits
+//! without waiting) whose [`PendingReply::wait`] blocks for the answer
+//! and reports the **client-measured round trip** as the response
+//! latency — network numbers, not server numbers.
+
+use std::collections::HashMap;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{ClassifyResponse, SeedPolicy, ServeError, Target};
+use crate::util::json::Json;
+
+use super::conn;
+use super::protocol::{RemoteClassify, Reply, Request, ServerInfo};
+
+/// A submitted classify request whose reply has not been awaited yet.
+pub struct PendingReply {
+    id: u64,
+    rx: mpsc::Receiver<Reply>,
+    sent_at: Instant,
+}
+
+impl PendingReply {
+    /// The wire id this request was sent under.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block for the reply.  The outer `Err` is a transport/protocol
+    /// failure (connection closed, nonsense reply); the inner `Err` is
+    /// the server's typed refusal (e.g. [`ServeError::Overloaded`]).
+    /// The `f64` is the measured round-trip time in microseconds.
+    pub fn wait_detailed(self) -> Result<Result<(RemoteClassify, f64), ServeError>> {
+        let reply = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("connection closed before the reply arrived"))?;
+        let rtt_us = self.sent_at.elapsed().as_secs_f64() * 1e6;
+        match reply {
+            Reply::Classify { response, .. } => Ok(Ok((response, rtt_us))),
+            Reply::Error { error, .. } => Ok(Err(error)),
+            other => anyhow::bail!("protocol violation: unexpected classify reply {other:?}"),
+        }
+    }
+
+    /// Block for the reply and shape it like an in-process
+    /// [`ClassifyResponse`], with `latency_us` rewritten to the
+    /// client-measured round trip.  Typed server errors surface as
+    /// `Err` (downcast-free: the message carries the error code).
+    pub fn wait(self) -> Result<ClassifyResponse> {
+        let id = self.id;
+        match self.wait_detailed()? {
+            Ok((r, rtt_us)) => Ok(ClassifyResponse {
+                id,
+                class: r.class,
+                logits: r.logits,
+                latency_us: rtt_us,
+                batch_size: r.batch_size,
+                seed: r.seed,
+            }),
+            Err(e) => Err(anyhow::Error::from(e)),
+        }
+    }
+}
+
+/// Thread-safe client for one server connection.
+pub struct NetClient {
+    write: Mutex<TcpStream>,
+    /// The original stream, kept to half-close on drop.
+    stream: TcpStream,
+    peer: String,
+    pending: Arc<Mutex<HashMap<u64, mpsc::Sender<Reply>>>>,
+    /// False once the reader thread exits.  Checked (under the pending
+    /// lock) before registering a waiter, so `send` on a dead connection
+    /// fails instead of parking a waiter no one will ever wake.
+    alive: Arc<AtomicBool>,
+    next_id: AtomicU64,
+    reader: Option<JoinHandle<()>>,
+    max_frame: usize,
+}
+
+impl NetClient {
+    /// Connect with the default frame cap ([`conn::DEFAULT_MAX_FRAME`]).
+    pub fn connect(addr: &str) -> Result<Self> {
+        Self::connect_with(addr, conn::DEFAULT_MAX_FRAME)
+    }
+
+    /// Connect with an explicit frame cap (must be at least the server's
+    /// reply sizes; clients fuzzing the server use small caps).
+    pub fn connect_with(addr: &str, max_frame: usize) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| addr.to_string());
+        let write = Mutex::new(stream.try_clone().context("cloning stream write half")?);
+        let mut read_half = stream.try_clone().context("cloning stream read half")?;
+        let pending: Arc<Mutex<HashMap<u64, mpsc::Sender<Reply>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let pending2 = Arc::clone(&pending);
+        let alive = Arc::new(AtomicBool::new(true));
+        let alive2 = Arc::clone(&alive);
+        let reader = std::thread::Builder::new()
+            .name("ssa-net-client".into())
+            .spawn(move || {
+                // runs until EOF or a transport error tears the stream down
+                while let Ok(Some(frame)) = conn::read_frame(&mut read_half, max_frame) {
+                    let reply = std::str::from_utf8(&frame)
+                        .ok()
+                        .and_then(|t| Json::parse(t).ok())
+                        .and_then(|j| Reply::parse(&j).ok());
+                    let Some(reply) = reply else {
+                        crate::log_warn!("net client: dropping unparseable reply frame");
+                        continue;
+                    };
+                    if let Some(tx) = pending2.lock().unwrap().remove(&reply.id()) {
+                        let _ = tx.send(reply);
+                    }
+                }
+                // connection gone: mark the client dead and drop the
+                // registered senders, waking every waiter with a
+                // RecvError ("connection closed").  The flag flips under
+                // the same lock `send` registers under, so no waiter can
+                // slip into the map after this clear.
+                let mut p = pending2.lock().unwrap();
+                alive2.store(false, Ordering::Release);
+                p.clear();
+            })
+            .context("spawning the client reader thread")?;
+        Ok(Self {
+            write,
+            stream,
+            peer,
+            pending,
+            alive,
+            next_id: AtomicU64::new(1),
+            reader: Some(reader),
+            max_frame,
+        })
+    }
+
+    /// The server address this client is connected to.
+    pub fn peer(&self) -> &str {
+        &self.peer
+    }
+
+    /// Register a waiter and write one request frame.
+    fn send(&self, req: &Request) -> Result<mpsc::Receiver<Reply>> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut p = self.pending.lock().unwrap();
+            // checked under the lock: if the reader is still alive here,
+            // its exit path has not cleared the map yet, so this waiter
+            // is guaranteed to be woken (replied to or dropped)
+            anyhow::ensure!(
+                self.alive.load(Ordering::Acquire),
+                "connection to {} is closed",
+                self.peer
+            );
+            p.insert(req.id(), tx);
+        }
+        let res = {
+            let mut w = self.write.lock().unwrap();
+            conn::write_json(&mut *w, &req.to_json(), self.max_frame)
+        };
+        if let Err(e) = res {
+            self.pending.lock().unwrap().remove(&req.id());
+            let e = anyhow::Error::from(e).context(format!("sending request to {}", self.peer));
+            return Err(e);
+        }
+        Ok(rx)
+    }
+
+    /// Send one request and block for its (correlated) reply.
+    fn call(&self, req: Request) -> Result<Reply> {
+        let rx = self.send(&req)?;
+        rx.recv().map_err(|_| {
+            anyhow::anyhow!("connection to {} closed before the reply arrived", self.peer)
+        })
+    }
+
+    fn fresh_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Submit one classify request without waiting for the answer.
+    pub fn submit(
+        &self,
+        target: Target,
+        image: &[f32],
+        seed_policy: SeedPolicy,
+    ) -> Result<PendingReply> {
+        let id = self.fresh_id();
+        let sent_at = Instant::now();
+        let rx = self.send(&Request::Classify { id, target, seed_policy, image: image.to_vec() })?;
+        Ok(PendingReply { id, rx, sent_at })
+    }
+
+    /// Submit and block — the remote mirror of `Coordinator::classify`.
+    pub fn classify(
+        &self,
+        target: Target,
+        image: &[f32],
+        seed_policy: SeedPolicy,
+    ) -> Result<ClassifyResponse> {
+        self.submit(target, image, seed_policy)?.wait()
+    }
+
+    /// Fetch the server's facts (backend, workers, geometry, targets).
+    pub fn ping(&self) -> Result<ServerInfo> {
+        match self.call(Request::Ping { id: self.fresh_id() })? {
+            Reply::Pong { info, .. } => Ok(info),
+            Reply::Error { error, .. } => Err(anyhow::Error::from(error)),
+            other => anyhow::bail!("protocol violation: unexpected ping reply {other:?}"),
+        }
+    }
+
+    /// Fetch the coordinator's plaintext metrics report.
+    pub fn metrics(&self) -> Result<String> {
+        match self.call(Request::Metrics { id: self.fresh_id() })? {
+            Reply::Metrics { report, .. } => Ok(report),
+            Reply::Error { error, .. } => Err(anyhow::Error::from(error)),
+            other => anyhow::bail!("protocol violation: unexpected metrics reply {other:?}"),
+        }
+    }
+
+    /// Ask the server to drain and exit; returns once acknowledged.
+    pub fn shutdown_server(&self) -> Result<()> {
+        match self.call(Request::Shutdown { id: self.fresh_id() })? {
+            Reply::ShuttingDown { .. } => Ok(()),
+            Reply::Error { error, .. } => Err(anyhow::Error::from(error)),
+            other => anyhow::bail!("protocol violation: unexpected shutdown reply {other:?}"),
+        }
+    }
+}
+
+impl Drop for NetClient {
+    fn drop(&mut self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}

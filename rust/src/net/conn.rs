@@ -1,0 +1,147 @@
+//! Length-prefixed framing over any [`Read`] / [`Write`] pair.
+//!
+//! A frame is a 4-byte **big-endian** payload length followed by exactly
+//! that many payload bytes (UTF-8 JSON at the layer above).  The length
+//! counts the payload only, not the header.  Both directions enforce a
+//! hard frame-size cap: an incoming header announcing more than
+//! `max_frame` bytes is rejected *before* any payload allocation, and an
+//! outgoing oversized frame is refused before the header is written (so
+//! the stream never desynchronizes).
+//!
+//! Framing is transport-agnostic and tested against in-memory buffers;
+//! the server/client modules use it over [`std::net::TcpStream`].
+
+use std::io::{self, Read, Write};
+
+/// Bytes in the frame header (the `u32` big-endian payload length).
+pub const HEADER_LEN: usize = 4;
+
+/// Default frame-size cap (8 MiB) — generous for classify requests
+/// (a 16×16 image is a few KB of JSON) while bounding what one
+/// connection can force the peer to buffer.
+pub const DEFAULT_MAX_FRAME: usize = 8 * 1024 * 1024;
+
+/// Write one frame.  Fails with [`io::ErrorKind::InvalidData`] (before
+/// touching the stream) if `payload` exceeds `max_frame`.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8], max_frame: usize) -> io::Result<()> {
+    if payload.len() > max_frame {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("refusing to send a {} byte frame (cap {} bytes)", payload.len(), max_frame),
+        ));
+    }
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame.  Returns `Ok(None)` on a clean EOF (the peer closed
+/// the stream exactly at a frame boundary); an EOF mid-header or
+/// mid-payload is an [`io::ErrorKind::UnexpectedEof`] error, and a
+/// header announcing more than `max_frame` bytes is
+/// [`io::ErrorKind::InvalidData`] — the caller must drop the connection
+/// in both cases, because the stream position is no longer trustworthy.
+pub fn read_frame<R: Read>(r: &mut R, max_frame: usize) -> io::Result<Option<Vec<u8>>> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0;
+    while got < HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None), // clean EOF at frame boundary
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "EOF inside a frame header",
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_be_bytes(header) as usize;
+    if len > max_frame {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("oversized frame: peer announced {len} bytes (cap {max_frame})"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+/// [`write_frame`] of a JSON document's compact text form.
+pub fn write_json<W: Write>(
+    w: &mut W,
+    msg: &crate::util::json::Json,
+    max_frame: usize,
+) -> io::Result<()> {
+    write_frame(w, msg.to_string().as_bytes(), max_frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello", 64).unwrap();
+        write_frame(&mut buf, b"", 64).unwrap();
+        write_frame(&mut buf, b"world!", 64).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r, 64).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r, 64).unwrap().unwrap(), b"");
+        assert_eq!(read_frame(&mut r, 64).unwrap().unwrap(), b"world!");
+        assert!(read_frame(&mut r, 64).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn header_is_big_endian_length() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"abc", 64).unwrap();
+        assert_eq!(&buf[..HEADER_LEN], &[0, 0, 0, 3]);
+        assert_eq!(&buf[HEADER_LEN..], b"abc");
+    }
+
+    #[test]
+    fn rejects_oversized_frames_both_directions() {
+        let mut buf = Vec::new();
+        let err = write_frame(&mut buf, &[0u8; 100], 64).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(buf.is_empty(), "nothing written for a refused frame");
+
+        // a header announcing 1 GiB must be rejected without allocating
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(1u32 << 30).to_be_bytes());
+        wire.extend_from_slice(b"garbage");
+        let err = read_frame(&mut &wire[..], DEFAULT_MAX_FRAME).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_clean_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello", 64).unwrap();
+        // truncated payload
+        let mut r = &buf[..buf.len() - 2];
+        assert!(read_frame(&mut r, 64).is_err());
+        // truncated header
+        let mut r = &buf[..2];
+        assert_eq!(
+            read_frame(&mut r, 64).unwrap_err().kind(),
+            io::ErrorKind::UnexpectedEof
+        );
+    }
+
+    #[test]
+    fn json_frames_roundtrip() {
+        let msg = Json::obj(vec![("op", Json::str("ping")), ("id", Json::from(7usize))]);
+        let mut buf = Vec::new();
+        write_json(&mut buf, &msg, DEFAULT_MAX_FRAME).unwrap();
+        let payload = read_frame(&mut &buf[..], DEFAULT_MAX_FRAME).unwrap().unwrap();
+        let parsed = Json::parse(std::str::from_utf8(&payload).unwrap()).unwrap();
+        assert_eq!(parsed, msg);
+    }
+}

@@ -1,0 +1,38 @@
+//! Network serving front-end: the coordinator's submit API over TCP.
+//!
+//! Everything in-process stays in-process — this module is a thin shell
+//! that carries [`crate::coordinator::Coordinator::submit`] across a
+//! socket using a length-prefixed JSON wire protocol built on
+//! [`std::net`] alone (the offline image has no tokio/serde; see
+//! `DESIGN.md §3` for the frame and message grammar).
+//!
+//! Layout:
+//!
+//! * [`conn`] — the framing layer: 4-byte big-endian length prefix +
+//!   UTF-8 JSON payload, with a hard frame-size cap on both sides.
+//! * [`protocol`] — typed request/reply messages ([`Request`],
+//!   [`Reply`]) and their JSON round-trip, reusing the coordinator's own
+//!   [`crate::coordinator::Target`] / [`crate::coordinator::SeedPolicy`]
+//!   / [`crate::coordinator::ServeError`] vocabulary.
+//! * [`server`] — [`NetServer`]: accept loop, one reader thread per
+//!   connection feeding the shared router, a per-connection demux thread
+//!   that writes completions back by request id, bounded-in-flight
+//!   admission control, and graceful drain-then-close shutdown.
+//! * [`client`] — [`NetClient`]: a thread-safe blocking client with
+//!   pipelined submits (many requests in flight on one connection,
+//!   matched to replies by id).
+//!
+//! The CLI front doors are `ssa-repro serve --listen ADDR`,
+//! `ssa-repro classify-remote`, and `ssa-repro serve-bench --remote` —
+//! the latter drives this stack with the same load generator used for
+//! in-process benchmarking, so `BENCH_serving.json` reports network-path
+//! latency percentiles side by side with the in-process numbers.
+
+pub mod client;
+pub mod conn;
+pub mod protocol;
+pub mod server;
+
+pub use client::{NetClient, PendingReply};
+pub use protocol::{RemoteClassify, Reply, Request, ServerInfo};
+pub use server::{NetServer, NetServerConfig};

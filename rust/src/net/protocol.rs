@@ -1,0 +1,451 @@
+//! Typed wire messages and their JSON round-trip.
+//!
+//! Every frame (see [`super::conn`]) carries one JSON object.  Requests
+//! have an `op` (`classify` / `metrics` / `ping` / `shutdown`) and a
+//! client-chosen `id`; replies echo that `id` with `ok: true` plus
+//! op-specific fields, or `ok: false` plus a typed error (`error` is a
+//! stable code from [`ServeError::code`], `detail` its payload).  Ids
+//! only need to be unique among one connection's in-flight requests —
+//! the server never interprets them beyond echoing, which is what lets
+//! many requests ride one connection out of order (pipelining, demuxed
+//! by the client).  The full grammar is specified in `DESIGN.md §3`.
+//!
+//! Numbers ride as JSON numbers: `f32` widens exactly to `f64`, and the
+//! writer prints shortest-round-trip decimal forms, so pixel and logit
+//! values survive the wire **bit-identically** (pinned by
+//! `tests/integration_net.rs`).  Non-finite floats are not representable
+//! in JSON; the models never produce them on the serving path.
+
+use anyhow::Result;
+
+use crate::coordinator::{ClassifyResponse, SeedPolicy, ServeError, Target};
+use crate::coordinator::router::variant_key;
+use crate::util::json::Json;
+
+/// One client→server message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Classify one image on `target` under `seed_policy`.
+    Classify {
+        /// Client-chosen correlation id (echoed in the reply).
+        id: u64,
+        /// Model variant, wire form `ssa_t10` / `spikformer_t4` / `ann`.
+        target: Target,
+        /// Wire form `perbatch` / `fixed:SEED` / `ensemble:K`.
+        seed_policy: SeedPolicy,
+        /// Row-major `[S, S]` pixels in [0,1].
+        image: Vec<f32>,
+    },
+    /// Fetch the coordinator's plaintext metrics report.
+    Metrics {
+        /// Client-chosen correlation id.
+        id: u64,
+    },
+    /// Liveness probe; the reply carries a [`ServerInfo`].
+    Ping {
+        /// Client-chosen correlation id.
+        id: u64,
+    },
+    /// Ask the server to drain in-flight requests and exit.
+    Shutdown {
+        /// Client-chosen correlation id.
+        id: u64,
+    },
+}
+
+impl Request {
+    /// The client-chosen correlation id.
+    pub fn id(&self) -> u64 {
+        match self {
+            Request::Classify { id, .. }
+            | Request::Metrics { id }
+            | Request::Ping { id }
+            | Request::Shutdown { id } => *id,
+        }
+    }
+
+    /// Serialize to the wire JSON object.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Classify { id, target, seed_policy, image } => Json::obj(vec![
+                ("op", Json::str("classify")),
+                ("id", Json::num(*id as f64)),
+                ("target", Json::str(variant_key(target))),
+                ("seed_policy", Json::str(seed_policy.to_string())),
+                ("image", Json::Arr(image.iter().map(|&p| Json::num(p as f64)).collect())),
+            ]),
+            Request::Metrics { id } => {
+                Json::obj(vec![("op", Json::str("metrics")), ("id", Json::num(*id as f64))])
+            }
+            Request::Ping { id } => {
+                Json::obj(vec![("op", Json::str("ping")), ("id", Json::num(*id as f64))])
+            }
+            Request::Shutdown { id } => {
+                Json::obj(vec![("op", Json::str("shutdown")), ("id", Json::num(*id as f64))])
+            }
+        }
+    }
+
+    /// Parse a wire JSON object.  All failures are
+    /// [`ServeError::BadRequest`] so the server can answer them with a
+    /// typed error reply (using whatever `id` was recoverable).
+    pub fn parse(j: &Json) -> Result<Request, ServeError> {
+        let bad = |m: &str| ServeError::BadRequest(m.to_string());
+        let id = recover_id(j).ok_or_else(|| bad("missing or non-integer `id`"))?;
+        let op = j
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("missing string `op`"))?;
+        match op {
+            "classify" => {
+                let target_s = j
+                    .get("target")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| bad("classify: missing string `target`"))?;
+                let target = Target::parse(target_s)
+                    .map_err(|e| bad(&format!("classify: {e:#}")))?;
+                let seed_policy = match j.get("seed_policy").and_then(Json::as_str) {
+                    None => SeedPolicy::PerBatch,
+                    Some(s) => SeedPolicy::parse(s).map_err(|e| bad(&format!("classify: {e:#}")))?,
+                };
+                let image = j
+                    .get("image")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| bad("classify: missing array `image`"))?
+                    .iter()
+                    .map(|p| p.as_f64().map(|v| v as f32))
+                    .collect::<Option<Vec<f32>>>()
+                    .ok_or_else(|| bad("classify: non-numeric pixel in `image`"))?;
+                Ok(Request::Classify { id, target, seed_policy, image })
+            }
+            "metrics" => Ok(Request::Metrics { id }),
+            "ping" => Ok(Request::Ping { id }),
+            "shutdown" => Ok(Request::Shutdown { id }),
+            other => Err(bad(&format!("unknown op {other:?}"))),
+        }
+    }
+}
+
+/// Best-effort id extraction from any frame — lets the server address
+/// an error reply even when the rest of the message is garbage.
+pub fn recover_id(j: &Json) -> Option<u64> {
+    j.get("id").and_then(Json::as_u64)
+}
+
+/// The payload of a successful classify reply.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RemoteClassify {
+    /// Argmax class index.
+    pub class: usize,
+    /// `[n_classes]` logits, bit-identical to the in-process result.
+    pub logits: Vec<f32>,
+    /// Server-side submit→reply latency in microseconds (the network
+    /// round-trip is measured by the client; both end up in reports).
+    pub server_latency_us: f64,
+    /// How many requests shared the executed batch.
+    pub batch_size: usize,
+    /// Seed actually used (see [`ClassifyResponse::seed`]).
+    pub seed: u32,
+}
+
+impl RemoteClassify {
+    /// Borrow the wire-relevant fields out of an in-process response.
+    pub fn from_response(r: &ClassifyResponse) -> Self {
+        Self {
+            class: r.class,
+            logits: r.logits.clone(),
+            server_latency_us: r.latency_us,
+            batch_size: r.batch_size,
+            seed: r.seed,
+        }
+    }
+}
+
+/// What a `ping` reply reports about the server.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerInfo {
+    /// Execution engine name (`native` / `xla`).
+    pub backend: String,
+    /// Pool workers actually running (after capability clamping).
+    pub workers: usize,
+    /// Image side length S; classify images must be `S × S` pixels.
+    pub image_size: usize,
+    /// Servable variant keys (`ssa_t10`, `ann`, ...).
+    pub targets: Vec<String>,
+}
+
+/// One server→client message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    /// Successful classify.
+    Classify {
+        /// Echo of the request id.
+        id: u64,
+        /// The classification result.
+        response: RemoteClassify,
+    },
+    /// Plaintext metrics report (same text as `Coordinator::metrics_report`).
+    Metrics {
+        /// Echo of the request id.
+        id: u64,
+        /// The rendered report.
+        report: String,
+    },
+    /// Ping acknowledgement.
+    Pong {
+        /// Echo of the request id.
+        id: u64,
+        /// Server facts a client needs before classifying.
+        info: ServerInfo,
+    },
+    /// Shutdown acknowledged; the server drains and closes after this.
+    ShuttingDown {
+        /// Echo of the request id.
+        id: u64,
+    },
+    /// The request failed with a typed error.
+    Error {
+        /// Echo of the request id (0 when unrecoverable from the frame).
+        id: u64,
+        /// What went wrong.
+        error: ServeError,
+    },
+}
+
+impl Reply {
+    /// The echoed correlation id.
+    pub fn id(&self) -> u64 {
+        match self {
+            Reply::Classify { id, .. }
+            | Reply::Metrics { id, .. }
+            | Reply::Pong { id, .. }
+            | Reply::ShuttingDown { id }
+            | Reply::Error { id, .. } => *id,
+        }
+    }
+
+    /// Serialize to the wire JSON object.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Reply::Classify { id, response } => Json::obj(vec![
+                ("ok", Json::from(true)),
+                ("op", Json::str("classify")),
+                ("id", Json::num(*id as f64)),
+                ("class", Json::from(response.class)),
+                (
+                    "logits",
+                    Json::Arr(response.logits.iter().map(|&l| Json::num(l as f64)).collect()),
+                ),
+                ("server_latency_us", Json::num(response.server_latency_us)),
+                ("batch_size", Json::from(response.batch_size)),
+                ("seed", Json::num(response.seed as f64)),
+            ]),
+            Reply::Metrics { id, report } => Json::obj(vec![
+                ("ok", Json::from(true)),
+                ("op", Json::str("metrics")),
+                ("id", Json::num(*id as f64)),
+                ("report", Json::str(report)),
+            ]),
+            Reply::Pong { id, info } => Json::obj(vec![
+                ("ok", Json::from(true)),
+                ("op", Json::str("ping")),
+                ("id", Json::num(*id as f64)),
+                ("backend", Json::str(&info.backend)),
+                ("workers", Json::from(info.workers)),
+                ("image_size", Json::from(info.image_size)),
+                ("targets", Json::Arr(info.targets.iter().map(Json::str).collect())),
+            ]),
+            Reply::ShuttingDown { id } => Json::obj(vec![
+                ("ok", Json::from(true)),
+                ("op", Json::str("shutdown")),
+                ("id", Json::num(*id as f64)),
+            ]),
+            Reply::Error { id, error } => Json::obj(vec![
+                ("ok", Json::from(false)),
+                ("id", Json::num(*id as f64)),
+                ("error", Json::str(error.code())),
+                ("detail", Json::str(error.detail())),
+                ("message", Json::str(error.to_string())),
+            ]),
+        }
+    }
+
+    /// Parse a wire JSON object (client side).
+    pub fn parse(j: &Json) -> Result<Reply> {
+        let id = recover_id(j)
+            .ok_or_else(|| anyhow::anyhow!("reply without an integer `id`: {j}"))?;
+        let ok = j
+            .get("ok")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| anyhow::anyhow!("reply without a boolean `ok`"))?;
+        if !ok {
+            let code = j.get("error").and_then(Json::as_str).unwrap_or("bad_request");
+            let detail = j.get("detail").and_then(Json::as_str).unwrap_or("");
+            return Ok(Reply::Error { id, error: ServeError::from_code(code, detail) });
+        }
+        match j.str_field("op")? {
+            "classify" => {
+                let logits = j
+                    .get("logits")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow::anyhow!("classify reply without `logits`"))?
+                    .iter()
+                    .map(|l| l.as_f64().map(|v| v as f32))
+                    .collect::<Option<Vec<f32>>>()
+                    .ok_or_else(|| anyhow::anyhow!("non-numeric logit in reply"))?;
+                let seed = j
+                    .get("seed")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow::anyhow!("classify reply without `seed`"))?;
+                let server_latency_us =
+                    j.get("server_latency_us").and_then(Json::as_f64).unwrap_or(0.0);
+                Ok(Reply::Classify {
+                    id,
+                    response: RemoteClassify {
+                        class: j.usize_field("class")?,
+                        logits,
+                        server_latency_us,
+                        batch_size: j.usize_field("batch_size")?,
+                        seed: seed as u32,
+                    },
+                })
+            }
+            "metrics" => Ok(Reply::Metrics { id, report: j.str_field("report")?.to_string() }),
+            "ping" => Ok(Reply::Pong {
+                id,
+                info: ServerInfo {
+                    backend: j.str_field("backend")?.to_string(),
+                    workers: j.usize_field("workers")?,
+                    image_size: j.usize_field("image_size")?,
+                    targets: j
+                        .get("targets")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|t| t.as_str().map(str::to_string))
+                        .collect(),
+                },
+            }),
+            "shutdown" => Ok(Reply::ShuttingDown { id }),
+            other => anyhow::bail!("unknown reply op {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_request(req: Request) {
+        let j = req.to_json();
+        let text = j.to_string();
+        let back = Request::parse(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, req);
+    }
+
+    fn roundtrip_reply(rep: Reply) {
+        let j = rep.to_json();
+        let text = j.to_string();
+        let back = Reply::parse(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, rep);
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        roundtrip_request(Request::Classify {
+            id: 7,
+            target: Target::ssa(4),
+            seed_policy: SeedPolicy::Fixed(42),
+            image: vec![0.0, 0.25, 1.0, 0.125],
+        });
+        roundtrip_request(Request::Metrics { id: 1 });
+        roundtrip_request(Request::Ping { id: 2 });
+        roundtrip_request(Request::Shutdown { id: 3 });
+    }
+
+    #[test]
+    fn replies_roundtrip() {
+        roundtrip_reply(Reply::Classify {
+            id: 7,
+            response: RemoteClassify {
+                class: 3,
+                logits: vec![-1.5, 0.75, 2.0],
+                server_latency_us: 123.5,
+                batch_size: 4,
+                seed: 42,
+            },
+        });
+        roundtrip_reply(Reply::Metrics { id: 1, report: "=== metrics ===\n".into() });
+        roundtrip_reply(Reply::Pong {
+            id: 2,
+            info: ServerInfo {
+                backend: "native".into(),
+                workers: 4,
+                image_size: 16,
+                targets: vec!["ssa_t4".into(), "ann".into()],
+            },
+        });
+        roundtrip_reply(Reply::ShuttingDown { id: 3 });
+        roundtrip_reply(Reply::Error { id: 9, error: ServeError::Overloaded });
+        roundtrip_reply(Reply::Error {
+            id: 0,
+            error: ServeError::BadImage { got: 7, want: 256 },
+        });
+    }
+
+    /// Pixels and logits must survive the wire bit-identically: f32 → f64
+    /// widening is exact and the JSON writer emits round-trippable
+    /// decimal forms.
+    #[test]
+    fn f32_values_survive_json_bit_identically() {
+        let vals: Vec<f32> = vec![
+            0.0,
+            1.0,
+            0.1,
+            1.0 / 3.0,
+            f32::MIN_POSITIVE,
+            -1.2345678e-20,
+            3.937_541_7e37,
+            0.996_078_43, // 254/255-style pixel value
+        ];
+        let req = Request::Classify {
+            id: 1,
+            target: Target::ann(),
+            seed_policy: SeedPolicy::PerBatch,
+            image: vals.clone(),
+        };
+        let back = Request::parse(&Json::parse(&req.to_json().to_string()).unwrap()).unwrap();
+        let Request::Classify { image, .. } = back else { panic!("wrong op") };
+        let got: Vec<u32> = image.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = vals.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want, "f32 bits must round-trip through the wire");
+    }
+
+    #[test]
+    fn malformed_requests_are_bad_request_errors() {
+        for bad in [
+            r#"{"op":"classify","id":1}"#,                       // no target/image
+            r#"{"op":"nope","id":1}"#,                           // unknown op
+            r#"{"id":1}"#,                                       // no op
+            r#"{"op":"ping"}"#,                                  // no id
+            r#"{"op":"classify","id":1,"target":"ssa_t4","image":["x"]}"#,
+            r#"{"op":"classify","id":1,"target":"bogus","image":[]}"#,
+            r#"{"op":"classify","id":1,"target":"ssa_t4","seed_policy":"never","image":[]}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            let err = Request::parse(&j).unwrap_err();
+            assert_eq!(
+                std::mem::discriminant(&err),
+                std::mem::discriminant(&ServeError::BadRequest(String::new())),
+                "{bad} must parse-fail as BadRequest, got {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn recover_id_salvages_ids_from_garbage() {
+        assert_eq!(recover_id(&Json::parse(r#"{"id":9,"op":5}"#).unwrap()), Some(9));
+        assert_eq!(recover_id(&Json::parse(r#"{"op":"x"}"#).unwrap()), None);
+        assert_eq!(recover_id(&Json::parse(r#"{"id":-1}"#).unwrap()), None);
+    }
+}

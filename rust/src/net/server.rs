@@ -1,0 +1,490 @@
+//! The TCP serving front-end: [`NetServer`] carries the coordinator's
+//! submit API across a socket.
+//!
+//! Per connection, two threads:
+//!
+//! * a **reader** that decodes frames and dispatches ops.  Classify
+//!   requests pass admission control, then go straight into the shared
+//!   [`crate::coordinator::Router`] via
+//!   [`Coordinator::submit_with_reply`] — every request of one
+//!   connection shares one completion channel, so the reader never
+//!   blocks on inference.  Metrics / ping / shutdown ops are answered
+//!   inline.
+//! * a **demux** that drains that completion channel and writes each
+//!   finished [`ClassifyResponse`] back as a frame addressed by the
+//!   client's request id — responses leave in *completion* order, which
+//!   is what lets many requests ride one connection concurrently.
+//!
+//! Both threads (and the accept loop) share the write half behind a
+//! mutex, so frames from different sources never interleave.
+//!
+//! **Admission control**: a server-wide in-flight gauge bounds the
+//! number of classify requests admitted but not yet answered
+//! (`NetServerConfig::max_inflight`).  Beyond the budget the server
+//! answers [`ServeError::Overloaded`] immediately instead of queueing —
+//! clients get typed backpressure, the router queue stays bounded.
+//!
+//! **Shutdown** is drain-then-close: stop accepting, half-close every
+//! connection's read side (no new requests), let each demux deliver the
+//! replies still in flight, then join.  Requests a worker dropped
+//! without answering are failed explicitly with
+//! [`ServeError::Internal`] so no admitted request ever goes
+//! unanswered.
+
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{ClassifyResponse, Coordinator, SeedPolicy, ServeError, Target};
+use crate::util::json::Json;
+
+use super::conn;
+use super::protocol::{recover_id, RemoteClassify, Reply, Request, ServerInfo};
+
+/// Network front-end configuration.
+#[derive(Clone, Debug)]
+pub struct NetServerConfig {
+    /// Bind address, e.g. `127.0.0.1:7878` (`:0` picks a free port —
+    /// read it back from [`NetServer::local_addr`]).
+    pub addr: String,
+    /// Server-wide bound on admitted-but-unanswered classify requests;
+    /// beyond it the server answers [`ServeError::Overloaded`].
+    pub max_inflight: usize,
+    /// Frame-size cap in bytes, both directions
+    /// ([`conn::DEFAULT_MAX_FRAME`] by default).
+    pub max_frame: usize,
+}
+
+impl NetServerConfig {
+    /// Defaults: 256 in-flight requests, 8 MiB frames.
+    pub fn new(addr: impl Into<String>) -> Self {
+        Self { addr: addr.into(), max_inflight: 256, max_frame: conn::DEFAULT_MAX_FRAME }
+    }
+
+    /// Override the admission budget.
+    pub fn with_max_inflight(mut self, max_inflight: usize) -> Self {
+        self.max_inflight = max_inflight;
+        self
+    }
+}
+
+/// State every connection thread shares.
+#[derive(Clone)]
+struct ConnShared {
+    coord: Arc<Coordinator>,
+    /// Server-wide admitted-but-unanswered gauge.
+    inflight: Arc<AtomicUsize>,
+    shutdown: Arc<AtomicBool>,
+    /// Fires once when a client sends the `shutdown` op.
+    shutdown_tx: mpsc::Sender<()>,
+    max_inflight: usize,
+    max_frame: usize,
+}
+
+/// One live connection's join handles plus a stream clone the server
+/// uses to half-close the read side at shutdown.
+struct ConnHandle {
+    stream: TcpStream,
+    reader: JoinHandle<()>,
+    demux: JoinHandle<()>,
+}
+
+/// Handle to a running network front-end.  Dropping it (or calling
+/// [`NetServer::shutdown`]) drains and joins everything; the coordinator
+/// itself stays alive — it belongs to the caller.
+pub struct NetServer {
+    coord: Arc<Coordinator>,
+    local_addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    inflight: Arc<AtomicUsize>,
+    conns: Arc<Mutex<Vec<ConnHandle>>>,
+    accept: Option<JoinHandle<()>>,
+    shutdown_rx: mpsc::Receiver<()>,
+}
+
+impl NetServer {
+    /// Bind `cfg.addr` and start accepting connections.
+    pub fn start(coord: Arc<Coordinator>, cfg: NetServerConfig) -> Result<Self> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let local_addr = listener.local_addr().context("reading bound address")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let conns: Arc<Mutex<Vec<ConnHandle>>> = Arc::new(Mutex::new(Vec::new()));
+        let (shutdown_tx, shutdown_rx) = mpsc::channel();
+        let shared = ConnShared {
+            coord: Arc::clone(&coord),
+            inflight: Arc::clone(&inflight),
+            shutdown: Arc::clone(&shutdown),
+            shutdown_tx,
+            max_inflight: cfg.max_inflight,
+            max_frame: cfg.max_frame,
+        };
+        let conns2 = Arc::clone(&conns);
+        let accept = std::thread::Builder::new()
+            .name("ssa-net-accept".into())
+            .spawn(move || accept_loop(listener, shared, conns2))
+            .context("spawning the accept thread")?;
+        crate::log_info!("net: listening on {local_addr}");
+        Ok(Self {
+            coord,
+            local_addr,
+            shutdown,
+            inflight,
+            conns,
+            accept: Some(accept),
+            shutdown_rx,
+        })
+    }
+
+    /// The address actually bound (resolves `:0` to the chosen port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The coordinator this front-end serves.
+    pub fn coordinator(&self) -> &Arc<Coordinator> {
+        &self.coord
+    }
+
+    /// Classify requests currently admitted but not yet answered.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    /// Block until a client sends the wire `shutdown` op (or the accept
+    /// loop dies).  `serve --listen` parks here.
+    pub fn wait_shutdown_requested(&self) {
+        let _ = self.shutdown_rx.recv();
+    }
+
+    /// Graceful shutdown: stop accepting, half-close every connection's
+    /// read side, deliver in-flight replies, join all threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_now();
+    }
+
+    fn shutdown_now(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            // wake the blocking accept with a throwaway connection
+            let _ = TcpStream::connect(self.local_addr);
+            let _ = h.join();
+        }
+        // accept has exited, so no new handles can appear: drain and join
+        let handles: Vec<ConnHandle> = {
+            let mut c = self.conns.lock().unwrap();
+            c.drain(..).collect()
+        };
+        for c in &handles {
+            let _ = c.stream.shutdown(Shutdown::Read);
+        }
+        for c in handles {
+            let _ = c.reader.join();
+            let _ = c.demux.join();
+        }
+        crate::log_info!("net: server on {} drained and closed", self.local_addr);
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        // idempotent: after an explicit shutdown the handle lists are
+        // empty and the joins below are no-ops
+        self.shutdown_now();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: ConnShared, conns: Arc<Mutex<Vec<ConnHandle>>>) {
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                crate::log_warn!("net: accept error: {e}");
+                continue;
+            }
+        };
+        reap_finished(&conns);
+        match spawn_conn(stream, shared.clone()) {
+            Ok(h) => conns.lock().unwrap().push(h),
+            Err(e) => crate::log_warn!("net: connection setup failed: {e:#}"),
+        }
+    }
+}
+
+/// Join connections whose threads have already finished so a long-lived
+/// server's registry doesn't grow with every client that ever connected.
+fn reap_finished(conns: &Arc<Mutex<Vec<ConnHandle>>>) {
+    let finished: Vec<ConnHandle> = {
+        let mut c = conns.lock().unwrap();
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < c.len() {
+            if c[i].reader.is_finished() && c[i].demux.is_finished() {
+                done.push(c.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        done
+    };
+    for c in finished {
+        let _ = c.reader.join();
+        let _ = c.demux.join();
+    }
+}
+
+fn spawn_conn(stream: TcpStream, shared: ConnShared) -> Result<ConnHandle> {
+    stream.set_nodelay(true).ok();
+    // a client that stops reading must not wedge the demux thread forever
+    stream.set_write_timeout(Some(Duration::from_secs(30))).ok();
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
+    let registry_stream = stream.try_clone().context("cloning stream for the registry")?;
+    let write_half = Arc::new(Mutex::new(
+        stream.try_clone().context("cloning stream write half")?,
+    ));
+    // one completion channel per connection; each submitted request
+    // clones the sender, the demux drains the receiver
+    let (resp_tx, resp_rx) = mpsc::channel::<ClassifyResponse>();
+    // server-assigned request id -> client-chosen wire id
+    let pending: Arc<Mutex<HashMap<u64, u64>>> = Arc::new(Mutex::new(HashMap::new()));
+
+    let reader = {
+        let shared = shared.clone();
+        let write_half = Arc::clone(&write_half);
+        let pending = Arc::clone(&pending);
+        let peer = peer.clone();
+        std::thread::Builder::new()
+            .name("ssa-net-reader".into())
+            .spawn(move || reader_loop(stream, shared, write_half, resp_tx, pending, &peer))
+            .context("spawning connection reader")?
+    };
+    let demux = {
+        let inflight = Arc::clone(&shared.inflight);
+        let max_frame = shared.max_frame;
+        std::thread::Builder::new()
+            .name("ssa-net-demux".into())
+            .spawn(move || demux_loop(resp_rx, write_half, pending, inflight, max_frame))
+            .context("spawning connection demux")?
+    };
+    crate::log_debug!("net: connection from {peer}");
+    Ok(ConnHandle { stream: registry_stream, reader, demux })
+}
+
+/// Serialize one reply frame under the shared write lock.
+fn write_reply(w: &Mutex<TcpStream>, reply: &Reply, max_frame: usize) -> std::io::Result<()> {
+    let mut g = w.lock().unwrap();
+    conn::write_json(&mut *g, &reply.to_json(), max_frame)
+}
+
+fn reader_loop(
+    mut stream: TcpStream,
+    shared: ConnShared,
+    write_half: Arc<Mutex<TcpStream>>,
+    resp_tx: mpsc::Sender<ClassifyResponse>,
+    pending: Arc<Mutex<HashMap<u64, u64>>>,
+    peer: &str,
+) {
+    loop {
+        let frame = match conn::read_frame(&mut stream, shared.max_frame) {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // clean EOF
+            Err(e) => {
+                // oversized or truncated frame: the stream position is no
+                // longer trustworthy — answer once, then drop the
+                // connection
+                let _ = write_reply(
+                    &write_half,
+                    &Reply::Error {
+                        id: 0,
+                        error: ServeError::BadRequest(format!("framing error: {e}")),
+                    },
+                    shared.max_frame,
+                );
+                crate::log_warn!("net: dropping {peer}: framing error: {e}");
+                break;
+            }
+        };
+        // framed-but-malformed payloads keep the stream in sync: answer
+        // with a typed error and keep serving the connection
+        let json = match std::str::from_utf8(&frame)
+            .ok()
+            .and_then(|t| Json::parse(t).ok())
+        {
+            Some(j) => j,
+            None => {
+                let err = Reply::Error {
+                    id: 0,
+                    error: ServeError::BadRequest("frame payload is not valid JSON".into()),
+                };
+                if write_reply(&write_half, &err, shared.max_frame).is_err() {
+                    break;
+                }
+                continue;
+            }
+        };
+        let req = match Request::parse(&json) {
+            Ok(r) => r,
+            Err(error) => {
+                let id = recover_id(&json).unwrap_or(0);
+                if write_reply(&write_half, &Reply::Error { id, error }, shared.max_frame)
+                    .is_err()
+                {
+                    break;
+                }
+                continue;
+            }
+        };
+        let write_ok = match req {
+            Request::Classify { id, target, seed_policy, image } => handle_classify(
+                &shared,
+                &write_half,
+                &resp_tx,
+                &pending,
+                id,
+                target,
+                seed_policy,
+                image,
+            ),
+            Request::Metrics { id } => write_reply(
+                &write_half,
+                &Reply::Metrics { id, report: shared.coord.metrics_report() },
+                shared.max_frame,
+            ),
+            Request::Ping { id } => write_reply(
+                &write_half,
+                &Reply::Pong { id, info: server_info(&shared.coord) },
+                shared.max_frame,
+            ),
+            Request::Shutdown { id } => {
+                crate::log_info!("net: shutdown requested by {peer}");
+                let r = write_reply(&write_half, &Reply::ShuttingDown { id }, shared.max_frame);
+                let _ = shared.shutdown_tx.send(());
+                // keep draining this connection; the server tears it down
+                r
+            }
+        };
+        if write_ok.is_err() {
+            break;
+        }
+    }
+    crate::log_debug!("net: reader for {peer} exiting");
+    // dropping resp_tx here lets the demux run dry once every in-flight
+    // request has been answered or dropped by the pool
+}
+
+/// Admit, validate, and enqueue one classify request.  The returned
+/// `io::Result` reports only *write* failures (connection dead);
+/// request-level failures are answered in-band as typed errors.
+#[allow(clippy::too_many_arguments)]
+fn handle_classify(
+    shared: &ConnShared,
+    write_half: &Mutex<TcpStream>,
+    resp_tx: &mpsc::Sender<ClassifyResponse>,
+    pending: &Mutex<HashMap<u64, u64>>,
+    id: u64,
+    target: Target,
+    seed_policy: SeedPolicy,
+    image: Vec<f32>,
+) -> std::io::Result<()> {
+    if shared.shutdown.load(Ordering::Acquire) {
+        return write_reply(
+            write_half,
+            &Reply::Error { id, error: ServeError::Shutdown },
+            shared.max_frame,
+        );
+    }
+    // admission control: typed backpressure instead of unbounded queueing
+    if shared.inflight.fetch_add(1, Ordering::AcqRel) >= shared.max_inflight {
+        shared.inflight.fetch_sub(1, Ordering::AcqRel);
+        return write_reply(
+            write_half,
+            &Reply::Error { id, error: ServeError::Overloaded },
+            shared.max_frame,
+        );
+    }
+    // hold the pending lock across submit so the demux cannot observe a
+    // completion before its id mapping exists
+    let mut p = pending.lock().unwrap();
+    match shared.coord.submit_with_reply(target, image, seed_policy, resp_tx.clone()) {
+        Ok(server_id) => {
+            p.insert(server_id, id);
+            Ok(())
+        }
+        Err(error) => {
+            drop(p);
+            shared.inflight.fetch_sub(1, Ordering::AcqRel);
+            write_reply(write_half, &Reply::Error { id, error }, shared.max_frame)
+        }
+    }
+}
+
+fn demux_loop(
+    resp_rx: mpsc::Receiver<ClassifyResponse>,
+    write_half: Arc<Mutex<TcpStream>>,
+    pending: Arc<Mutex<HashMap<u64, u64>>>,
+    inflight: Arc<AtomicUsize>,
+    max_frame: usize,
+) {
+    // once a write fails the connection is dead: keep draining (to
+    // release admission slots) but stop writing
+    let mut dead = false;
+    while let Ok(resp) = resp_rx.recv() {
+        let client_id = pending.lock().unwrap().remove(&resp.id);
+        let Some(client_id) = client_id else { continue };
+        inflight.fetch_sub(1, Ordering::AcqRel);
+        if dead {
+            continue;
+        }
+        let reply = Reply::Classify {
+            id: client_id,
+            response: RemoteClassify::from_response(&resp),
+        };
+        if write_reply(&write_half, &reply, max_frame).is_err() {
+            dead = true;
+            // unblock the reader so the connection fully tears down
+            let _ = write_half.lock().unwrap().shutdown(Shutdown::Both);
+        }
+    }
+    // the channel is closed: the reader is gone and every submitted
+    // request has either been answered above or dropped by the pool.
+    // Fail the dropped ones explicitly and release their slots.
+    let orphans: Vec<u64> = {
+        let mut p = pending.lock().unwrap();
+        let v: Vec<u64> = p.values().copied().collect();
+        p.clear();
+        v
+    };
+    for client_id in orphans {
+        inflight.fetch_sub(1, Ordering::AcqRel);
+        if !dead {
+            let reply = Reply::Error {
+                id: client_id,
+                error: ServeError::Internal("request dropped by the worker pool".into()),
+            };
+            let _ = write_reply(&write_half, &reply, max_frame);
+        }
+    }
+    // close the connection at the socket level: the server's registry
+    // holds another dup of this fd until shutdown, and shutdown(2)
+    // reaches the peer regardless of outstanding duplicates — without
+    // this a client waiting on the stream would never see EOF
+    let _ = write_half.lock().unwrap().shutdown(Shutdown::Both);
+}
+
+fn server_info(coord: &Coordinator) -> ServerInfo {
+    ServerInfo {
+        backend: coord.backend().name().to_string(),
+        workers: coord.workers(),
+        image_size: coord.manifest().image_size,
+        targets: coord.manifest().variants.iter().map(|v| v.name.clone()).collect(),
+    }
+}

@@ -3,7 +3,7 @@
 //! This is the only place the `xla` crate is touched, and the whole
 //! module is compiled only under the `xla` feature (the offline image
 //! carries no xla_extension; the native backend serves instead).  The
-//! interchange format is HLO *text* (see DESIGN.md §2):
+//! interchange format is HLO *text* (see DESIGN.md §7):
 //! `HloModuleProto::from_text_file` re-assigns instruction ids, avoiding
 //! the 64-bit-id protos that xla_extension 0.5.1 rejects.  Graphs are
 //! lowered by `aot.py` with `return_tuple=True`, so outputs unwrap with

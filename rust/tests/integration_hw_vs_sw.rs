@@ -1,7 +1,7 @@
 //! E5 integration: the cycle-accurate SAU array must be *bit-exact*
 //! against the software model across random geometries, spike rates,
 //! sharing strategies, and stream lengths — the load-bearing verification
-//! of the accelerator model (DESIGN.md §6.1).
+//! of the accelerator model (EXPERIMENTS.md §E5).
 
 use ssa_repro::attention::ssa::SsaAttention;
 use ssa_repro::attention::stochastic::encode_frame;

@@ -1,0 +1,322 @@
+//! Network front-end integration: a real `NetServer` on a loopback
+//! socket, driven by `NetClient`s and raw TCP streams.
+//!
+//! Pins the PR-5 contracts: concurrent clients each get their own
+//! answers (response demux by request id), Fixed-seed responses over
+//! the wire are **bit-identical** to in-process results for any worker
+//! count, oversized/malformed frames are rejected with typed errors,
+//! overload surfaces as `ServeError::Overloaded`, and shutdown drains
+//! cleanly.  Artifacts are synthesized by `loadgen::synthetic` — no
+//! Python, no XLA.
+
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use ssa_repro::config::BackendKind;
+use ssa_repro::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, SeedPolicy, ServeError, Target,
+};
+use ssa_repro::loadgen::{self, ArrivalMode, ImageSource, LoadSpec, Scenario, SyntheticSpec};
+use ssa_repro::net::{conn, NetClient, NetServer, NetServerConfig};
+use ssa_repro::util::json::Json;
+
+const IMAGE: usize = 16;
+const PX: usize = IMAGE * IMAGE;
+
+/// Small-but-real geometry: 16x16 images, 1 encoder layer, T=4.
+fn artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ssa-net-it-{}-{tag}", std::process::id()));
+    let spec = SyntheticSpec {
+        d_model: 16,
+        n_heads: 2,
+        d_mlp: 32,
+        n_layers: 1,
+        dataset_n: 16,
+        ..SyntheticSpec::default()
+    };
+    loadgen::write_artifacts(&dir, &spec).expect("synthesize artifacts");
+    dir
+}
+
+fn start_coord(dir: PathBuf, workers: usize) -> Coordinator {
+    let mut cfg = CoordinatorConfig::new(dir)
+        .with_backend(BackendKind::Native)
+        .with_workers(workers);
+    cfg.policy = BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(2) };
+    cfg.preload = vec!["ssa_t4".into()];
+    Coordinator::start(cfg).expect("coordinator must start")
+}
+
+fn start_server(dir: PathBuf, workers: usize, max_inflight: usize) -> NetServer {
+    let coord = Arc::new(start_coord(dir, workers));
+    NetServer::start(coord, NetServerConfig::new("127.0.0.1:0").with_max_inflight(max_inflight))
+        .expect("server must start")
+}
+
+fn image(i: usize) -> Vec<f32> {
+    (0..PX).map(|p| ((i * 31 + p * 7) % 97) as f32 / 96.0).collect()
+}
+
+fn bits(logits: &[f32]) -> Vec<u32> {
+    logits.iter().map(|l| l.to_bits()).collect()
+}
+
+#[test]
+fn ping_reports_server_facts() {
+    let server = start_server(artifacts("ping"), 2, 16);
+    let client = NetClient::connect(&server.local_addr().to_string()).expect("connect");
+    let info = client.ping().expect("ping");
+    assert_eq!(info.backend, "native");
+    assert_eq!(info.workers, 2);
+    assert_eq!(info.image_size, IMAGE);
+    assert!(info.targets.iter().any(|t| t == "ssa_t4"), "targets: {:?}", info.targets);
+    drop(client);
+    server.shutdown();
+}
+
+/// Many threads sharing one client (pipelined on a single connection)
+/// plus separate clients on their own connections: every request gets
+/// its own answer, and identical (image, Fixed seed) requests get
+/// bit-identical answers no matter which thread or connection carried
+/// them — the response demux never cross-wires ids.
+#[test]
+fn concurrent_clients_each_get_their_own_answers() {
+    let server = start_server(artifacts("concurrent"), 2, 64);
+    let addr = server.local_addr().to_string();
+    let shared = Arc::new(NetClient::connect(&addr).expect("connect"));
+    let seen: Arc<Mutex<std::collections::HashMap<usize, Vec<u32>>>> =
+        Arc::new(Mutex::new(std::collections::HashMap::new()));
+
+    let mut handles = Vec::new();
+    for t in 0..4usize {
+        let shared = Arc::clone(&shared);
+        let seen = Arc::clone(&seen);
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            // odd threads use the shared pipelined connection, even
+            // threads their own
+            let own;
+            let client: &NetClient = if t % 2 == 0 {
+                own = NetClient::connect(&addr).expect("connect");
+                &own
+            } else {
+                shared.as_ref()
+            };
+            for i in 0..6usize {
+                let img = image(i);
+                let resp = client
+                    .classify(Target::ssa(4), &img, SeedPolicy::Fixed(77))
+                    .expect("classify");
+                assert!(resp.batch_size >= 1);
+                assert_eq!(resp.seed, 77);
+                let mut s = seen.lock().unwrap();
+                let b = bits(&resp.logits);
+                if let Some(prev) = s.get(&i) {
+                    assert_eq!(
+                        prev, &b,
+                        "image {i}: same (image, Fixed seed) must answer identically \
+                         on every thread and connection"
+                    );
+                } else {
+                    s.insert(i, b);
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    let s = seen.lock().unwrap();
+    assert_eq!(s.len(), 6);
+    assert!(
+        s.values().collect::<std::collections::HashSet<_>>().len() > 1,
+        "distinct images must produce distinct logits (no cross-wired replies)"
+    );
+    drop(s);
+    drop(shared);
+    server.shutdown();
+}
+
+/// The acceptance contract: Fixed-seed responses over TCP are
+/// bit-identical to in-process results, for any worker count.
+#[test]
+fn fixed_seed_over_wire_bit_identical_to_in_process() {
+    let dir = artifacts("bitident");
+
+    // in-process reference, single worker
+    let reference: Vec<Vec<u32>> = {
+        let coord = start_coord(dir.clone(), 1);
+        let out = (0..12)
+            .map(|i| {
+                let resp = coord
+                    .classify(Target::ssa(4), image(i), SeedPolicy::Fixed(77))
+                    .expect("in-process classify");
+                bits(&resp.logits)
+            })
+            .collect();
+        coord.shutdown();
+        out
+    };
+
+    for workers in [1usize, 3] {
+        let server = start_server(dir.clone(), workers, 64);
+        let client = NetClient::connect(&server.local_addr().to_string()).expect("connect");
+        // submit everything up front so batch composition genuinely
+        // races across workers and wire pipelining
+        let pending: Vec<_> = (0..12)
+            .map(|i| client.submit(Target::ssa(4), &image(i), SeedPolicy::Fixed(77)).unwrap())
+            .collect();
+        for (i, p) in pending.into_iter().enumerate() {
+            let resp = p.wait().expect("wire classify");
+            assert_eq!(
+                bits(&resp.logits),
+                reference[i],
+                "image {i}, workers={workers}: wire logits must be bit-identical \
+                 to the in-process result"
+            );
+        }
+        drop(client);
+        server.shutdown();
+    }
+}
+
+/// Framed-but-malformed payloads get typed `bad_request` replies and the
+/// connection keeps serving; an oversized frame header is answered once
+/// and then the connection is dropped.
+#[test]
+fn malformed_and_oversized_frames_are_rejected() {
+    let server = start_server(artifacts("reject"), 1, 16);
+    let max = conn::DEFAULT_MAX_FRAME;
+
+    // malformed payloads on one connection: two errors in a row prove
+    // the stream stays usable after a framed error
+    let mut s = TcpStream::connect(server.local_addr()).expect("connect");
+    conn::write_frame(&mut s, b"this is not json", max).unwrap();
+    let reply = conn::read_frame(&mut s, max).unwrap().expect("error reply");
+    let j = Json::parse(std::str::from_utf8(&reply).unwrap()).unwrap();
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(j.str_field("error").unwrap(), "bad_request");
+
+    conn::write_frame(&mut s, br#"{"id": 9, "op": "no-such-op"}"#, max).unwrap();
+    let reply = conn::read_frame(&mut s, max).unwrap().expect("second error reply");
+    let j = Json::parse(std::str::from_utf8(&reply).unwrap()).unwrap();
+    assert_eq!(j.str_field("error").unwrap(), "bad_request");
+    assert_eq!(j.usize_field("id").unwrap(), 9, "recoverable ids are echoed");
+
+    // a classify on the same connection still works after both errors
+    let ping = br#"{"id": 10, "op": "ping"}"#;
+    conn::write_frame(&mut s, ping, max).unwrap();
+    let reply = conn::read_frame(&mut s, max).unwrap().expect("ping still served");
+    let j = Json::parse(std::str::from_utf8(&reply).unwrap()).unwrap();
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+
+    // oversized header: one error reply, then the server closes the
+    // connection (the stream position is no longer trustworthy)
+    let mut s2 = TcpStream::connect(server.local_addr()).expect("connect");
+    use std::io::Write;
+    s2.write_all(&((max + 1) as u32).to_be_bytes()).unwrap();
+    s2.flush().unwrap();
+    let reply = conn::read_frame(&mut s2, max).unwrap().expect("oversize error reply");
+    let j = Json::parse(std::str::from_utf8(&reply).unwrap()).unwrap();
+    assert_eq!(j.str_field("error").unwrap(), "bad_request");
+    assert!(
+        conn::read_frame(&mut s2, max).unwrap().is_none(),
+        "server must close after a framing-level error"
+    );
+
+    server.shutdown();
+}
+
+/// With a zero in-flight budget every classify is refused with the
+/// typed `Overloaded` error — deterministic backpressure — while
+/// non-classify ops (ping, metrics) keep working.
+#[test]
+fn overload_propagates_as_typed_error() {
+    let server = start_server(artifacts("overload"), 1, 0);
+    let client = NetClient::connect(&server.local_addr().to_string()).expect("connect");
+
+    let pending = client.submit(Target::ssa(4), &image(0), SeedPolicy::PerBatch).unwrap();
+    match pending.wait_detailed().expect("transport must survive") {
+        Err(ServeError::Overloaded) => {}
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+    // the blocking wrapper surfaces it as an error, not a panic
+    let err = client.classify(Target::ssa(4), &image(0), SeedPolicy::PerBatch).unwrap_err();
+    assert!(format!("{err:#}").contains("overloaded"), "{err:#}");
+
+    assert!(client.ping().is_ok(), "control ops bypass admission control");
+    drop(client);
+    server.shutdown();
+}
+
+/// Bad requests that pass framing but fail validation come back as
+/// their own typed codes (unknown target, wrong pixel count).
+#[test]
+fn validation_errors_are_typed() {
+    let server = start_server(artifacts("validate"), 1, 16);
+    let client = NetClient::connect(&server.local_addr().to_string()).expect("connect");
+
+    let p = client.submit(Target::ssa(9), &image(0), SeedPolicy::PerBatch).unwrap();
+    match p.wait_detailed().unwrap() {
+        Err(ServeError::UnknownTarget(t)) => assert_eq!(t, "ssa_t9"),
+        other => panic!("expected UnknownTarget, got {other:?}"),
+    }
+
+    let p = client.submit(Target::ssa(4), &[0.5; 7], SeedPolicy::PerBatch).unwrap();
+    match p.wait_detailed().unwrap() {
+        Err(ServeError::BadImage { got: 7, want }) => assert_eq!(want, PX),
+        other => panic!("expected BadImage, got {other:?}"),
+    }
+    drop(client);
+    server.shutdown();
+}
+
+/// The wire shutdown op drains the server: the in-flight request is
+/// answered, the ack arrives, `wait_shutdown_requested` unblocks, and
+/// after `shutdown()` the port no longer accepts connections.
+#[test]
+fn graceful_shutdown_drains_and_closes() {
+    let server = start_server(artifacts("shutdown"), 1, 16);
+    let addr = server.local_addr();
+    let client = NetClient::connect(&addr.to_string()).expect("connect");
+
+    let resp = client.classify(Target::ssa(4), &image(0), SeedPolicy::Fixed(1)).unwrap();
+    assert!(resp.latency_us > 0.0);
+
+    client.shutdown_server().expect("shutdown ack");
+    server.wait_shutdown_requested(); // must not block after the op
+    server.shutdown();
+    drop(client);
+
+    assert!(
+        TcpStream::connect(addr).is_err(),
+        "the listener must be gone after shutdown"
+    );
+}
+
+/// The load generator drives the network path end-to-end (closed loop)
+/// and the metrics op reports the served traffic.
+#[test]
+fn loadgen_remote_and_metrics_over_the_wire() {
+    let server = start_server(artifacts("loadgen"), 2, 64);
+    let client = NetClient::connect(&server.local_addr().to_string()).expect("connect");
+
+    let spec = LoadSpec {
+        mode: ArrivalMode::Closed { concurrency: 4 },
+        duration: Duration::from_millis(300),
+        scenario: Scenario::uniform(Target::ssa(4), SeedPolicy::PerBatch),
+        seed: 42,
+    };
+    let images = ImageSource::synthetic(IMAGE, 16, 7);
+    let stats = loadgen::run(&client, &spec, &images).expect("remote loadgen run");
+    assert!(stats.ok > 0, "closed loop over TCP must complete requests");
+    assert_eq!(stats.errors, 0, "no errors expected under the in-flight budget");
+    assert_eq!(stats.ok, stats.latency.count(), "every ok reply has an RTT sample");
+
+    let report = client.metrics().expect("metrics op");
+    assert!(report.contains("ssa_t4"), "served target appears in metrics: {report}");
+    drop(client);
+    server.shutdown();
+}

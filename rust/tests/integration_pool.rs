@@ -163,6 +163,7 @@ fn closed_loop_loadgen_drives_live_pool() {
         scenario: spec.scenario.name.clone(),
         mode: spec.mode.describe(),
         backend: "native".into(),
+        transport: "in-process".into(),
         duration_s: 0.3,
         runs: vec![BenchRun::new(
             coord.workers(),

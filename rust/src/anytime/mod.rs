@@ -1,0 +1,415 @@
+//! Anytime inference: confidence-based early exit over time steps.
+//!
+//! Rate decoding makes the readout a monotone accumulation: after `k` of
+//! `T` time steps the running class scores are the per-step logits summed
+//! so far, and the final prediction is their mean.  A top-1/top-2 margin
+//! test on the running mean is therefore a sound anytime-inference rule —
+//! once the leading class is separated by more than the margin the later
+//! steps can plausibly close, stopping early trades a bounded amount of
+//! accuracy for a large cut in per-request latency (see the
+//! `sweep-anytime` experiment for the measured curve).
+//!
+//! [`ExitPolicy`] is the knob: `Full` reproduces today's exact behavior
+//! **bit for bit** (it is compiled out of the step loop, not merely
+//! disabled), `Margin` stops on confidence, `Deadline` stops on a step
+//! budget, and the two combine (`margin:0.5:2+deadline:6`).  The policy
+//! travels with every request — through the coordinator, the worker
+//! pool, and the TCP wire protocol — and every reply reports
+//! [`InferOutcome::steps_used`] so the latency win is attributable.
+//!
+//! Determinism contract: the exit decision for a row depends only on that
+//! row's accumulated class scores, which under a fixed seed depend only
+//! on (image, seed).  Early exit therefore composes with the fixed-seed
+//! replica-determinism contract (DESIGN.md §2b): results are bit-identical
+//! for any worker count and any batch composition.
+
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::str::FromStr;
+
+use anyhow::{bail, Context, Result};
+
+/// When to stop accumulating time steps for one inference row.
+///
+/// Spellings (round-tripping through [`fmt::Display`] / [`ExitPolicy::parse`],
+/// shared by the CLI, the wire protocol, and loadgen mix suffixes):
+///
+/// * `full` — run all `T` steps (bit-identical to the pre-anytime path)
+/// * `margin:THRESHOLD[:MIN_STEPS]` — exit once the top-1/top-2 margin of
+///   the running mean reaches `THRESHOLD`, but never before `MIN_STEPS`
+///   (default 1) steps have run
+/// * `deadline:BUDGET` — exit unconditionally after `BUDGET` steps
+/// * `margin:…+deadline:…` — whichever fires first
+#[derive(Clone, Copy, Debug)]
+pub enum ExitPolicy {
+    /// Run every time step; the exact, bit-identical baseline.
+    Full,
+    /// Exit once the running top-1/top-2 margin reaches `threshold`,
+    /// after at least `min_steps` steps.
+    Margin { threshold: f32, min_steps: usize },
+    /// Exit unconditionally after `budget` steps.
+    Deadline { budget: usize },
+    /// [`ExitPolicy::Margin`] OR [`ExitPolicy::Deadline`] — exit when
+    /// either condition holds.
+    MarginOrDeadline { threshold: f32, min_steps: usize, budget: usize },
+}
+
+/// The per-step verdict of an [`ExitPolicy`] over the running class scores.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExitDecision {
+    /// Stop after this step (never set by [`ExitPolicy::Full`]).
+    pub exit: bool,
+    /// Top-1 minus top-2 of the running per-class mean.
+    pub margin: f32,
+}
+
+/// One anytime inference result: the (possibly early) logits plus the
+/// telemetry that makes the latency/accuracy trade measurable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferOutcome {
+    /// Mean per-class currents over the steps actually run.
+    pub logits: Vec<f32>,
+    /// Time steps actually executed (`== T` under [`ExitPolicy::Full`]).
+    pub steps_used: usize,
+    /// Top-1 minus top-2 of `logits` — the confidence the exit rule saw.
+    pub margin: f32,
+}
+
+impl Default for ExitPolicy {
+    fn default() -> Self {
+        ExitPolicy::Full
+    }
+}
+
+impl ExitPolicy {
+    /// `true` for the exact, run-every-step policy (the default; requests
+    /// that omit the wire `exit` field get this).
+    pub fn is_full(&self) -> bool {
+        matches!(self, ExitPolicy::Full)
+    }
+
+    /// Evaluate the policy after `steps_done` (1-based) completed steps,
+    /// over the raw accumulated per-class currents (the running *sums*,
+    /// not means — the division happens here, once, in one scan).
+    ///
+    /// Cost: a single pass over `n_classes` values, no allocation.
+    pub fn evaluate(&self, acc: &[f64], steps_done: usize) -> ExitDecision {
+        let margin = margin_of_acc(acc, steps_done);
+        let exit = match *self {
+            ExitPolicy::Full => false,
+            ExitPolicy::Margin { threshold, min_steps } => {
+                steps_done >= min_steps.max(1) && margin >= threshold
+            }
+            ExitPolicy::Deadline { budget } => steps_done >= budget,
+            ExitPolicy::MarginOrDeadline { threshold, min_steps, budget } => {
+                (steps_done >= min_steps.max(1) && margin >= threshold)
+                    || steps_done >= budget
+            }
+        };
+        ExitDecision { exit, margin }
+    }
+
+    /// Parse the textual spelling (see the type docs).  Clauses join with
+    /// `+`; at most one `margin` and one `deadline` clause, and `full`
+    /// combines with nothing.
+    pub fn parse(s: &str) -> Result<Self> {
+        let spec = s.trim();
+        let mut margin: Option<(f32, usize)> = None;
+        let mut deadline: Option<usize> = None;
+        let mut full = false;
+        for clause in spec.split('+') {
+            let clause = clause.trim();
+            if clause == "full" {
+                anyhow::ensure!(!full, "duplicate `full` clause in exit policy {spec:?}");
+                full = true;
+                continue;
+            }
+            match clause.split_once(':') {
+                Some(("margin", rest)) => {
+                    anyhow::ensure!(
+                        margin.is_none(),
+                        "duplicate `margin` clause in exit policy {spec:?}"
+                    );
+                    let (th_s, min_steps) = match rest.split_once(':') {
+                        None => (rest, 1),
+                        Some((t, m)) => (
+                            t,
+                            m.parse::<usize>().with_context(|| {
+                                format!("invalid margin min_steps {m:?} in {spec:?}")
+                            })?,
+                        ),
+                    };
+                    let threshold: f32 = th_s.parse().with_context(|| {
+                        format!("invalid margin threshold {th_s:?} in {spec:?}")
+                    })?;
+                    anyhow::ensure!(
+                        !threshold.is_nan(),
+                        "margin threshold must not be NaN in {spec:?}"
+                    );
+                    margin = Some((threshold, min_steps.max(1)));
+                }
+                Some(("deadline", rest)) => {
+                    anyhow::ensure!(
+                        deadline.is_none(),
+                        "duplicate `deadline` clause in exit policy {spec:?}"
+                    );
+                    let budget: usize = rest.parse().with_context(|| {
+                        format!("invalid deadline budget {rest:?} in {spec:?}")
+                    })?;
+                    anyhow::ensure!(
+                        budget >= 1,
+                        "deadline budget must be >= 1 step in {spec:?}"
+                    );
+                    deadline = Some(budget);
+                }
+                _ => bail!(
+                    "unknown exit policy clause {clause:?} — expected `full`, \
+                     `margin:THRESHOLD[:MIN_STEPS]`, or `deadline:BUDGET` \
+                     (combinable with `+`)"
+                ),
+            }
+        }
+        if full {
+            anyhow::ensure!(
+                margin.is_none() && deadline.is_none(),
+                "`full` cannot combine with other exit clauses in {spec:?}"
+            );
+            return Ok(ExitPolicy::Full);
+        }
+        match (margin, deadline) {
+            (Some((threshold, min_steps)), None) => {
+                Ok(ExitPolicy::Margin { threshold, min_steps })
+            }
+            (None, Some(budget)) => Ok(ExitPolicy::Deadline { budget }),
+            (Some((threshold, min_steps)), Some(budget)) => {
+                Ok(ExitPolicy::MarginOrDeadline { threshold, min_steps, budget })
+            }
+            (None, None) => bail!("empty exit policy spec"),
+        }
+    }
+
+    /// A totally-ordered key for equality/hashing: f32 thresholds compare
+    /// by bit pattern so the policy can join the router's batch-grouping
+    /// tuple.
+    fn key(&self) -> (u8, u32, usize, usize) {
+        match *self {
+            ExitPolicy::Full => (0, 0, 0, 0),
+            ExitPolicy::Margin { threshold, min_steps } => {
+                (1, threshold.to_bits(), min_steps, 0)
+            }
+            ExitPolicy::Deadline { budget } => (2, 0, 0, budget),
+            ExitPolicy::MarginOrDeadline { threshold, min_steps, budget } => {
+                (3, threshold.to_bits(), min_steps, budget)
+            }
+        }
+    }
+}
+
+impl PartialEq for ExitPolicy {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+
+impl Eq for ExitPolicy {}
+
+impl Hash for ExitPolicy {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        self.key().hash(state);
+    }
+}
+
+impl fmt::Display for ExitPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fn margin_clause(
+            f: &mut fmt::Formatter<'_>,
+            threshold: f32,
+            min_steps: usize,
+        ) -> fmt::Result {
+            if min_steps <= 1 {
+                write!(f, "margin:{threshold}")
+            } else {
+                write!(f, "margin:{threshold}:{min_steps}")
+            }
+        }
+        match *self {
+            ExitPolicy::Full => write!(f, "full"),
+            ExitPolicy::Margin { threshold, min_steps } => {
+                margin_clause(f, threshold, min_steps)
+            }
+            ExitPolicy::Deadline { budget } => write!(f, "deadline:{budget}"),
+            ExitPolicy::MarginOrDeadline { threshold, min_steps, budget } => {
+                margin_clause(f, threshold, min_steps)?;
+                write!(f, "+deadline:{budget}")
+            }
+        }
+    }
+}
+
+impl FromStr for ExitPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        ExitPolicy::parse(s)
+    }
+}
+
+/// The two largest values of a slice in one pass (`NEG_INFINITY` fills
+/// when the slice has fewer than two comparable entries; NaNs never win a
+/// comparison and are effectively skipped).
+fn top_two(values: &[f64]) -> (f64, f64) {
+    let (mut top1, mut top2) = (f64::NEG_INFINITY, f64::NEG_INFINITY);
+    for &v in values {
+        if v > top1 {
+            top2 = top1;
+            top1 = v;
+        } else if v > top2 {
+            top2 = v;
+        }
+    }
+    (top1, top2)
+}
+
+/// Top-1 minus top-2 of the running per-class mean after `steps_done`
+/// steps, given the raw accumulated sums.  Degenerate inputs (fewer than
+/// two comparable classes, or non-finite spread) clamp to `f32::MAX` —
+/// always finite, so the value is safe to serialize.
+pub fn margin_of_acc(acc: &[f64], steps_done: usize) -> f32 {
+    let (top1, top2) = top_two(acc);
+    if !top2.is_finite() {
+        return f32::MAX;
+    }
+    let m = (top1 - top2) / steps_done.max(1) as f64;
+    if m.is_finite() {
+        m as f32
+    } else {
+        f32::MAX
+    }
+}
+
+/// Top-1 minus top-2 of finished logits — the `confidence` reported in
+/// classify replies.  Same degenerate-input clamping as
+/// [`margin_of_acc`].
+pub fn margin_of(logits: &[f32]) -> f32 {
+    let (top1, top2) = top_two(&logits.iter().map(|&v| v as f64).collect::<Vec<_>>());
+    if !top2.is_finite() {
+        return f32::MAX;
+    }
+    let m = top1 - top2;
+    if m.is_finite() {
+        m as f32
+    } else {
+        f32::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_parse_roundtrip() {
+        let policies = [
+            ExitPolicy::Full,
+            ExitPolicy::Margin { threshold: 0.5, min_steps: 1 },
+            ExitPolicy::Margin { threshold: 0.125, min_steps: 3 },
+            ExitPolicy::Margin { threshold: f32::INFINITY, min_steps: 1 },
+            ExitPolicy::Deadline { budget: 6 },
+            ExitPolicy::MarginOrDeadline { threshold: 0.5, min_steps: 2, budget: 6 },
+        ];
+        for p in policies {
+            let s = p.to_string();
+            let back = ExitPolicy::parse(&s).unwrap_or_else(|e| panic!("{s}: {e}"));
+            assert_eq!(p, back, "{s} must round-trip");
+        }
+        // min_steps 0 normalizes to 1 at parse
+        assert_eq!(
+            ExitPolicy::parse("margin:0.5:0").unwrap(),
+            ExitPolicy::Margin { threshold: 0.5, min_steps: 1 }
+        );
+        // clause order is free on input
+        assert_eq!(
+            ExitPolicy::parse("deadline:6+margin:0.5:2").unwrap(),
+            ExitPolicy::MarginOrDeadline { threshold: 0.5, min_steps: 2, budget: 6 }
+        );
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        for bad in [
+            "",
+            "margin",
+            "margin:abc",
+            "margin:NaN",
+            "deadline:0",
+            "deadline:x",
+            "full+margin:0.5",
+            "margin:0.5+margin:0.6",
+            "deadline:2+deadline:3",
+            "sprint:9",
+        ] {
+            assert!(ExitPolicy::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn eq_and_hash_track_the_bit_pattern() {
+        use std::collections::HashSet;
+        let a = ExitPolicy::Margin { threshold: 0.5, min_steps: 1 };
+        let b = ExitPolicy::Margin { threshold: 0.5, min_steps: 1 };
+        let c = ExitPolicy::Margin { threshold: 0.25, min_steps: 1 };
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, ExitPolicy::Full);
+        let mut set = HashSet::new();
+        set.insert(a);
+        assert!(set.contains(&b));
+        assert!(!set.contains(&c));
+    }
+
+    #[test]
+    fn evaluate_semantics() {
+        // acc sums after 2 steps: means are [1.0, 0.4, 0.1] -> margin 0.6
+        let acc = [2.0f64, 0.8, 0.2];
+
+        let d = ExitPolicy::Full.evaluate(&acc, 2);
+        assert!(!d.exit, "Full never exits");
+        assert!((d.margin - 0.6).abs() < 1e-6);
+
+        let m = ExitPolicy::Margin { threshold: 0.5, min_steps: 1 };
+        assert!(m.evaluate(&acc, 2).exit, "margin 0.6 >= threshold 0.5");
+        let strict = ExitPolicy::Margin { threshold: 0.7, min_steps: 1 };
+        assert!(!strict.evaluate(&acc, 2).exit, "margin 0.6 < threshold 0.7");
+        let late = ExitPolicy::Margin { threshold: 0.5, min_steps: 3 };
+        assert!(!late.evaluate(&acc, 2).exit, "min_steps gates the exit");
+        assert!(late.evaluate(&[3.0, 1.2, 0.3], 3).exit);
+
+        let inf = ExitPolicy::Margin { threshold: f32::INFINITY, min_steps: 1 };
+        assert!(!inf.evaluate(&acc, 2).exit, "infinite threshold never fires");
+
+        let dl = ExitPolicy::Deadline { budget: 2 };
+        assert!(!dl.evaluate(&acc, 1).exit);
+        assert!(dl.evaluate(&acc, 2).exit, "deadline fires exactly at budget");
+
+        let both = ExitPolicy::MarginOrDeadline {
+            threshold: f32::INFINITY,
+            min_steps: 1,
+            budget: 4,
+        };
+        assert!(!both.evaluate(&acc, 3).exit);
+        assert!(both.evaluate(&acc, 4).exit, "deadline arm still fires");
+        let both_m =
+            ExitPolicy::MarginOrDeadline { threshold: 0.5, min_steps: 1, budget: 100 };
+        assert!(both_m.evaluate(&acc, 2).exit, "margin arm fires before the deadline");
+    }
+
+    #[test]
+    fn margin_helpers_are_finite_on_degenerate_input() {
+        assert_eq!(margin_of(&[1.0]), f32::MAX, "single class: maximal separation");
+        assert_eq!(margin_of(&[]), f32::MAX);
+        assert_eq!(margin_of(&[f32::NAN, f32::NAN]), f32::MAX);
+        assert!((margin_of(&[0.1, 0.9, 0.3]) - 0.6).abs() < 1e-6);
+        assert!((margin_of_acc(&[2.0, 0.8], 2) - 0.6).abs() < 1e-6);
+        assert!(margin_of(&[f32::MAX, f32::MIN]).is_finite());
+    }
+}

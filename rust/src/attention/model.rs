@@ -22,6 +22,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::anytime::{margin_of, ExitPolicy, InferOutcome};
 use crate::attention::ann::softmax_attention;
 use crate::attention::block::{LayerWeights, SsaEncoderLayer, StageTimings};
 use crate::attention::lif::LifLayer;
@@ -202,6 +203,33 @@ impl NativeModel {
         }
     }
 
+    /// [`Self::infer_image`] under an anytime [`ExitPolicy`]: the step
+    /// loop may stop early, and the outcome reports the steps actually
+    /// run plus the top-1/top-2 margin of the returned logits.
+    ///
+    /// `ExitPolicy::Full` is **bit-identical** to [`Self::infer_image`]
+    /// (same arithmetic, the exit check is never evaluated).  The
+    /// deterministic ANN arch has no temporal dimension and always
+    /// reports `steps_used = 1`.
+    pub fn infer_image_anytime(
+        &self,
+        image: &[f32],
+        seed: u64,
+        policy: &ExitPolicy,
+    ) -> Result<InferOutcome> {
+        let patches = patchify(image, self.geo.image_size, self.geo.patch_size);
+        match self.arch {
+            Arch::Ann => {
+                let logits = self.ann_forward(&patches);
+                let margin = margin_of(&logits);
+                Ok(InferOutcome { logits, steps_used: 1, margin })
+            }
+            Arch::Ssa | Arch::Spikformer => {
+                self.spiking_forward_anytime(&patches, seed, policy, None)
+            }
+        }
+    }
+
     /// [`Self::infer_image`] with per-stage wall-clock attribution (the
     /// `bench-native` harness).  Logits are bit-identical to the untimed
     /// call; for the deterministic ANN arch the stage breakdown is empty.
@@ -279,6 +307,65 @@ impl NativeModel {
         Ok(logits)
     }
 
+    /// Anytime twin of [`Self::infer`]: row `i` runs under
+    /// `image_seed(seed, i)` and exits independently of its batch mates.
+    pub fn infer_anytime(
+        &self,
+        images: &[f32],
+        batch: usize,
+        seed: u32,
+        policy: &ExitPolicy,
+    ) -> Result<Vec<InferOutcome>> {
+        let px = self.geo.image_size * self.geo.image_size;
+        anyhow::ensure!(
+            images.len() == batch * px,
+            "images buffer has {} elements, expected {} ({} x {px})",
+            images.len(),
+            batch * px,
+            batch
+        );
+        (0..batch)
+            .map(|i| {
+                self.infer_image_anytime(
+                    &images[i * px..(i + 1) * px],
+                    image_seed(seed, i),
+                    policy,
+                )
+            })
+            .collect()
+    }
+
+    /// Anytime twin of [`Self::infer_rows`]: per-row seed streams AND
+    /// per-row early exit, so the fixed-seed determinism contract holds —
+    /// a row's (logits, steps_used) depend only on (image, row seed,
+    /// policy), never on batch placement or worker count.
+    pub fn infer_rows_anytime(
+        &self,
+        images: &[f32],
+        batch: usize,
+        row_seeds: &[u64],
+        policy: &ExitPolicy,
+    ) -> Result<Vec<InferOutcome>> {
+        let px = self.geo.image_size * self.geo.image_size;
+        anyhow::ensure!(
+            images.len() == batch * px,
+            "images buffer has {} elements, expected {} ({} x {px})",
+            images.len(),
+            batch * px,
+            batch
+        );
+        anyhow::ensure!(
+            row_seeds.len() == batch,
+            "{} row seeds for a batch of {batch}",
+            row_seeds.len()
+        );
+        (0..batch)
+            .map(|i| {
+                self.infer_image_anytime(&images[i * px..(i + 1) * px], row_seeds[i], policy)
+            })
+            .collect()
+    }
+
     // --- spiking forward (SSA / Spikformer) --------------------------------
 
     /// Build the per-request layer stack (LIF membranes + PRNG banks +
@@ -318,8 +405,28 @@ impl NativeModel {
         &self,
         patches: &Tensor,
         seed: u64,
-        mut timings: Option<&mut StageTimings>,
+        timings: Option<&mut StageTimings>,
     ) -> Result<Vec<f32>> {
+        Ok(self
+            .spiking_forward_anytime(patches, seed, &ExitPolicy::Full, timings)?
+            .logits)
+    }
+
+    /// The policy-aware step loop behind both [`Self::spiking_forward`]
+    /// (always `ExitPolicy::Full`) and the anytime entry points.  The
+    /// exit check is guarded by `!policy.is_full()`, so the `Full` path
+    /// executes exactly the pre-anytime arithmetic: accumulate all
+    /// `time_steps` per-step currents in f64 and divide once by `T` —
+    /// bit-identical output, pinned by the property tests.  A non-full
+    /// policy pays one `n_classes` scan per step (no allocation) and, on
+    /// exit after `k` steps, divides the same accumulator by `k`.
+    fn spiking_forward_anytime(
+        &self,
+        patches: &Tensor,
+        seed: u64,
+        policy: &ExitPolicy,
+        mut timings: Option<&mut StageTimings>,
+    ) -> Result<InferOutcome> {
         let geo = &self.geo;
         // per-request state
         let mut input_rng = Xoshiro256::new(SplitMix64::new(seed ^ TAG_INPUT).next_u64());
@@ -335,7 +442,7 @@ impl NativeModel {
         let mut logits_t = Tensor::zeros(&[1, geo.n_classes]);
 
         let mut logits_acc = vec![0.0f64; geo.n_classes];
-        for _t in 0..geo.time_steps {
+        for t in 0..geo.time_steps {
             // input rate coding (eq. 2) + spiking patch embedding
             let t0 = timings.is_some().then(Instant::now);
             encode_frame_into(patches, &mut input_rng, &mut x_t);
@@ -367,9 +474,25 @@ impl NativeModel {
             if let (Some(tm), Some(t0)) = (timings.as_deref_mut(), t0) {
                 tm.readout_us += t0.elapsed().as_secs_f64() * 1e6;
             }
+
+            // anytime early exit: one n_classes scan, compiled out of the
+            // Full path entirely (bit-exactness spine of the subsystem)
+            let steps_done = t + 1;
+            if !policy.is_full() && steps_done < geo.time_steps {
+                let decision = policy.evaluate(&logits_acc, steps_done);
+                if decision.exit {
+                    let k = steps_done as f64;
+                    let logits: Vec<f32> =
+                        logits_acc.iter().map(|&v| (v / k) as f32).collect();
+                    let margin = margin_of(&logits);
+                    return Ok(InferOutcome { logits, steps_used: steps_done, margin });
+                }
+            }
         }
         let t = geo.time_steps as f64;
-        Ok(logits_acc.into_iter().map(|v| (v / t) as f32).collect())
+        let logits: Vec<f32> = logits_acc.into_iter().map(|v| (v / t) as f32).collect();
+        let margin = margin_of(&logits);
+        Ok(InferOutcome { logits, steps_used: geo.time_steps, margin })
     }
 
     /// Retained pre-rewrite forward pass (dense `to_f01` + `Tensor::matmul`
@@ -635,6 +758,75 @@ mod tests {
         assert_eq!(&ab[3..6], &m.infer_image(&img1, row).unwrap()[..]);
         // seed-count mismatch is rejected
         assert!(m.infer_rows(&both, 2, &[row]).is_err());
+    }
+
+    #[test]
+    fn anytime_full_is_bit_identical_and_runs_all_steps() {
+        for arch in [Arch::Ssa, Arch::Spikformer, Arch::Ann] {
+            let m = tiny_model(arch);
+            let img: Vec<f32> = (0..64).map(|i| (i % 11) as f32 / 11.0).collect();
+            for seed in [0u64, 9, 0xFEED] {
+                let exact = m.infer_image(&img, seed).unwrap();
+                let out = m.infer_image_anytime(&img, seed, &ExitPolicy::Full).unwrap();
+                for (a, b) in exact.iter().zip(&out.logits) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{arch:?} seed={seed}");
+                }
+                let want_steps = if arch == Arch::Ann { 1 } else { 6 };
+                assert_eq!(out.steps_used, want_steps, "{arch:?}");
+                assert_eq!(out.margin, margin_of(&out.logits));
+            }
+        }
+    }
+
+    #[test]
+    fn anytime_exits_honor_min_steps_deadline_and_determinism() {
+        let m = tiny_model(Arch::Ssa);
+        let img = vec![0.5f32; 64];
+        // margin >= 0 always holds (top1 - top2 is non-negative), so a
+        // zero threshold exits exactly at min_steps
+        let eager = ExitPolicy::Margin { threshold: 0.0, min_steps: 2 };
+        let out = m.infer_image_anytime(&img, 7, &eager).unwrap();
+        assert_eq!(out.steps_used, 2);
+        assert_eq!(
+            out,
+            m.infer_image_anytime(&img, 7, &eager).unwrap(),
+            "anytime outcomes replay under the same seed"
+        );
+        // a deadline caps the loop even when the margin never fires
+        let capped = ExitPolicy::MarginOrDeadline {
+            threshold: f32::INFINITY,
+            min_steps: 1,
+            budget: 3,
+        };
+        assert_eq!(m.infer_image_anytime(&img, 7, &capped).unwrap().steps_used, 3);
+        // an infinite margin threshold alone never exits before T
+        let never = ExitPolicy::Margin { threshold: f32::INFINITY, min_steps: 1 };
+        let full = m.infer_image_anytime(&img, 7, &never).unwrap();
+        assert_eq!(full.steps_used, 6);
+        assert_eq!(full.logits, m.infer_image(&img, 7).unwrap());
+        // a deadline at or past T degrades to the full run
+        let slack = ExitPolicy::Deadline { budget: 99 };
+        assert_eq!(m.infer_image_anytime(&img, 7, &slack).unwrap().steps_used, 6);
+    }
+
+    #[test]
+    fn anytime_rows_exit_independently_of_batch_placement() {
+        let m = tiny_model(Arch::Ssa);
+        let img0 = vec![0.2f32; 64];
+        let img1 = vec![0.8f32; 64];
+        let mut both = img0.clone();
+        both.extend_from_slice(&img1);
+        let mut swapped = img1.clone();
+        swapped.extend_from_slice(&img0);
+        let policy = ExitPolicy::Margin { threshold: 0.05, min_steps: 1 };
+        let row = image_seed(42, 0);
+        let ab = m.infer_rows_anytime(&both, 2, &[row, row], &policy).unwrap();
+        let ba = m.infer_rows_anytime(&swapped, 2, &[row, row], &policy).unwrap();
+        assert_eq!(ab[0], ba[1], "img0 outcome independent of position");
+        assert_eq!(ab[1], ba[0], "img1 outcome independent of position");
+        assert_eq!(ab[0], m.infer_image_anytime(&img0, row, &policy).unwrap());
+        assert!(ab.iter().all(|o| o.steps_used >= 1 && o.steps_used <= 6));
+        assert!(m.infer_rows_anytime(&both, 2, &[row], &policy).is_err());
     }
 
     #[test]

@@ -12,6 +12,8 @@
 //!                       [--remote HOST:PORT]
 //! ssa-repro bench-native [--budget SECS] [--batch B] [--layers L] [--t T]
 //!                        [--out BENCH_native.json]
+//! ssa-repro sweep-anytime [--synthetic] [--target ssa_t10] [--n N]
+//!                       [--thresholds 0.1,0.2,0.5] [--min-steps K]
 //! ssa-repro simulate    [--n 16] [--dk 16] [--t 10] [--sharing per-row] [--trace]
 //! ssa-repro experiments <table1|table2|table3|headline|fig1|fig2|fig3|all>
 //!                       [--artifacts DIR] [--cross-check N] [--backend native|xla]
@@ -124,15 +126,21 @@ USAGE:
   ssa-repro classify-remote --addr HOST:PORT
                         [--target ssa_t4] [--n N] [--seed S]
                         [--seed-policy perbatch|fixed:N|ensemble:K]
+                        [--exit full|margin:TH[:MIN]|deadline:B]
                         [--metrics] [--shutdown]
   ssa-repro serve-bench [--artifacts DIR | --synthetic]
                         [--backend native|xla] [--workers N[,M,...]]
                         [--concurrency C | --rps R] [--duration SECS]
-                        [--mix \"ssa_t4*3,ann@fixed:7\"]
+                        [--mix \"ssa_t4*3,ann@fixed:7!margin:0.5\"]
                         [--seed-policy perbatch|fixed:N|ensemble:K]
                         [--max-batch B] [--max-delay-ms D] [--seed S]
                         [--remote HOST:PORT]
                         [--out BENCH_serving.json]
+  ssa-repro sweep-anytime [--artifacts DIR | --synthetic]
+                        [--target ssa_t10] [--n N_IMAGES]
+                        [--thresholds 0.05,0.1,0.2,0.5,1]
+                        [--min-steps K] [--seed S]
+                        [--out SWEEP_anytime.json]
   ssa-repro bench-native [--budget SECS] [--warmup SECS] [--batch B]
                         [--layers L] [--t T] [--seed S]
                         [--out BENCH_native.json]
@@ -164,6 +172,22 @@ Network serving (DESIGN.md section 3 specifies the wire protocol):
                    latencies; --metrics fetches the server's plaintext
                    metrics report, --shutdown requests a graceful drain
 
+Anytime inference (early exit over SNN time steps; DESIGN.md 2d):
+  --exit POLICY    stop integrating time steps per image once POLICY
+                   fires: `full` (exact, the default — bit-identical to
+                   a request with no policy), `margin:TH` (exit once the
+                   running top-1/top-2 logit margin reaches TH;
+                   `margin:TH:MIN` waits at least MIN steps),
+                   `deadline:B` (hard cap of B steps), or a combined
+                   `margin:TH[:MIN]+deadline:B`.  Replies report
+                   steps_used and the decoded confidence margin.
+                   Ensemble seed policies reject early exit.
+  sweep-anytime    re-evaluate one variant (native backend) over the
+                   same images and seed streams at several margin
+                   thresholds; writes the accuracy / mean-steps /
+                   early-exit-rate curve to --out (SWEEP_anytime.json)
+                   with a full-T exact baseline for comparison
+
 serve-bench (load generation -> BENCH_serving.json):
   --concurrency C  closed loop: C clients, each submits the next request
                    as soon as the previous answers (capacity measurement)
@@ -174,8 +198,11 @@ serve-bench (load generation -> BENCH_serving.json):
                    (e.g. 1,4 measures the same load on a 1-worker and a
                    4-worker pool); the report records the last-vs-first
                    throughput speedup.  In-process runs only.
-  --mix SPEC       weighted scenario mix, TARGET[@POLICY][*WEIGHT] per
-                   comma-separated entry (e.g. \"ssa_t4*3,ann@fixed:7\")
+  --mix SPEC       weighted scenario mix, TARGET[@POLICY][!EXIT][*WEIGHT]
+                   per comma-separated entry (e.g.
+                   \"ssa_t4*3,ann@fixed:7,ssa_t4!margin:0.5:2*0.5\") —
+                   one run can drive exact and latency-bounded traffic
+                   at the same pool; EXIT takes the --exit grammar
   --remote ADDR    drive a live `serve --listen` server over real
                    sockets instead of an in-process coordinator; the
                    reported percentiles are then network-path round
@@ -235,7 +262,10 @@ pub const KNOWN_FLAGS: &[(&str, &[&str])] = &[
             "synthetic",
         ],
     ),
-    ("classify-remote", &["addr", "target", "n", "seed", "seed-policy", "metrics", "shutdown"]),
+    (
+        "classify-remote",
+        &["addr", "target", "n", "seed", "seed-policy", "exit", "metrics", "shutdown"],
+    ),
     (
         "serve-bench",
         &[
@@ -258,6 +288,10 @@ pub const KNOWN_FLAGS: &[(&str, &[&str])] = &[
     (
         "bench-native",
         &["budget", "warmup", "batch", "layers", "t", "seed", "out"],
+    ),
+    (
+        "sweep-anytime",
+        &["artifacts", "synthetic", "target", "n", "thresholds", "min-steps", "seed", "out"],
     ),
     ("simulate", &["n", "dk", "t", "sharing", "trace"]),
     ("experiments", &["artifacts", "cross-check", "backend"]),
@@ -384,7 +418,8 @@ mod tests {
              --workers 2 --ensemble 2 --max-batch 4 --max-delay-ms 2",
             "serve --listen 127.0.0.1:0 --synthetic --max-inflight 64",
             "classify-remote --addr 127.0.0.1:7878 --target ssa_t4 \
-             --seed-policy fixed:7 --n 2 --seed 9 --metrics --shutdown",
+             --seed-policy fixed:7 --exit margin:0.5:2 --n 2 --seed 9 \
+             --metrics --shutdown",
             "serve-bench --synthetic --workers 1,4 --concurrency 16 --duration 1 \
              --mix ssa_t4 --seed-policy perbatch --max-batch 2 --max-delay-ms 5 \
              --seed 7 --out b.json",
@@ -392,6 +427,9 @@ mod tests {
             "serve-bench --remote 127.0.0.1:7878 --concurrency 4 --duration 1",
             "bench-native --budget 0.5 --warmup 0.1 --batch 4 --layers 1 --t 4 \
              --seed 3 --out n.json",
+            "sweep-anytime --synthetic --target ssa_t4 --n 16 \
+             --thresholds 0.1,0.5 --min-steps 2 --seed 7 --out s.json",
+            "sweep-anytime --artifacts a",
             "simulate --n 16 --dk 16 --t 10 --sharing per-row --trace",
             "experiments table1 --artifacts a --cross-check 8 --backend native",
         ] {

@@ -118,6 +118,7 @@ mod tests {
             target: Target::ssa(10),
             image: vec![0.0; 4],
             seed_policy: SeedPolicy::PerBatch,
+            exit: crate::anytime::ExitPolicy::Full,
             submitted_at: Instant::now(),
             reply: tx,
         }

@@ -11,11 +11,15 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::util::stats::{LatencySummary, LogHistogram};
+use crate::util::stats::{LatencySummary, LogHistogram, StepsSummary};
 
 #[derive(Default)]
 struct TargetMetrics {
     latencies: LogHistogram,
+    /// Per-request SNN steps actually run (anytime telemetry): a flat
+    /// spike at the variant's `T` under `full`, a spread below it under
+    /// an early-exit policy.
+    steps: LogHistogram,
     batches: u64,
     requests: u64,
     fill_sum: f64,
@@ -46,6 +50,8 @@ pub struct TargetReport {
     pub errors: u64,
     pub mean_batch_fill: f64,
     pub latency: Option<LatencySummary>,
+    /// Steps-used distribution (`steps.mean` is the mean-steps gauge).
+    pub steps: Option<StepsSummary>,
     pub throughput_rps: f64,
 }
 
@@ -82,7 +88,14 @@ impl Metrics {
         *self.started.lock().unwrap() = Instant::now();
     }
 
-    pub fn record_batch(&self, target: &str, batch_len: usize, max_batch: usize, lat_us: &[f64]) {
+    pub fn record_batch(
+        &self,
+        target: &str,
+        batch_len: usize,
+        max_batch: usize,
+        lat_us: &[f64],
+        steps: &[f64],
+    ) {
         let mut m = self.by_target.lock().unwrap();
         let e = m.entry(target.to_string()).or_default();
         e.batches += 1;
@@ -90,6 +103,9 @@ impl Metrics {
         e.fill_sum += batch_len as f64 / max_batch as f64;
         for &l in lat_us {
             e.latencies.record(l);
+        }
+        for &s in steps {
+            e.steps.record(s);
         }
     }
 
@@ -133,6 +149,11 @@ impl Metrics {
                 } else {
                     Some(LatencySummary::from_histogram(&v.latencies))
                 },
+                steps: if v.steps.count() == 0 {
+                    None
+                } else {
+                    Some(StepsSummary::from_histogram(&v.steps))
+                },
                 throughput_rps: v.requests as f64 / elapsed.max(1e-9),
             })
             .collect();
@@ -173,6 +194,9 @@ impl Metrics {
             if let Some(l) = r.latency {
                 s.push_str(&format!("        latency {l}\n"));
             }
+            if let Some(st) = r.steps {
+                s.push_str(&format!("        steps   {st}\n"));
+            }
         }
         let workers = self.worker_report();
         if !workers.is_empty() {
@@ -204,9 +228,9 @@ mod tests {
     #[test]
     fn aggregates_per_target() {
         let m = Metrics::new();
-        m.record_batch("ssa_t10", 8, 8, &[100.0; 8]);
-        m.record_batch("ssa_t10", 4, 8, &[200.0; 4]);
-        m.record_batch("ann", 8, 8, &[50.0; 8]);
+        m.record_batch("ssa_t10", 8, 8, &[100.0; 8], &[10.0; 8]);
+        m.record_batch("ssa_t10", 4, 8, &[200.0; 4], &[4.0; 4]);
+        m.record_batch("ann", 8, 8, &[50.0; 8], &[1.0; 8]);
         m.record_error("ann");
         let rep = m.report();
         assert_eq!(rep.len(), 2);
@@ -214,16 +238,22 @@ mod tests {
         assert_eq!(ssa.requests, 12);
         assert_eq!(ssa.batches, 2);
         assert!((ssa.mean_batch_fill - 0.75).abs() < 1e-9);
+        let steps = ssa.steps.clone().expect("steps summary present");
+        assert_eq!(steps.count, 12);
+        assert!((steps.mean - 8.0).abs() < 1e-9, "mean-steps gauge: {}", steps.mean);
+        assert_eq!(steps.max, 10.0);
         let ann = rep.iter().find(|r| r.target == "ann").unwrap();
         assert_eq!(ann.errors, 1);
-        assert!(m.render().contains("ssa_t10"));
+        let rendered = m.render();
+        assert!(rendered.contains("ssa_t10"));
+        assert!(rendered.contains("steps"), "render surfaces the steps line");
     }
 
     #[test]
     fn latency_summary_shape_survives_histogram_backing() {
         let m = Metrics::new();
         for i in 0..10_000u64 {
-            m.record_batch("ssa_t10", 1, 8, &[(i % 1000) as f64 + 1.0]);
+            m.record_batch("ssa_t10", 1, 8, &[(i % 1000) as f64 + 1.0], &[4.0]);
         }
         let rep = m.report();
         let l = rep[0].latency.clone().expect("latency summary present");
@@ -258,7 +288,7 @@ mod tests {
     fn reset_window_zeroes_counters_but_keeps_workers_listed() {
         let m = Metrics::new();
         m.register_worker(0);
-        m.record_batch("ssa_t10", 4, 8, &[100.0; 4]);
+        m.record_batch("ssa_t10", 4, 8, &[100.0; 4], &[4.0; 4]);
         m.record_worker(0, 4, 2_000.0);
         m.reset_window();
         assert!(m.report().is_empty(), "target counters cleared");
@@ -266,7 +296,7 @@ mod tests {
         assert_eq!(w.len(), 1, "registered workers survive the reset");
         assert_eq!(w[0].batches, 0);
         assert_eq!(w[0].busy_us, 0.0);
-        m.record_batch("ssa_t10", 2, 8, &[50.0; 2]);
+        m.record_batch("ssa_t10", 2, 8, &[50.0; 2], &[4.0; 2]);
         assert_eq!(m.report()[0].requests, 2, "fresh window counts from zero");
     }
 }

@@ -10,6 +10,8 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
+use crate::anytime::ExitPolicy;
+
 /// Which model variant a request targets.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct Target {
@@ -116,6 +118,11 @@ pub struct ClassifyRequest {
     pub image: Vec<f32>,
     /// Seed selection for the stochastic forward pass.
     pub seed_policy: SeedPolicy,
+    /// Anytime early-exit policy ([`ExitPolicy::Full`] = today's exact
+    /// behavior).  Like [`ClassifyRequest::seed_policy`] this is part of
+    /// the router's batch-homogeneity key: a batch runs one step loop, so
+    /// mixing policies would serve tail requests under the head's policy.
+    pub exit: ExitPolicy,
     /// Submission instant — the latency clock starts here.
     pub submitted_at: Instant,
     /// Where the answer goes.  May be a per-request channel (in-process
@@ -142,6 +149,14 @@ pub struct ClassifyResponse {
     pub batch_size: usize,
     /// Seed(s) actually used.
     pub seed: u32,
+    /// SNN time steps this row actually ran.  Equals the variant's full
+    /// `T` under [`ExitPolicy::Full`]; `<= T` under an early-exit policy
+    /// (and `1` for the ANN, which has no temporal dimension).
+    pub steps_used: usize,
+    /// Top-1 minus top-2 margin of the returned logits — the same
+    /// statistic the margin exit rule thresholds, reported so callers can
+    /// calibrate thresholds from live traffic.  Always finite.
+    pub confidence: f32,
 }
 
 /// Errors surfaced to the caller.

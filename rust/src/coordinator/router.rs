@@ -19,6 +19,8 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
+use crate::anytime::ExitPolicy;
+
 use super::batcher::BatchPolicy;
 use super::request::{ClassifyRequest, SeedPolicy, Target};
 
@@ -35,20 +37,22 @@ pub fn variant_key(t: &Target) -> String {
 struct State {
     q: VecDeque<ClassifyRequest>,
     closed: bool,
-    /// (target, seed-policy) groups some worker is currently
+    /// (target, seed-policy, exit-policy) groups some worker is currently
     /// fill-waiting on; siblings skip these when anchoring a head.
     /// At most one entry per pool worker, so a linear scan is fine.
-    claimed: Vec<(Target, SeedPolicy)>,
+    claimed: Vec<(Target, SeedPolicy, ExitPolicy)>,
 }
 
 impl State {
-    fn is_claimed(&self, target: &Target, policy: SeedPolicy) -> bool {
-        self.claimed.iter().any(|(t, p)| t == target && *p == policy)
+    fn is_claimed(&self, target: &Target, policy: SeedPolicy, exit: ExitPolicy) -> bool {
+        self.claimed.iter().any(|(t, p, e)| t == target && *p == policy && *e == exit)
     }
 
-    fn unclaim(&mut self, target: &Target, policy: SeedPolicy) {
-        if let Some(pos) =
-            self.claimed.iter().position(|(t, p)| t == target && *p == policy)
+    fn unclaim(&mut self, target: &Target, policy: SeedPolicy, exit: ExitPolicy) {
+        if let Some(pos) = self
+            .claimed
+            .iter()
+            .position(|(t, p, e)| t == target && *p == policy && *e == exit)
         {
             self.claimed.swap_remove(pos);
         }
@@ -86,12 +90,15 @@ impl Router {
     }
 
     /// Next batch: `(variant_key, requests sharing the head request's
-    /// target AND seed policy)`, or `None` after close + drain.
+    /// target AND seed policy AND exit policy)`, or `None` after
+    /// close + drain.
     ///
-    /// A batch executes under one seed schedule, so grouping must honor
-    /// the seed policy too — otherwise a `Fixed(7)` request queued behind
-    /// a `PerBatch` head would silently run under a coordinator-assigned
-    /// seed (and report the wrong `seed` back to its caller).
+    /// A batch executes under one seed schedule and one step loop, so
+    /// grouping must honor both policies — otherwise a `Fixed(7)` request
+    /// queued behind a `PerBatch` head would silently run under a
+    /// coordinator-assigned seed, and an exact (`full`) request queued
+    /// behind an early-exit head could be cut short at the head's margin
+    /// threshold.
     pub fn next_batch(&self) -> Option<(String, Vec<ClassifyRequest>)> {
         let mut s = self.state.lock().unwrap();
         'find: loop {
@@ -100,8 +107,8 @@ impl Router {
                 let pick = s
                     .q
                     .iter()
-                    .find(|r| !s.is_claimed(&r.target, r.seed_policy))
-                    .map(|r| (r.target.clone(), r.seed_policy, r.submitted_at));
+                    .find(|r| !s.is_claimed(&r.target, r.seed_policy, r.exit))
+                    .map(|r| (r.target.clone(), r.seed_policy, r.exit, r.submitted_at));
                 if let Some(h) = pick {
                     break h;
                 }
@@ -112,12 +119,12 @@ impl Router {
                 // sibling: wait for a push, a close, or an unclaim
                 s = self.cv.wait(s).unwrap();
             };
-            let (target, policy, submitted_at) = head;
+            let (target, policy, exit, submitted_at) = head;
             let key = variant_key(&target);
             let deadline = submitted_at + self.policy.max_delay;
             // claim the group: siblings now skip it, so only this worker
             // can extract these requests until the claim is dropped below
-            s.claimed.push((target.clone(), policy));
+            s.claimed.push((target.clone(), policy, exit));
 
             loop {
                 // only "have we filled a batch yet?" matters, so stop
@@ -127,7 +134,9 @@ impl Router {
                 let matching = s
                     .q
                     .iter()
-                    .filter(|r| r.target == target && r.seed_policy == policy)
+                    .filter(|r| {
+                        r.target == target && r.seed_policy == policy && r.exit == exit
+                    })
                     .take(self.policy.max_batch)
                     .count();
                 if matching >= self.policy.max_batch || s.closed {
@@ -135,7 +144,7 @@ impl Router {
                 }
                 if matching == 0 {
                     // unreachable while we hold the claim — defensive
-                    s.unclaim(&target, policy);
+                    s.unclaim(&target, policy, exit);
                     continue 'find;
                 }
                 let now = Instant::now();
@@ -155,6 +164,7 @@ impl Router {
             while let Some(r) = s.q.pop_front() {
                 if r.target == target
                     && r.seed_policy == policy
+                    && r.exit == exit
                     && batch.len() < self.policy.max_batch
                 {
                     batch.push(r);
@@ -163,7 +173,7 @@ impl Router {
                 }
             }
             s.q = rest;
-            s.unclaim(&target, policy);
+            s.unclaim(&target, policy, exit);
             // leftovers of this group (beyond max_batch) are anchorable
             // again, and close-drain waiters must recheck
             self.cv.notify_all();
@@ -200,12 +210,22 @@ mod tests {
     }
 
     fn req_with_policy(id: u64, target: Target, seed_policy: SeedPolicy) -> ClassifyRequest {
+        req_with_exit(id, target, seed_policy, ExitPolicy::Full)
+    }
+
+    fn req_with_exit(
+        id: u64,
+        target: Target,
+        seed_policy: SeedPolicy,
+        exit: ExitPolicy,
+    ) -> ClassifyRequest {
         let (tx, _rx) = mpsc::channel();
         ClassifyRequest {
             id,
             target,
             image: vec![0.0; 4],
             seed_policy,
+            exit,
             submitted_at: Instant::now(),
             reply: tx,
         }
@@ -251,6 +271,25 @@ mod tests {
         r.push(req_with_policy(3, Target::ssa(10), SeedPolicy::PerBatch));
         r.push(req_with_policy(4, Target::ssa(10), SeedPolicy::Fixed(7)));
         r.push(req_with_policy(5, Target::ssa(10), SeedPolicy::Fixed(9)));
+        let (_, b1) = r.next_batch().unwrap();
+        assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        let (_, b2) = r.next_batch().unwrap();
+        assert_eq!(b2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 4]);
+        let (_, b3) = r.next_batch().unwrap();
+        assert_eq!(b3.iter().map(|r| r.id).collect::<Vec<_>>(), vec![5]);
+    }
+
+    #[test]
+    fn mixed_exit_policies_split_into_homogeneous_batches() {
+        let margin = ExitPolicy::Margin { threshold: 0.5, min_steps: 2 };
+        let r = Router::new(BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(1) });
+        r.push(req_with_exit(1, Target::ssa(10), SeedPolicy::PerBatch, ExitPolicy::Full));
+        r.push(req_with_exit(2, Target::ssa(10), SeedPolicy::PerBatch, margin));
+        r.push(req_with_exit(3, Target::ssa(10), SeedPolicy::PerBatch, ExitPolicy::Full));
+        r.push(req_with_exit(4, Target::ssa(10), SeedPolicy::PerBatch, margin));
+        r.push(req_with_exit(5, Target::ssa(10), SeedPolicy::PerBatch, ExitPolicy::Deadline {
+            budget: 3,
+        }));
         let (_, b1) = r.next_batch().unwrap();
         assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
         let (_, b2) = r.next_batch().unwrap();

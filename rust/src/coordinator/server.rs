@@ -15,6 +15,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::anytime::ExitPolicy;
 use crate::config::BackendKind;
 use crate::pool::{PoolConfig, WorkerPool};
 use crate::runtime::Manifest;
@@ -115,15 +116,29 @@ impl Coordinator {
         self.pool.workers()
     }
 
-    /// Submit one image; returns the response channel.
+    /// Submit one image under the exact (`full`) policy; returns the
+    /// response channel.
     pub fn submit(
         &self,
         target: Target,
         image: Vec<f32>,
         seed_policy: SeedPolicy,
     ) -> Result<mpsc::Receiver<ClassifyResponse>, ServeError> {
+        self.submit_anytime(target, image, seed_policy, ExitPolicy::Full)
+    }
+
+    /// Submit one image under an explicit anytime [`ExitPolicy`];
+    /// returns the response channel.  `ExitPolicy::Full` is exactly
+    /// [`Coordinator::submit`].
+    pub fn submit_anytime(
+        &self,
+        target: Target,
+        image: Vec<f32>,
+        seed_policy: SeedPolicy,
+        exit: ExitPolicy,
+    ) -> Result<mpsc::Receiver<ClassifyResponse>, ServeError> {
         let (tx, rx) = mpsc::channel();
-        self.submit_with_reply(target, image, seed_policy, tx)?;
+        self.submit_with_reply(target, image, seed_policy, exit, tx)?;
         Ok(rx)
     }
 
@@ -138,11 +153,19 @@ impl Coordinator {
         target: Target,
         image: Vec<f32>,
         seed_policy: SeedPolicy,
+        exit: ExitPolicy,
         reply: mpsc::Sender<ClassifyResponse>,
     ) -> Result<u64, ServeError> {
         let want = self.manifest.image_size * self.manifest.image_size;
         if image.len() != want {
             return Err(ServeError::BadImage { got: image.len(), want });
+        }
+        // averaging ensemble passes that exit at different steps has no
+        // well-defined semantics — refuse at admission, not in the worker
+        if matches!(seed_policy, SeedPolicy::Ensemble(_)) && !exit.is_full() {
+            return Err(ServeError::BadRequest(
+                "ensemble seed policies cannot combine with early-exit policies".into(),
+            ));
         }
         let key = variant_key(&target);
         if self.manifest.variant(&key).is_err() {
@@ -154,6 +177,7 @@ impl Coordinator {
             target,
             image,
             seed_policy,
+            exit,
             submitted_at: Instant::now(),
             reply,
         };
@@ -163,14 +187,27 @@ impl Coordinator {
         Ok(id)
     }
 
-    /// Submit and block for the answer.
+    /// Submit and block for the answer (exact `full` policy).
     pub fn classify(
         &self,
         target: Target,
         image: Vec<f32>,
         seed_policy: SeedPolicy,
     ) -> Result<ClassifyResponse> {
-        let rx = self.submit(target, image, seed_policy).map_err(anyhow::Error::from)?;
+        self.classify_anytime(target, image, seed_policy, ExitPolicy::Full)
+    }
+
+    /// Submit under an anytime policy and block for the answer.
+    pub fn classify_anytime(
+        &self,
+        target: Target,
+        image: Vec<f32>,
+        seed_policy: SeedPolicy,
+        exit: ExitPolicy,
+    ) -> Result<ClassifyResponse> {
+        let rx = self
+            .submit_anytime(target, image, seed_policy, exit)
+            .map_err(anyhow::Error::from)?;
         rx.recv().context("worker pool dropped the request")
     }
 

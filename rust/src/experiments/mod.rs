@@ -5,6 +5,7 @@
 //! and the bench binaries share one implementation.
 
 pub mod figures;
+pub mod sweep_anytime;
 pub mod table1;
 pub mod table2;
 pub mod table3;

@@ -1,0 +1,263 @@
+//! E8 — anytime-inference sweep: accuracy vs mean steps vs margin
+//! threshold.
+//!
+//! Rate-decoded SNN logits are a running mean over time steps, so a
+//! confident input can stop integrating early.  This driver measures the
+//! trade the `margin:TH` exit policy buys: for each threshold it
+//! re-evaluates one variant over the same images *and the same per-image
+//! seed streams* (`image_seed(seed, i)`), so every curve point differs
+//! from the full-`T` baseline only by the exit rule — never by sampling
+//! noise.  The headline artifact is a JSON curve
+//! (`accuracy` / `mean_steps` / `early_exit_rate` per threshold) written
+//! next to the BENCH files by CI.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::anytime::ExitPolicy;
+use crate::attention::model::image_seed;
+use crate::config::BackendKind;
+use crate::runtime::{create_backend, Dataset, Manifest};
+use crate::util::json::Json;
+
+/// One measured threshold on the accuracy-vs-steps curve.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// The margin threshold this point ran under.
+    pub threshold: f64,
+    /// Canonical policy spelling (`margin:0.5:2`), parseable by
+    /// `ExitPolicy::parse` — copy it into a `--exit` flag or a mix spec.
+    pub policy: String,
+    /// Top-1 accuracy over the evaluated images, in [0,1].
+    pub accuracy: f64,
+    /// Mean SNN steps actually run per image (`<= T`).
+    pub mean_steps: f64,
+    /// Fraction of images that exited before step `T`.
+    pub early_exit_rate: f64,
+}
+
+/// The full sweep result: a full-`T` baseline plus one point per
+/// threshold, all over identical images and seed streams.
+#[derive(Clone, Debug)]
+pub struct AnytimeSweep {
+    pub variant: String,
+    /// The variant's full step count `T` (the baseline's mean steps).
+    pub time_steps: usize,
+    /// Images evaluated per point.
+    pub n: usize,
+    /// `min_steps` floor shared by every margin policy in the sweep.
+    pub min_steps: usize,
+    /// Master seed; image `i` runs stream `image_seed(seed, i)`.
+    pub seed: u32,
+    /// Exact (`ExitPolicy::Full`) accuracy — the quality bar.
+    pub full_accuracy: f64,
+    pub points: Vec<SweepPoint>,
+}
+
+impl AnytimeSweep {
+    pub fn to_json(&self) -> Json {
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("threshold", Json::num(p.threshold)),
+                    ("policy", Json::str(&p.policy)),
+                    ("accuracy", Json::num(p.accuracy)),
+                    ("mean_steps", Json::num(p.mean_steps)),
+                    ("early_exit_rate", Json::num(p.early_exit_rate)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("experiment", Json::str("sweep-anytime")),
+            ("variant", Json::str(&self.variant)),
+            ("time_steps", Json::from(self.time_steps)),
+            ("n", Json::from(self.n)),
+            ("min_steps", Json::from(self.min_steps)),
+            ("seed", Json::from(self.seed as usize)),
+            (
+                "full",
+                Json::obj(vec![
+                    ("accuracy", Json::num(self.full_accuracy)),
+                    ("mean_steps", Json::num(self.time_steps as f64)),
+                ]),
+            ),
+            ("points", Json::Arr(points)),
+        ])
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing anytime sweep {path:?}"))
+    }
+
+    /// Human-readable curve for the CLI.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "E8 — anytime sweep: {} (T={}), {} images, margin min_steps={}, seed {}\n",
+            self.variant, self.time_steps, self.n, self.min_steps, self.seed
+        );
+        out.push_str("| policy               | accuracy (%) | mean steps | early exit (%) |\n");
+        out.push_str("|----------------------|--------------|------------|----------------|\n");
+        out.push_str(&format!(
+            "| {:<20} | {:>12.2} | {:>10.2} | {:>14.1} |\n",
+            "full (exact)",
+            self.full_accuracy * 100.0,
+            self.time_steps as f64,
+            0.0
+        ));
+        for p in &self.points {
+            out.push_str(&format!(
+                "| {:<20} | {:>12.2} | {:>10.2} | {:>14.1} |\n",
+                p.policy,
+                p.accuracy * 100.0,
+                p.mean_steps,
+                p.early_exit_rate * 100.0
+            ));
+        }
+        out
+    }
+}
+
+/// Run the sweep through the native backend (the only engine with a
+/// policy-aware step loop).  `n` is clamped to the test split size;
+/// thresholds are evaluated in the order given.
+pub fn run(
+    artifacts: &Path,
+    variant: &str,
+    n: usize,
+    thresholds: &[f32],
+    min_steps: usize,
+    seed: u32,
+) -> Result<AnytimeSweep> {
+    anyhow::ensure!(!thresholds.is_empty(), "need at least one threshold to sweep");
+    anyhow::ensure!(
+        thresholds.iter().all(|t| t.is_finite() && *t >= 0.0),
+        "thresholds must be finite and non-negative"
+    );
+    let manifest = Manifest::load(artifacts)?;
+    let v = manifest.variant(variant)?;
+    anyhow::ensure!(
+        v.time_steps > 1,
+        "variant {variant} runs T={} — early exit needs a multi-step SNN",
+        v.time_steps
+    );
+    let ds = Dataset::load(&manifest.dataset_test)?;
+    let engine = create_backend(BackendKind::Native)?;
+    let model = engine.load(&manifest, v)?;
+    let n = n.min(ds.len());
+    anyhow::ensure!(n > 0, "test split has no images");
+
+    // (accuracy, mean steps, early-exit rate) of one policy over the
+    // first n images, chunked to the variant batch; row i always runs
+    // stream image_seed(seed, i) regardless of the policy or chunking.
+    let eval = |policy: &ExitPolicy| -> Result<(f64, f64, f64)> {
+        let mut correct = 0usize;
+        let mut steps_total = 0usize;
+        let mut early = 0usize;
+        let mut seen = 0usize;
+        while seen < n {
+            let rows = v.batch.min(n - seen);
+            let seeds: Vec<u64> = (seen..seen + rows).map(|i| image_seed(seed, i)).collect();
+            let outs = model.infer_rows_anytime(ds.batch(seen, rows), &seeds, policy)?;
+            anyhow::ensure!(
+                outs.len() == rows,
+                "backend returned {} outcomes for {rows} rows",
+                outs.len()
+            );
+            for (i, out) in outs.iter().enumerate() {
+                if crate::util::argmax(&out.logits).unwrap_or(0) as u32 == ds.labels[seen + i] {
+                    correct += 1;
+                }
+                steps_total += out.steps_used;
+                if out.steps_used < v.time_steps {
+                    early += 1;
+                }
+            }
+            seen += rows;
+        }
+        let n = n as f64;
+        Ok((correct as f64 / n, steps_total as f64 / n, early as f64 / n))
+    };
+
+    let (full_accuracy, full_steps, full_early) = eval(&ExitPolicy::Full)?;
+    anyhow::ensure!(
+        full_early == 0.0 && (full_steps - v.time_steps as f64).abs() < 1e-12,
+        "full policy must run exactly T={} steps (got mean {full_steps})",
+        v.time_steps
+    );
+
+    let mut points = Vec::with_capacity(thresholds.len());
+    for &threshold in thresholds {
+        let policy = ExitPolicy::Margin { threshold, min_steps };
+        let (accuracy, mean_steps, early_exit_rate) = eval(&policy)?;
+        points.push(SweepPoint {
+            threshold: threshold as f64,
+            policy: policy.to_string(),
+            accuracy,
+            mean_steps,
+            early_exit_rate,
+        });
+    }
+
+    Ok(AnytimeSweep {
+        variant: variant.to_string(),
+        time_steps: v.time_steps,
+        n,
+        min_steps,
+        seed,
+        full_accuracy,
+        points,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loadgen::{write_artifacts, SyntheticSpec};
+
+    #[test]
+    fn sweep_brackets_the_exact_baseline_on_synthetic_artifacts() {
+        let dir = std::env::temp_dir()
+            .join(format!("ssa-sweep-anytime-ut-{}", std::process::id()));
+        write_artifacts(&dir, &SyntheticSpec::default()).expect("write artifacts");
+
+        // threshold 0 exits at the first checked step (margins are
+        // non-negative); a huge threshold never fires before T
+        let sweep = run(&dir, "ssa_t4", 24, &[0.0, 1e30], 1, 7).expect("sweep runs");
+        assert_eq!(sweep.time_steps, 4);
+        assert_eq!(sweep.n, 24);
+        assert_eq!(sweep.points.len(), 2);
+
+        let greedy = &sweep.points[0];
+        assert!((greedy.mean_steps - 1.0).abs() < 1e-12, "threshold 0 exits at min_steps");
+        assert!((greedy.early_exit_rate - 1.0).abs() < 1e-12);
+
+        let never = &sweep.points[1];
+        assert!((never.mean_steps - 4.0).abs() < 1e-12, "huge threshold runs full T");
+        assert!(never.early_exit_rate == 0.0);
+        assert!(
+            (never.accuracy - sweep.full_accuracy).abs() < 1e-12,
+            "a never-firing margin matches the exact baseline"
+        );
+
+        let j = Json::parse(&sweep.to_json().to_string()).expect("sweep JSON parses");
+        assert_eq!(j.str_field("experiment").unwrap(), "sweep-anytime");
+        assert_eq!(j.get("points").and_then(Json::as_arr).unwrap().len(), 2);
+        assert!(j.get("full").unwrap().get("accuracy").and_then(Json::as_f64).is_some());
+        assert!(sweep.render().contains("full (exact)"));
+        assert!(sweep.render().contains("margin:0 "), "min_steps=1 elides the suffix");
+    }
+
+    #[test]
+    fn sweep_rejects_single_step_and_empty_inputs() {
+        let dir = std::env::temp_dir()
+            .join(format!("ssa-sweep-anytime-rej-{}", std::process::id()));
+        write_artifacts(&dir, &SyntheticSpec::default()).expect("write artifacts");
+        assert!(run(&dir, "ssa_t4", 8, &[], 1, 7).is_err(), "no thresholds");
+        assert!(run(&dir, "ssa_t4", 8, &[f32::NAN], 1, 7).is_err(), "NaN threshold");
+        assert!(run(&dir, "ann", 8, &[0.5], 1, 7).is_err(), "ANN has no step loop");
+    }
+}

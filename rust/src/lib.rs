@@ -19,6 +19,7 @@
 //! See `DESIGN.md` for the system inventory and per-experiment index,
 //! and the top-level `README.md` for the CLI quickstart.
 
+pub mod anytime;
 pub mod attention;
 pub mod bench;
 pub mod bench_native;

@@ -26,6 +26,7 @@ pub use synthetic::{write_artifacts, SyntheticSpec};
 
 use anyhow::{bail, Result};
 
+use crate::anytime::ExitPolicy;
 use crate::coordinator::{SeedPolicy, Target};
 
 /// How requests are injected.
@@ -54,10 +55,13 @@ impl ArrivalMode {
 pub struct MixEntry {
     pub target: Target,
     pub seed_policy: SeedPolicy,
+    /// Anytime exit policy for this entry's requests
+    /// ([`ExitPolicy::Full`] when the spec carries no `!EXIT` suffix).
+    pub exit: ExitPolicy,
     pub weight: f64,
 }
 
-/// A weighted request mix over targets / seed policies / time steps.
+/// A weighted request mix over targets / seed policies / exit policies.
 #[derive(Clone, Debug)]
 pub struct Scenario {
     pub name: String,
@@ -65,16 +69,26 @@ pub struct Scenario {
 }
 
 impl Scenario {
-    /// Single-target scenario.
+    /// Single-target scenario (exact `full` exit policy).
     pub fn uniform(target: Target, seed_policy: SeedPolicy) -> Self {
         let name = format!("{}_t{}", target.arch, target.time_steps);
-        Self { name, entries: vec![MixEntry { target, seed_policy, weight: 1.0 }] }
+        Self {
+            name,
+            entries: vec![MixEntry {
+                target,
+                seed_policy,
+                exit: ExitPolicy::Full,
+                weight: 1.0,
+            }],
+        }
     }
 
-    /// Parse a comma-separated mix spec, `TARGET[@POLICY][*WEIGHT]` per
-    /// entry — e.g. `"ssa_t4*3,ann@fixed:7,spikformer_t4@ensemble:2*0.5"`.
+    /// Parse a comma-separated mix spec, `TARGET[@POLICY][!EXIT][*WEIGHT]`
+    /// per entry — e.g. `"ssa_t4*3,ann@fixed:7,ssa_t4!margin:0.5:2*0.5"`.
     /// Entries without `@POLICY` use `default_policy`; entries without
-    /// `*WEIGHT` weigh 1.
+    /// `!EXIT` run exact (`full`); entries without `*WEIGHT` weigh 1.
+    /// One run can therefore drive heterogeneous exact + latency-bounded
+    /// traffic at the same pool.
     pub fn parse(spec: &str, default_policy: SeedPolicy) -> Result<Self> {
         let mut entries = Vec::new();
         for item in spec.split(',') {
@@ -93,13 +107,28 @@ impl Scenario {
             if !(weight.is_finite() && weight > 0.0) {
                 bail!("mix weight must be positive and finite, got {weight} in {item:?}");
             }
+            let (head, exit) = match head.split_once('!') {
+                Some((t, e)) => (
+                    t,
+                    ExitPolicy::parse(e)
+                        .map_err(|e| anyhow::anyhow!("bad exit policy in {item:?}: {e:#}"))?,
+                ),
+                None => (head, ExitPolicy::Full),
+            };
             let (target_s, policy) = match head.split_once('@') {
                 Some((t, p)) => (t, parse_seed_policy(p)?),
                 None => (head, default_policy),
             };
+            if matches!(policy, SeedPolicy::Ensemble(_)) && !exit.is_full() {
+                bail!(
+                    "mix entry {item:?}: ensemble seed policies cannot combine with \
+                     early-exit policies"
+                );
+            }
             entries.push(MixEntry {
                 target: Target::parse(target_s)?,
                 seed_policy: policy,
+                exit,
                 weight,
             });
         }
@@ -146,6 +175,32 @@ mod tests {
         assert_eq!(s.entries[1].seed_policy, SeedPolicy::Fixed(7));
         assert_eq!(s.entries[2].seed_policy, SeedPolicy::Ensemble(2));
         assert!((s.entries[2].weight - 0.5).abs() < 1e-12);
+        for e in &s.entries {
+            assert_eq!(e.exit, ExitPolicy::Full, "no !EXIT suffix means exact");
+        }
+    }
+
+    #[test]
+    fn parses_exit_policy_suffixes() {
+        let s = Scenario::parse(
+            "ssa_t4*3, ssa_t4!margin:0.5:2*0.5, ann@fixed:7!deadline:1, \
+             ssa_t4@fixed:9!margin:0.25+deadline:3",
+            SeedPolicy::PerBatch,
+        )
+        .unwrap();
+        assert_eq!(s.entries.len(), 4);
+        assert_eq!(s.entries[0].exit, ExitPolicy::Full);
+        assert_eq!(
+            s.entries[1].exit,
+            ExitPolicy::Margin { threshold: 0.5, min_steps: 2 }
+        );
+        assert!((s.entries[1].weight - 0.5).abs() < 1e-12, "!EXIT composes with *WEIGHT");
+        assert_eq!(s.entries[2].seed_policy, SeedPolicy::Fixed(7));
+        assert_eq!(s.entries[2].exit, ExitPolicy::Deadline { budget: 1 });
+        assert_eq!(
+            s.entries[3].exit,
+            ExitPolicy::MarginOrDeadline { threshold: 0.25, min_steps: 1, budget: 3 }
+        );
     }
 
     #[test]
@@ -155,6 +210,12 @@ mod tests {
         assert!(Scenario::parse("ssa_t4*nan", SeedPolicy::PerBatch).is_err());
         assert!(Scenario::parse("bogus", SeedPolicy::PerBatch).is_err());
         assert!(Scenario::parse("ssa_t4@never", SeedPolicy::PerBatch).is_err());
+        assert!(Scenario::parse("ssa_t4!sprint:9", SeedPolicy::PerBatch).is_err());
+        assert!(Scenario::parse("ssa_t4!margin", SeedPolicy::PerBatch).is_err());
+        assert!(
+            Scenario::parse("ssa_t4@ensemble:2!margin:0.5", SeedPolicy::PerBatch).is_err(),
+            "ensemble + early exit has no averaging semantics"
+        );
     }
 
     #[test]

@@ -11,7 +11,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::{TargetReport, WorkerReport};
 use crate::util::json::Json;
-use crate::util::stats::LatencySummary;
+use crate::util::stats::{LatencySummary, StepsSummary};
 
 use super::runner::RunStats;
 
@@ -20,6 +20,9 @@ pub struct BenchRun {
     pub workers: usize,
     pub stats: RunStats,
     pub latency: Option<LatencySummary>,
+    /// Per-request SNN steps actually run (`None` when nothing answered).
+    /// Mean below the target's `T` is the anytime win made visible.
+    pub steps: Option<StepsSummary>,
     pub targets: Vec<TargetReport>,
     pub worker_util: Vec<WorkerReport>,
 }
@@ -36,7 +39,12 @@ impl BenchRun {
         } else {
             Some(LatencySummary::from_histogram(&stats.latency))
         };
-        Self { workers, stats, latency, targets, worker_util }
+        let steps = if stats.steps.count() == 0 {
+            None
+        } else {
+            Some(StepsSummary::from_histogram(&stats.steps))
+        };
+        Self { workers, stats, latency, steps, targets, worker_util }
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -55,6 +63,10 @@ impl BenchRun {
                 ("max_us", Json::num(l.max_us)),
             ]),
         };
+        let steps = match &self.steps {
+            None => Json::Null,
+            Some(st) => steps_json(st),
+        };
         let targets: Vec<Json> = self
             .targets
             .iter()
@@ -66,6 +78,10 @@ impl BenchRun {
                     ("errors", Json::num(t.errors as f64)),
                     ("mean_batch_fill", Json::num(t.mean_batch_fill)),
                     ("throughput_rps", Json::num(t.throughput_rps)),
+                    (
+                        "steps_used",
+                        t.steps.as_ref().map(steps_json).unwrap_or(Json::Null),
+                    ),
                 ])
             })
             .collect();
@@ -90,10 +106,22 @@ impl BenchRun {
             ("wall_s", Json::num(self.stats.wall.as_secs_f64())),
             ("throughput_rps", Json::num(self.throughput_rps())),
             ("latency_us", latency),
+            ("steps_used", steps),
             ("targets", Json::Arr(targets)),
             ("worker_util", Json::Arr(workers)),
         ])
     }
+}
+
+/// Serialize one steps-used summary ({count, mean, p50, p95, max}).
+fn steps_json(st: &StepsSummary) -> Json {
+    Json::obj(vec![
+        ("count", Json::from(st.count)),
+        ("mean", Json::num(st.mean)),
+        ("p50", Json::num(st.p50)),
+        ("p95", Json::num(st.p95)),
+        ("max", Json::num(st.max)),
+    ])
 }
 
 /// The full serve-bench result: one run per requested worker count (or
@@ -168,6 +196,9 @@ impl BenchReport {
                     l.p50_us, l.p95_us, l.p99_us
                 ));
             }
+            if let Some(st) = &r.steps {
+                s.push_str(&format!("  steps mean={:.2} p95={:.0}", st.mean, st.p95));
+            }
             s.push('\n');
         }
         if let Some(x) = self.speedup() {
@@ -189,8 +220,10 @@ mod tests {
 
     fn stats(ok: u64, wall_ms: u64) -> RunStats {
         let mut latency = LogHistogram::new();
+        let mut steps = LogHistogram::new();
         for i in 0..ok {
             latency.record(100.0 + i as f64);
+            steps.record(4.0);
         }
         RunStats {
             offered: ok,
@@ -198,6 +231,7 @@ mod tests {
             errors: 0,
             wall: Duration::from_millis(wall_ms),
             latency,
+            steps,
         }
     }
 
@@ -235,7 +269,12 @@ mod tests {
         assert_eq!(runs[1].usize_field("workers").unwrap(), 4);
         assert!(runs[0].get("throughput_rps").and_then(Json::as_f64).unwrap() > 0.0);
         assert!(runs[0].get("latency_us").unwrap().get("p95_us").is_some());
+        let steps = runs[0].get("steps_used").unwrap();
+        assert_eq!(steps.usize_field("count").unwrap(), 100);
+        assert!(steps.get("mean").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(steps.get("p95").is_some());
         assert!(parsed.get("speedup_last_vs_first").and_then(Json::as_f64).is_some());
         assert!(r.render().contains("speedup"));
+        assert!(r.render().contains("steps mean="));
     }
 }

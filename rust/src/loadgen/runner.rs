@@ -15,6 +15,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::anytime::ExitPolicy;
 use crate::coordinator::{ClassifyResponse, Coordinator, SeedPolicy, Target};
 use crate::net::NetClient;
 use crate::runtime::Dataset;
@@ -56,6 +57,7 @@ pub trait LoadTarget: Sync {
         target: Target,
         image: Vec<f32>,
         seed_policy: SeedPolicy,
+        exit: ExitPolicy,
     ) -> Result<PendingResponse>;
 
     /// Submit and block — the closed-loop primitive.
@@ -64,8 +66,9 @@ pub trait LoadTarget: Sync {
         target: Target,
         image: Vec<f32>,
         seed_policy: SeedPolicy,
+        exit: ExitPolicy,
     ) -> Result<ClassifyResponse> {
-        self.submit_load(target, image, seed_policy)?
+        self.submit_load(target, image, seed_policy, exit)?
             .wait()
             .context("request dropped before a reply arrived")
     }
@@ -86,9 +89,11 @@ impl LoadTarget for Coordinator {
         target: Target,
         image: Vec<f32>,
         seed_policy: SeedPolicy,
+        exit: ExitPolicy,
     ) -> Result<PendingResponse> {
         Ok(PendingResponse::Local(
-            self.submit(target, image, seed_policy).map_err(anyhow::Error::from)?,
+            self.submit_anytime(target, image, seed_policy, exit)
+                .map_err(anyhow::Error::from)?,
         ))
     }
 
@@ -110,8 +115,9 @@ impl LoadTarget for NetClient {
         target: Target,
         image: Vec<f32>,
         seed_policy: SeedPolicy,
+        exit: ExitPolicy,
     ) -> Result<PendingResponse> {
-        Ok(PendingResponse::Remote(self.submit(target, &image, seed_policy)?))
+        Ok(PendingResponse::Remote(self.submit_anytime(target, &image, seed_policy, exit)?))
     }
 }
 
@@ -175,6 +181,10 @@ pub struct RunStats {
     pub wall: Duration,
     /// End-to-end (submit → reply) latency, as reported in responses.
     pub latency: LogHistogram,
+    /// SNN time steps actually run per answered request (`steps_used`
+    /// from the responses — equals the target's `T` under exact `full`
+    /// traffic, less under early-exit mixes).
+    pub steps: LogHistogram,
 }
 
 impl RunStats {
@@ -187,6 +197,7 @@ impl RunStats {
         self.ok += other.ok;
         self.errors += other.errors;
         self.latency.merge(&other.latency);
+        self.steps.merge(&other.steps);
     }
 }
 
@@ -235,10 +246,12 @@ fn run_closed<T: LoadTarget + ?Sized>(
                             e.target.clone(),
                             images.image(idx).to_vec(),
                             e.seed_policy,
+                            e.exit,
                         ) {
                             Ok(resp) => {
                                 st.ok += 1;
                                 st.latency.record(resp.latency_us);
+                                st.steps.record(resp.steps_used as f64);
                             }
                             Err(_) => st.errors += 1,
                         }
@@ -276,16 +289,18 @@ fn run_open<T: LoadTarget + ?Sized>(
             let mut ok = 0u64;
             let mut errors = 0u64;
             let mut hist = LogHistogram::new();
+            let mut steps = LogHistogram::new();
             while let Ok(pending) = rx.recv() {
                 match pending.wait() {
                     Some(resp) => {
                         ok += 1;
                         hist.record(resp.latency_us);
+                        steps.record(resp.steps_used as f64);
                     }
                     None => errors += 1, // dropped or refused reply
                 }
             }
-            (ok, errors, hist)
+            (ok, errors, hist, steps)
         });
 
         loop {
@@ -302,8 +317,12 @@ fn run_open<T: LoadTarget + ?Sized>(
             let e = &spec.scenario.entries[pick.pick(&mut rng)];
             let idx = rng.next_below(images.len() as u64) as usize;
             stats.offered += 1;
-            match api.submit_load(e.target.clone(), images.image(idx).to_vec(), e.seed_policy)
-            {
+            match api.submit_load(
+                e.target.clone(),
+                images.image(idx).to_vec(),
+                e.seed_policy,
+                e.exit,
+            ) {
                 Ok(pending) => {
                     let _ = tx.send(pending);
                 }
@@ -311,10 +330,11 @@ fn run_open<T: LoadTarget + ?Sized>(
             }
         }
         drop(tx); // pacer done; collector drains the in-flight tail
-        let (ok, errors, hist) = collector.join().expect("collector panicked");
+        let (ok, errors, hist, steps) = collector.join().expect("collector panicked");
         stats.ok = ok;
         stats.errors += errors;
         stats.latency = hist;
+        stats.steps = steps;
     });
     stats.wall = t0.elapsed();
     Ok(stats)

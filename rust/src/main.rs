@@ -6,11 +6,12 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use ssa_repro::anytime::ExitPolicy;
 use ssa_repro::cli::{check_known_flags, Args, USAGE};
 use ssa_repro::config::{AttnConfig, BackendKind, PrngSharing};
 use ssa_repro::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, SeedPolicy, Target};
 use ssa_repro::coordinator::router::variant_key;
-use ssa_repro::experiments::{figures, headline, table1, table2, table3};
+use ssa_repro::experiments::{figures, headline, sweep_anytime, table1, table2, table3};
 use ssa_repro::hw::{simulate, SpikeStreams};
 use ssa_repro::loadgen::{
     self, ArrivalMode, BenchReport, BenchRun, ImageSource, LoadSpec, LoadTarget, Scenario,
@@ -42,6 +43,7 @@ fn run(args: &Args) -> Result<()> {
         Some("serve-bench") => serve_bench(args),
         Some("classify-remote") => classify_remote(args),
         Some("bench-native") => bench_native_cmd(args),
+        Some("sweep-anytime") => sweep_anytime_cmd(args),
         Some("simulate") => simulate_cmd(args),
         Some("experiments") => experiments(args),
         _ => {
@@ -180,6 +182,10 @@ fn classify_remote(args: &Args) -> Result<()> {
     let addr = args.opt("addr").context("classify-remote requires --addr HOST:PORT")?;
     let n: usize = args.opt_parse("n", 1)?;
     let seed_policy = loadgen::parse_seed_policy(&args.opt_or("seed-policy", "perbatch"))?;
+    let exit = match args.opt("exit") {
+        None => ExitPolicy::Full,
+        Some(s) => ExitPolicy::parse(s)?,
+    };
     let client = NetClient::connect(addr)?;
     let info = client.ping()?;
     println!(
@@ -199,10 +205,10 @@ fn classify_remote(args: &Args) -> Result<()> {
     let images =
         ImageSource::synthetic(info.image_size, n.max(1), args.opt_parse("seed", 0xC1A5u64)?);
     for i in 0..n {
-        let resp = client.classify(target.clone(), images.image(i), seed_policy)?;
+        let resp = client.classify_anytime(target.clone(), images.image(i), seed_policy, exit)?;
         println!(
-            "[{i}] {target_s} -> class {} (seed {}, batch {}, rtt {:.0} us)",
-            resp.class, resp.seed, resp.batch_size, resp.latency_us
+            "[{i}] {target_s} -> class {} (seed {}, batch {}, steps {}, rtt {:.0} us)",
+            resp.class, resp.seed, resp.batch_size, resp.steps_used, resp.latency_us
         );
     }
     if args.flag("metrics") {
@@ -387,6 +393,40 @@ fn bench_native_cmd(args: &Args) -> Result<()> {
     print!("{}", report.render());
     let out = PathBuf::from(args.opt_or("out", "BENCH_native.json"));
     report.write(&out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// The `sweep-anytime` subcommand: accuracy vs mean steps vs margin
+/// threshold for one variant through the native backend
+/// -> `SWEEP_anytime.json` (see experiments::sweep_anytime).
+fn sweep_anytime_cmd(args: &Args) -> Result<()> {
+    let synthetic = args.flag("synthetic");
+    let dir = if synthetic {
+        synthesize_artifacts("sweep-anytime")?
+    } else {
+        artifacts_dir(args)
+    };
+    // the synthetic manifest carries ssa_t4 (not ssa_t10)
+    let default_target = if synthetic { "ssa_t4" } else { "ssa_t10" };
+    let target = args.opt_or("target", default_target);
+    let n: usize = args.opt_parse("n", 64)?;
+    let min_steps: usize = args.opt_parse("min-steps", 1)?;
+    let seed: u32 = args.opt_parse("seed", 0xA11Eu32)?;
+    let thresholds_s = args.opt_or("thresholds", "0.05,0.1,0.2,0.5,1.0");
+    let thresholds: Vec<f32> = thresholds_s
+        .split(',')
+        .map(|t| {
+            t.trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("invalid --thresholds {thresholds_s:?}: {e}"))
+        })
+        .collect::<Result<_>>()?;
+
+    let sweep = sweep_anytime::run(&dir, &target, n, &thresholds, min_steps, seed)?;
+    print!("{}", sweep.render());
+    let out = PathBuf::from(args.opt_or("out", "SWEEP_anytime.json"));
+    sweep.write(&out)?;
     println!("wrote {}", out.display());
     Ok(())
 }

@@ -23,6 +23,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::anytime::ExitPolicy;
 use crate::coordinator::{ClassifyResponse, SeedPolicy, ServeError, Target};
 use crate::util::json::Json;
 
@@ -73,6 +74,8 @@ impl PendingReply {
                 latency_us: rtt_us,
                 batch_size: r.batch_size,
                 seed: r.seed,
+                steps_used: r.steps_used,
+                confidence: r.confidence,
             }),
             Err(e) => Err(anyhow::Error::from(e)),
         }
@@ -197,16 +200,37 @@ impl NetClient {
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Submit one classify request without waiting for the answer.
+    /// Submit one classify request (exact `full` policy) without waiting
+    /// for the answer.
     pub fn submit(
         &self,
         target: Target,
         image: &[f32],
         seed_policy: SeedPolicy,
     ) -> Result<PendingReply> {
+        self.submit_anytime(target, image, seed_policy, ExitPolicy::Full)
+    }
+
+    /// Submit one classify request under an anytime [`ExitPolicy`]
+    /// without waiting for the answer.  `Full` requests serialize without
+    /// the wire `exit` field, so they stay compatible with servers
+    /// predating it.
+    pub fn submit_anytime(
+        &self,
+        target: Target,
+        image: &[f32],
+        seed_policy: SeedPolicy,
+        exit: ExitPolicy,
+    ) -> Result<PendingReply> {
         let id = self.fresh_id();
         let sent_at = Instant::now();
-        let rx = self.send(&Request::Classify { id, target, seed_policy, image: image.to_vec() })?;
+        let rx = self.send(&Request::Classify {
+            id,
+            target,
+            seed_policy,
+            exit,
+            image: image.to_vec(),
+        })?;
         Ok(PendingReply { id, rx, sent_at })
     }
 
@@ -218,6 +242,18 @@ impl NetClient {
         seed_policy: SeedPolicy,
     ) -> Result<ClassifyResponse> {
         self.submit(target, image, seed_policy)?.wait()
+    }
+
+    /// Submit under an anytime policy and block — the remote mirror of
+    /// `Coordinator::classify_anytime`.
+    pub fn classify_anytime(
+        &self,
+        target: Target,
+        image: &[f32],
+        seed_policy: SeedPolicy,
+        exit: ExitPolicy,
+    ) -> Result<ClassifyResponse> {
+        self.submit_anytime(target, image, seed_policy, exit)?.wait()
     }
 
     /// Fetch the server's facts (backend, workers, geometry, targets).

@@ -18,6 +18,7 @@
 
 use anyhow::Result;
 
+use crate::anytime::ExitPolicy;
 use crate::coordinator::{ClassifyResponse, SeedPolicy, ServeError, Target};
 use crate::coordinator::router::variant_key;
 use crate::util::json::Json;
@@ -33,6 +34,12 @@ pub enum Request {
         target: Target,
         /// Wire form `perbatch` / `fixed:SEED` / `ensemble:K`.
         seed_policy: SeedPolicy,
+        /// Anytime exit policy, wire form `full` / `margin:TH[:MIN]` /
+        /// `deadline:B` / `margin:TH:MIN+deadline:B`.  The wire field is
+        /// optional both ways: the client omits it for `full` (old
+        /// servers keep working) and the server defaults an absent field
+        /// to `full` (old clients keep today's exact behavior).
+        exit: ExitPolicy,
         /// Row-major `[S, S]` pixels in [0,1].
         image: Vec<f32>,
     },
@@ -67,13 +74,24 @@ impl Request {
     /// Serialize to the wire JSON object.
     pub fn to_json(&self) -> Json {
         match self {
-            Request::Classify { id, target, seed_policy, image } => Json::obj(vec![
-                ("op", Json::str("classify")),
-                ("id", Json::num(*id as f64)),
-                ("target", Json::str(variant_key(target))),
-                ("seed_policy", Json::str(seed_policy.to_string())),
-                ("image", Json::Arr(image.iter().map(|&p| Json::num(p as f64)).collect())),
-            ]),
+            Request::Classify { id, target, seed_policy, exit, image } => {
+                let mut fields = vec![
+                    ("op", Json::str("classify")),
+                    ("id", Json::num(*id as f64)),
+                    ("target", Json::str(variant_key(target))),
+                    ("seed_policy", Json::str(seed_policy.to_string())),
+                ];
+                // emitted only when non-full, so exact requests stay
+                // byte-compatible with servers predating the field
+                if !exit.is_full() {
+                    fields.push(("exit", Json::str(exit.to_string())));
+                }
+                fields.push((
+                    "image",
+                    Json::Arr(image.iter().map(|&p| Json::num(p as f64)).collect()),
+                ));
+                Json::obj(fields)
+            }
             Request::Metrics { id } => {
                 Json::obj(vec![("op", Json::str("metrics")), ("id", Json::num(*id as f64))])
             }
@@ -108,6 +126,14 @@ impl Request {
                     None => SeedPolicy::PerBatch,
                     Some(s) => SeedPolicy::parse(s).map_err(|e| bad(&format!("classify: {e:#}")))?,
                 };
+                // absent field → Full: requests from clients predating
+                // the anytime subsystem keep today's exact behavior
+                let exit = match j.get("exit").and_then(Json::as_str) {
+                    None => ExitPolicy::Full,
+                    Some(s) => {
+                        ExitPolicy::parse(s).map_err(|e| bad(&format!("classify: {e:#}")))?
+                    }
+                };
                 let image = j
                     .get("image")
                     .and_then(Json::as_arr)
@@ -116,7 +142,7 @@ impl Request {
                     .map(|p| p.as_f64().map(|v| v as f32))
                     .collect::<Option<Vec<f32>>>()
                     .ok_or_else(|| bad("classify: non-numeric pixel in `image`"))?;
-                Ok(Request::Classify { id, target, seed_policy, image })
+                Ok(Request::Classify { id, target, seed_policy, exit, image })
             }
             "metrics" => Ok(Request::Metrics { id }),
             "ping" => Ok(Request::Ping { id }),
@@ -146,6 +172,13 @@ pub struct RemoteClassify {
     pub batch_size: usize,
     /// Seed actually used (see [`ClassifyResponse::seed`]).
     pub seed: u32,
+    /// SNN time steps actually run (see [`ClassifyResponse::steps_used`]).
+    /// Decodes as `0` from replies of servers predating the field.
+    pub steps_used: usize,
+    /// Top-1 minus top-2 margin of the logits (see
+    /// [`ClassifyResponse::confidence`]).  Decodes as `0.0` from replies
+    /// of servers predating the field.
+    pub confidence: f32,
 }
 
 impl RemoteClassify {
@@ -157,6 +190,8 @@ impl RemoteClassify {
             server_latency_us: r.latency_us,
             batch_size: r.batch_size,
             seed: r.seed,
+            steps_used: r.steps_used,
+            confidence: r.confidence,
         }
     }
 }
@@ -239,6 +274,8 @@ impl Reply {
                 ("server_latency_us", Json::num(response.server_latency_us)),
                 ("batch_size", Json::from(response.batch_size)),
                 ("seed", Json::num(response.seed as f64)),
+                ("steps_used", Json::from(response.steps_used)),
+                ("confidence", Json::num(response.confidence as f64)),
             ]),
             Reply::Metrics { id, report } => Json::obj(vec![
                 ("ok", Json::from(true)),
@@ -299,6 +336,12 @@ impl Reply {
                     .ok_or_else(|| anyhow::anyhow!("classify reply without `seed`"))?;
                 let server_latency_us =
                     j.get("server_latency_us").and_then(Json::as_f64).unwrap_or(0.0);
+                // lenient like `server_latency_us`: absent on replies
+                // from servers predating the anytime subsystem
+                let steps_used =
+                    j.get("steps_used").and_then(Json::as_u64).unwrap_or(0) as usize;
+                let confidence =
+                    j.get("confidence").and_then(Json::as_f64).unwrap_or(0.0) as f32;
                 Ok(Reply::Classify {
                     id,
                     response: RemoteClassify {
@@ -307,6 +350,8 @@ impl Reply {
                         server_latency_us,
                         batch_size: j.usize_field("batch_size")?,
                         seed: seed as u32,
+                        steps_used,
+                        confidence,
                     },
                 })
             }
@@ -356,11 +401,46 @@ mod tests {
             id: 7,
             target: Target::ssa(4),
             seed_policy: SeedPolicy::Fixed(42),
+            exit: ExitPolicy::Full,
             image: vec![0.0, 0.25, 1.0, 0.125],
+        });
+        roundtrip_request(Request::Classify {
+            id: 8,
+            target: Target::ssa(4),
+            seed_policy: SeedPolicy::Fixed(42),
+            exit: ExitPolicy::Margin { threshold: 0.5, min_steps: 2 },
+            image: vec![0.0, 0.25],
+        });
+        roundtrip_request(Request::Classify {
+            id: 9,
+            target: Target::spikformer(4),
+            seed_policy: SeedPolicy::PerBatch,
+            exit: ExitPolicy::MarginOrDeadline { threshold: 0.25, min_steps: 1, budget: 3 },
+            image: vec![1.0],
         });
         roundtrip_request(Request::Metrics { id: 1 });
         roundtrip_request(Request::Ping { id: 2 });
         roundtrip_request(Request::Shutdown { id: 3 });
+    }
+
+    /// Old/new interop: a `full` request's wire form carries no `exit`
+    /// key at all, and a frame without one decodes as `full`.
+    #[test]
+    fn exit_field_is_absent_for_full_and_defaults_to_full() {
+        let req = Request::Classify {
+            id: 7,
+            target: Target::ssa(4),
+            seed_policy: SeedPolicy::Fixed(42),
+            exit: ExitPolicy::Full,
+            image: vec![0.5],
+        };
+        let text = req.to_json().to_string();
+        assert!(!text.contains("exit"), "full policy must not serialize: {text}");
+        let old_client_frame =
+            r#"{"op":"classify","id":3,"target":"ssa_t4","image":[0.5]}"#;
+        let back = Request::parse(&Json::parse(old_client_frame).unwrap()).unwrap();
+        let Request::Classify { exit, .. } = back else { panic!("wrong op") };
+        assert_eq!(exit, ExitPolicy::Full);
     }
 
     #[test]
@@ -373,6 +453,8 @@ mod tests {
                 server_latency_us: 123.5,
                 batch_size: 4,
                 seed: 42,
+                steps_used: 3,
+                confidence: 1.25,
             },
         });
         roundtrip_reply(Reply::Metrics { id: 1, report: "=== metrics ===\n".into() });
@@ -391,6 +473,18 @@ mod tests {
             id: 0,
             error: ServeError::BadImage { got: 7, want: 256 },
         });
+    }
+
+    /// A classify reply from a server predating the anytime fields still
+    /// decodes — `steps_used`/`confidence` default like `server_latency_us`.
+    #[test]
+    fn classify_reply_from_old_server_decodes_with_zero_steps() {
+        let frame = r#"{"ok":true,"op":"classify","id":4,"class":1,
+                        "logits":[0.5],"batch_size":1,"seed":7}"#;
+        let rep = Reply::parse(&Json::parse(frame).unwrap()).unwrap();
+        let Reply::Classify { response, .. } = rep else { panic!("wrong op") };
+        assert_eq!(response.steps_used, 0);
+        assert_eq!(response.confidence, 0.0);
     }
 
     /// Pixels and logits must survive the wire bit-identically: f32 → f64
@@ -412,6 +506,7 @@ mod tests {
             id: 1,
             target: Target::ann(),
             seed_policy: SeedPolicy::PerBatch,
+            exit: ExitPolicy::Full,
             image: vals.clone(),
         };
         let back = Request::parse(&Json::parse(&req.to_json().to_string()).unwrap()).unwrap();
@@ -431,6 +526,8 @@ mod tests {
             r#"{"op":"classify","id":1,"target":"ssa_t4","image":["x"]}"#,
             r#"{"op":"classify","id":1,"target":"bogus","image":[]}"#,
             r#"{"op":"classify","id":1,"target":"ssa_t4","seed_policy":"never","image":[]}"#,
+            r#"{"op":"classify","id":1,"target":"ssa_t4","exit":"sprint:9","image":[]}"#,
+            r#"{"op":"classify","id":1,"target":"ssa_t4","exit":"margin:NaN","image":[]}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             let err = Request::parse(&j).unwrap_err();

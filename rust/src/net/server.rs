@@ -40,6 +40,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::anytime::ExitPolicy;
 use crate::coordinator::{ClassifyResponse, Coordinator, SeedPolicy, ServeError, Target};
 use crate::util::json::Json;
 
@@ -344,7 +345,7 @@ fn reader_loop(
             }
         };
         let write_ok = match req {
-            Request::Classify { id, target, seed_policy, image } => handle_classify(
+            Request::Classify { id, target, seed_policy, exit, image } => handle_classify(
                 &shared,
                 &write_half,
                 &resp_tx,
@@ -352,6 +353,7 @@ fn reader_loop(
                 id,
                 target,
                 seed_policy,
+                exit,
                 image,
             ),
             Request::Metrics { id } => write_reply(
@@ -393,6 +395,7 @@ fn handle_classify(
     id: u64,
     target: Target,
     seed_policy: SeedPolicy,
+    exit: ExitPolicy,
     image: Vec<f32>,
 ) -> std::io::Result<()> {
     if shared.shutdown.load(Ordering::Acquire) {
@@ -414,7 +417,7 @@ fn handle_classify(
     // hold the pending lock across submit so the demux cannot observe a
     // completion before its id mapping exists
     let mut p = pending.lock().unwrap();
-    match shared.coord.submit_with_reply(target, image, seed_policy, resp_tx.clone()) {
+    match shared.coord.submit_with_reply(target, image, seed_policy, exit, resp_tx.clone()) {
         Ok(server_id) => {
             p.insert(server_id, id);
             Ok(())

@@ -15,6 +15,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::anytime::{margin_of, InferOutcome};
 use crate::attention::model::image_seed;
 use crate::config::BackendKind;
 use crate::coordinator::metrics::Metrics;
@@ -118,12 +119,18 @@ fn serve_batch(
         "batch {} exceeds model batch {model_batch}",
         batch.len()
     );
-    // the router only groups requests sharing one seed policy; reject
-    // a mixed batch outright rather than mis-seeding the tail requests
+    // the router only groups requests sharing one seed policy and one
+    // exit policy; reject a mixed batch outright rather than mis-seeding
+    // (or early-exiting) the tail requests
     let policy = batch[0].seed_policy;
     anyhow::ensure!(
         batch.iter().all(|r| r.seed_policy == policy),
         "mixed seed policies in one batch (router invariant violated)"
+    );
+    let exit = batch[0].exit;
+    anyhow::ensure!(
+        batch.iter().all(|r| r.exit == exit),
+        "mixed exit policies in one batch (router invariant violated)"
     );
 
     // assemble; pad only for fixed-shape engines (XLA) — the native
@@ -156,43 +163,84 @@ fn serve_batch(
 
     // run (ensemble averages logits across seeds)
     let classes = model.variant().output_shape[1];
-    let logits_acc = match policy {
-        // Fixed-seed determinism contract: on engines with per-row seed
-        // support, every row runs under the stream a *singleton* batch
-        // would use (row 0 of `s`), so the result for (image, Fixed(s))
-        // is bit-identical under any batch placement or worker count.
-        SeedPolicy::Fixed(s) if model.supports_row_seeds() => {
-            model.infer_rows(&images, &vec![image_seed(s, 0); rows])?
-        }
-        _ => {
-            let mut acc = vec![0.0f32; rows * classes];
-            for &seed in &seeds {
-                let logits = model.infer(&images, seed)?;
-                for (a, l) in acc.iter_mut().zip(&logits) {
-                    *a += l / seeds.len() as f32;
-                }
+    let outcomes: Vec<InferOutcome> = if exit.is_full() {
+        // exact path: unchanged arithmetic from before the anytime seam —
+        // this match is the bit-exactness spine the `full`-policy tests pin
+        let logits_acc = match policy {
+            // Fixed-seed determinism contract: on engines with per-row seed
+            // support, every row runs under the stream a *singleton* batch
+            // would use (row 0 of `s`), so the result for (image, Fixed(s))
+            // is bit-identical under any batch placement or worker count.
+            SeedPolicy::Fixed(s) if model.supports_row_seeds() => {
+                model.infer_rows(&images, &vec![image_seed(s, 0); rows])?
             }
-            acc
+            _ => {
+                let mut acc = vec![0.0f32; rows * classes];
+                for &seed in &seeds {
+                    let logits = model.infer(&images, seed)?;
+                    for (a, l) in acc.iter_mut().zip(&logits) {
+                        *a += l / seeds.len() as f32;
+                    }
+                }
+                acc
+            }
+        };
+        // full runs report the variant's T (per forward pass — an
+        // ensemble runs n such passes but each spans all T steps)
+        let full_steps = model.variant().time_steps;
+        logits_acc
+            .chunks_exact(classes)
+            .map(|row| InferOutcome {
+                logits: row.to_vec(),
+                steps_used: full_steps,
+                margin: margin_of(row),
+            })
+            .collect()
+    } else {
+        match policy {
+            // same per-row stream as the exact Fixed path, so a Fixed(s)
+            // request's exit step (and logits) are independent of batch
+            // placement and worker count
+            SeedPolicy::Fixed(s) if model.supports_row_seeds() => {
+                model.infer_rows_anytime(&images, &vec![image_seed(s, 0); rows], &exit)?
+            }
+            SeedPolicy::Fixed(s) => model.infer_anytime(&images, s, &exit)?,
+            SeedPolicy::PerBatch => model.infer_anytime(&images, seed_reported, &exit)?,
+            // rejected at submit; refuse here too in case a future entry
+            // point forgets — averaging passes that exited at different
+            // steps has no well-defined semantics
+            SeedPolicy::Ensemble(_) => anyhow::bail!(
+                "ensemble seed policies cannot combine with early-exit policies"
+            ),
         }
     };
+    anyhow::ensure!(
+        outcomes.len() >= batch.len(),
+        "engine returned {} rows for a batch of {}",
+        outcomes.len(),
+        batch.len()
+    );
 
-    // reply per request
+    // reply per request (zip drops the padding rows, if any)
     let now = Instant::now();
     let mut lats = Vec::with_capacity(batch.len());
-    for (i, req) in batch.iter().enumerate() {
-        let row = &logits_acc[i * classes..(i + 1) * classes];
-        let class = crate::util::argmax(row).unwrap_or(0);
+    let mut steps = Vec::with_capacity(batch.len());
+    for (req, out) in batch.iter().zip(&outcomes) {
+        let class = crate::util::argmax(&out.logits).unwrap_or(0);
         let latency_us = now.duration_since(req.submitted_at).as_secs_f64() * 1e6;
         lats.push(latency_us);
+        steps.push(out.steps_used as f64);
         let _ = req.reply.send(ClassifyResponse {
             id: req.id,
             class,
-            logits: row.to_vec(),
+            logits: out.logits.clone(),
             latency_us,
             batch_size: batch.len(),
             seed: seed_reported,
+            steps_used: out.steps_used,
+            confidence: out.margin,
         });
     }
-    metrics.record_batch(key, batch.len(), max_batch, &lats);
+    metrics.record_batch(key, batch.len(), max_batch, &lats, &steps);
     Ok(())
 }

@@ -17,6 +17,7 @@
 
 use anyhow::Result;
 
+use crate::anytime::{margin_of, ExitPolicy, InferOutcome};
 use crate::config::BackendKind;
 
 use super::manifest::{Manifest, Variant};
@@ -73,6 +74,44 @@ pub trait LoadedVariant {
         anyhow::bail!("this engine does not support per-row seed streams")
     }
 
+    /// Anytime twin of [`Self::infer`]: run under an [`ExitPolicy`] and
+    /// report per-row steps-used and confidence.  The default supports
+    /// only `ExitPolicy::Full` — it wraps [`Self::infer`] and reports the
+    /// variant's full `time_steps` — so engines without a step loop (XLA
+    /// graphs are compiled for a fixed `T`) keep serving exact requests
+    /// and reject early-exit ones loudly.
+    fn infer_anytime(
+        &self,
+        images: &[f32],
+        seed: u32,
+        policy: &ExitPolicy,
+    ) -> Result<Vec<InferOutcome>> {
+        anyhow::ensure!(
+            policy.is_full(),
+            "this engine does not support early-exit policies (only `full`)"
+        );
+        let logits = self.infer(images, seed)?;
+        Ok(full_outcomes(logits, self.variant()))
+    }
+
+    /// Anytime twin of [`Self::infer_rows`]: per-row seed streams AND
+    /// per-row early exit.  Default: `Full` delegates to
+    /// [`Self::infer_rows`] (which itself errors unless
+    /// [`Self::supports_row_seeds`]); any other policy is refused.
+    fn infer_rows_anytime(
+        &self,
+        images: &[f32],
+        row_seeds: &[u64],
+        policy: &ExitPolicy,
+    ) -> Result<Vec<InferOutcome>> {
+        anyhow::ensure!(
+            policy.is_full(),
+            "this engine does not support early-exit policies (only `full`)"
+        );
+        let logits = self.infer_rows(images, row_seeds)?;
+        Ok(full_outcomes(logits, self.variant()))
+    }
+
     /// Argmax class per batch row (total-order; never panics on NaN).
     fn classify(&self, images: &[f32], seed: u32) -> Result<Vec<usize>> {
         let logits = self.infer(images, seed)?;
@@ -82,6 +121,21 @@ pub trait LoadedVariant {
             .map(|row| crate::util::argmax(row).unwrap_or(0))
             .collect())
     }
+}
+
+/// Wrap flat `[rows, n_classes]` logits into per-row [`InferOutcome`]s
+/// for a full-`T` run (the exact-path default of the anytime seam).
+fn full_outcomes(logits: Vec<f32>, variant: &Variant) -> Vec<InferOutcome> {
+    let classes = variant.output_shape[1];
+    let steps = variant.time_steps;
+    logits
+        .chunks_exact(classes)
+        .map(|row| InferOutcome {
+            logits: row.to_vec(),
+            steps_used: steps,
+            margin: margin_of(row),
+        })
+        .collect()
 }
 
 /// Instantiate a backend by kind.  `Xla` errors out (rather than being

@@ -73,6 +73,11 @@ impl ModelHints {
 pub struct Variant {
     pub name: String,
     pub arch: String,
+    /// Time steps per inference.  **Invariant: always `>= 1` after
+    /// manifest load.**  The manifest JSON spells the deterministic ANN
+    /// variant as `"time_steps": 0` (no temporal dimension — a long-lived
+    /// artifact-format convention); [`Manifest::from_json`] normalizes it
+    /// to `1` at the boundary so no downstream consumer needs a clamp.
     pub time_steps: usize,
     pub batch: usize,
     pub hlo: PathBuf,
@@ -136,7 +141,9 @@ impl Manifest {
             variants.push(Variant {
                 name: v.str_field("name")?.to_string(),
                 arch: v.str_field("arch")?.to_string(),
-                time_steps: v.usize_field("time_steps")?,
+                // normalize the ANN convention `0` to the validated
+                // `>= 1` invariant documented on the field
+                time_steps: v.usize_field("time_steps")?.max(1),
                 batch: v.usize_field("batch")?,
                 hlo: dir.join(v.str_field("hlo")?),
                 weights: dir.join(v.str_field("weights")?),
@@ -241,6 +248,23 @@ mod tests {
         let merged = m.variants[0].model.merged_over(&m.model);
         assert_eq!(merged.n_heads, Some(8), "variant hint wins");
         assert_eq!(merged.lif_beta, Some(0.9), "manifest default fills gaps");
+    }
+
+    #[test]
+    fn ann_time_steps_zero_normalizes_to_one() {
+        let j = Json::parse(
+            &SAMPLE
+                .replace(r#""name": "ssa_t10", "arch": "ssa", "time_steps": 10"#,
+                         r#""name": "ann", "arch": "ann", "time_steps": 0"#),
+        )
+        .unwrap();
+        let m = Manifest::from_json(Path::new("/x"), &j).unwrap();
+        assert_eq!(
+            m.variant("ann").unwrap().time_steps,
+            1,
+            "the ANN manifest convention `time_steps: 0` must normalize to \
+             the validated >= 1 invariant at load"
+        );
     }
 
     #[test]

@@ -12,6 +12,7 @@
 
 use anyhow::{Context, Result};
 
+use crate::anytime::{ExitPolicy, InferOutcome};
 use crate::attention::model::{Arch, ModelGeometry, NativeModel};
 use crate::config::{LifConfig, PrngSharing};
 
@@ -129,9 +130,9 @@ fn resolve_geometry(
         d_mlp,
         n_layers,
         n_classes,
-        // the ANN variant reports time_steps = 0; its forward pass is
-        // deterministic, but the geometry still wants a positive T
-        time_steps: variant.time_steps.max(1),
+        // `time_steps >= 1` is a manifest-load invariant (the ANN
+        // variant's `0` normalizes to `1` in `Manifest::from_json`)
+        time_steps: variant.time_steps,
         lif: LifConfig {
             beta: hints.lif_beta.unwrap_or(DEFAULT_LIF_BETA),
             theta: hints.lif_theta.unwrap_or(DEFAULT_LIF_THETA),
@@ -201,5 +202,43 @@ impl LoadedVariant for NativeVariant {
             self.variant.batch
         );
         self.model.infer_rows(images, row_seeds.len(), row_seeds)
+    }
+
+    /// The native step loop supports every [`ExitPolicy`]: each row exits
+    /// independently, so batch composition never leaks into results.
+    fn infer_anytime(
+        &self,
+        images: &[f32],
+        seed: u32,
+        policy: &ExitPolicy,
+    ) -> Result<Vec<InferOutcome>> {
+        let px = self.model.geometry().image_size.pow(2);
+        anyhow::ensure!(
+            px > 0 && images.len() % px == 0,
+            "image buffer of {} f32s is not a whole number of {px}-pixel images",
+            images.len()
+        );
+        let rows = images.len() / px;
+        anyhow::ensure!(
+            rows <= self.variant.batch,
+            "{rows} rows exceed variant batch {}",
+            self.variant.batch
+        );
+        self.model.infer_anytime(images, rows, seed, policy)
+    }
+
+    fn infer_rows_anytime(
+        &self,
+        images: &[f32],
+        row_seeds: &[u64],
+        policy: &ExitPolicy,
+    ) -> Result<Vec<InferOutcome>> {
+        anyhow::ensure!(
+            row_seeds.len() <= self.variant.batch,
+            "{} rows exceed variant batch {}",
+            row_seeds.len(),
+            self.variant.batch
+        );
+        self.model.infer_rows_anytime(images, row_seeds.len(), row_seeds, policy)
     }
 }

@@ -228,6 +228,45 @@ impl std::fmt::Display for LatencySummary {
     }
 }
 
+/// Steps-used summary for anytime-inference telemetry: same
+/// [`LogHistogram`] backing as [`LatencySummary`], but the samples are
+/// SNN time-step counts, not microseconds.  The `mean` field is the
+/// "mean steps" gauge — under an early-exit policy it is the compute
+/// saving headline (mean steps / full T).
+#[derive(Clone, Debug)]
+pub struct StepsSummary {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl StepsSummary {
+    /// Summary of a [`LogHistogram`] of step counts: exact count/mean/max,
+    /// percentiles at bucket resolution (exact for small counts, since
+    /// percentiles clamp into the observed [min, max] range).
+    pub fn from_histogram(h: &LogHistogram) -> Self {
+        Self {
+            count: h.count() as usize,
+            mean: h.mean(),
+            p50: h.percentile(50.0),
+            p95: h.percentile(95.0),
+            max: h.max(),
+        }
+    }
+}
+
+impl std::fmt::Display for StepsSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.2} p50={:.0} p95={:.0} max={:.0}",
+            self.count, self.mean, self.p50, self.p95, self.max
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -317,6 +356,24 @@ mod tests {
         for p in [50.0, 95.0, 99.0] {
             assert_eq!(a.percentile(p), whole.percentile(p), "p{p}");
         }
+    }
+
+    #[test]
+    fn steps_summary_is_exact_for_small_integer_counts() {
+        let mut h = LogHistogram::new();
+        // 8 rows exited at step 2, 2 rows ran the full T=8
+        for _ in 0..8 {
+            h.record(2.0);
+        }
+        h.record(8.0);
+        h.record(8.0);
+        let s = StepsSummary::from_histogram(&h);
+        assert_eq!(s.count, 10);
+        assert!((s.mean - 3.2).abs() < 1e-9, "mean is exact: {}", s.mean);
+        // percentiles resolve to bucket midpoints (~4.4% worst case)
+        assert!((s.p50 - 2.0).abs() / 2.0 < 0.05, "median exits early: {}", s.p50);
+        assert_eq!(s.p95, 8.0, "tail clamps to the exact observed max");
+        assert_eq!(s.max, 8.0);
     }
 
     #[test]

@@ -14,6 +14,7 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use ssa_repro::anytime::ExitPolicy;
 use ssa_repro::config::BackendKind;
 use ssa_repro::coordinator::{
     BatchPolicy, Coordinator, CoordinatorConfig, SeedPolicy, ServeError, Target,
@@ -182,6 +183,65 @@ fn fixed_seed_over_wire_bit_identical_to_in_process() {
     }
 }
 
+/// Early exit crosses the wire without breaking determinism: a
+/// policy-carrying request answers with the same logits and steps-used
+/// as the in-process path, for any worker count, and never runs more
+/// steps than the variant's T.
+#[test]
+fn early_exit_over_wire_matches_in_process() {
+    let dir = artifacts("anytime");
+    let policy = ExitPolicy::Margin { threshold: 0.05, min_steps: 2 };
+
+    // in-process reference, single worker (T=4 in this geometry)
+    let reference: Vec<(Vec<u32>, usize)> = {
+        let coord = start_coord(dir.clone(), 1);
+        let out = (0..12)
+            .map(|i| {
+                let resp = coord
+                    .classify_anytime(Target::ssa(4), image(i), SeedPolicy::Fixed(77), policy)
+                    .expect("in-process anytime classify");
+                assert!(
+                    (2..=4).contains(&resp.steps_used),
+                    "image {i}: steps_used {} outside [min_steps, T]",
+                    resp.steps_used
+                );
+                (bits(&resp.logits), resp.steps_used)
+            })
+            .collect();
+        coord.shutdown();
+        out
+    };
+
+    for workers in [1usize, 3] {
+        let server = start_server(dir.clone(), workers, 64);
+        let client = NetClient::connect(&server.local_addr().to_string()).expect("connect");
+        let pending: Vec<_> = (0..12)
+            .map(|i| {
+                client
+                    .submit_anytime(Target::ssa(4), &image(i), SeedPolicy::Fixed(77), policy)
+                    .unwrap()
+            })
+            .collect();
+        for (i, p) in pending.into_iter().enumerate() {
+            let resp = p.wait().expect("wire anytime classify");
+            assert_eq!(
+                bits(&resp.logits),
+                reference[i].0,
+                "image {i}, workers={workers}: wire logits must be bit-identical \
+                 to the in-process anytime result"
+            );
+            assert_eq!(
+                resp.steps_used, reference[i].1,
+                "image {i}, workers={workers}: steps-used must survive the wire"
+            );
+            assert!(resp.steps_used <= 4, "never more than T steps");
+            assert!(resp.confidence.is_finite(), "confidence is always JSON-safe");
+        }
+        drop(client);
+        server.shutdown();
+    }
+}
+
 /// Framed-but-malformed payloads get typed `bad_request` replies and the
 /// connection keeps serving; an oversized frame header is answered once
 /// and then the connection is dropped.
@@ -269,6 +329,23 @@ fn validation_errors_are_typed() {
         Err(ServeError::BadImage { got: 7, want }) => assert_eq!(want, PX),
         other => panic!("expected BadImage, got {other:?}"),
     }
+
+    // ensemble averaging has no semantics for rows that exit at
+    // different steps: rejected at submission, not deep in a worker
+    let p = client
+        .submit_anytime(
+            Target::ssa(4),
+            &image(0),
+            SeedPolicy::Ensemble(2),
+            ExitPolicy::Deadline { budget: 1 },
+        )
+        .unwrap();
+    match p.wait_detailed().unwrap() {
+        Err(ServeError::BadRequest(msg)) => {
+            assert!(msg.contains("ensemble"), "unexpected message: {msg}")
+        }
+        other => panic!("expected BadRequest, got {other:?}"),
+    }
     drop(client);
     server.shutdown();
 }
@@ -314,6 +391,8 @@ fn loadgen_remote_and_metrics_over_the_wire() {
     assert!(stats.ok > 0, "closed loop over TCP must complete requests");
     assert_eq!(stats.errors, 0, "no errors expected under the in-flight budget");
     assert_eq!(stats.ok, stats.latency.count(), "every ok reply has an RTT sample");
+    assert_eq!(stats.ok, stats.steps.count(), "every ok reply has a steps sample");
+    assert_eq!(stats.steps.max(), 4.0, "full-policy traffic runs exactly T=4 steps");
 
     let report = client.metrics().expect("metrics op");
     assert!(report.contains("ssa_t4"), "served target appears in metrics: {report}");

@@ -2,10 +2,13 @@
 //! substrate invariants: packed bit algebra, comparator probabilities,
 //! JSON round-trips, parser robustness under corruption, LIF dynamics.
 
+use ssa_repro::anytime::{margin_of, ExitPolicy};
 use ssa_repro::attention::lif::LifLayer;
+use ssa_repro::attention::model::{Arch, ModelGeometry, NativeModel};
 use ssa_repro::attention::ssa::bern_compare;
-use ssa_repro::config::LifConfig;
+use ssa_repro::config::{LifConfig, PrngSharing};
 use ssa_repro::prop::{check, ensure, Gen};
+use ssa_repro::runtime::weights::test_support::build_weights;
 use ssa_repro::runtime::{Dataset, Weights};
 use ssa_repro::tensor::{spike_matmul, spike_matmul_into, Tensor};
 use ssa_repro::util::bitpack::BitMatrix;
@@ -204,6 +207,102 @@ fn prop_lif_membrane_bounded_under_bounded_input() {
                     format!("|v|={} > bound={bound} (beta={beta} theta={theta})", v.abs()),
                 )?;
             }
+        }
+        Ok(())
+    });
+}
+
+/// Build a random-but-valid tiny model: geometry, weights, and one image.
+fn random_tiny_model(g: &mut Gen, arch: Arch) -> (NativeModel, Vec<f32>) {
+    let patch_size = [2usize, 4][g.usize_in(0, 1)];
+    let grid = g.usize_in(1, 3);
+    let n_heads = g.usize_in(1, 2);
+    let d_head = g.usize_in(4, 10);
+    let geo = ModelGeometry {
+        image_size: patch_size * grid,
+        patch_size,
+        n_tokens: grid * grid,
+        patch_dim: patch_size * patch_size,
+        d_model: n_heads * d_head,
+        n_heads,
+        d_head,
+        d_mlp: g.usize_in(8, 24),
+        n_layers: g.usize_in(1, 2),
+        n_classes: g.usize_in(2, 5),
+        time_steps: g.usize_in(2, 6),
+        lif: LifConfig::default(),
+        prng_sharing: PrngSharing::PerRow,
+        spikformer_scale: 0.25,
+    };
+    let w = build_weights(
+        geo.patch_dim,
+        geo.d_model,
+        geo.n_tokens,
+        geo.d_mlp,
+        geo.n_layers,
+        geo.n_classes,
+        g.u64(),
+    );
+    let px = geo.image_size * geo.image_size;
+    let img: Vec<f32> = (0..px).map(|_| g.f32_01()).collect();
+    let m = NativeModel::from_weights(geo, arch, &w).expect("synthetic geometry is valid");
+    (m, img)
+}
+
+#[test]
+fn prop_anytime_full_policy_bit_identical_to_exact_inference() {
+    // The regression spine of the anytime subsystem: for ANY geometry,
+    // arch, seed, and input, `ExitPolicy::Full` must reproduce the exact
+    // inference path to the f32 bit and run every step.
+    check("ExitPolicy::Full == infer_image (bitwise)", 30, |g| {
+        let arch = [Arch::Ssa, Arch::Spikformer, Arch::Ann][g.usize_in(0, 2)];
+        let (m, img) = random_tiny_model(g, arch);
+        let seed = g.u64();
+        let exact = m.infer_image(&img, seed).map_err(|e| format!("infer_image: {e:#}"))?;
+        let out = m
+            .infer_image_anytime(&img, seed, &ExitPolicy::Full)
+            .map_err(|e| format!("infer_image_anytime: {e:#}"))?;
+        for (i, (a, b)) in exact.iter().zip(&out.logits).enumerate() {
+            ensure(
+                a.to_bits() == b.to_bits(),
+                format!("{arch:?} seed={seed}: logit {i}: {a} != {b}"),
+            )?;
+        }
+        let want_steps = if arch == Arch::Ann { 1 } else { m.geometry().time_steps };
+        ensure(
+            out.steps_used == want_steps,
+            format!("{arch:?}: steps_used {} != {want_steps}", out.steps_used),
+        )?;
+        ensure(
+            out.margin.to_bits() == margin_of(&out.logits).to_bits(),
+            "reported margin must be the decoded logit margin",
+        )
+    });
+}
+
+#[test]
+fn prop_anytime_infinite_margin_threshold_never_exits_early() {
+    // Decoded margins are clamped finite (degenerate cases report
+    // f32::MAX), so an infinite threshold can never fire: the policy
+    // must run all T steps and land exactly on the exact-path logits.
+    check("margin:inf runs full T", 20, |g| {
+        let arch = [Arch::Ssa, Arch::Spikformer][g.usize_in(0, 1)];
+        let (m, img) = random_tiny_model(g, arch);
+        let seed = g.u64();
+        let policy = ExitPolicy::Margin { threshold: f32::INFINITY, min_steps: 1 };
+        let out = m
+            .infer_image_anytime(&img, seed, &policy)
+            .map_err(|e| format!("infer_image_anytime: {e:#}"))?;
+        ensure(
+            out.steps_used == m.geometry().time_steps,
+            format!("{arch:?}: exited at step {} < T", out.steps_used),
+        )?;
+        let exact = m.infer_image(&img, seed).map_err(|e| format!("infer_image: {e:#}"))?;
+        for (i, (a, b)) in exact.iter().zip(&out.logits).enumerate() {
+            ensure(
+                a.to_bits() == b.to_bits(),
+                format!("{arch:?} seed={seed}: logit {i}: {a} != {b}"),
+            )?;
         }
         Ok(())
     });

@@ -9,6 +9,7 @@ use ssa_repro::hw::{SauArray, SpikeStreams};
 use ssa_repro::tensor::Tensor;
 use ssa_repro::util::bitpack::BitMatrix;
 use ssa_repro::util::rng::{Lfsr16, Xoshiro256};
+use ssa_repro::util::simd;
 
 fn main() {
     let mut set = BenchSet::new("micro_hotpath");
@@ -29,6 +30,42 @@ fn main() {
             }
         }
         std::hint::black_box(acc);
+    });
+
+    // the raw kernels, scalar vs dispatched, at several word widths — the
+    // dispatcher falls back to scalar below the wide kernels' minimum
+    // length, so short rows should show ~1x and long rows the SIMD win
+    println!(
+        "popcount kernel: {} (cpu features: {})",
+        simd::kernel_name(),
+        simd::cpu_features()
+    );
+    for words in [2usize, 6, 16, 64, 256] {
+        let x: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+        let y: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+        let bits = Some((words * 64) as f64);
+        set.bench_units(&format!("and_popcount scalar ({words}w)"), bits, || {
+            std::hint::black_box(simd::and_popcount_scalar(
+                std::hint::black_box(&x),
+                std::hint::black_box(&y),
+            ));
+        });
+        set.bench_units(&format!("and_popcount dispatched ({words}w)"), bits, || {
+            std::hint::black_box(simd::and_popcount(
+                std::hint::black_box(&x),
+                std::hint::black_box(&y),
+            ));
+        });
+    }
+
+    // the 64x64 bit-transpose block behind BitMatrix::transpose_into
+    let mut block = [0u64; 64];
+    for w in block.iter_mut() {
+        *w = rng.next_u64();
+    }
+    set.bench_units("transpose_64x64 block", Some(64.0 * 64.0), || {
+        simd::transpose_64x64(std::hint::black_box(&mut block));
+        std::hint::black_box(&block);
     });
 
     // one software SSA step at paper head geometry

@@ -84,16 +84,27 @@ pub fn head_config(cfg: &AttnConfig) -> AttnConfig {
     }
 }
 
-/// H independent bit-packed SSA heads over a `[N, D]` spike embedding.
-pub struct MultiHeadSsa {
-    cfg: AttnConfig,
-    heads: Vec<SsaAttention>,
-    // scratch arena (zero-alloc steady state): the current head's Q/K/V
-    // column slabs plus every head's step output, reused across steps
+/// One head's private slice of the multi-head scratch arena: the head's
+/// `SsaAttention` plus its own Q/K/V column slabs and step output.  No
+/// mutable state is shared between lanes, so heads can run on separate
+/// threads; the per-head PRNG banks ([`seeds::head`]) are independent by
+/// construction, which is what makes the fan-out bit-exact.
+struct HeadLane {
+    ssa: SsaAttention,
     qh: BitMatrix,
     kh: BitMatrix,
     vh: BitMatrix,
-    head_out: Vec<SsaStepOutput>,
+    out: SsaStepOutput,
+}
+
+/// H independent bit-packed SSA heads over a `[N, D]` spike embedding.
+pub struct MultiHeadSsa {
+    cfg: AttnConfig,
+    // scratch arena (zero-alloc steady state): one self-contained lane
+    // per head, reused across steps
+    lanes: Vec<HeadLane>,
+    /// Intra-request threads for the per-head fan-out (1 = sequential).
+    head_threads: usize,
 }
 
 /// One multi-head step: per-head raw outputs plus the `[N, D]` merge.
@@ -106,43 +117,53 @@ impl MultiHeadSsa {
     pub fn new(cfg: AttnConfig, sharing: PrngSharing, base_seed: u64, layer: usize) -> Self {
         cfg.validate().expect("invalid attention config");
         let hc = head_config(&cfg);
-        let heads = (0..cfg.n_heads)
-            .map(|h| SsaAttention::new(hc, sharing, seeds::head(base_seed, layer, h)))
-            .collect();
         let (n, d_k) = (cfg.n_tokens, cfg.d_head);
-        Self {
-            cfg,
-            heads,
-            qh: BitMatrix::zeros(n, d_k),
-            kh: BitMatrix::zeros(n, d_k),
-            vh: BitMatrix::zeros(n, d_k),
-            head_out: (0..cfg.n_heads).map(|_| SsaStepOutput::new(n, d_k)).collect(),
-        }
+        let lanes = (0..cfg.n_heads)
+            .map(|h| HeadLane {
+                ssa: SsaAttention::new(hc, sharing, seeds::head(base_seed, layer, h)),
+                qh: BitMatrix::zeros(n, d_k),
+                kh: BitMatrix::zeros(n, d_k),
+                vh: BitMatrix::zeros(n, d_k),
+                out: SsaStepOutput::new(n, d_k),
+            })
+            .collect();
+        Self { cfg, lanes, head_threads: 1 }
+    }
+
+    /// Allow the per-head fan-out to use up to `n` threads (clamped to at
+    /// least 1).  Heads still merge in head order, so the output — every
+    /// bit of it — is identical for any value.
+    pub fn set_head_threads(&mut self, n: usize) {
+        self.head_threads = n.max(1);
     }
 
     pub fn n_heads(&self) -> usize {
-        self.heads.len()
+        self.lanes.len()
     }
 
     /// Total physical LFSR instances across heads (area accounting).
     pub fn prng_instances(&self) -> usize {
-        self.heads.iter().map(SsaAttention::prng_instances).sum()
+        self.lanes.iter().map(|l| l.ssa.prng_instances()).sum()
     }
 
     /// One time step over `q, k, v: [N, D]` spike matrices.
     pub fn step(&mut self, q: &BitMatrix, k: &BitMatrix, v: &BitMatrix) -> MultiHeadStep {
         let mut merged = BitMatrix::zeros(self.cfg.n_tokens, self.cfg.d_model);
-        let mut per_head = Vec::with_capacity(self.heads.len());
+        let mut per_head = Vec::with_capacity(self.lanes.len());
         self.step_into(q, k, v, &mut merged, Some(&mut per_head));
         MultiHeadStep { per_head, merged }
     }
 
     /// [`Self::step`] writing the `[N, D]` merge into a pre-sized frame —
-    /// heads run over block-owned slab/output scratch and the merge is a
+    /// heads run over lane-owned slab/output scratch and the merge is a
     /// word-level column paste, so the steady state allocates nothing.
-    /// Head order (and therefore every PRNG draw) matches [`Self::step`].
-    /// When `tap` is set, this step's per-head outputs are appended to it
-    /// (bit-exactness test hook; clones, cold path).
+    /// With `head_threads > 1` the lanes fan out over scoped threads; each
+    /// lane's PRNG bank is seeded independently ([`seeds::head`]) and the
+    /// merge below always walks lanes in head order, so the output bits
+    /// match the sequential path exactly for any thread count (and match
+    /// [`Self::step`], PRNG draw for PRNG draw).  When `tap` is set, this
+    /// step's per-head outputs are appended to it (bit-exactness test
+    /// hook; clones, cold path).
     pub fn step_into(
         &mut self,
         q: &BitMatrix,
@@ -152,18 +173,18 @@ impl MultiHeadSsa {
         tap: Option<&mut Vec<SsaStepOutput>>,
     ) {
         let d_k = self.cfg.d_head;
-        for h in 0..self.heads.len() {
-            q.col_slice_into(h * d_k, d_k, &mut self.qh);
-            k.col_slice_into(h * d_k, d_k, &mut self.kh);
-            v.col_slice_into(h * d_k, d_k, &mut self.vh);
-            self.heads[h].step_into(&self.qh, &self.kh, &self.vh, &mut self.head_out[h]);
-        }
+        crate::util::par::par_for_each_mut(&mut self.lanes, self.head_threads, |h, lane| {
+            q.col_slice_into(h * d_k, d_k, &mut lane.qh);
+            k.col_slice_into(h * d_k, d_k, &mut lane.kh);
+            v.col_slice_into(h * d_k, d_k, &mut lane.vh);
+            lane.ssa.step_into(&lane.qh, &lane.kh, &lane.vh, &mut lane.out);
+        });
         merged.clear();
-        for (h, o) in self.head_out.iter().enumerate() {
-            merged.paste_cols(&o.attn, h * d_k);
+        for (h, lane) in self.lanes.iter().enumerate() {
+            merged.paste_cols(&lane.out.attn, h * d_k);
         }
         if let Some(tap) = tap {
-            tap.extend(self.head_out.iter().cloned());
+            tap.extend(self.lanes.iter().map(|l| l.out.clone()));
         }
     }
 }
@@ -279,6 +300,16 @@ impl SsaEncoderLayer {
             part: BitMatrix::zeros(cfg.n_tokens, cfg.d_head),
         };
         Self::with_attention(attn, cfg, lif, d_mlp)
+    }
+
+    /// Let the SSA multi-head fan-out use up to `n` intra-request threads
+    /// (bit-exact for any value — see [`MultiHeadSsa::set_head_threads`]).
+    /// Spikformer layers share slab scratch across heads and stay
+    /// sequential; the call is a no-op for them.
+    pub fn set_head_threads(&mut self, n: usize) {
+        if let LayerAttention::Ssa(mh) = &mut self.attn {
+            mh.set_head_threads(n);
+        }
     }
 
     /// One network time step; `spikes` is the `[N, D]` layer input and the
@@ -483,6 +514,38 @@ mod tests {
                 );
                 assert_eq!(out.per_head[h].s, expect.s, "head {h} S^t diverged");
                 assert_eq!(out.per_head[h].attn, expect.attn, "head {h} Attn^t diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn head_parallel_step_is_bit_identical_to_sequential() {
+        // The layer-2 contract at its smallest scope: fanning the heads
+        // out over threads must not move a single bit, for any count
+        // (including more threads than heads).
+        let c = cfg();
+        let inputs: Vec<(BitMatrix, BitMatrix, BitMatrix)> = (0..5)
+            .map(|t| {
+                (
+                    spikes(8, 32, 0.5, 400 + t),
+                    spikes(8, 32, 0.4, 500 + t),
+                    spikes(8, 32, 0.6, 600 + t),
+                )
+            })
+            .collect();
+        let mut seq = MultiHeadSsa::new(c, PrngSharing::PerRow, 7, 1);
+        let want: Vec<MultiHeadStep> =
+            inputs.iter().map(|(q, k, v)| seq.step(q, k, v)).collect();
+        for threads in [2usize, 3, 8] {
+            let mut par = MultiHeadSsa::new(c, PrngSharing::PerRow, 7, 1);
+            par.set_head_threads(threads);
+            for ((q, k, v), w) in inputs.iter().zip(&want) {
+                let got = par.step(q, k, v);
+                assert_eq!(got.merged, w.merged, "threads={threads}");
+                for (h, (g, e)) in got.per_head.iter().zip(&w.per_head).enumerate() {
+                    assert_eq!(g.s, e.s, "threads={threads} head {h} S^t");
+                    assert_eq!(g.attn, e.attn, "threads={threads} head {h} Attn^t");
+                }
             }
         }
     }

@@ -128,6 +128,10 @@ pub struct NativeModel {
     embed_pos: Tensor,
     layers: Vec<LayerWeights>,
     head_w: Tensor,
+    /// Intra-request thread budget (1 = fully sequential).  Split between
+    /// batch rows and attention heads by [`Self::row_split`]; logits are
+    /// bit-identical for any value (pinned by tests).
+    intra_threads: usize,
 }
 
 fn expect_shape(t: &Tensor, shape: &[usize], name: &str) -> Result<()> {
@@ -175,7 +179,32 @@ impl NativeModel {
             expect_shape(&w.w2, &[geo.d_mlp, d], "w2")?;
             layers.push(w);
         }
-        Ok(Self { geo, arch, embed_w, embed_pos, layers, head_w })
+        Ok(Self { geo, arch, embed_w, embed_pos, layers, head_w, intra_threads: 1 })
+    }
+
+    /// Let one request use up to `n` threads (clamped to at least 1).
+    /// Batches split across rows first (per-row seed streams are
+    /// independent by construction), leftover capacity fans a single
+    /// image out across attention heads (per-head PRNG banks are
+    /// independent).  Either way the outputs merge in deterministic
+    /// order, so logits stay bit-identical for any value of `n`.
+    pub fn set_intra_threads(&mut self, n: usize) {
+        self.intra_threads = n.max(1);
+    }
+
+    pub fn intra_threads(&self) -> usize {
+        self.intra_threads
+    }
+
+    /// Split the intra-request thread budget between batch rows and
+    /// attention heads: rows first (the coarser, better-scaling axis),
+    /// remaining capacity to the per-head fan-out.  The product
+    /// `row_threads * head_threads` never exceeds the budget, so nested
+    /// parallelism cannot oversubscribe.
+    fn row_split(&self, batch: usize) -> (usize, usize) {
+        let intra = self.intra_threads.max(1);
+        let row_threads = intra.min(batch.max(1));
+        (row_threads, (intra / row_threads).max(1))
     }
 
     /// Count `layer{l}/wq` entries in a weights file (geometry inference
@@ -194,12 +223,20 @@ impl NativeModel {
         self.arch
     }
 
-    /// Classify one `[S, S]` image; returns `n_classes` logits.
+    /// Classify one `[S, S]` image; returns `n_classes` logits.  A
+    /// single image spends the whole intra-thread budget on the per-head
+    /// fan-out (there is no row axis to split).
     pub fn infer_image(&self, image: &[f32], seed: u64) -> Result<Vec<f32>> {
+        self.infer_image_ht(image, seed, self.intra_threads)
+    }
+
+    fn infer_image_ht(&self, image: &[f32], seed: u64, head_threads: usize) -> Result<Vec<f32>> {
         let patches = patchify(image, self.geo.image_size, self.geo.patch_size);
         match self.arch {
             Arch::Ann => Ok(self.ann_forward(&patches)),
-            Arch::Ssa | Arch::Spikformer => self.spiking_forward(&patches, seed, None),
+            Arch::Ssa | Arch::Spikformer => {
+                self.spiking_forward(&patches, seed, None, head_threads)
+            }
         }
     }
 
@@ -217,6 +254,16 @@ impl NativeModel {
         seed: u64,
         policy: &ExitPolicy,
     ) -> Result<InferOutcome> {
+        self.infer_image_anytime_ht(image, seed, policy, self.intra_threads)
+    }
+
+    fn infer_image_anytime_ht(
+        &self,
+        image: &[f32],
+        seed: u64,
+        policy: &ExitPolicy,
+        head_threads: usize,
+    ) -> Result<InferOutcome> {
         let patches = patchify(image, self.geo.image_size, self.geo.patch_size);
         match self.arch {
             Arch::Ann => {
@@ -225,7 +272,7 @@ impl NativeModel {
                 Ok(InferOutcome { logits, steps_used: 1, margin })
             }
             Arch::Ssa | Arch::Spikformer => {
-                self.spiking_forward_anytime(&patches, seed, policy, None)
+                self.spiking_forward_anytime(&patches, seed, policy, None, head_threads)
             }
         }
     }
@@ -243,7 +290,7 @@ impl NativeModel {
         let logits = match self.arch {
             Arch::Ann => self.ann_forward(&patches),
             Arch::Ssa | Arch::Spikformer => {
-                self.spiking_forward(&patches, seed, Some(&mut tm))?
+                self.spiking_forward(&patches, seed, Some(&mut tm), self.intra_threads)?
             }
         };
         Ok((logits, tm))
@@ -264,7 +311,9 @@ impl NativeModel {
 
     /// Batched entry point mirroring the PJRT calling convention:
     /// `images` is row-major `[batch, S, S]`, `seed` the request seed;
-    /// image `i` runs under an independent SplitMix64-derived stream.
+    /// image `i` runs under an independent SplitMix64-derived stream —
+    /// which is exactly what lets rows run on parallel intra-request
+    /// threads without moving a bit (row order in the output is fixed).
     pub fn infer(&self, images: &[f32], batch: usize, seed: u32) -> Result<Vec<f32>> {
         let px = self.geo.image_size * self.geo.image_size;
         anyhow::ensure!(
@@ -274,12 +323,11 @@ impl NativeModel {
             batch * px,
             batch
         );
-        let mut logits = Vec::with_capacity(batch * self.geo.n_classes);
-        for i in 0..batch {
-            let row = self.infer_image(&images[i * px..(i + 1) * px], image_seed(seed, i))?;
-            logits.extend(row);
-        }
-        Ok(logits)
+        let (row_threads, head_threads) = self.row_split(batch);
+        let rows = crate::util::par::par_map(batch, row_threads, |i| {
+            self.infer_image_ht(&images[i * px..(i + 1) * px], image_seed(seed, i), head_threads)
+        });
+        collect_logit_rows(rows, batch * self.geo.n_classes)
     }
 
     /// Batched entry point with an explicit pre-expanded stream per row:
@@ -300,11 +348,11 @@ impl NativeModel {
             "{} row seeds for a batch of {batch}",
             row_seeds.len()
         );
-        let mut logits = Vec::with_capacity(batch * self.geo.n_classes);
-        for i in 0..batch {
-            logits.extend(self.infer_image(&images[i * px..(i + 1) * px], row_seeds[i])?);
-        }
-        Ok(logits)
+        let (row_threads, head_threads) = self.row_split(batch);
+        let rows = crate::util::par::par_map(batch, row_threads, |i| {
+            self.infer_image_ht(&images[i * px..(i + 1) * px], row_seeds[i], head_threads)
+        });
+        collect_logit_rows(rows, batch * self.geo.n_classes)
     }
 
     /// Anytime twin of [`Self::infer`]: row `i` runs under
@@ -324,15 +372,17 @@ impl NativeModel {
             batch * px,
             batch
         );
-        (0..batch)
-            .map(|i| {
-                self.infer_image_anytime(
-                    &images[i * px..(i + 1) * px],
-                    image_seed(seed, i),
-                    policy,
-                )
-            })
-            .collect()
+        let (row_threads, head_threads) = self.row_split(batch);
+        crate::util::par::par_map(batch, row_threads, |i| {
+            self.infer_image_anytime_ht(
+                &images[i * px..(i + 1) * px],
+                image_seed(seed, i),
+                policy,
+                head_threads,
+            )
+        })
+        .into_iter()
+        .collect()
     }
 
     /// Anytime twin of [`Self::infer_rows`]: per-row seed streams AND
@@ -359,37 +409,49 @@ impl NativeModel {
             "{} row seeds for a batch of {batch}",
             row_seeds.len()
         );
-        (0..batch)
-            .map(|i| {
-                self.infer_image_anytime(&images[i * px..(i + 1) * px], row_seeds[i], policy)
-            })
-            .collect()
+        let (row_threads, head_threads) = self.row_split(batch);
+        crate::util::par::par_map(batch, row_threads, |i| {
+            self.infer_image_anytime_ht(
+                &images[i * px..(i + 1) * px],
+                row_seeds[i],
+                policy,
+                head_threads,
+            )
+        })
+        .into_iter()
+        .collect()
     }
 
     // --- spiking forward (SSA / Spikformer) --------------------------------
 
     /// Build the per-request layer stack (LIF membranes + PRNG banks +
-    /// scratch arenas) for one spiking inference at seed `seed`.
-    fn request_layers(&self, seed: u64) -> Vec<SsaEncoderLayer> {
+    /// scratch arenas) for one spiking inference at seed `seed`, with
+    /// each SSA layer's head fan-out allowed up to `head_threads`
+    /// intra-request threads.
+    fn request_layers(&self, seed: u64, head_threads: usize) -> Vec<SsaEncoderLayer> {
         let geo = &self.geo;
         let cfg = geo.attn_config();
         (0..geo.n_layers)
-            .map(|l| match self.arch {
-                Arch::Ssa => SsaEncoderLayer::new_ssa(
-                    cfg,
-                    geo.lif,
-                    geo.prng_sharing,
-                    seed,
-                    l,
-                    geo.d_mlp,
-                ),
-                Arch::Spikformer => SsaEncoderLayer::new_spikformer(
-                    cfg,
-                    geo.lif,
-                    geo.spikformer_scale,
-                    geo.d_mlp,
-                ),
-                Arch::Ann => unreachable!("ANN uses ann_forward"),
+            .map(|l| {
+                let mut layer = match self.arch {
+                    Arch::Ssa => SsaEncoderLayer::new_ssa(
+                        cfg,
+                        geo.lif,
+                        geo.prng_sharing,
+                        seed,
+                        l,
+                        geo.d_mlp,
+                    ),
+                    Arch::Spikformer => SsaEncoderLayer::new_spikformer(
+                        cfg,
+                        geo.lif,
+                        geo.spikformer_scale,
+                        geo.d_mlp,
+                    ),
+                    Arch::Ann => unreachable!("ANN uses ann_forward"),
+                };
+                layer.set_head_threads(head_threads);
+                layer
             })
             .collect()
     }
@@ -406,9 +468,10 @@ impl NativeModel {
         patches: &Tensor,
         seed: u64,
         timings: Option<&mut StageTimings>,
+        head_threads: usize,
     ) -> Result<Vec<f32>> {
         Ok(self
-            .spiking_forward_anytime(patches, seed, &ExitPolicy::Full, timings)?
+            .spiking_forward_anytime(patches, seed, &ExitPolicy::Full, timings, head_threads)?
             .logits)
     }
 
@@ -426,12 +489,13 @@ impl NativeModel {
         seed: u64,
         policy: &ExitPolicy,
         mut timings: Option<&mut StageTimings>,
+        head_threads: usize,
     ) -> Result<InferOutcome> {
         let geo = &self.geo;
         // per-request state
         let mut input_rng = Xoshiro256::new(SplitMix64::new(seed ^ TAG_INPUT).next_u64());
         let mut lif_embed = LifLayer::new(geo.n_tokens, geo.d_model, geo.lif);
-        let mut layers = self.request_layers(seed);
+        let mut layers = self.request_layers(seed, head_threads);
 
         // per-request scratch, reused every step
         let mut x_t = BitMatrix::zeros(geo.n_tokens, geo.patch_dim);
@@ -502,7 +566,8 @@ impl NativeModel {
         let geo = &self.geo;
         let mut input_rng = Xoshiro256::new(SplitMix64::new(seed ^ TAG_INPUT).next_u64());
         let mut lif_embed = LifLayer::new(geo.n_tokens, geo.d_model, geo.lif);
-        let mut layers = self.request_layers(seed);
+        // the reference path stays strictly sequential (head_threads = 1)
+        let mut layers = self.request_layers(seed, 1);
 
         let mut logits_acc = vec![0.0f64; geo.n_classes];
         for _t in 0..geo.time_steps {
@@ -561,6 +626,16 @@ const TAG_IMAGE: u64 = 0x494D_4147_4500_0000; // "IMAGE"
 /// (`(seed, index)` pairs map to distinct SplitMix64 streams).
 pub fn image_seed(seed: u32, index: usize) -> u64 {
     SplitMix64::new((seed as u64) ^ TAG_IMAGE ^ ((index as u64) << 32)).next_u64()
+}
+
+/// Flatten per-row logit results (in row order) into one buffer,
+/// surfacing the first row error if any.
+fn collect_logit_rows(rows: Vec<Result<Vec<f32>>>, capacity: usize) -> Result<Vec<f32>> {
+    let mut logits = Vec::with_capacity(capacity);
+    for row in rows {
+        logits.extend(row?);
+    }
+    Ok(logits)
 }
 
 /// Column-wise mean of a packed spike frame into a pre-sized `[1, cols]`
@@ -758,6 +833,44 @@ mod tests {
         assert_eq!(&ab[3..6], &m.infer_image(&img1, row).unwrap()[..]);
         // seed-count mismatch is rejected
         assert!(m.infer_rows(&both, 2, &[row]).is_err());
+    }
+
+    #[test]
+    fn logits_bit_identical_across_intra_thread_counts() {
+        // Layer-2 contract at model scope: splitting a batch across rows
+        // and a single image across heads must not move a bit, for any
+        // intra-thread budget (including more threads than rows * heads).
+        let base = tiny_model(Arch::Ssa);
+        let px = 64;
+        let images: Vec<f32> = (0..5 * px).map(|i| (i % 13) as f32 / 13.0).collect();
+        let row_seeds: Vec<u64> = (0..5).map(|i| image_seed(9, i)).collect();
+        let want = base.infer_rows(&images, 5, &row_seeds).unwrap();
+        let want_batch = base.infer(&images, 5, 21).unwrap();
+        let img = &images[..px];
+        let want_single = base.infer_image(img, 7).unwrap();
+        let policy = ExitPolicy::Margin { threshold: 0.05, min_steps: 1 };
+        let want_any = base.infer_rows_anytime(&images, 5, &row_seeds, &policy).unwrap();
+        for intra in [2usize, 3, 5, 9] {
+            let mut m = tiny_model(Arch::Ssa);
+            m.set_intra_threads(intra);
+            let got = m.infer_rows(&images, 5, &row_seeds).unwrap();
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "infer_rows intra={intra}");
+            }
+            let got_batch = m.infer(&images, 5, 21).unwrap();
+            for (a, b) in got_batch.iter().zip(&want_batch) {
+                assert_eq!(a.to_bits(), b.to_bits(), "infer intra={intra}");
+            }
+            let got_single = m.infer_image(img, 7).unwrap();
+            for (a, b) in got_single.iter().zip(&want_single) {
+                assert_eq!(a.to_bits(), b.to_bits(), "infer_image intra={intra}");
+            }
+            assert_eq!(
+                m.infer_rows_anytime(&images, 5, &row_seeds, &policy).unwrap(),
+                want_any,
+                "anytime outcomes intra={intra}"
+            );
+        }
     }
 
     #[test]

@@ -41,6 +41,9 @@ pub struct BenchNativeOpts {
     pub layers: usize,
     /// SNN time steps T.
     pub time_steps: usize,
+    /// Intra-request thread count for the 1-vs-N comparison section
+    /// (`--intra-threads`); 0 picks a small machine-dependent default.
+    pub intra_threads: usize,
 }
 
 impl Default for BenchNativeOpts {
@@ -52,6 +55,7 @@ impl Default for BenchNativeOpts {
             seed: 0xBE7C,
             layers: 2,
             time_steps: 10,
+            intra_threads: 0,
         }
     }
 }
@@ -91,20 +95,23 @@ pub struct ArchBench {
     pub stages: Option<StageTimings>,
 }
 
+/// One [`BenchResult`] as a JSON object (shared by every report section).
+fn bench_json(r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("samples", Json::from(r.samples)),
+        ("mean_us", Json::num(r.mean_us)),
+        ("p50_us", Json::num(r.p50_us)),
+        ("min_us", Json::num(r.min_us)),
+        (
+            "rows_per_s",
+            r.throughput().map(Json::num).unwrap_or(Json::Null),
+        ),
+    ])
+}
+
 impl ArchBench {
     fn to_json(&self) -> Json {
-        let res = |r: &BenchResult| {
-            Json::obj(vec![
-                ("samples", Json::from(r.samples)),
-                ("mean_us", Json::num(r.mean_us)),
-                ("p50_us", Json::num(r.p50_us)),
-                ("min_us", Json::num(r.min_us)),
-                (
-                    "rows_per_s",
-                    r.throughput().map(Json::num).unwrap_or(Json::Null),
-                ),
-            ])
-        };
+        let res = bench_json;
         let stages = match &self.stages {
             None => Json::Null,
             Some(s) => Json::obj(vec![
@@ -133,11 +140,94 @@ impl ArchBench {
     }
 }
 
+/// Which popcount kernel the dispatcher selected and what the CPU
+/// advertises — pins the hardware context of every number in the report.
+pub struct KernelInfo {
+    /// `util::simd::kernel_name()` at bench time (avx2 / neon / scalar).
+    pub dispatched: String,
+    /// `util::simd::cpu_features()` — detected feature list.
+    pub cpu_features: String,
+}
+
+impl KernelInfo {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dispatched", Json::str(&self.dispatched)),
+            ("cpu_features", Json::str(&self.cpu_features)),
+        ])
+    }
+}
+
+/// SSA forward pass with the SIMD kernel forced to the scalar reference,
+/// against the dispatched kernel measured in the main matrix.  Only
+/// recorded when a wide kernel is actually dispatched; the logits are
+/// verified bit-identical before either number is reported.
+pub struct SimdCompare {
+    pub scalar_single_row: BenchResult,
+    /// scalar mean / dispatched mean, single row end to end.
+    pub speedup_single_row: f64,
+    /// Per-stage attribution under the scalar kernel.
+    pub scalar_stages: StageTimings,
+    /// (scalar attn+qkv) / (dispatched attn+qkv) — the stages the
+    /// popcount kernels actually run in.
+    pub speedup_attn_qkv: f64,
+}
+
+impl SimdCompare {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scalar_single_row", bench_json(&self.scalar_single_row)),
+            ("speedup_single_row", Json::num(self.speedup_single_row)),
+            (
+                "scalar_stages_us",
+                Json::obj(vec![
+                    ("qkv_us", Json::num(self.scalar_stages.qkv_us)),
+                    ("attn_us", Json::num(self.scalar_stages.attn_us)),
+                ]),
+            ),
+            ("speedup_attn_qkv", Json::num(self.speedup_attn_qkv)),
+        ])
+    }
+}
+
+/// SSA forward pass split across `intra_threads` scoped threads, against
+/// the sequential (1-thread) runs measured in the main matrix.  Logits
+/// are verified bit-identical across thread counts before reporting.
+pub struct IntraCompare {
+    pub intra_threads: usize,
+    pub single_row: BenchResult,
+    pub batch: BenchResult,
+    /// 1-thread mean / N-thread mean, single row.
+    pub speedup_single_row: f64,
+    /// 1-thread mean / N-thread mean, full batch.
+    pub speedup_batch: f64,
+}
+
+impl IntraCompare {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("intra_threads", Json::from(self.intra_threads)),
+            ("single_row", bench_json(&self.single_row)),
+            ("batch", bench_json(&self.batch)),
+            ("speedup_single_row", Json::num(self.speedup_single_row)),
+            ("speedup_batch", Json::num(self.speedup_batch)),
+        ])
+    }
+}
+
 /// The full bench-native result.
 pub struct NativeBenchReport {
     pub geometry: ModelGeometry,
     pub batch: usize,
     pub arches: Vec<ArchBench>,
+    /// Dispatched popcount kernel + CPU features at bench time.
+    pub kernel: KernelInfo,
+    /// Scalar-vs-SIMD attribution for the SSA arch (None when the
+    /// dispatcher already resolves to scalar).
+    pub ssa_simd: Option<SimdCompare>,
+    /// Intra-request 1-vs-N attribution for the SSA arch (None when the
+    /// comparison thread count is 1).
+    pub ssa_intra: Option<IntraCompare>,
 }
 
 impl NativeBenchReport {
@@ -168,10 +258,19 @@ impl NativeBenchReport {
                 ]),
             ),
             ("batch", Json::from(self.batch)),
+            ("kernel", self.kernel.to_json()),
             ("arches", Json::Arr(self.arches.iter().map(ArchBench::to_json).collect())),
             (
                 "ssa_speedup_old_vs_new",
                 self.ssa_speedup().map(Json::num).unwrap_or(Json::Null),
+            ),
+            (
+                "ssa_simd_vs_scalar",
+                self.ssa_simd.as_ref().map(SimdCompare::to_json).unwrap_or(Json::Null),
+            ),
+            (
+                "ssa_intra_1_vs_n",
+                self.ssa_intra.as_ref().map(IntraCompare::to_json).unwrap_or(Json::Null),
             ),
         ])
     }
@@ -188,6 +287,11 @@ impl NativeBenchReport {
             "=== bench-native: N={} D={} H={} M={} layers={} T={} | batch {} ===\n",
             g.n_tokens, g.d_model, g.n_heads, g.d_mlp, g.n_layers, g.time_steps, self.batch
         );
+        s.push_str(&format!(
+            "kernel: {} (cpu features: {})\n",
+            self.kernel.dispatched,
+            if self.kernel.cpu_features.is_empty() { "-" } else { &self.kernel.cpu_features }
+        ));
         for a in &self.arches {
             s.push_str(&format!(
                 "{:<11} single row {:>9.1} us ({:>8.1} rows/s)   \
@@ -213,6 +317,20 @@ impl NativeBenchReport {
         }
         if let Some(x) = self.ssa_speedup() {
             s.push_str(&format!("ssa single-row speedup old-vs-new: {x:.2}x\n"));
+        }
+        if let Some(c) = &self.ssa_simd {
+            s.push_str(&format!(
+                "ssa {} vs scalar kernel: single row {:.2}x, attn+qkv stages {:.2}x \
+                 (logits bit-identical)\n",
+                self.kernel.dispatched, c.speedup_single_row, c.speedup_attn_qkv
+            ));
+        }
+        if let Some(c) = &self.ssa_intra {
+            s.push_str(&format!(
+                "ssa intra-threads {} vs 1: single row {:.2}x, batch x{} {:.2}x \
+                 (logits bit-identical)\n",
+                c.intra_threads, c.speedup_single_row, self.batch, c.speedup_batch
+            ));
         }
         s
     }
@@ -294,8 +412,144 @@ pub fn run(opts: &BenchNativeOpts) -> Result<NativeBenchReport> {
             stages,
         });
     }
+
+    let kernel = KernelInfo {
+        dispatched: crate::util::simd::kernel_name().to_string(),
+        cpu_features: crate::util::simd::cpu_features(),
+    };
+    let ssa = arches.iter().find(|a| a.arch == "ssa").expect("ssa bench ran");
+    let ssa_simd =
+        bench_ssa_scalar_kernel(&mut set, &geo, &weights, row_img, ssa, &kernel.dispatched)?;
+    let ssa_intra = bench_ssa_intra(&mut set, &geo, &weights, &images, row_img, opts, ssa)?;
     set.finish();
-    Ok(NativeBenchReport { geometry: geo, batch: opts.batch, arches })
+    Ok(NativeBenchReport { geometry: geo, batch: opts.batch, arches, kernel, ssa_simd, ssa_intra })
+}
+
+/// Both buffers must carry the same f32 bit patterns — the perf story is
+/// only worth telling if the arithmetic is provably unchanged.
+fn ensure_bit_identical(a: &[f32], b: &[f32], what: &str) -> Result<()> {
+    anyhow::ensure!(
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "{what}: logits are not bit-identical"
+    );
+    Ok(())
+}
+
+/// Re-run the SSA single-row benchmark with the popcount kernel forced to
+/// the scalar reference, verify bit-identical logits, and attribute the
+/// difference to the attn+qkv stages.  Skipped (None) when the dispatcher
+/// already resolves to scalar — comparing scalar to itself says nothing.
+fn bench_ssa_scalar_kernel(
+    set: &mut BenchSet,
+    geo: &ModelGeometry,
+    weights: &crate::runtime::weights::Weights,
+    row_img: &[f32],
+    ssa: &ArchBench,
+    dispatched: &str,
+) -> Result<Option<SimdCompare>> {
+    use crate::util::simd::{set_simd_mode, SimdMode};
+    if dispatched == "scalar" {
+        return Ok(None);
+    }
+    let model = NativeModel::from_weights(*geo, Arch::Ssa, weights)
+        .context("binding SSA model for the scalar-kernel comparison")?;
+    let want = model.infer_image(row_img, image_seed(7, 0))?;
+    set_simd_mode(SimdMode::ForceScalar);
+    let got = model.infer_image(row_img, image_seed(7, 0));
+    let scalar_single = set
+        .bench_units("ssa single row (scalar kernel)", Some(1.0), || {
+            std::hint::black_box(model.infer_image(row_img, image_seed(7, 0)).unwrap());
+        })
+        .clone();
+    let reps = 16u64;
+    let mut acc = StageTimings::default();
+    let mut timed_err = Ok(());
+    for i in 0..reps {
+        match model.infer_image_timed(row_img, image_seed(7, i as usize)) {
+            Ok((_, tm)) => acc.accumulate(&tm),
+            Err(e) => {
+                timed_err = Err(e);
+                break;
+            }
+        }
+    }
+    // restore the dispatcher before propagating anything fallible, so an
+    // error can't leave the whole process pinned to the scalar kernel
+    set_simd_mode(SimdMode::Auto);
+    timed_err?;
+    ensure_bit_identical(&want, &got?, "SIMD vs scalar kernel")?;
+    let scalar_stages = acc.scaled(1.0 / reps as f64);
+    let auto_stages = ssa.stages.as_ref().expect("ssa stage attribution ran");
+    let auto_attn_qkv = auto_stages.attn_us + auto_stages.qkv_us;
+    Ok(Some(SimdCompare {
+        speedup_single_row: scalar_single.mean_us / ssa.single_row.mean_us,
+        speedup_attn_qkv: if auto_attn_qkv > 0.0 {
+            (scalar_stages.attn_us + scalar_stages.qkv_us) / auto_attn_qkv
+        } else {
+            1.0
+        },
+        scalar_single_row: scalar_single,
+        scalar_stages,
+    }))
+}
+
+/// Re-run the SSA single-row and batch benchmarks with the model split
+/// across `opts.intra_threads` scoped threads (0 = small auto default),
+/// verify bit-identical logits against the sequential run, and report the
+/// 1-vs-N speedups.  Skipped (None) when the comparison count is 1.
+fn bench_ssa_intra(
+    set: &mut BenchSet,
+    geo: &ModelGeometry,
+    weights: &crate::runtime::weights::Weights,
+    images: &[f32],
+    row_img: &[f32],
+    opts: &BenchNativeOpts,
+    ssa: &ArchBench,
+) -> Result<Option<IntraCompare>> {
+    let intra = if opts.intra_threads == 0 {
+        crate::util::par::max_threads().clamp(2, 4)
+    } else {
+        opts.intra_threads
+    };
+    if intra <= 1 {
+        return Ok(None);
+    }
+    let mut model = NativeModel::from_weights(*geo, Arch::Ssa, weights)
+        .context("binding SSA model for the intra-thread comparison")?;
+    let want_single = model.infer_image(row_img, image_seed(7, 0))?;
+    let want_batch = model.infer(images, opts.batch, 7)?;
+    model.set_intra_threads(intra);
+    ensure_bit_identical(
+        &want_single,
+        &model.infer_image(row_img, image_seed(7, 0))?,
+        "intra-threads single row",
+    )?;
+    ensure_bit_identical(
+        &want_batch,
+        &model.infer(images, opts.batch, 7)?,
+        "intra-threads batch",
+    )?;
+    let single = set
+        .bench_units(&format!("ssa single row (intra {intra})"), Some(1.0), || {
+            std::hint::black_box(model.infer_image(row_img, image_seed(7, 0)).unwrap());
+        })
+        .clone();
+    let batch = set
+        .bench_units(
+            &format!("ssa batch x{} (intra {intra})", opts.batch),
+            Some(opts.batch as f64),
+            || {
+                std::hint::black_box(model.infer(images, opts.batch, 7).unwrap());
+            },
+        )
+        .clone();
+    Ok(Some(IntraCompare {
+        intra_threads: intra,
+        speedup_single_row: ssa.single_row.mean_us / single.mean_us,
+        speedup_batch: ssa.batch.mean_us / batch.mean_us,
+        single_row: single,
+        batch,
+    }))
 }
 
 #[cfg(test)]
@@ -325,5 +579,27 @@ mod tests {
             "SSA speedup must be recorded"
         );
         assert!(report.render().contains("ssa"));
+
+        // kernel attribution: the dispatched kernel name and feature list
+        // must always be present, and must agree with the dispatcher
+        let kernel = parsed.get("kernel").expect("kernel metadata");
+        let dispatched = kernel.str_field("dispatched").unwrap();
+        assert_eq!(dispatched, crate::util::simd::kernel_name());
+        assert!(kernel.get("cpu_features").is_some());
+
+        // SIMD comparison: present exactly when a wide kernel dispatched
+        let simd = parsed.get("ssa_simd_vs_scalar").unwrap();
+        if dispatched == "scalar" {
+            assert!(matches!(simd, Json::Null));
+        } else {
+            assert!(simd.get("speedup_attn_qkv").and_then(Json::as_f64).unwrap() > 0.0);
+        }
+
+        // intra comparison: opts default (0 = auto) always picks >= 2, so
+        // the section must exist and carry positive speedups
+        let intra = parsed.get("ssa_intra_1_vs_n").expect("intra comparison");
+        assert!(intra.get("intra_threads").and_then(Json::as_f64).unwrap() >= 2.0);
+        assert!(intra.get("speedup_batch").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(intra.get("speedup_single_row").and_then(Json::as_f64).unwrap() > 0.0);
     }
 }

@@ -121,6 +121,7 @@ USAGE:
   ssa-repro serve       [--artifacts DIR | --synthetic]
                         [--backend native|xla]
                         [--requests N] [--target ssa_t10] [--workers N]
+                        [--intra-threads N] [--simd auto|scalar]
                         [--ensemble K] [--max-batch B] [--max-delay-ms D]
                         [--listen HOST:PORT] [--max-inflight N]
   ssa-repro classify-remote --addr HOST:PORT
@@ -130,6 +131,7 @@ USAGE:
                         [--metrics] [--shutdown]
   ssa-repro serve-bench [--artifacts DIR | --synthetic]
                         [--backend native|xla] [--workers N[,M,...]]
+                        [--intra-threads N]
                         [--concurrency C | --rps R] [--duration SECS]
                         [--mix \"ssa_t4*3,ann@fixed:7!margin:0.5\"]
                         [--seed-policy perbatch|fixed:N|ensemble:K]
@@ -143,6 +145,7 @@ USAGE:
                         [--out SWEEP_anytime.json]
   ssa-repro bench-native [--budget SECS] [--warmup SECS] [--batch B]
                         [--layers L] [--t T] [--seed S]
+                        [--intra-threads N] [--simd auto|scalar]
                         [--out BENCH_native.json]
   ssa-repro simulate    [--n 16] [--dk 16] [--t 10]
                         [--sharing independent|per-row|global] [--trace]
@@ -155,6 +158,23 @@ Serving (see rust/DESIGN.md):
                    replica of every served variant (native backend; the
                    xla backend is pinned to 1 worker).  Fixed-seed
                    results are bit-identical for any worker count.
+  --intra-threads N
+                   per-worker intra-request parallelism (native backend):
+                   each request is split across its batch rows and then
+                   across attention heads on up to N scoped threads.
+                   The pool negotiates the budget so that
+                   workers x intra-threads never exceeds the machine's
+                   cores; logits are bit-identical for any value.
+  --simd auto|scalar
+                   popcount-kernel dispatch for the spike hot path:
+                   `auto` (the default) picks the widest kernel the CPU
+                   supports at runtime (AVX2 on x86-64, NEON on
+                   aarch64), `scalar` forces the portable reference
+                   kernel.  The environment variable SSA_SIMD=scalar
+                   does the same when no flag is given.  Every kernel
+                   returns bit-identical results — this switch exists
+                   for benchmarking and for pinning CI legs, not
+                   because outputs differ.
 
 Network serving (DESIGN.md section 3 specifies the wire protocol):
   serve --listen HOST:PORT
@@ -254,6 +274,8 @@ pub const KNOWN_FLAGS: &[(&str, &[&str])] = &[
             "requests",
             "target",
             "workers",
+            "intra-threads",
+            "simd",
             "ensemble",
             "max-batch",
             "max-delay-ms",
@@ -273,6 +295,7 @@ pub const KNOWN_FLAGS: &[(&str, &[&str])] = &[
             "synthetic",
             "backend",
             "workers",
+            "intra-threads",
             "concurrency",
             "rps",
             "duration",
@@ -287,7 +310,7 @@ pub const KNOWN_FLAGS: &[(&str, &[&str])] = &[
     ),
     (
         "bench-native",
-        &["budget", "warmup", "batch", "layers", "t", "seed", "out"],
+        &["budget", "warmup", "batch", "layers", "t", "seed", "intra-threads", "simd", "out"],
     ),
     (
         "sweep-anytime",
@@ -415,18 +438,19 @@ mod tests {
         for line in [
             "info",
             "serve --artifacts a --backend native --requests 4 --target ssa_t10 \
-             --workers 2 --ensemble 2 --max-batch 4 --max-delay-ms 2",
+             --workers 2 --intra-threads 2 --simd auto --ensemble 2 --max-batch 4 \
+             --max-delay-ms 2",
             "serve --listen 127.0.0.1:0 --synthetic --max-inflight 64",
             "classify-remote --addr 127.0.0.1:7878 --target ssa_t4 \
              --seed-policy fixed:7 --exit margin:0.5:2 --n 2 --seed 9 \
              --metrics --shutdown",
-            "serve-bench --synthetic --workers 1,4 --concurrency 16 --duration 1 \
-             --mix ssa_t4 --seed-policy perbatch --max-batch 2 --max-delay-ms 5 \
-             --seed 7 --out b.json",
+            "serve-bench --synthetic --workers 1,4 --intra-threads 2 --concurrency 16 \
+             --duration 1 --mix ssa_t4 --seed-policy perbatch --max-batch 2 \
+             --max-delay-ms 5 --seed 7 --out b.json",
             "serve-bench --artifacts a --backend native --rps 100 --duration 1",
             "serve-bench --remote 127.0.0.1:7878 --concurrency 4 --duration 1",
             "bench-native --budget 0.5 --warmup 0.1 --batch 4 --layers 1 --t 4 \
-             --seed 3 --out n.json",
+             --seed 3 --intra-threads 2 --simd scalar --out n.json",
             "sweep-anytime --synthetic --target ssa_t4 --n 16 \
              --thresholds 0.1,0.5 --min-steps 2 --seed 7 --out s.json",
             "sweep-anytime --artifacts a",

@@ -41,6 +41,11 @@ pub struct CoordinatorConfig {
     /// Replica-pool size.  Clamped to the engine's capability (native
     /// scales freely, XLA pins to 1 — see `pool::effective_workers`).
     pub workers: usize,
+    /// Intra-request thread budget per worker (`--intra-threads`): the
+    /// native engine splits one request across batch rows and attention
+    /// heads, bit-identically for any value.  Negotiated by the pool so
+    /// `workers x intra_threads <= cores`.
+    pub intra_threads: usize,
 }
 
 impl CoordinatorConfig {
@@ -52,6 +57,7 @@ impl CoordinatorConfig {
             backend: BackendKind::default(),
             initial_batch_seed: 0x5EED_0001,
             workers: 1,
+            intra_threads: 1,
         }
     }
 
@@ -62,6 +68,11 @@ impl CoordinatorConfig {
 
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = workers;
+        self
+    }
+
+    pub fn with_intra_threads(mut self, intra_threads: usize) -> Self {
+        self.intra_threads = intra_threads;
         self
     }
 }
@@ -88,6 +99,7 @@ impl Coordinator {
                 backend: cfg.backend,
                 preload: cfg.preload.clone(),
                 initial_batch_seed: cfg.initial_batch_seed,
+                intra_threads: cfg.intra_threads,
             },
             &manifest,
             &router,

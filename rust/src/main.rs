@@ -72,6 +72,25 @@ fn backend_kind(args: &Args) -> Result<BackendKind> {
     }
 }
 
+/// Apply `--simd auto|scalar` to the process-wide kernel dispatcher.
+/// No flag means no call at all, which leaves the `SSA_SIMD` environment
+/// override (read lazily on first kernel use) in effect.
+fn apply_simd_flag(args: &Args) -> Result<()> {
+    use ssa_repro::util::simd::{set_simd_mode, SimdMode};
+    match args.opt("simd") {
+        None => Ok(()),
+        Some("auto") => {
+            set_simd_mode(SimdMode::Auto);
+            Ok(())
+        }
+        Some("scalar") => {
+            set_simd_mode(SimdMode::ForceScalar);
+            Ok(())
+        }
+        Some(other) => bail!("invalid --simd {other:?} (expected `auto` or `scalar`)"),
+    }
+}
+
 /// Fabricate a complete servable artifacts directory (`--synthetic`).
 fn synthesize_artifacts(tag: &str) -> Result<PathBuf> {
     let dir = std::env::temp_dir().join(format!("ssa-{tag}-{}", std::process::id()));
@@ -88,7 +107,9 @@ fn serve(args: &Args) -> Result<()> {
     let max_batch: usize = args.opt_parse("max-batch", 8)?;
     let max_delay_ms: u64 = args.opt_parse("max-delay-ms", 5)?;
     let workers: usize = args.opt_parse("workers", 1)?;
+    let intra_threads: usize = args.opt_parse("intra-threads", 1)?;
     let backend = backend_kind(args)?;
+    apply_simd_flag(args)?;
     let dir = if synthetic {
         synthesize_artifacts("serve")?
     } else {
@@ -97,7 +118,10 @@ fn serve(args: &Args) -> Result<()> {
 
     let target = Target::parse(&target_s)?;
     let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(max_delay_ms) };
-    let mut cfg = CoordinatorConfig::new(dir).with_backend(backend).with_workers(workers);
+    let mut cfg = CoordinatorConfig::new(dir)
+        .with_backend(backend)
+        .with_workers(workers)
+        .with_intra_threads(intra_threads);
     cfg.policy = policy;
     cfg.preload = vec![target_s.clone()];
 
@@ -269,6 +293,11 @@ fn serve_bench_remote(args: &Args, remote: &str, spec: &LoadSpec) -> Result<Benc
         args.opt("workers").is_none(),
         "--workers applies to in-process runs only; the remote server owns its pool size"
     );
+    anyhow::ensure!(
+        args.opt("intra-threads").is_none(),
+        "--intra-threads applies to in-process runs only; the remote server owns its \
+         thread budget"
+    );
     let client = NetClient::connect(remote)?;
     let info = client.ping()?;
     for e in &spec.scenario.entries {
@@ -310,6 +339,7 @@ fn serve_bench_local(args: &Args, spec: &LoadSpec) -> Result<BenchReport> {
     let backend = backend_kind(args)?;
     let max_batch: usize = args.opt_parse("max-batch", 8)?;
     let max_delay_ms: u64 = args.opt_parse("max-delay-ms", 5)?;
+    let intra_threads: usize = args.opt_parse("intra-threads", 1)?;
 
     let workers_spec = args.opt_or("workers", "1");
     let workers: Vec<usize> = workers_spec
@@ -354,7 +384,8 @@ fn serve_bench_local(args: &Args, spec: &LoadSpec) -> Result<BenchReport> {
     for &w in &workers {
         let mut cfg = CoordinatorConfig::new(dir.clone())
             .with_backend(backend)
-            .with_workers(w);
+            .with_workers(w)
+            .with_intra_threads(intra_threads);
         cfg.policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(max_delay_ms) };
         cfg.preload = preload.clone();
         let coord = Coordinator::start(cfg)?;
@@ -381,6 +412,7 @@ fn serve_bench_local(args: &Args, spec: &LoadSpec) -> Result<BenchReport> {
 /// the native models (single row + full batch, all arches, per-stage
 /// attribution, old-vs-new speedup) -> `BENCH_native.json`.
 fn bench_native_cmd(args: &Args) -> Result<()> {
+    apply_simd_flag(args)?;
     let opts = ssa_repro::bench_native::BenchNativeOpts {
         budget: Duration::from_secs_f64(args.opt_parse("budget", 1.0f64)?),
         warmup: Duration::from_secs_f64(args.opt_parse("warmup", 0.2f64)?),
@@ -388,6 +420,7 @@ fn bench_native_cmd(args: &Args) -> Result<()> {
         seed: args.opt_parse("seed", 0xBE7Cu64)?,
         layers: args.opt_parse("layers", 2usize)?,
         time_steps: args.opt_parse("t", 10usize)?,
+        intra_threads: args.opt_parse("intra-threads", 0usize)?,
     };
     let report = ssa_repro::bench_native::run(&opts)?;
     print!("{}", report.render());

@@ -43,6 +43,10 @@ pub struct PoolConfig {
     pub preload: Vec<String>,
     /// First value of the pool-shared PerBatch/Ensemble seed counter.
     pub initial_batch_seed: u32,
+    /// Intra-request thread budget per worker (1 = sequential requests).
+    /// Negotiated against the core count at startup so that
+    /// `workers x intra_threads <= cores`.
+    pub intra_threads: usize,
 }
 
 /// The worker count actually spawned: at least 1, at most what the
@@ -76,6 +80,18 @@ impl WorkerPool {
                 cfg.backend.name()
             );
         }
+        // inter- x intra-request parallelism must fit the machine: give
+        // each worker an equal slice of the cores left by the pool itself
+        let intra_threads =
+            crate::util::par::negotiate_intra_threads(workers, cfg.intra_threads);
+        if intra_threads != cfg.intra_threads.max(1) {
+            crate::log_warn!(
+                "worker pool: clamping {} intra-thread(s) to {intra_threads} \
+                 ({workers} worker(s) on {} core(s))",
+                cfg.intra_threads,
+                crate::util::par::max_threads()
+            );
+        }
         let batch_seed = Arc::new(AtomicU32::new(cfg.initial_batch_seed));
         let mut handles = Vec::with_capacity(workers);
         let mut readies = Vec::with_capacity(workers);
@@ -93,6 +109,7 @@ impl WorkerPool {
                 preload: cfg.preload.clone(),
                 backend: cfg.backend,
                 batch_seed: Arc::clone(&batch_seed),
+                intra_threads,
             };
             match std::thread::Builder::new()
                 .name(format!("ssa-worker-{worker_id}"))

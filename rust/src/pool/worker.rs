@@ -21,7 +21,7 @@ use crate::config::BackendKind;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{ClassifyRequest, ClassifyResponse, SeedPolicy};
 use crate::coordinator::router::Router;
-use crate::runtime::{create_backend, LoadedVariant, Manifest};
+use crate::runtime::{create_backend_intra, LoadedVariant, Manifest};
 
 /// Everything one worker needs, moved into its thread at spawn.
 pub(crate) struct WorkerContext {
@@ -34,12 +34,15 @@ pub(crate) struct WorkerContext {
     /// Shared PerBatch/Ensemble seed counter (per-pool, not per-worker,
     /// so two workers never assign the same "fresh" seed).
     pub batch_seed: Arc<AtomicU32>,
+    /// Intra-request thread budget for this worker's backend (already
+    /// negotiated against the core count by the pool).
+    pub intra_threads: usize,
 }
 
 /// Worker body: construct the backend *inside* the thread, preload
 /// replicas, signal readiness, then drain the router until it closes.
 pub(crate) fn run(ctx: WorkerContext, ready: mpsc::Sender<Result<()>>) {
-    let backend = match create_backend(ctx.backend) {
+    let backend = match create_backend_intra(ctx.backend, ctx.intra_threads) {
         Ok(b) => b,
         Err(e) => {
             let _ = ready.send(Err(e));

@@ -142,8 +142,21 @@ fn full_outcomes(logits: Vec<f32>, variant: &Variant) -> Vec<InferOutcome> {
 /// hidden) when the binary was built without the `xla` feature, so a
 /// misconfigured deployment fails loudly at startup, not per request.
 pub fn create_backend(kind: BackendKind) -> Result<Box<dyn InferenceBackend>> {
+    create_backend_intra(kind, 1)
+}
+
+/// [`create_backend`] with an intra-request thread budget: the native
+/// engine splits each request across up to `intra_threads` threads
+/// (batch rows first, then attention heads) with bit-identical logits
+/// for any value; the XLA engine has no intra-op seam and ignores it.
+pub fn create_backend_intra(
+    kind: BackendKind,
+    intra_threads: usize,
+) -> Result<Box<dyn InferenceBackend>> {
     match kind {
-        BackendKind::Native => Ok(Box::new(super::native::NativeBackend::new())),
+        BackendKind::Native => {
+            Ok(Box::new(super::native::NativeBackend::with_intra_threads(intra_threads)))
+        }
         BackendKind::Xla => create_xla_backend(),
     }
 }

@@ -12,7 +12,7 @@ pub mod manifest;
 pub mod native;
 pub mod weights;
 
-pub use backend::{create_backend, InferenceBackend, LoadedVariant};
+pub use backend::{create_backend, create_backend_intra, InferenceBackend, LoadedVariant};
 pub use dataset::{Dataset, Golden};
 #[cfg(feature = "xla")]
 pub use executable::{LoadedModel, Runtime, XlaBackend};

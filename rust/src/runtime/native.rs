@@ -26,13 +26,30 @@ const DEFAULT_LIF_BETA: f32 = 0.9;
 const DEFAULT_LIF_THETA: f32 = 1.0;
 const DEFAULT_SPIKFORMER_SCALE: f32 = 0.25;
 
-/// Stateless factory: all per-variant state lives in [`NativeVariant`].
-#[derive(Default)]
-pub struct NativeBackend;
+/// Near-stateless factory: all per-variant state lives in
+/// [`NativeVariant`]; the backend only carries the intra-request thread
+/// budget it stamps onto every model it loads.
+pub struct NativeBackend {
+    intra_threads: usize,
+}
 
 impl NativeBackend {
     pub fn new() -> Self {
-        Self
+        Self::with_intra_threads(1)
+    }
+
+    /// A backend whose loaded models may split each request across up to
+    /// `n` threads (rows first, then attention heads — bit-identical
+    /// logits for any value, see
+    /// [`crate::attention::model::NativeModel::set_intra_threads`]).
+    pub fn with_intra_threads(n: usize) -> Self {
+        Self { intra_threads: n.max(1) }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -47,15 +64,18 @@ impl InferenceBackend for NativeBackend {
             .with_context(|| format!("native backend, variant {}", variant.name))?;
         let hints = variant.model.merged_over(&manifest.model);
         let geo = resolve_geometry(manifest, variant, &weights, &hints)?;
-        let model = NativeModel::from_weights(geo, arch, &weights)
+        let mut model = NativeModel::from_weights(geo, arch, &weights)
             .with_context(|| format!("binding native model for variant {}", variant.name))?;
+        model.set_intra_threads(self.intra_threads);
         crate::log_info!(
-            "native backend loaded {}: {} layers, {} heads, T={}, batch {}",
+            "native backend loaded {}: {} layers, {} heads, T={}, batch {}, \
+             intra-threads {}",
             variant.name,
             geo.n_layers,
             geo.n_heads,
             geo.time_steps,
-            variant.batch
+            variant.batch,
+            model.intra_threads()
         );
         Ok(Box::new(NativeVariant { variant: variant.clone(), model }))
     }

@@ -43,11 +43,16 @@ impl BitMatrix {
     pub fn from_f01(rows: usize, cols: usize, values: &[f32]) -> Self {
         assert_eq!(values.len(), rows * cols, "shape mismatch");
         let mut m = Self::zeros(rows, cols);
-        for r in 0..rows {
-            for c in 0..cols {
-                if values[r * cols + c] != 0.0 {
-                    m.set(r, c, true);
+        for (r, row_vals) in values.chunks(cols.max(1)).enumerate().take(rows) {
+            let words = m.row_words_mut(r);
+            for (wi, chunk) in row_vals.chunks(64).enumerate() {
+                let mut w = 0u64;
+                for (bit, &v) in chunk.iter().enumerate() {
+                    if v != 0.0 {
+                        w |= 1u64 << bit;
+                    }
                 }
+                words[wi] = w;
             }
         }
         m
@@ -122,16 +127,14 @@ impl BitMatrix {
     }
 
     /// `popcount(row_a AND row_b)` — the SAU dot product (paper eq. 5 sum).
+    ///
+    /// Dispatches to the widest runtime-detected kernel in
+    /// [`crate::util::simd`] (AVX2/NEON, scalar reference otherwise); all
+    /// kernels are bit-identical, popcount being integer-exact.
     #[inline]
     pub fn and_popcount(&self, r: usize, other: &BitMatrix, r_other: usize) -> u32 {
         debug_assert_eq!(self.cols, other.cols);
-        let a = self.row_words(r);
-        let b = other.row_words(r_other);
-        let mut acc = 0u32;
-        for (x, y) in a.iter().zip(b) {
-            acc += (x & y).count_ones();
-        }
-        acc
+        crate::util::simd::and_popcount(self.row_words(r), other.row_words(r_other))
     }
 
     /// Number of set bits in the whole matrix (spike-count statistics).
@@ -151,12 +154,10 @@ impl BitMatrix {
     /// Unpack to {0,1} f32 (for comparisons against the float models).
     pub fn to_f01(&self) -> Vec<f32> {
         let mut out = vec![0.0; self.rows * self.cols];
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                if self.get(r, c) {
-                    out[r * self.cols + c] = 1.0;
-                }
-            }
+        for (r, row_out) in out.chunks_mut(self.cols.max(1)).enumerate().take(self.rows)
+        {
+            // walk set bits only — sparse rows cost O(ones), not O(cols)
+            self.for_each_set_bit(r, |c| row_out[c] = 1.0);
         }
         out
     }
@@ -254,16 +255,42 @@ impl BitMatrix {
         t
     }
 
-    /// [`Self::transpose`] into a pre-sized `[cols, rows]` matrix —
-    /// iterates set bits only (`trailing_zeros`), no allocation.
+    /// [`Self::transpose`] into a pre-sized `[cols, rows]` matrix.
+    ///
+    /// Blockwise at word granularity: gathers each 64x64 bit tile into a
+    /// local block, transposes it in place with the word-shuffle kernel
+    /// [`crate::util::simd::transpose_64x64`], and scatters the result —
+    /// never touching individual bits.  The padding-bit invariant does
+    /// the boundary work: source padding bits are zero, so ragged tiles
+    /// transpose to zero words past `out.cols`, and rows gathered past
+    /// `self.rows` are zero so `out`'s padding stays zero.
     pub fn transpose_into(&self, out: &mut BitMatrix) {
         assert_eq!((out.rows, out.cols), (self.cols, self.rows), "transpose_into shape");
         out.clear();
-        let wpr = out.words_per_row;
-        for r in 0..self.rows {
-            let bit = 1u64 << (r % 64);
-            let wr = r / 64;
-            self.for_each_set_bit(r, |c| out.data[c * wpr + wr] |= bit);
+        let mut block = [0u64; 64];
+        let wpr = self.words_per_row;
+        for rb in 0..self.rows.div_ceil(64) {
+            let r0 = rb * 64;
+            let rn = (self.rows - r0).min(64);
+            for cb in 0..wpr {
+                let mut any = 0u64;
+                for (i, slot) in block[..rn].iter_mut().enumerate() {
+                    *slot = self.data[(r0 + i) * wpr + cb];
+                    any |= *slot;
+                }
+                if any == 0 {
+                    continue; // sparse fast path; out is already zeroed
+                }
+                block[rn..].fill(0);
+                crate::util::simd::transpose_64x64(&mut block);
+                let c0 = cb * 64;
+                let cn = (self.cols - c0).min(64);
+                for (j, &w) in block[..cn].iter().enumerate() {
+                    if w != 0 {
+                        out.data[(c0 + j) * out.words_per_row + rb] = w;
+                    }
+                }
+            }
         }
     }
 }
@@ -306,6 +333,72 @@ mod tests {
             let naive: u32 =
                 av.iter().zip(&bv).map(|(x, y)| (*x as u32) & (*y as u32)).sum();
             assert_eq!(a.and_popcount(0, &b, 0), naive, "cols={cols}");
+        }
+    }
+
+    #[test]
+    fn transpose_matches_per_bit_reference_over_ragged_shapes() {
+        // Pins the blockwise (64x64-tile) transpose to the old per-bit
+        // behavior across tile-boundary geometries: exact multiples of
+        // 64, ragged tails in rows and cols, and tiny shapes.
+        let mut rng = Xoshiro256::new(31);
+        for &(rows, cols) in &[
+            (1usize, 1usize),
+            (3, 70),
+            (64, 64),
+            (65, 130),
+            (130, 65),
+            (200, 3),
+            (64, 1),
+            (1, 64),
+            (127, 129),
+        ] {
+            let vals: Vec<f32> = (0..rows * cols)
+                .map(|_| if rng.bernoulli(0.4) { 1.0 } else { 0.0 })
+                .collect();
+            let m = BitMatrix::from_f01(rows, cols, &vals);
+            let t = m.transpose();
+            let mut want = BitMatrix::zeros(cols, rows);
+            for r in 0..rows {
+                for c in 0..cols {
+                    want.set(c, r, m.get(r, c));
+                }
+            }
+            assert_eq!(t, want, "rows={rows} cols={cols}");
+            assert_eq!(t.transpose(), m, "involution rows={rows} cols={cols}");
+        }
+    }
+
+    #[test]
+    fn from_f01_and_to_f01_are_word_exact_across_boundaries() {
+        // The word-wise pack/unpack paths must agree with per-bit get/set
+        // on shapes that straddle word boundaries.
+        let mut rng = Xoshiro256::new(37);
+        for &(rows, cols) in &[(1usize, 63usize), (2, 64), (3, 65), (5, 130), (4, 200)] {
+            let vals: Vec<f32> = (0..rows * cols)
+                .map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 })
+                .collect();
+            let m = BitMatrix::from_f01(rows, cols, &vals);
+            for r in 0..rows {
+                for c in 0..cols {
+                    assert_eq!(
+                        m.get(r, c),
+                        vals[r * cols + c] != 0.0,
+                        "rows={rows} cols={cols} r={r} c={c}"
+                    );
+                }
+            }
+            assert_eq!(m.to_f01(), vals, "rows={rows} cols={cols}");
+            if cols % 64 != 0 {
+                let mask = !0u64 >> (64 - cols % 64);
+                for r in 0..rows {
+                    assert_eq!(
+                        m.row_words(r).last().unwrap() & !mask,
+                        0,
+                        "padding bits stay zero"
+                    );
+                }
+            }
         }
     }
 

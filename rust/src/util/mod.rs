@@ -1,11 +1,14 @@
 //! Infrastructure substrates the offline environment forces in-tree:
 //! PRNGs (including the paper's hardware LFSRs), minimal JSON, statistics,
-//! packed spike matrices, and a tiny logger.
+//! packed spike matrices, runtime-dispatched SIMD kernels, a scoped-thread
+//! parallel-for, and a tiny logger.
 
 pub mod bitpack;
 pub mod json;
 pub mod logging;
+pub mod par;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 
 /// Total-order argmax over `f32` logits.

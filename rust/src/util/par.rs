@@ -1,0 +1,168 @@
+//! Minimal scoped-thread parallel-for for intra-request parallelism.
+//!
+//! std-only (no rayon): the native engine splits an `infer_rows` batch
+//! across rows (each row owns its own seed stream, so rows are
+//! independent by construction) and a single image across attention
+//! heads (per-head PRNG banks from `ssa::seeds::head` are independent).
+//! Work is partitioned into **contiguous chunks with deterministic output
+//! slots**, so the result order — and therefore every downstream logit —
+//! is identical for any thread count; the bit-exactness tests in
+//! `attention::model` and `tests/integration_pool.rs` pin that.
+//!
+//! Threads are spawned per call via [`std::thread::scope`].  That is
+//! deliberate: requests already amortize thread start-up over hundreds of
+//! time steps, and a persistent pool would need shutdown plumbing through
+//! every owner.  The serving pool caps the product
+//! `workers x intra-threads` at the core count via
+//! [`negotiate_intra_threads`].
+
+use std::panic::resume_unwind;
+use std::thread;
+
+/// Number of hardware threads (1 if the runtime cannot tell).
+pub fn max_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Clamp a requested intra-op thread count so that `workers` pool workers
+/// each running `intra` threads stay within the machine: the returned
+/// value satisfies `1 <= intra` and `workers * intra <= cores` (always at
+/// least 1, even on machines with fewer cores than workers).
+pub fn negotiate_intra_threads(workers: usize, requested: usize) -> usize {
+    requested.clamp(1, (max_threads() / workers.max(1)).max(1))
+}
+
+/// `(0..n).map(f)` with up to `threads` worker threads.
+///
+/// Indices are split into contiguous chunks; each thread writes its
+/// results into pre-assigned slots, so the output order is that of a
+/// sequential map regardless of scheduling.  Panics in `f` propagate to
+/// the caller (after every spawned thread has been joined).
+pub fn par_map<R, F>(n: usize, threads: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(threads);
+    thread::scope(|s| {
+        let f = &f;
+        let mut handles = Vec::with_capacity(threads);
+        for (t, slots) in out.chunks_mut(chunk).enumerate() {
+            let start = t * chunk;
+            handles.push(s.spawn(move || {
+                for (i, slot) in slots.iter_mut().enumerate() {
+                    *slot = Some(f(start + i));
+                }
+            }));
+        }
+        join_all(handles);
+    });
+    out.into_iter().map(|r| r.expect("par_map slot filled")).collect()
+}
+
+/// `for (i, item) in items { f(i, item) }` with up to `threads` worker
+/// threads over contiguous chunks.  Same determinism and panic contract
+/// as [`par_map`]; used for the per-head fan-out where each head mutates
+/// its own pre-allocated lane.
+pub fn par_for_each_mut<T, F>(items: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    thread::scope(|s| {
+        let f = &f;
+        let mut handles = Vec::with_capacity(threads);
+        for (t, slots) in items.chunks_mut(chunk).enumerate() {
+            let start = t * chunk;
+            handles.push(s.spawn(move || {
+                for (i, item) in slots.iter_mut().enumerate() {
+                    f(start + i, item);
+                }
+            }));
+        }
+        join_all(handles);
+    });
+}
+
+/// Join every handle, then re-raise the first panic (joining everything
+/// first keeps a panicking chunk from aborting the process through a
+/// double panic while the scope is still unwinding).
+fn join_all(handles: Vec<thread::ScopedJoinHandle<'_, ()>>) {
+    let mut panicked = None;
+    for h in handles {
+        if let Err(payload) = h.join() {
+            panicked.get_or_insert(payload);
+        }
+    }
+    if let Some(payload) = panicked {
+        resume_unwind(payload);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_sequential_for_any_thread_count() {
+        for n in [0usize, 1, 2, 3, 7, 16, 31] {
+            let want: Vec<usize> = (0..n).map(|i| i * i + 1).collect();
+            for threads in [1usize, 2, 3, 5, 16] {
+                let got = par_map(n, threads, |i| i * i + 1);
+                assert_eq!(got, want, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_for_each_mut_touches_every_slot_once() {
+        for threads in [1usize, 2, 4, 9] {
+            let mut items = vec![0u32; 23];
+            par_for_each_mut(&mut items, threads, |i, item| {
+                *item += i as u32 + 1;
+            });
+            let want: Vec<u32> = (0..23).map(|i| i + 1).collect();
+            assert_eq!(items, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn negotiate_clamps_to_core_budget() {
+        let cores = max_threads();
+        assert_eq!(negotiate_intra_threads(1, 0), 1, "requests are at least 1");
+        assert_eq!(negotiate_intra_threads(0, 4), 4usize.clamp(1, cores));
+        assert!(negotiate_intra_threads(2, usize::MAX) * 2 <= cores.max(2));
+        assert_eq!(
+            negotiate_intra_threads(cores + 1, 8),
+            1,
+            "oversubscribed pools fall back to 1 intra thread"
+        );
+    }
+
+    #[test]
+    fn par_map_propagates_panics() {
+        let caught = std::panic::catch_unwind(|| {
+            par_map(8, 4, |i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+                i
+            })
+        });
+        assert!(caught.is_err(), "panic in a chunk must reach the caller");
+    }
+}

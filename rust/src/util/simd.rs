@@ -1,0 +1,350 @@
+//! Runtime-dispatched kernels for the packed-spike hot path.
+//!
+//! The paper's SC attention datapath is AND gates + counters; the CPU
+//! analogue is `(qw & kw).count_ones()` over packed `u64` words.  This
+//! module hosts the wide versions of that kernel — AVX2 on x86-64 (a
+//! pshufb nibble-LUT popcount accumulated with `_mm256_sad_epu8`), NEON
+//! `vcnt` on aarch64 — selected **at runtime** via CPU-feature detection,
+//! with the portable scalar loop as the pinned reference everything else
+//! must match bit-for-bit.  Popcount is integer-exact, so every kernel
+//! returns the identical `u32` for identical inputs; the property tests
+//! in `tests/property_tests.rs` and the in-module tests pin that.
+//!
+//! Dispatch is a process-global decision cached in an atomic: the first
+//! call detects CPU features (honouring the `SSA_SIMD=scalar` escape
+//! hatch in the environment) and later calls pay one relaxed load.  The
+//! `--simd scalar` CLI flag routes through [`set_simd_mode`], which
+//! recomputes the cached choice — used by `bench_native` to measure the
+//! scalar-vs-SIMD speedup inside one process and by CI to run the whole
+//! tier-1 suite with the SIMD family forced off.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Kernel-selection policy for [`set_simd_mode`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Pick the widest kernel the CPU supports (the default).
+    Auto,
+    /// Pin the portable scalar reference kernel.
+    ForceScalar,
+}
+
+const K_UNINIT: u8 = 0;
+const K_SCALAR: u8 = 1;
+const K_AVX2: u8 = 2;
+const K_NEON: u8 = 3;
+
+/// Cached kernel choice; `K_UNINIT` until first use or [`set_simd_mode`].
+static KERNEL: AtomicU8 = AtomicU8::new(K_UNINIT);
+
+fn select_kernel(force_scalar: bool) -> u8 {
+    if force_scalar {
+        return K_SCALAR;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx2") {
+        return K_AVX2;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        return K_NEON;
+    }
+    K_SCALAR
+}
+
+#[cold]
+fn init_slow() -> u8 {
+    let force = std::env::var("SSA_SIMD")
+        .map(|v| v.eq_ignore_ascii_case("scalar"))
+        .unwrap_or(false);
+    let k = select_kernel(force);
+    KERNEL.store(k, Ordering::Relaxed);
+    k
+}
+
+#[inline]
+fn active_kernel() -> u8 {
+    let k = KERNEL.load(Ordering::Relaxed);
+    if k != K_UNINIT {
+        k
+    } else {
+        init_slow()
+    }
+}
+
+/// Override the dispatch decision (process-global).  `Auto` re-detects
+/// CPU features, overriding any `SSA_SIMD=scalar` in the environment;
+/// `ForceScalar` pins the reference kernel.  Safe to toggle at any time:
+/// every kernel is bit-identical, so in-flight work is unaffected.
+pub fn set_simd_mode(mode: SimdMode) {
+    KERNEL.store(select_kernel(matches!(mode, SimdMode::ForceScalar)), Ordering::Relaxed);
+}
+
+/// Name of the kernel the next [`and_popcount`] call will dispatch to
+/// (`"avx2"`, `"neon"`, or `"scalar"`) — recorded in `BENCH_native.json`.
+pub fn kernel_name() -> &'static str {
+    match active_kernel() {
+        K_AVX2 => "avx2",
+        K_NEON => "neon",
+        _ => "scalar",
+    }
+}
+
+/// Comma-joined list of the popcount-relevant CPU features detected at
+/// runtime (empty on architectures without a feature probe).
+pub fn cpu_features() -> String {
+    cpu_features_impl()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn cpu_features_impl() -> String {
+    let mut feats = Vec::new();
+    if is_x86_feature_detected!("sse2") {
+        feats.push("sse2");
+    }
+    if is_x86_feature_detected!("ssse3") {
+        feats.push("ssse3");
+    }
+    if is_x86_feature_detected!("popcnt") {
+        feats.push("popcnt");
+    }
+    if is_x86_feature_detected!("avx") {
+        feats.push("avx");
+    }
+    if is_x86_feature_detected!("avx2") {
+        feats.push("avx2");
+    }
+    if is_x86_feature_detected!("avx512vpopcntdq") {
+        feats.push("avx512vpopcntdq");
+    }
+    feats.join(",")
+}
+
+#[cfg(target_arch = "aarch64")]
+fn cpu_features_impl() -> String {
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        "neon".to_string()
+    } else {
+        String::new()
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn cpu_features_impl() -> String {
+    String::new()
+}
+
+/// `popcount(a AND b)` over equal-length word slices — the SAU dot
+/// product (paper eq. 5 sum), dispatched to the widest available kernel.
+#[inline]
+pub fn and_popcount(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if active_kernel() == K_AVX2 && a.len() >= 4 {
+        // SAFETY: K_AVX2 is only ever selected when AVX2 was detected at
+        // runtime on this CPU (select_kernel).
+        return unsafe { and_popcount_avx2(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if active_kernel() == K_NEON && a.len() >= 2 {
+        // SAFETY: K_NEON is only ever selected when NEON was detected at
+        // runtime on this CPU (select_kernel).
+        return unsafe { and_popcount_neon(a, b) };
+    }
+    and_popcount_scalar(a, b)
+}
+
+/// The pinned portable reference every SIMD kernel must match bit-exactly.
+#[inline]
+pub fn and_popcount_scalar(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x & y).count_ones()).sum()
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn and_popcount_avx2(a: &[u64], b: &[u64]) -> u32 {
+    use std::arch::x86_64::*;
+    // Mula's pshufb popcount: a 16-entry nibble LUT counts each half-byte,
+    // and `_mm256_sad_epu8` horizontally sums the 32 byte counts into four
+    // u64 lanes every iteration, so byte accumulators can never overflow.
+    let lut = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, 0, 1, 1, 2, 1, 2, 2, 3, 1,
+        2, 2, 3, 2, 3, 3, 4,
+    );
+    let low_mask = _mm256_set1_epi8(0x0f);
+    let mut acc = _mm256_setzero_si256();
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let va = _mm256_loadu_si256(a.as_ptr().add(i * 4) as *const __m256i);
+        let vb = _mm256_loadu_si256(b.as_ptr().add(i * 4) as *const __m256i);
+        let v = _mm256_and_si256(va, vb);
+        let lo = _mm256_and_si256(v, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low_mask);
+        let cnt =
+            _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, _mm256_setzero_si256()));
+    }
+    let mut lanes = [0u64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    let mut total = (lanes[0] + lanes[1] + lanes[2] + lanes[3]) as u32;
+    // ragged tail (< 256 bits) stays on the scalar reference
+    for (x, y) in a[chunks * 4..].iter().zip(&b[chunks * 4..]) {
+        total += (x & y).count_ones();
+    }
+    total
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn and_popcount_neon(a: &[u64], b: &[u64]) -> u32 {
+    use std::arch::aarch64::*;
+    let mut total = 0u32;
+    let chunks = a.len() / 2;
+    for i in 0..chunks {
+        let v = vandq_u64(vld1q_u64(a.as_ptr().add(i * 2)), vld1q_u64(b.as_ptr().add(i * 2)));
+        // 16 byte counts of <= 8 each sum to <= 128: fits vaddv's u8 result
+        total += vaddvq_u8(vcntq_u8(vreinterpretq_u8_u64(v))) as u32;
+    }
+    for (x, y) in a[chunks * 2..].iter().zip(&b[chunks * 2..]) {
+        total += (x & y).count_ones();
+    }
+    total
+}
+
+/// In-place transpose of a 64x64 bit block stored as 64 row words in the
+/// crate's LSB-first convention (bit `c` of `block[r]` is column `c`).
+///
+/// The classic recursive halving scheme (Hacker's Delight 7-3) adapted to
+/// LSB-first: at granularity `j` the low half of each word pair swaps with
+/// the high half of its partner `j` rows down, so after log2(64) rounds
+/// bit `(r, c)` has moved to `(c, r)`.  Word ops only — this is what makes
+/// `BitMatrix::transpose_into` run at word speed instead of per set bit.
+pub fn transpose_64x64(block: &mut [u64; 64]) {
+    let mut m: u64 = 0x0000_0000_ffff_ffff;
+    let mut j = 32usize;
+    while j != 0 {
+        let mut k = 0;
+        while k < 64 {
+            let t = ((block[k] >> j) ^ block[k + j]) & m;
+            block[k] ^= t << j;
+            block[k + j] ^= t;
+            k = (k + j + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m << j; // j == 0 on the final pass: m ^= m << 0 is harmless
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn random_words(rng: &mut Xoshiro256, n: usize) -> Vec<u64> {
+        (0..n).map(|_| rng.next_u64()).collect()
+    }
+
+    #[test]
+    fn dispatched_matches_scalar_over_lengths_and_patterns() {
+        let mut rng = Xoshiro256::new(42);
+        for len in 0..40 {
+            let a = random_words(&mut rng, len);
+            let b = random_words(&mut rng, len);
+            assert_eq!(and_popcount(&a, &b), and_popcount_scalar(&a, &b), "len={len}");
+            let ones = vec![!0u64; len];
+            let zeros = vec![0u64; len];
+            assert_eq!(and_popcount(&ones, &ones), (len * 64) as u32, "all-ones len={len}");
+            assert_eq!(and_popcount(&ones, &zeros), 0, "zeros len={len}");
+        }
+    }
+
+    #[test]
+    fn force_scalar_mode_is_bit_identical_and_reversible() {
+        let mut rng = Xoshiro256::new(7);
+        let a = random_words(&mut rng, 13);
+        let b = random_words(&mut rng, 13);
+        let auto = and_popcount(&a, &b);
+        set_simd_mode(SimdMode::ForceScalar);
+        assert_eq!(kernel_name(), "scalar");
+        assert_eq!(and_popcount(&a, &b), auto);
+        set_simd_mode(SimdMode::Auto);
+        assert_eq!(and_popcount(&a, &b), auto);
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_kernel_matches_scalar_when_available() {
+        if !is_x86_feature_detected!("avx2") {
+            return;
+        }
+        let mut rng = Xoshiro256::new(99);
+        for len in [4usize, 5, 8, 11, 16, 33] {
+            let a = random_words(&mut rng, len);
+            let b = random_words(&mut rng, len);
+            // SAFETY: guarded by the runtime AVX2 check above.
+            let wide = unsafe { and_popcount_avx2(&a, &b) };
+            assert_eq!(wide, and_popcount_scalar(&a, &b), "len={len}");
+        }
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[test]
+    fn neon_kernel_matches_scalar_when_available() {
+        if !std::arch::is_aarch64_feature_detected!("neon") {
+            return;
+        }
+        let mut rng = Xoshiro256::new(99);
+        for len in [2usize, 3, 4, 7, 16, 33] {
+            let a = random_words(&mut rng, len);
+            let b = random_words(&mut rng, len);
+            // SAFETY: guarded by the runtime NEON check above.
+            let wide = unsafe { and_popcount_neon(&a, &b) };
+            assert_eq!(wide, and_popcount_scalar(&a, &b), "len={len}");
+        }
+    }
+
+    #[test]
+    fn transpose_64x64_matches_per_bit_reference() {
+        let mut rng = Xoshiro256::new(3);
+        for _ in 0..20 {
+            let mut block = [0u64; 64];
+            for w in block.iter_mut() {
+                *w = rng.next_u64();
+            }
+            let mut want = [0u64; 64];
+            for (r, &row) in block.iter().enumerate() {
+                for c in 0..64 {
+                    if (row >> c) & 1 == 1 {
+                        want[c] |= 1u64 << r;
+                    }
+                }
+            }
+            let mut got = block;
+            transpose_64x64(&mut got);
+            assert_eq!(got, want);
+            transpose_64x64(&mut got);
+            assert_eq!(got, block, "transpose is an involution");
+        }
+    }
+
+    #[test]
+    fn transpose_64x64_identity_and_single_bits() {
+        let mut id = [0u64; 64];
+        for (r, w) in id.iter_mut().enumerate() {
+            *w = 1u64 << r;
+        }
+        let mut t = id;
+        transpose_64x64(&mut t);
+        assert_eq!(t, id, "the identity block is its own transpose");
+
+        for (r, c) in [(0usize, 63usize), (63, 0), (17, 42), (31, 32)] {
+            let mut b = [0u64; 64];
+            b[r] = 1u64 << c;
+            transpose_64x64(&mut b);
+            let mut want = [0u64; 64];
+            want[c] = 1u64 << r;
+            assert_eq!(b, want, "bit ({r},{c})");
+        }
+    }
+}

@@ -41,9 +41,20 @@ fn artifacts(tag: &str) -> PathBuf {
 }
 
 fn start(dir: PathBuf, workers: usize, max_batch: usize, delay_ms: u64) -> Coordinator {
+    start_intra(dir, workers, 1, max_batch, delay_ms)
+}
+
+fn start_intra(
+    dir: PathBuf,
+    workers: usize,
+    intra_threads: usize,
+    max_batch: usize,
+    delay_ms: u64,
+) -> Coordinator {
     let mut cfg = CoordinatorConfig::new(dir)
         .with_backend(BackendKind::Native)
-        .with_workers(workers);
+        .with_workers(workers)
+        .with_intra_threads(intra_threads);
     cfg.policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(delay_ms) };
     cfg.preload = vec!["ssa_t4".into()];
     Coordinator::start(cfg).expect("pool coordinator must start")
@@ -79,6 +90,41 @@ fn fixed_seed_results_bit_identical_across_worker_counts() {
     assert_eq!(
         single, pooled,
         "Fixed(77) logits must be bit-identical for --workers 1 vs --workers 4"
+    );
+}
+
+#[test]
+fn fixed_seed_results_bit_identical_across_intra_thread_counts() {
+    // The intra-request twin of the worker-count determinism contract:
+    // splitting each request across batch rows and attention heads inside
+    // a worker must not move a single logit bit, for any combination of
+    // worker count and intra-thread budget.  (The pool may clamp the
+    // requested budget on small machines — the contract holds for the
+    // clamped value too, which is exactly what runs here.)
+    let dir = artifacts("intra-determinism");
+    let run = |workers: usize, intra: usize| -> Vec<Vec<f32>> {
+        let coord = start_intra(dir.clone(), workers, intra, 4, 5);
+        let rxs: Vec<_> = (0..24)
+            .map(|i| {
+                coord
+                    .submit(Target::ssa(4), image(i), SeedPolicy::Fixed(77))
+                    .expect("submit")
+            })
+            .collect();
+        let out = rxs.into_iter().map(|rx| rx.recv().expect("reply").logits).collect();
+        coord.shutdown();
+        out
+    };
+    let sequential = run(1, 1);
+    assert_eq!(
+        sequential,
+        run(1, 4),
+        "Fixed(77) logits must be bit-identical for --intra-threads 1 vs 4"
+    );
+    assert_eq!(
+        sequential,
+        run(2, 2),
+        "Fixed(77) logits must be bit-identical for 2 workers x 2 intra-threads"
     );
 }
 

@@ -4,7 +4,7 @@
 
 use ssa_repro::anytime::{margin_of, ExitPolicy};
 use ssa_repro::attention::lif::LifLayer;
-use ssa_repro::attention::model::{Arch, ModelGeometry, NativeModel};
+use ssa_repro::attention::model::{image_seed, Arch, ModelGeometry, NativeModel};
 use ssa_repro::attention::ssa::bern_compare;
 use ssa_repro::config::{LifConfig, PrngSharing};
 use ssa_repro::prop::{check, ensure, Gen};
@@ -13,6 +13,7 @@ use ssa_repro::runtime::{Dataset, Weights};
 use ssa_repro::tensor::{spike_matmul, spike_matmul_into, Tensor};
 use ssa_repro::util::bitpack::BitMatrix;
 use ssa_repro::util::json::Json;
+use ssa_repro::util::simd;
 
 #[test]
 fn prop_and_popcount_matches_naive() {
@@ -29,6 +30,89 @@ fn prop_and_popcount_matches_naive() {
             am.and_popcount(0, &bm, 0) == naive,
             format!("cols={cols}: {} != {naive}", am.and_popcount(0, &bm, 0)),
         )
+    });
+}
+
+#[test]
+fn prop_simd_and_popcount_matches_scalar_kernel() {
+    // The SIMD dispatch contract: whatever kernel the CPU resolves to,
+    // the result is the scalar reference's, bit for bit, over arbitrary
+    // slice lengths (covering the wide kernels' ragged tails and their
+    // below-minimum-length fallback) and densities from dead-silent to
+    // saturated.
+    check("simd::and_popcount == scalar kernel", 400, |g| {
+        let words = g.usize_in(0, 40);
+        let fill = g.usize_in(0, 3);
+        let word = |g: &mut Gen| match fill {
+            0 => 0u64,
+            1 => u64::MAX,
+            _ => g.u64(),
+        };
+        let a: Vec<u64> = (0..words).map(|_| word(g)).collect();
+        let b: Vec<u64> = (0..words).map(|_| word(g)).collect();
+        let scalar = simd::and_popcount_scalar(&a, &b);
+        let dispatched = simd::and_popcount(&a, &b);
+        ensure(
+            dispatched == scalar,
+            format!(
+                "words={words} fill={fill}: {} kernel returned {dispatched}, scalar {scalar}",
+                simd::kernel_name()
+            ),
+        )
+    });
+}
+
+#[test]
+fn prop_blockwise_transpose_matches_per_bit_reference() {
+    // The word-level 64x64 block transpose behind `transpose_into` must
+    // agree with the naive per-bit definition over arbitrary shapes —
+    // including both dimensions ragged against the 64-bit word grid.
+    check("blockwise transpose == per-bit reference", 120, |g| {
+        let rows = g.usize_in(1, 150);
+        let cols = g.usize_in(1, 150);
+        let rate = [0.0, 0.05, 0.5, 1.0][g.usize_in(0, 3)];
+        let m = BitMatrix::from_f01(rows, cols, &g.spikes(rows * cols, rate));
+        let t = m.transpose();
+        for r in 0..rows {
+            for c in 0..cols {
+                ensure(
+                    m.get(r, c) == t.get(c, r),
+                    format!("{rows}x{cols} rate={rate}: bit ({r},{c}) lost in transpose"),
+                )?;
+            }
+        }
+        ensure(t.transpose() == m, "transpose not involutive")
+    });
+}
+
+#[test]
+fn prop_infer_rows_bit_identical_across_intra_thread_counts() {
+    // The intra-request parallelism contract end to end: splitting one
+    // request across batch rows and attention heads must reproduce the
+    // sequential logits bit for bit, for any geometry, arch, batch size,
+    // and thread count (including counts exceeding rows x heads).
+    check("infer_rows == sequential for any intra-threads", 12, |g| {
+        let arch = [Arch::Ssa, Arch::Spikformer, Arch::Ann][g.usize_in(0, 2)];
+        let (mut m, img) = random_tiny_model(g, arch);
+        let px = img.len();
+        let batch = g.usize_in(1, 4);
+        let images: Vec<f32> = (0..batch * px).map(|i| img[i % px] * 0.9).collect();
+        let seeds: Vec<u64> = (0..batch).map(|i| image_seed(g.u64() as u32, i)).collect();
+        let want =
+            m.infer_rows(&images, batch, &seeds).map_err(|e| format!("sequential: {e:#}"))?;
+        for threads in [2, 3, g.usize_in(4, 9)] {
+            m.set_intra_threads(threads);
+            let got = m
+                .infer_rows(&images, batch, &seeds)
+                .map_err(|e| format!("{threads}t: {e:#}"))?;
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                ensure(
+                    a.to_bits() == b.to_bits(),
+                    format!("{arch:?} batch={batch} threads={threads}: logit {i}: {a} != {b}"),
+                )?;
+            }
+        }
+        Ok(())
     });
 }
 

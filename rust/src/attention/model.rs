@@ -422,6 +422,101 @@ impl NativeModel {
         .collect()
     }
 
+    /// [`Self::infer_anytime`] with per-stage wall-clock attribution
+    /// summed across rows (the serving tracer's model-forward seam).
+    /// Outcomes are bit-identical to the untimed call — timing reads
+    /// `Instant::now()` around stages and never touches the arithmetic.
+    /// The deterministic ANN arch reports zero stage time.
+    pub fn infer_anytime_timed(
+        &self,
+        images: &[f32],
+        batch: usize,
+        seed: u32,
+        policy: &ExitPolicy,
+    ) -> Result<(Vec<InferOutcome>, StageTimings)> {
+        let px = self.geo.image_size * self.geo.image_size;
+        anyhow::ensure!(
+            images.len() == batch * px,
+            "images buffer has {} elements, expected {} ({} x {px})",
+            images.len(),
+            batch * px,
+            batch
+        );
+        let (row_threads, head_threads) = self.row_split(batch);
+        let rows = crate::util::par::par_map(batch, row_threads, |i| {
+            self.infer_image_anytime_timed_ht(
+                &images[i * px..(i + 1) * px],
+                image_seed(seed, i),
+                policy,
+                head_threads,
+            )
+        });
+        collect_timed_rows(rows)
+    }
+
+    /// [`Self::infer_rows_anytime`] with per-stage wall-clock attribution
+    /// summed across rows.  Same bit-exactness contract as
+    /// [`Self::infer_anytime_timed`].
+    pub fn infer_rows_anytime_timed(
+        &self,
+        images: &[f32],
+        batch: usize,
+        row_seeds: &[u64],
+        policy: &ExitPolicy,
+    ) -> Result<(Vec<InferOutcome>, StageTimings)> {
+        let px = self.geo.image_size * self.geo.image_size;
+        anyhow::ensure!(
+            images.len() == batch * px,
+            "images buffer has {} elements, expected {} ({} x {px})",
+            images.len(),
+            batch * px,
+            batch
+        );
+        anyhow::ensure!(
+            row_seeds.len() == batch,
+            "{} row seeds for a batch of {batch}",
+            row_seeds.len()
+        );
+        let (row_threads, head_threads) = self.row_split(batch);
+        let rows = crate::util::par::par_map(batch, row_threads, |i| {
+            self.infer_image_anytime_timed_ht(
+                &images[i * px..(i + 1) * px],
+                row_seeds[i],
+                policy,
+                head_threads,
+            )
+        });
+        collect_timed_rows(rows)
+    }
+
+    fn infer_image_anytime_timed_ht(
+        &self,
+        image: &[f32],
+        seed: u64,
+        policy: &ExitPolicy,
+        head_threads: usize,
+    ) -> Result<(InferOutcome, StageTimings)> {
+        let patches = patchify(image, self.geo.image_size, self.geo.patch_size);
+        match self.arch {
+            Arch::Ann => {
+                let logits = self.ann_forward(&patches);
+                let margin = margin_of(&logits);
+                Ok((InferOutcome { logits, steps_used: 1, margin }, StageTimings::default()))
+            }
+            Arch::Ssa | Arch::Spikformer => {
+                let mut tm = StageTimings::default();
+                let out = self.spiking_forward_anytime(
+                    &patches,
+                    seed,
+                    policy,
+                    Some(&mut tm),
+                    head_threads,
+                )?;
+                Ok((out, tm))
+            }
+        }
+    }
+
     // --- spiking forward (SSA / Spikformer) --------------------------------
 
     /// Build the per-request layer stack (LIF membranes + PRNG banks +
@@ -636,6 +731,23 @@ fn collect_logit_rows(rows: Vec<Result<Vec<f32>>>, capacity: usize) -> Result<Ve
         logits.extend(row?);
     }
     Ok(logits)
+}
+
+/// Collect per-row `(outcome, timings)` results, summing the stage
+/// timings across rows.  The summed breakdown is CPU-time attribution:
+/// when rows ran on parallel intra-request threads it can exceed the
+/// batch's wall time.
+fn collect_timed_rows(
+    rows: Vec<Result<(InferOutcome, StageTimings)>>,
+) -> Result<(Vec<InferOutcome>, StageTimings)> {
+    let mut outcomes = Vec::with_capacity(rows.len());
+    let mut total = StageTimings::default();
+    for row in rows {
+        let (out, tm) = row?;
+        total.accumulate(&tm);
+        outcomes.push(out);
+    }
+    Ok((outcomes, total))
 }
 
 /// Column-wise mean of a packed spike frame into a pre-sized `[1, cols]`

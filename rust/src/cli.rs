@@ -6,7 +6,8 @@
 //!                       [--target ssa_t10] [--ensemble K] [--workers N]
 //!                       [--listen ADDR] [--max-inflight N] [--synthetic]
 //! ssa-repro classify-remote --addr HOST:PORT [--target T] [--n N]
-//!                       [--metrics] [--shutdown]
+//!                       [--metrics] [--prometheus] [--trace-dump FILE]
+//!                       [--shutdown]
 //! ssa-repro serve-bench [--synthetic] [--workers 1,4] [--concurrency C | --rps R]
 //!                       [--duration SECS] [--mix "ssa_t4*3,ann@fixed:7"]
 //!                       [--remote HOST:PORT]
@@ -124,11 +125,13 @@ USAGE:
                         [--intra-threads N] [--simd auto|scalar]
                         [--ensemble K] [--max-batch B] [--max-delay-ms D]
                         [--listen HOST:PORT] [--max-inflight N]
+                        [--trace on|off]
   ssa-repro classify-remote --addr HOST:PORT
                         [--target ssa_t4] [--n N] [--seed S]
                         [--seed-policy perbatch|fixed:N|ensemble:K]
                         [--exit full|margin:TH[:MIN]|deadline:B]
-                        [--metrics] [--shutdown]
+                        [--metrics] [--prometheus] [--trace-dump FILE]
+                        [--shutdown]
   ssa-repro serve-bench [--artifacts DIR | --synthetic]
                         [--backend native|xla] [--workers N[,M,...]]
                         [--intra-threads N]
@@ -136,7 +139,7 @@ USAGE:
                         [--mix \"ssa_t4*3,ann@fixed:7!margin:0.5\"]
                         [--seed-policy perbatch|fixed:N|ensemble:K]
                         [--max-batch B] [--max-delay-ms D] [--seed S]
-                        [--remote HOST:PORT]
+                        [--remote HOST:PORT] [--trace on|off|both]
                         [--out BENCH_serving.json]
   ssa-repro sweep-anytime [--artifacts DIR | --synthetic]
                         [--target ssa_t10] [--n N_IMAGES]
@@ -191,6 +194,26 @@ Network serving (DESIGN.md section 3 specifies the wire protocol):
                    (default target: the server's first), print round-trip
                    latencies; --metrics fetches the server's plaintext
                    metrics report, --shutdown requests a graceful drain
+
+Observability (DESIGN.md \"Observability\" section):
+  --trace on|off   request-lifecycle tracing (serve / serve-bench;
+                   default on): every request carries spans — frame
+                   decode, queue wait, batch, per-stage model forward,
+                   reply send — into lock-free per-worker rings.  `off`
+                   disables recording entirely (the zero-overhead
+                   baseline); serve-bench accepts `both` (the default)
+                   to run each leg twice and report the tracing
+                   overhead delta in BENCH_serving.json
+  --prometheus     (classify-remote) fetch the server's metrics in
+                   Prometheus text exposition format instead of the
+                   plaintext report: counters, gauges (queue depth,
+                   oldest-request age), latency / steps-used histograms
+                   per target, per-worker utilization
+  --trace-dump FILE
+                   (classify-remote) drain the server's span rings into
+                   Chrome trace-event JSON at FILE (load it via
+                   chrome://tracing or https://ui.perfetto.dev);
+                   draining consumes the spans
 
 Anytime inference (early exit over SNN time steps; DESIGN.md 2d):
   --exit POLICY    stop integrating time steps per image once POLICY
@@ -282,11 +305,23 @@ pub const KNOWN_FLAGS: &[(&str, &[&str])] = &[
             "listen",
             "max-inflight",
             "synthetic",
+            "trace",
         ],
     ),
     (
         "classify-remote",
-        &["addr", "target", "n", "seed", "seed-policy", "exit", "metrics", "shutdown"],
+        &[
+            "addr",
+            "target",
+            "n",
+            "seed",
+            "seed-policy",
+            "exit",
+            "metrics",
+            "prometheus",
+            "trace-dump",
+            "shutdown",
+        ],
     ),
     (
         "serve-bench",
@@ -305,6 +340,7 @@ pub const KNOWN_FLAGS: &[(&str, &[&str])] = &[
             "max-delay-ms",
             "seed",
             "remote",
+            "trace",
             "out",
         ],
     ),
@@ -323,7 +359,7 @@ pub const KNOWN_FLAGS: &[(&str, &[&str])] = &[
 /// The registered names that are genuinely boolean (presence-only).
 /// Every other name in [`KNOWN_FLAGS`] takes a value, and
 /// [`check_known_flags`] rejects it when the value is missing.
-pub const BOOLEAN_FLAGS: &[&str] = &["synthetic", "trace", "metrics", "shutdown"];
+pub const BOOLEAN_FLAGS: &[&str] = &["synthetic", "trace", "metrics", "prometheus", "shutdown"];
 
 /// Reject options no subcommand documents — a typo like `--worker 4`
 /// must fail loudly instead of silently falling back to a default — and
@@ -440,13 +476,13 @@ mod tests {
             "serve --artifacts a --backend native --requests 4 --target ssa_t10 \
              --workers 2 --intra-threads 2 --simd auto --ensemble 2 --max-batch 4 \
              --max-delay-ms 2",
-            "serve --listen 127.0.0.1:0 --synthetic --max-inflight 64",
+            "serve --listen 127.0.0.1:0 --synthetic --max-inflight 64 --trace off",
             "classify-remote --addr 127.0.0.1:7878 --target ssa_t4 \
              --seed-policy fixed:7 --exit margin:0.5:2 --n 2 --seed 9 \
-             --metrics --shutdown",
+             --metrics --prometheus --trace-dump t.json --shutdown",
             "serve-bench --synthetic --workers 1,4 --intra-threads 2 --concurrency 16 \
              --duration 1 --mix ssa_t4 --seed-policy perbatch --max-batch 2 \
-             --max-delay-ms 5 --seed 7 --out b.json",
+             --max-delay-ms 5 --seed 7 --trace both --out b.json",
             "serve-bench --artifacts a --backend native --rps 100 --duration 1",
             "serve-bench --remote 127.0.0.1:7878 --concurrency 4 --duration 1",
             "bench-native --budget 0.5 --warmup 0.1 --batch 4 --layers 1 --t 4 \

@@ -71,7 +71,7 @@ impl Batcher {
             q = self.cv.wait(q).unwrap();
         }
         // fill window: oldest item anchors the deadline
-        let deadline = q.items.front().unwrap().submitted_at + self.policy.max_delay;
+        let deadline = q.items.front().unwrap().trace.submitted_at + self.policy.max_delay;
         while q.items.len() < self.policy.max_batch && !q.closed {
             let now = Instant::now();
             if now >= deadline {
@@ -119,7 +119,7 @@ mod tests {
             image: vec![0.0; 4],
             seed_policy: SeedPolicy::PerBatch,
             exit: crate::anytime::ExitPolicy::Full,
-            submitted_at: Instant::now(),
+            trace: crate::obs::TraceCtx::in_process(),
             reply: tx,
         }
     }

@@ -11,7 +11,11 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::attention::block::StageTimings;
+use crate::obs::prom::PromWriter;
 use crate::util::stats::{LatencySummary, LogHistogram, StepsSummary};
+
+use super::router::QueueSnapshot;
 
 #[derive(Default)]
 struct TargetMetrics {
@@ -20,10 +24,40 @@ struct TargetMetrics {
     /// spike at the variant's `T` under `full`, a spread below it under
     /// an early-exit policy.
     steps: LogHistogram,
+    /// Sum of per-request confidence margins (top-1 minus top-2 of the
+    /// returned logits); divided by `requests` for the mean-margin gauge.
+    margin_sum: f64,
     batches: u64,
     requests: u64,
     fill_sum: f64,
     errors: u64,
+}
+
+/// How many slow-request exemplars the registry retains (top-K by
+/// latency since the last window reset).
+const EXEMPLAR_K: usize = 5;
+
+/// One slow-request exemplar: the full span breakdown of a high-latency
+/// request, kept so "p99 is bad" comes with a concrete where-did-the-
+/// time-go answer in the metrics report.
+#[derive(Clone, Debug)]
+pub struct Exemplar {
+    /// Coordinator-assigned request id.
+    pub id: u64,
+    /// Manifest variant key of the target served.
+    pub target: String,
+    /// End-to-end latency (submit → reply) in microseconds.
+    pub latency_us: f64,
+    /// Time spent queued before batch extraction, in microseconds.
+    pub queue_us: f64,
+    /// SNN time steps the row actually ran.
+    pub steps_used: usize,
+    /// Requests sharing the executed batch.
+    pub batch_size: usize,
+    /// Per-stage model-forward breakdown for the batch that served this
+    /// request (absent when the backend cannot attribute stages, e.g.
+    /// the ensemble path or a non-native backend).
+    pub stages: Option<StageTimings>,
 }
 
 #[derive(Clone, Default)]
@@ -39,6 +73,8 @@ pub struct Metrics {
     started: Mutex<Instant>,
     by_target: Mutex<HashMap<String, TargetMetrics>>,
     by_worker: Mutex<HashMap<usize, WorkerMetrics>>,
+    /// Top-[`EXEMPLAR_K`] slowest requests this window, latency-descending.
+    slow: Mutex<Vec<Exemplar>>,
 }
 
 /// A rendered snapshot for one target.
@@ -52,6 +88,9 @@ pub struct TargetReport {
     pub latency: Option<LatencySummary>,
     /// Steps-used distribution (`steps.mean` is the mean-steps gauge).
     pub steps: Option<StepsSummary>,
+    /// Mean per-request confidence margin (anytime telemetry; `None`
+    /// before any request completes).
+    pub mean_margin: Option<f64>,
     pub throughput_rps: f64,
 }
 
@@ -72,6 +111,7 @@ impl Metrics {
             started: Mutex::new(Instant::now()),
             by_target: Mutex::new(HashMap::new()),
             by_worker: Mutex::new(HashMap::new()),
+            slow: Mutex::new(Vec::new()),
         }
     }
 
@@ -85,6 +125,7 @@ impl Metrics {
         for v in self.by_worker.lock().unwrap().values_mut() {
             *v = WorkerMetrics::default();
         }
+        self.slow.lock().unwrap().clear();
         *self.started.lock().unwrap() = Instant::now();
     }
 
@@ -95,6 +136,7 @@ impl Metrics {
         max_batch: usize,
         lat_us: &[f64],
         steps: &[f64],
+        margins: &[f64],
     ) {
         let mut m = self.by_target.lock().unwrap();
         let e = m.entry(target.to_string()).or_default();
@@ -107,6 +149,34 @@ impl Metrics {
         for &s in steps {
             e.steps.record(s);
         }
+        for &g in margins {
+            if g.is_finite() {
+                e.margin_sum += g;
+            }
+        }
+    }
+
+    /// Offer a slow-request candidate (workers submit their batch's
+    /// slowest request).  Kept only if it ranks in the top
+    /// [`EXEMPLAR_K`] latencies of the current window.
+    pub fn record_exemplar(&self, ex: Exemplar) {
+        let mut slow = self.slow.lock().unwrap();
+        if slow.len() == EXEMPLAR_K
+            && slow.last().is_some_and(|last| last.latency_us >= ex.latency_us)
+        {
+            return;
+        }
+        let at = slow
+            .iter()
+            .position(|e| e.latency_us < ex.latency_us)
+            .unwrap_or(slow.len());
+        slow.insert(at, ex);
+        slow.truncate(EXEMPLAR_K);
+    }
+
+    /// The current window's slowest requests, latency-descending.
+    pub fn slow_exemplars(&self) -> Vec<Exemplar> {
+        self.slow.lock().unwrap().clone()
     }
 
     pub fn record_error(&self, target: &str) {
@@ -154,6 +224,8 @@ impl Metrics {
                 } else {
                     Some(StepsSummary::from_histogram(&v.steps))
                 },
+                mean_margin: (v.requests > 0)
+                    .then(|| v.margin_sum / v.requests as f64),
                 throughput_rps: v.requests as f64 / elapsed.max(1e-9),
             })
             .collect();
@@ -180,7 +252,20 @@ impl Metrics {
     }
 
     pub fn render(&self) -> String {
+        self.render_with(None)
+    }
+
+    /// The human-readable metrics report, optionally with the router's
+    /// queue gauges (the `metrics` verb passes a live snapshot).
+    pub fn render_with(&self, queue: Option<QueueSnapshot>) -> String {
         let mut s = String::from("=== coordinator metrics ===\n");
+        if let Some(q) = queue {
+            s.push_str(&format!(
+                "queue: depth={} oldest_age={:.1}ms\n",
+                q.depth,
+                q.oldest_age_us as f64 / 1000.0
+            ));
+        }
         for r in self.report() {
             s.push_str(&format!(
                 "[{}] req={} batches={} fill={:.0}% err={} thpt={:.1}/s\n",
@@ -211,7 +296,206 @@ impl Metrics {
             }
             s.push('\n');
         }
+        let slow = self.slow_exemplars();
+        if !slow.is_empty() {
+            s.push_str("slow requests:\n");
+            for ex in slow {
+                s.push_str(&format!(
+                    "  #{} [{}] total={:.0}us queue={:.0}us steps={} batch={}",
+                    ex.id, ex.target, ex.latency_us, ex.queue_us, ex.steps_used, ex.batch_size
+                ));
+                if let Some(st) = ex.stages {
+                    s.push_str(&format!(
+                        " | embed={:.0}us qkv={:.0}us attn={:.0}us mlp={:.0}us readout={:.0}us",
+                        st.embed_us, st.qkv_us, st.attn_us, st.mlp_us, st.readout_us
+                    ));
+                }
+                s.push('\n');
+            }
+        }
         s
+    }
+
+    /// Prometheus text-format (0.0.4) exposition of the full registry.
+    ///
+    /// `queue` is the router's live queue snapshot (gauges); the span
+    /// counters come from the trace sink.  A family is declared only
+    /// when it has at least one sample, so the output always satisfies
+    /// the CI well-formedness invariant (no `# TYPE` without samples,
+    /// no duplicate family names).  Samples of one family stay
+    /// contiguous: each family loops over targets/workers, not the
+    /// other way around.
+    pub fn render_prometheus(
+        &self,
+        queue: Option<QueueSnapshot>,
+        spans_written: u64,
+        spans_lost: u64,
+    ) -> String {
+        let elapsed = self.started.lock().unwrap().elapsed().as_secs_f64();
+        let mut w = PromWriter::new();
+        w.family(
+            "ssa_uptime_seconds",
+            "gauge",
+            "Seconds since the current metrics window started.",
+        );
+        w.sample("ssa_uptime_seconds", &[], elapsed);
+        if let Some(q) = queue {
+            w.family("ssa_queue_depth", "gauge", "Requests waiting in the router queue.");
+            w.sample("ssa_queue_depth", &[], q.depth as f64);
+            w.family(
+                "ssa_queue_oldest_age_us",
+                "gauge",
+                "Age in microseconds of the oldest queued request (0 when the queue is empty).",
+            );
+            w.sample("ssa_queue_oldest_age_us", &[], q.oldest_age_us as f64);
+        }
+        {
+            let m = self.by_target.lock().unwrap();
+            let mut targets: Vec<&String> = m.keys().collect();
+            targets.sort();
+            if !targets.is_empty() {
+                w.family("ssa_requests_total", "counter", "Requests served, by target.");
+                for t in &targets {
+                    w.sample("ssa_requests_total", &[("target", t)], m[*t].requests as f64);
+                }
+                w.family("ssa_errors_total", "counter", "Requests failed, by target.");
+                for t in &targets {
+                    w.sample("ssa_errors_total", &[("target", t)], m[*t].errors as f64);
+                }
+                w.family("ssa_batches_total", "counter", "Batches executed, by target.");
+                for t in &targets {
+                    w.sample("ssa_batches_total", &[("target", t)], m[*t].batches as f64);
+                }
+                w.family(
+                    "ssa_batch_fill_ratio",
+                    "gauge",
+                    "Mean batch occupancy (requests / max_batch), by target.",
+                );
+                for t in &targets {
+                    let v = &m[*t];
+                    let fill =
+                        if v.batches == 0 { 0.0 } else { v.fill_sum / v.batches as f64 };
+                    w.sample("ssa_batch_fill_ratio", &[("target", t)], fill);
+                }
+            }
+            if targets.iter().any(|t| m[*t].latencies.count() > 0) {
+                w.family(
+                    "ssa_request_latency_us",
+                    "histogram",
+                    "End-to-end request latency (submit to reply) in microseconds.",
+                );
+                for t in &targets {
+                    let h = &m[*t].latencies;
+                    if h.count() > 0 {
+                        w.histogram(
+                            "ssa_request_latency_us",
+                            &[("target", t)],
+                            &h.octave_cumulative(),
+                            h.sum(),
+                            h.count(),
+                        );
+                    }
+                }
+            }
+            if targets.iter().any(|t| m[*t].steps.count() > 0) {
+                w.family(
+                    "ssa_steps_used",
+                    "histogram",
+                    "SNN time steps actually run per request (anytime early-exit telemetry).",
+                );
+                for t in &targets {
+                    let h = &m[*t].steps;
+                    if h.count() > 0 {
+                        w.histogram(
+                            "ssa_steps_used",
+                            &[("target", t)],
+                            &h.octave_cumulative(),
+                            h.sum(),
+                            h.count(),
+                        );
+                    }
+                }
+            }
+            if targets.iter().any(|t| m[*t].requests > 0) {
+                w.family(
+                    "ssa_confidence_margin_mean",
+                    "gauge",
+                    "Mean top-1 minus top-2 logit margin of served requests, by target.",
+                );
+                for t in &targets {
+                    let v = &m[*t];
+                    if v.requests > 0 {
+                        w.sample(
+                            "ssa_confidence_margin_mean",
+                            &[("target", t)],
+                            v.margin_sum / v.requests as f64,
+                        );
+                    }
+                }
+            }
+        }
+        {
+            let m = self.by_worker.lock().unwrap();
+            let mut workers: Vec<usize> = m.keys().copied().collect();
+            workers.sort_unstable();
+            if !workers.is_empty() {
+                let label = |id: usize| id.to_string();
+                w.family("ssa_worker_batches_total", "counter", "Batches served, by pool worker.");
+                for &id in &workers {
+                    w.sample(
+                        "ssa_worker_batches_total",
+                        &[("worker", &label(id))],
+                        m[&id].batches as f64,
+                    );
+                }
+                w.family(
+                    "ssa_worker_requests_total",
+                    "counter",
+                    "Requests served, by pool worker.",
+                );
+                for &id in &workers {
+                    w.sample(
+                        "ssa_worker_requests_total",
+                        &[("worker", &label(id))],
+                        m[&id].requests as f64,
+                    );
+                }
+                w.family(
+                    "ssa_worker_busy_seconds_total",
+                    "counter",
+                    "Seconds spent executing batches, by pool worker.",
+                );
+                for &id in &workers {
+                    w.sample(
+                        "ssa_worker_busy_seconds_total",
+                        &[("worker", &label(id))],
+                        m[&id].busy_us / 1e6,
+                    );
+                }
+                w.family(
+                    "ssa_worker_utilization_ratio",
+                    "gauge",
+                    "Busy fraction of wall time this window, by pool worker.",
+                );
+                for &id in &workers {
+                    let util = (m[&id].busy_us / (elapsed * 1e6).max(1e-9)).min(1.0);
+                    w.sample("ssa_worker_utilization_ratio", &[("worker", &label(id))], util);
+                }
+            }
+        }
+        w.family(
+            "ssa_trace_spans_written_total",
+            "counter",
+            "Trace spans recorded into the per-worker rings.",
+        );
+        w.sample("ssa_trace_spans_written_total", &[], spans_written as f64);
+        w.family(
+            "ssa_trace_spans_dropped_total",
+            "counter",
+            "Trace spans overwritten before a drain (ring overflow).",
+        );
+        w.sample("ssa_trace_spans_dropped_total", &[], spans_lost as f64);
+        w.finish()
     }
 }
 
@@ -228,9 +512,9 @@ mod tests {
     #[test]
     fn aggregates_per_target() {
         let m = Metrics::new();
-        m.record_batch("ssa_t10", 8, 8, &[100.0; 8], &[10.0; 8]);
-        m.record_batch("ssa_t10", 4, 8, &[200.0; 4], &[4.0; 4]);
-        m.record_batch("ann", 8, 8, &[50.0; 8], &[1.0; 8]);
+        m.record_batch("ssa_t10", 8, 8, &[100.0; 8], &[10.0; 8], &[0.5; 8]);
+        m.record_batch("ssa_t10", 4, 8, &[200.0; 4], &[4.0; 4], &[2.0; 4]);
+        m.record_batch("ann", 8, 8, &[50.0; 8], &[1.0; 8], &[1.0; 8]);
         m.record_error("ann");
         let rep = m.report();
         assert_eq!(rep.len(), 2);
@@ -253,7 +537,7 @@ mod tests {
     fn latency_summary_shape_survives_histogram_backing() {
         let m = Metrics::new();
         for i in 0..10_000u64 {
-            m.record_batch("ssa_t10", 1, 8, &[(i % 1000) as f64 + 1.0], &[4.0]);
+            m.record_batch("ssa_t10", 1, 8, &[(i % 1000) as f64 + 1.0], &[4.0], &[0.1]);
         }
         let rep = m.report();
         let l = rep[0].latency.clone().expect("latency summary present");
@@ -288,7 +572,7 @@ mod tests {
     fn reset_window_zeroes_counters_but_keeps_workers_listed() {
         let m = Metrics::new();
         m.register_worker(0);
-        m.record_batch("ssa_t10", 4, 8, &[100.0; 4], &[4.0; 4]);
+        m.record_batch("ssa_t10", 4, 8, &[100.0; 4], &[4.0; 4], &[0.5; 4]);
         m.record_worker(0, 4, 2_000.0);
         m.reset_window();
         assert!(m.report().is_empty(), "target counters cleared");
@@ -296,7 +580,115 @@ mod tests {
         assert_eq!(w.len(), 1, "registered workers survive the reset");
         assert_eq!(w[0].batches, 0);
         assert_eq!(w[0].busy_us, 0.0);
-        m.record_batch("ssa_t10", 2, 8, &[50.0; 2], &[4.0; 2]);
+        m.record_batch("ssa_t10", 2, 8, &[50.0; 2], &[4.0; 2], &[0.5; 2]);
         assert_eq!(m.report()[0].requests, 2, "fresh window counts from zero");
+    }
+
+    fn ex(id: u64, latency_us: f64) -> Exemplar {
+        Exemplar {
+            id,
+            target: "ssa_t10".into(),
+            latency_us,
+            queue_us: latency_us / 4.0,
+            steps_used: 10,
+            batch_size: 8,
+            stages: Some(StageTimings {
+                embed_us: 1.0,
+                qkv_us: 2.0,
+                attn_us: 3.0,
+                mlp_us: 4.0,
+                readout_us: 5.0,
+            }),
+        }
+    }
+
+    #[test]
+    fn exemplars_keep_top_k_latency_descending() {
+        let m = Metrics::new();
+        for (id, lat) in [(1, 100.0), (2, 900.0), (3, 50.0), (4, 700.0), (5, 300.0)] {
+            m.record_exemplar(ex(id, lat));
+        }
+        // two more: one displaces the tail, one is too fast to rank
+        m.record_exemplar(ex(6, 500.0));
+        m.record_exemplar(ex(7, 10.0));
+        let slow = m.slow_exemplars();
+        assert_eq!(slow.len(), EXEMPLAR_K);
+        let ids: Vec<u64> = slow.iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![2, 4, 6, 5, 1], "latency-descending top-K");
+        for pair in slow.windows(2) {
+            assert!(pair[0].latency_us >= pair[1].latency_us);
+        }
+        let rendered = m.render();
+        assert!(rendered.contains("slow requests:"));
+        assert!(rendered.contains("#2 [ssa_t10]"));
+        assert!(rendered.contains("qkv=2us"), "stage breakdown rendered");
+    }
+
+    #[test]
+    fn prometheus_exposition_is_well_formed_and_complete() {
+        let m = Metrics::new();
+        m.record_batch("ssa_t10", 8, 8, &[100.0; 8], &[10.0; 8], &[0.5; 8]);
+        m.record_batch("ann", 4, 8, &[50.0; 4], &[1.0; 4], &[1.5; 4]);
+        m.record_error("ann");
+        m.register_worker(0);
+        m.record_worker(0, 8, 1_000.0);
+        let q = QueueSnapshot { depth: 3, oldest_age_us: 1234 };
+        let text = m.render_prometheus(Some(q), 42, 1);
+
+        // every # TYPE family has at least one sample and appears once
+        let mut families = std::collections::HashSet::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let name = rest.split_whitespace().next().unwrap().to_string();
+                assert!(
+                    text.lines().any(|l| {
+                        !l.starts_with('#')
+                            && (l.starts_with(&format!("{name} "))
+                                || l.starts_with(&format!("{name}{{")))
+                    }),
+                    "family {name} declared without samples"
+                );
+                assert!(families.insert(name.clone()), "family {name} declared twice");
+            }
+        }
+        assert!(text.contains("ssa_queue_depth 3"));
+        assert!(text.contains("ssa_queue_oldest_age_us 1234"));
+        assert!(text.contains("ssa_requests_total{target=\"ann\"} 4"));
+        assert!(text.contains("ssa_requests_total{target=\"ssa_t10\"} 8"));
+        assert!(text.contains("ssa_errors_total{target=\"ann\"} 1"));
+        assert!(text.contains("ssa_request_latency_us_count{target=\"ssa_t10\"} 8"));
+        assert!(text.contains("ssa_steps_used_count{target=\"ann\"} 4"));
+        assert!(text.contains("ssa_confidence_margin_mean{target=\"ann\"} 1.5"));
+        assert!(text.contains("ssa_worker_batches_total{worker=\"0\"} 1"));
+        assert!(text.contains("ssa_trace_spans_written_total 42"));
+        assert!(text.contains("ssa_trace_spans_dropped_total 1"));
+        // histogram buckets are cumulative and end at the total count
+        let buckets: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("ssa_request_latency_us_bucket{target=\"ssa_t10\""))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert!(!buckets.is_empty());
+        assert!(buckets.windows(2).all(|p| p[0] <= p[1]));
+        assert_eq!(*buckets.last().unwrap(), 8);
+    }
+
+    #[test]
+    fn prometheus_exposition_empty_registry_still_well_formed() {
+        let m = Metrics::new();
+        let text = m.render_prometheus(None, 0, 0);
+        // only the always-on families appear; none without samples
+        assert!(text.contains("ssa_uptime_seconds"));
+        assert!(!text.contains("ssa_requests_total"));
+        assert!(!text.contains("ssa_request_latency_us"));
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let name = rest.split_whitespace().next().unwrap();
+                assert!(
+                    text.lines().any(|l| !l.starts_with('#') && l.starts_with(name)),
+                    "family {name} declared without samples"
+                );
+            }
+        }
     }
 }

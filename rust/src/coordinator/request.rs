@@ -8,9 +8,9 @@
 //! vocabulary of the in-process submit API.
 
 use std::sync::mpsc;
-use std::time::Instant;
 
 use crate::anytime::ExitPolicy;
+use crate::obs::TraceCtx;
 
 /// Which model variant a request targets.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
@@ -123,8 +123,10 @@ pub struct ClassifyRequest {
     /// the router's batch-homogeneity key: a batch runs one step loop, so
     /// mixing policies would serve tail requests under the head's policy.
     pub exit: ExitPolicy,
-    /// Submission instant — the latency clock starts here.
-    pub submitted_at: Instant,
+    /// Trace context: the admission instant (`trace.submitted_at`, where
+    /// the latency clock and the `queue_wait` span start) plus the
+    /// network accept instant when the request came over the wire.
+    pub trace: TraceCtx,
     /// Where the answer goes.  May be a per-request channel (in-process
     /// submit) or a channel shared by a whole connection (network
     /// front-end, which demuxes by [`ClassifyRequest::id`]).

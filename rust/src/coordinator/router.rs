@@ -108,7 +108,7 @@ impl Router {
                     .q
                     .iter()
                     .find(|r| !s.is_claimed(&r.target, r.seed_policy, r.exit))
-                    .map(|r| (r.target.clone(), r.seed_policy, r.exit, r.submitted_at));
+                    .map(|r| (r.target.clone(), r.seed_policy, r.exit, r.trace.submitted_at));
                 if let Some(h) = pick {
                     break h;
                 }
@@ -196,6 +196,32 @@ impl Router {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Point-in-time queue gauges for the metrics exposition: current
+    /// depth and the age of the oldest still-queued request.  One lock
+    /// plus an O(depth) scan — called per metrics scrape, never on the
+    /// request path.
+    pub fn queue_snapshot(&self) -> QueueSnapshot {
+        let s = self.state.lock().unwrap();
+        let now = Instant::now();
+        let oldest_age_us = s
+            .q
+            .iter()
+            .map(|r| now.saturating_duration_since(r.trace.submitted_at).as_micros() as u64)
+            .max()
+            .unwrap_or(0);
+        QueueSnapshot { depth: s.q.len(), oldest_age_us }
+    }
+}
+
+/// What [`Router::queue_snapshot`] reports (the ROADMAP "queue gauges"
+/// open item): instantaneous depth and oldest-request age.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueueSnapshot {
+    /// Requests admitted but not yet extracted into a batch.
+    pub depth: usize,
+    /// Age in microseconds of the oldest queued request (0 when empty).
+    pub oldest_age_us: u64,
 }
 
 #[cfg(test)]
@@ -226,9 +252,23 @@ mod tests {
             image: vec![0.0; 4],
             seed_policy,
             exit,
-            submitted_at: Instant::now(),
+            trace: crate::obs::TraceCtx::in_process(),
             reply: tx,
         }
+    }
+
+    #[test]
+    fn queue_snapshot_tracks_depth_and_age() {
+        let r = Router::new(BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(5) });
+        assert_eq!(r.queue_snapshot(), QueueSnapshot::default());
+        r.push(req(1, Target::ssa(10)));
+        std::thread::sleep(Duration::from_millis(2));
+        r.push(req(2, Target::ssa(10)));
+        let snap = r.queue_snapshot();
+        assert_eq!(snap.depth, 2);
+        assert!(snap.oldest_age_us >= 2_000, "oldest age {} < 2ms", snap.oldest_age_us);
+        let _ = r.next_batch().unwrap();
+        assert_eq!(r.queue_snapshot().depth, 0);
     }
 
     #[test]

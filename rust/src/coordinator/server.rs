@@ -17,6 +17,7 @@ use anyhow::{Context, Result};
 
 use crate::anytime::ExitPolicy;
 use crate::config::BackendKind;
+use crate::obs::{SpanKind, TraceCtx, TraceSink};
 use crate::pool::{PoolConfig, WorkerPool};
 use crate::runtime::Manifest;
 
@@ -46,6 +47,11 @@ pub struct CoordinatorConfig {
     /// heads, bit-identically for any value.  Negotiated by the pool so
     /// `workers x intra_threads <= cores`.
     pub intra_threads: usize,
+    /// Request-lifecycle tracing (`--trace off` disables).  On by
+    /// default: span recording is a handful of `Instant::now()` reads
+    /// and lock-free ring writes per request, and never perturbs model
+    /// arithmetic (the bit-exactness contract is pinned by test).
+    pub trace: bool,
 }
 
 impl CoordinatorConfig {
@@ -58,6 +64,7 @@ impl CoordinatorConfig {
             initial_batch_seed: 0x5EED_0001,
             workers: 1,
             intra_threads: 1,
+            trace: true,
         }
     }
 
@@ -75,12 +82,18 @@ impl CoordinatorConfig {
         self.intra_threads = intra_threads;
         self
     }
+
+    pub fn with_trace(mut self, trace: bool) -> Self {
+        self.trace = trace;
+        self
+    }
 }
 
 /// Handle to a running coordinator.
 pub struct Coordinator {
     router: Arc<Router>,
     metrics: Arc<Metrics>,
+    trace: Arc<TraceSink>,
     manifest: Manifest,
     backend: BackendKind,
     next_id: AtomicU64,
@@ -93,6 +106,12 @@ impl Coordinator {
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         let router = Arc::new(Router::new(cfg.policy));
         let metrics = Arc::new(Metrics::new());
+        // one span ring per worker plus the frontend lane, sized against
+        // the clamped worker count so lanes map 1:1 onto worker ids
+        let trace = Arc::new(TraceSink::new(
+            crate::pool::effective_workers(cfg.backend, cfg.workers),
+            cfg.trace,
+        ));
         let pool = WorkerPool::start(
             &PoolConfig {
                 workers: cfg.workers,
@@ -104,10 +123,12 @@ impl Coordinator {
             &manifest,
             &router,
             &metrics,
+            &trace,
         )?;
         Ok(Self {
             router,
             metrics,
+            trace,
             manifest,
             backend: cfg.backend,
             next_id: AtomicU64::new(1),
@@ -168,6 +189,22 @@ impl Coordinator {
         exit: ExitPolicy,
         reply: mpsc::Sender<ClassifyResponse>,
     ) -> Result<u64, ServeError> {
+        self.submit_with_reply_accepted(target, image, seed_policy, exit, reply, None)
+    }
+
+    /// [`Coordinator::submit_with_reply`] with the network accept
+    /// instant attached: the TCP front-end passes the moment the frame
+    /// arrived so admission emits a `frame_decode` span (accept →
+    /// admission) and latency accounting can include decode time.
+    pub fn submit_with_reply_accepted(
+        &self,
+        target: Target,
+        image: Vec<f32>,
+        seed_policy: SeedPolicy,
+        exit: ExitPolicy,
+        reply: mpsc::Sender<ClassifyResponse>,
+        accepted_at: Option<Instant>,
+    ) -> Result<u64, ServeError> {
         let want = self.manifest.image_size * self.manifest.image_size;
         if image.len() != want {
             return Err(ServeError::BadImage { got: image.len(), want });
@@ -184,15 +221,13 @@ impl Coordinator {
             return Err(ServeError::UnknownTarget(key));
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = ClassifyRequest {
-            id,
-            target,
-            image,
-            seed_policy,
-            exit,
-            submitted_at: Instant::now(),
-            reply,
-        };
+        let mut trace = TraceCtx::in_process();
+        if let Some(t) = accepted_at {
+            trace = TraceCtx::accepted(t);
+            let lane = self.trace.net_lane();
+            self.trace.record(lane, SpanKind::FrameDecode, id, t, trace.submitted_at, 0);
+        }
+        let req = ClassifyRequest { id, target, image, seed_policy, exit, trace, reply };
         if !self.router.push(req) {
             return Err(ServeError::Shutdown);
         }
@@ -224,11 +259,33 @@ impl Coordinator {
     }
 
     pub fn metrics_report(&self) -> String {
-        self.metrics.render()
+        self.metrics.render_with(Some(self.router.queue_snapshot()))
+    }
+
+    /// Prometheus text-format exposition: the full registry plus the
+    /// router's live queue gauges and the trace sink's span counters.
+    pub fn metrics_prometheus(&self) -> String {
+        self.metrics.render_prometheus(
+            Some(self.router.queue_snapshot()),
+            self.trace.spans_written(),
+            self.trace.spans_lost(),
+        )
+    }
+
+    /// Drain the span rings into Chrome trace-event JSON
+    /// (chrome://tracing / Perfetto loadable).  Draining consumes the
+    /// spans: a second dump returns only spans recorded since.
+    pub fn trace_dump_json(&self) -> String {
+        crate::obs::chrome::dump(&self.trace)
     }
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// The request-lifecycle span sink (shared with every pool worker).
+    pub fn trace(&self) -> &Arc<TraceSink> {
+        &self.trace
     }
 
     /// Graceful shutdown: drain the queue, join every worker.

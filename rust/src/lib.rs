@@ -30,6 +30,7 @@ pub mod experiments;
 pub mod hw;
 pub mod loadgen;
 pub mod net;
+pub mod obs;
 pub mod pool;
 pub mod prop;
 pub mod config;

@@ -18,6 +18,10 @@ use super::runner::RunStats;
 /// One (worker count, load) measurement.
 pub struct BenchRun {
     pub workers: usize,
+    /// Whether request-lifecycle tracing was recording during this run.
+    /// `serve-bench --trace both` produces paired on/off runs per worker
+    /// count, and [`BenchReport::tracing_overhead`] reads the delta.
+    pub trace: bool,
     pub stats: RunStats,
     pub latency: Option<LatencySummary>,
     /// Per-request SNN steps actually run (`None` when nothing answered).
@@ -44,7 +48,13 @@ impl BenchRun {
         } else {
             Some(StepsSummary::from_histogram(&stats.steps))
         };
-        Self { workers, stats, latency, steps, targets, worker_util }
+        Self { workers, trace: true, stats, latency, steps, targets, worker_util }
+    }
+
+    /// Tag the run with its tracing setting (defaults to `true`).
+    pub fn with_trace(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -100,6 +110,7 @@ impl BenchRun {
             .collect();
         Json::obj(vec![
             ("workers", Json::from(self.workers)),
+            ("trace", Json::from(self.trace)),
             ("offered", Json::num(self.stats.offered as f64)),
             ("ok", Json::num(self.stats.ok as f64)),
             ("errors", Json::num(self.stats.errors as f64)),
@@ -143,19 +154,91 @@ pub struct BenchReport {
     pub runs: Vec<BenchRun>,
 }
 
+/// The measured cost of tracing: paired tracing-on vs `--trace off` runs
+/// at the same worker count (see [`BenchReport::tracing_overhead`]).
+pub struct TracingOverhead {
+    pub workers: usize,
+    pub on_p50_us: f64,
+    pub off_p50_us: f64,
+    pub on_p99_us: f64,
+    pub off_p99_us: f64,
+}
+
+impl TracingOverhead {
+    pub fn delta_p50_us(&self) -> f64 {
+        self.on_p50_us - self.off_p50_us
+    }
+
+    pub fn delta_p99_us(&self) -> f64 {
+        self.on_p99_us - self.off_p99_us
+    }
+
+    /// Relative p50 cost in percent (0 when the off leg measured 0).
+    pub fn delta_p50_pct(&self) -> f64 {
+        if self.off_p50_us > 0.0 { 100.0 * self.delta_p50_us() / self.off_p50_us } else { 0.0 }
+    }
+
+    pub fn delta_p99_pct(&self) -> f64 {
+        if self.off_p99_us > 0.0 { 100.0 * self.delta_p99_us() / self.off_p99_us } else { 0.0 }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workers", Json::from(self.workers)),
+            ("on_p50_us", Json::num(self.on_p50_us)),
+            ("off_p50_us", Json::num(self.off_p50_us)),
+            ("delta_p50_us", Json::num(self.delta_p50_us())),
+            ("delta_p50_pct", Json::num(self.delta_p50_pct())),
+            ("on_p99_us", Json::num(self.on_p99_us)),
+            ("off_p99_us", Json::num(self.off_p99_us)),
+            ("delta_p99_us", Json::num(self.delta_p99_us())),
+            ("delta_p99_pct", Json::num(self.delta_p99_pct())),
+        ])
+    }
+}
+
 impl BenchReport {
     /// Throughput of the last run relative to the first — the
     /// `--workers 1,N` scaling headline.  `None` with fewer than two
-    /// runs or a dead baseline.
+    /// runs or a dead baseline.  With `--trace both` the report carries
+    /// paired on/off runs; the speedup compares like with like by
+    /// restricting to the tracing-on runs (falling back to every run
+    /// when none traced).
     pub fn speedup(&self) -> Option<f64> {
-        if self.runs.len() < 2 {
+        let on: Vec<&BenchRun> = self.runs.iter().filter(|r| r.trace).collect();
+        let runs: Vec<&BenchRun> =
+            if on.is_empty() { self.runs.iter().collect() } else { on };
+        if runs.len() < 2 {
             return None;
         }
-        let base = self.runs.first().unwrap().throughput_rps();
+        let base = runs.first().unwrap().throughput_rps();
         if base <= 0.0 {
             return None;
         }
-        Some(self.runs.last().unwrap().throughput_rps() / base)
+        Some(runs.last().unwrap().throughput_rps() / base)
+    }
+
+    /// The first same-worker-count (tracing-on, tracing-off) run pair
+    /// with latency data on both legs — the measured tracing cost.
+    /// `None` unless the bench ran `--trace both`.
+    pub fn tracing_overhead(&self) -> Option<TracingOverhead> {
+        for on in self.runs.iter().filter(|r| r.trace) {
+            let off = self
+                .runs
+                .iter()
+                .find(|r| !r.trace && r.workers == on.workers && r.latency.is_some());
+            if let (Some(off), Some(lon)) = (off, &on.latency) {
+                let loff = off.latency.as_ref().unwrap();
+                return Some(TracingOverhead {
+                    workers: on.workers,
+                    on_p50_us: lon.p50_us,
+                    off_p50_us: loff.p50_us,
+                    on_p99_us: lon.p99_us,
+                    off_p99_us: loff.p99_us,
+                });
+            }
+        }
+        None
     }
 
     pub fn to_json(&self) -> Json {
@@ -170,6 +253,10 @@ impl BenchReport {
             (
                 "speedup_last_vs_first",
                 self.speedup().map(Json::num).unwrap_or(Json::Null),
+            ),
+            (
+                "tracing_overhead",
+                self.tracing_overhead().map(|t| t.to_json()).unwrap_or(Json::Null),
             ),
         ])
     }
@@ -186,8 +273,9 @@ impl BenchReport {
             self.scenario, self.mode, self.backend, self.transport, self.duration_s
         );
         for r in &self.runs {
+            let trace = if r.trace { "on " } else { "off" };
             s.push_str(&format!(
-                "workers={:<2} ok={:<6} err={:<4} thpt={:>8.1} req/s",
+                "workers={:<2} trace={trace} ok={:<6} err={:<4} thpt={:>8.1} req/s",
                 r.workers, r.stats.ok, r.stats.errors, r.throughput_rps()
             ));
             if let Some(l) = &r.latency {
@@ -206,6 +294,17 @@ impl BenchReport {
                 "speedup (workers={} vs {}): {x:.2}x\n",
                 self.runs.last().unwrap().workers,
                 self.runs[0].workers
+            ));
+        }
+        if let Some(t) = self.tracing_overhead() {
+            s.push_str(&format!(
+                "tracing overhead (workers={}): p50 {:+.0}us ({:+.1}%), \
+                 p99 {:+.0}us ({:+.1}%)\n",
+                t.workers,
+                t.delta_p50_us(),
+                t.delta_p50_pct(),
+                t.delta_p99_us(),
+                t.delta_p99_pct()
             ));
         }
         s
@@ -255,6 +354,31 @@ mod tests {
         assert!((r.speedup().unwrap() - 3.2).abs() < 1e-9);
         let single = BenchReport { runs: vec![], ..report() };
         assert!(single.speedup().is_none());
+    }
+
+    /// `--trace both` appends an off leg per worker count: the speedup
+    /// must keep comparing tracing-on runs only, and the report must
+    /// surface the first same-workers on/off latency delta.
+    #[test]
+    fn tracing_overhead_pairs_same_worker_on_off_runs() {
+        let mut r = report();
+        assert!(r.tracing_overhead().is_none(), "all-on report has no off leg to pair");
+        r.runs.push(BenchRun::new(1, stats(110, 1000), vec![], vec![]).with_trace(false));
+        r.runs.push(BenchRun::new(4, stats(330, 1000), vec![], vec![]).with_trace(false));
+        let t = r.tracing_overhead().expect("workers=1 has both legs");
+        assert_eq!(t.workers, 1);
+        assert!((t.delta_p50_us() - (t.on_p50_us - t.off_p50_us)).abs() < 1e-9);
+        // identical latency distributions on both legs -> zero delta
+        assert!(t.delta_p50_us().abs() < 1e-9);
+        assert!((r.speedup().unwrap() - 3.2).abs() < 1e-9, "speedup ignores off legs");
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        let over = parsed.get("tracing_overhead").expect("key present");
+        assert_eq!(over.usize_field("workers").unwrap(), 1);
+        assert!(over.get("delta_p99_pct").and_then(Json::as_f64).is_some());
+        let runs = parsed.get("runs").and_then(Json::as_arr).unwrap();
+        assert_eq!(runs[0].get("trace").and_then(Json::as_bool), Some(true));
+        assert_eq!(runs[2].get("trace").and_then(Json::as_bool), Some(false));
+        assert!(r.render().contains("tracing overhead (workers=1)"));
     }
 
     #[test]

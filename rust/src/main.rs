@@ -91,6 +91,34 @@ fn apply_simd_flag(args: &Args) -> Result<()> {
     }
 }
 
+/// `serve --trace on|off`: request-lifecycle tracing, default on (a
+/// bare `--trace` also means on).
+fn trace_flag(args: &Args) -> Result<bool> {
+    if args.flag("trace") {
+        return Ok(true);
+    }
+    match args.opt("trace") {
+        None | Some("on") => Ok(true),
+        Some("off") => Ok(false),
+        Some(other) => bail!("invalid --trace {other:?} (expected `on` or `off`)"),
+    }
+}
+
+/// `serve-bench --trace on|off|both`: the tracing legs to run per worker
+/// count.  The default `both` measures each worker count twice so the
+/// report can quantify the tracing overhead as an on-vs-off delta.
+fn trace_legs(args: &Args) -> Result<&'static [bool]> {
+    if args.flag("trace") {
+        return Ok(&[true]);
+    }
+    match args.opt("trace") {
+        None | Some("both") => Ok(&[true, false]),
+        Some("on") => Ok(&[true]),
+        Some("off") => Ok(&[false]),
+        Some(other) => bail!("invalid --trace {other:?} (expected `on`, `off`, or `both`)"),
+    }
+}
+
 /// Fabricate a complete servable artifacts directory (`--synthetic`).
 fn synthesize_artifacts(tag: &str) -> Result<PathBuf> {
     let dir = std::env::temp_dir().join(format!("ssa-{tag}-{}", std::process::id()));
@@ -121,7 +149,8 @@ fn serve(args: &Args) -> Result<()> {
     let mut cfg = CoordinatorConfig::new(dir)
         .with_backend(backend)
         .with_workers(workers)
-        .with_intra_threads(intra_threads);
+        .with_intra_threads(intra_threads)
+        .with_trace(trace_flag(args)?);
     cfg.policy = policy;
     cfg.preload = vec![target_s.clone()];
 
@@ -239,6 +268,15 @@ fn classify_remote(args: &Args) -> Result<()> {
         println!("server-side metrics (cumulative since server start):");
         println!("{}", client.metrics()?);
     }
+    if args.flag("prometheus") {
+        println!("{}", client.metrics_prometheus()?);
+    }
+    if let Some(path) = args.opt("trace-dump") {
+        let trace = client.trace_dump()?;
+        std::fs::write(path, &trace)
+            .with_context(|| format!("writing trace dump {path:?}"))?;
+        println!("wrote {path} ({} bytes of Chrome trace-event JSON)", trace.len());
+    }
     if args.flag("shutdown") {
         client.shutdown_server()?;
         println!("server acknowledged shutdown");
@@ -297,6 +335,11 @@ fn serve_bench_remote(args: &Args, remote: &str, spec: &LoadSpec) -> Result<Benc
         args.opt("intra-threads").is_none(),
         "--intra-threads applies to in-process runs only; the remote server owns its \
          thread budget"
+    );
+    anyhow::ensure!(
+        args.opt("trace").is_none() && !args.flag("trace"),
+        "--trace applies to in-process runs only; the remote server owns its tracing \
+         switch (serve --trace on|off)"
     );
     let client = NetClient::connect(remote)?;
     let info = client.ping()?;
@@ -381,29 +424,38 @@ fn serve_bench_local(args: &Args, spec: &LoadSpec) -> Result<BenchReport> {
         duration_s: spec.duration.as_secs_f64(),
         runs: Vec::new(),
     };
+    let legs = trace_legs(args)?;
     for &w in &workers {
-        let mut cfg = CoordinatorConfig::new(dir.clone())
-            .with_backend(backend)
-            .with_workers(w)
-            .with_intra_threads(intra_threads);
-        cfg.policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(max_delay_ms) };
-        cfg.preload = preload.clone();
-        let coord = Coordinator::start(cfg)?;
-        println!(
-            "serve-bench: {} for {:.1}s on the {} backend, {} worker(s) ...",
-            spec.mode.describe(),
-            spec.duration.as_secs_f64(),
-            coord.backend().name(),
-            coord.workers()
-        );
-        let stats = loadgen::run(&coord, spec, &images)?;
-        report.runs.push(BenchRun::new(
-            coord.workers(),
-            stats,
-            coord.metrics().report(),
-            coord.metrics().worker_report(),
-        ));
-        coord.shutdown();
+        for &trace_on in legs {
+            let mut cfg = CoordinatorConfig::new(dir.clone())
+                .with_backend(backend)
+                .with_workers(w)
+                .with_intra_threads(intra_threads)
+                .with_trace(trace_on);
+            cfg.policy =
+                BatchPolicy { max_batch, max_delay: Duration::from_millis(max_delay_ms) };
+            cfg.preload = preload.clone();
+            let coord = Coordinator::start(cfg)?;
+            println!(
+                "serve-bench: {} for {:.1}s on the {} backend, {} worker(s), trace {} ...",
+                spec.mode.describe(),
+                spec.duration.as_secs_f64(),
+                coord.backend().name(),
+                coord.workers(),
+                if trace_on { "on" } else { "off" }
+            );
+            let stats = loadgen::run(&coord, spec, &images)?;
+            report.runs.push(
+                BenchRun::new(
+                    coord.workers(),
+                    stats,
+                    coord.metrics().report(),
+                    coord.metrics().worker_report(),
+                )
+                .with_trace(trace_on),
+            );
+            coord.shutdown();
+        }
     }
     Ok(report)
 }

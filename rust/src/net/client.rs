@@ -274,6 +274,27 @@ impl NetClient {
         }
     }
 
+    /// Fetch the coordinator's metrics in Prometheus text exposition
+    /// format (`metrics_prom` wire verb).
+    pub fn metrics_prometheus(&self) -> Result<String> {
+        match self.call(Request::MetricsProm { id: self.fresh_id() })? {
+            Reply::MetricsProm { text, .. } => Ok(text),
+            Reply::Error { error, .. } => Err(anyhow::Error::from(error)),
+            other => anyhow::bail!("protocol violation: unexpected metrics_prom reply {other:?}"),
+        }
+    }
+
+    /// Drain the server's span rings into Chrome trace-event JSON
+    /// (`trace_dump` wire verb).  Draining consumes the spans: a second
+    /// dump only carries what was recorded since the first.
+    pub fn trace_dump(&self) -> Result<String> {
+        match self.call(Request::TraceDump { id: self.fresh_id() })? {
+            Reply::TraceDump { trace, .. } => Ok(trace),
+            Reply::Error { error, .. } => Err(anyhow::Error::from(error)),
+            other => anyhow::bail!("protocol violation: unexpected trace_dump reply {other:?}"),
+        }
+    }
+
     /// Ask the server to drain and exit; returns once acknowledged.
     pub fn shutdown_server(&self) -> Result<()> {
         match self.call(Request::Shutdown { id: self.fresh_id() })? {

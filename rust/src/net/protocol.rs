@@ -48,6 +48,18 @@ pub enum Request {
         /// Client-chosen correlation id.
         id: u64,
     },
+    /// Fetch the coordinator's Prometheus text-format exposition.
+    MetricsProm {
+        /// Client-chosen correlation id.
+        id: u64,
+    },
+    /// Drain the trace span rings into Chrome trace-event JSON.
+    /// Draining consumes the spans: a second dump returns only spans
+    /// recorded since the first.
+    TraceDump {
+        /// Client-chosen correlation id.
+        id: u64,
+    },
     /// Liveness probe; the reply carries a [`ServerInfo`].
     Ping {
         /// Client-chosen correlation id.
@@ -66,6 +78,8 @@ impl Request {
         match self {
             Request::Classify { id, .. }
             | Request::Metrics { id }
+            | Request::MetricsProm { id }
+            | Request::TraceDump { id }
             | Request::Ping { id }
             | Request::Shutdown { id } => *id,
         }
@@ -95,6 +109,14 @@ impl Request {
             Request::Metrics { id } => {
                 Json::obj(vec![("op", Json::str("metrics")), ("id", Json::num(*id as f64))])
             }
+            Request::MetricsProm { id } => Json::obj(vec![
+                ("op", Json::str("metrics_prom")),
+                ("id", Json::num(*id as f64)),
+            ]),
+            Request::TraceDump { id } => Json::obj(vec![
+                ("op", Json::str("trace_dump")),
+                ("id", Json::num(*id as f64)),
+            ]),
             Request::Ping { id } => {
                 Json::obj(vec![("op", Json::str("ping")), ("id", Json::num(*id as f64))])
             }
@@ -145,6 +167,8 @@ impl Request {
                 Ok(Request::Classify { id, target, seed_policy, exit, image })
             }
             "metrics" => Ok(Request::Metrics { id }),
+            "metrics_prom" => Ok(Request::MetricsProm { id }),
+            "trace_dump" => Ok(Request::TraceDump { id }),
             "ping" => Ok(Request::Ping { id }),
             "shutdown" => Ok(Request::Shutdown { id }),
             other => Err(bad(&format!("unknown op {other:?}"))),
@@ -226,6 +250,22 @@ pub enum Reply {
         /// The rendered report.
         report: String,
     },
+    /// Prometheus text-format exposition (same text as
+    /// `Coordinator::metrics_prometheus`).
+    MetricsProm {
+        /// Echo of the request id.
+        id: u64,
+        /// The exposition body.
+        text: String,
+    },
+    /// Chrome trace-event JSON drained from the span rings.
+    TraceDump {
+        /// Echo of the request id.
+        id: u64,
+        /// The trace document (itself JSON, carried as a string so the
+        /// frame grammar stays uniform).
+        trace: String,
+    },
     /// Ping acknowledgement.
     Pong {
         /// Echo of the request id.
@@ -253,6 +293,8 @@ impl Reply {
         match self {
             Reply::Classify { id, .. }
             | Reply::Metrics { id, .. }
+            | Reply::MetricsProm { id, .. }
+            | Reply::TraceDump { id, .. }
             | Reply::Pong { id, .. }
             | Reply::ShuttingDown { id }
             | Reply::Error { id, .. } => *id,
@@ -282,6 +324,18 @@ impl Reply {
                 ("op", Json::str("metrics")),
                 ("id", Json::num(*id as f64)),
                 ("report", Json::str(report)),
+            ]),
+            Reply::MetricsProm { id, text } => Json::obj(vec![
+                ("ok", Json::from(true)),
+                ("op", Json::str("metrics_prom")),
+                ("id", Json::num(*id as f64)),
+                ("text", Json::str(text)),
+            ]),
+            Reply::TraceDump { id, trace } => Json::obj(vec![
+                ("ok", Json::from(true)),
+                ("op", Json::str("trace_dump")),
+                ("id", Json::num(*id as f64)),
+                ("trace", Json::str(trace)),
             ]),
             Reply::Pong { id, info } => Json::obj(vec![
                 ("ok", Json::from(true)),
@@ -356,6 +410,12 @@ impl Reply {
                 })
             }
             "metrics" => Ok(Reply::Metrics { id, report: j.str_field("report")?.to_string() }),
+            "metrics_prom" => {
+                Ok(Reply::MetricsProm { id, text: j.str_field("text")?.to_string() })
+            }
+            "trace_dump" => {
+                Ok(Reply::TraceDump { id, trace: j.str_field("trace")?.to_string() })
+            }
             "ping" => Ok(Reply::Pong {
                 id,
                 info: ServerInfo {
@@ -419,6 +479,8 @@ mod tests {
             image: vec![1.0],
         });
         roundtrip_request(Request::Metrics { id: 1 });
+        roundtrip_request(Request::MetricsProm { id: 4 });
+        roundtrip_request(Request::TraceDump { id: 5 });
         roundtrip_request(Request::Ping { id: 2 });
         roundtrip_request(Request::Shutdown { id: 3 });
     }
@@ -458,6 +520,14 @@ mod tests {
             },
         });
         roundtrip_reply(Reply::Metrics { id: 1, report: "=== metrics ===\n".into() });
+        roundtrip_reply(Reply::MetricsProm {
+            id: 4,
+            text: "# TYPE ssa_queue_depth gauge\nssa_queue_depth 0\n".into(),
+        });
+        roundtrip_reply(Reply::TraceDump {
+            id: 5,
+            trace: "{\"traceEvents\":[]}".into(),
+        });
         roundtrip_reply(Reply::Pong {
             id: 2,
             info: ServerInfo {

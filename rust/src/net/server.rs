@@ -36,12 +36,13 @@ use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::anytime::ExitPolicy;
 use crate::coordinator::{ClassifyResponse, Coordinator, SeedPolicy, ServeError, Target};
+use crate::obs::{SpanKind, TraceSink};
 use crate::util::json::Json;
 
 use super::conn;
@@ -271,9 +272,10 @@ fn spawn_conn(stream: TcpStream, shared: ConnShared) -> Result<ConnHandle> {
     let demux = {
         let inflight = Arc::clone(&shared.inflight);
         let max_frame = shared.max_frame;
+        let trace = Arc::clone(shared.coord.trace());
         std::thread::Builder::new()
             .name("ssa-net-demux".into())
-            .spawn(move || demux_loop(resp_rx, write_half, pending, inflight, max_frame))
+            .spawn(move || demux_loop(resp_rx, write_half, pending, inflight, max_frame, trace))
             .context("spawning connection demux")?
     };
     crate::log_debug!("net: connection from {peer}");
@@ -296,7 +298,9 @@ fn reader_loop(
 ) {
     loop {
         let frame = match conn::read_frame(&mut stream, shared.max_frame) {
-            Ok(Some(f)) => f,
+            // the accept instant anchors the frame_decode span: bytes on
+            // the wire → admitted request
+            Ok(Some(f)) => (Instant::now(), f),
             Ok(None) => break, // clean EOF
             Err(e) => {
                 // oversized or truncated frame: the stream position is no
@@ -314,6 +318,7 @@ fn reader_loop(
                 break;
             }
         };
+        let (accepted, frame) = frame;
         // framed-but-malformed payloads keep the stream in sync: answer
         // with a typed error and keep serving the connection
         let json = match std::str::from_utf8(&frame)
@@ -355,10 +360,21 @@ fn reader_loop(
                 seed_policy,
                 exit,
                 image,
+                accepted,
             ),
             Request::Metrics { id } => write_reply(
                 &write_half,
                 &Reply::Metrics { id, report: shared.coord.metrics_report() },
+                shared.max_frame,
+            ),
+            Request::MetricsProm { id } => write_reply(
+                &write_half,
+                &Reply::MetricsProm { id, text: shared.coord.metrics_prometheus() },
+                shared.max_frame,
+            ),
+            Request::TraceDump { id } => write_reply(
+                &write_half,
+                &Reply::TraceDump { id, trace: shared.coord.trace_dump_json() },
                 shared.max_frame,
             ),
             Request::Ping { id } => write_reply(
@@ -397,6 +413,7 @@ fn handle_classify(
     seed_policy: SeedPolicy,
     exit: ExitPolicy,
     image: Vec<f32>,
+    accepted: Instant,
 ) -> std::io::Result<()> {
     if shared.shutdown.load(Ordering::Acquire) {
         return write_reply(
@@ -417,9 +434,18 @@ fn handle_classify(
     // hold the pending lock across submit so the demux cannot observe a
     // completion before its id mapping exists
     let mut p = pending.lock().unwrap();
-    match shared.coord.submit_with_reply(target, image, seed_policy, exit, resp_tx.clone()) {
+    match shared.coord.submit_with_reply_accepted(
+        target,
+        image,
+        seed_policy,
+        exit,
+        resp_tx.clone(),
+        Some(accepted),
+    ) {
         Ok(server_id) => {
             p.insert(server_id, id);
+            let _span = crate::util::logging::request_span(server_id);
+            crate::log_debug!("net: classify {id} admitted as request {server_id}");
             Ok(())
         }
         Err(error) => {
@@ -436,6 +462,7 @@ fn demux_loop(
     pending: Arc<Mutex<HashMap<u64, u64>>>,
     inflight: Arc<AtomicUsize>,
     max_frame: usize,
+    trace: Arc<TraceSink>,
 ) {
     // once a write fails the connection is dead: keep draining (to
     // release admission slots) but stop writing
@@ -451,7 +478,17 @@ fn demux_loop(
             id: client_id,
             response: RemoteClassify::from_response(&resp),
         };
-        if write_reply(&write_half, &reply, max_frame).is_err() {
+        let send_start = Instant::now();
+        let wrote = write_reply(&write_half, &reply, max_frame);
+        trace.record(
+            trace.net_lane(),
+            SpanKind::ReplySend,
+            resp.id,
+            send_start,
+            Instant::now(),
+            0,
+        );
+        if wrote.is_err() {
             dead = true;
             // unblock the reader so the connection fully tears down
             let _ = write_half.lock().unwrap().shutdown(Shutdown::Both);

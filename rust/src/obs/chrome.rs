@@ -1,0 +1,118 @@
+//! Chrome trace-event JSON rendering for drained span rings.
+//!
+//! The output loads directly in `chrome://tracing` or Perfetto: one
+//! process (`pid` 1) with one track (`tid`) per trace lane — worker
+//! lanes first, the shared front-end lane last.  Every span becomes a
+//! complete event (`"ph": "X"`) with microsecond `ts`/`dur` on the
+//! sink's shared epoch timeline.
+//!
+//! Per-stage model spans (`stage_*`) are **CPU-time attribution**, not
+//! wall sub-intervals: the native engine sums stage time across batch
+//! rows that may run on parallel intra-op threads, so the renderer lays
+//! them out back-to-back from the `model_forward` start.  Their total
+//! can exceed the enclosing wall span on multi-threaded batches; the
+//! `args.n` payload keeps the batch size next to each span so the
+//! per-row cost is recoverable.
+
+use crate::util::json::Json;
+
+use super::{SpanKind, SpanRecord, TraceSink};
+
+/// Render drained spans as a Chrome trace-event JSON document.
+pub fn render(records: &[SpanRecord], worker_lanes: u32) -> String {
+    let mut events: Vec<Json> = Vec::with_capacity(records.len() + worker_lanes as usize + 1);
+    for lane in 0..=worker_lanes {
+        let name = if lane == worker_lanes {
+            "frontend".to_string()
+        } else {
+            format!("worker-{lane}")
+        };
+        events.push(Json::obj(vec![
+            ("name", Json::Str("thread_name".into())),
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(lane as f64)),
+            ("args", Json::obj(vec![("name", Json::Str(name))])),
+        ]));
+    }
+    for rec in records {
+        let mut args = vec![("n", Json::num(rec.aux as f64))];
+        if rec.req_id != 0 {
+            args.insert(0, ("req", Json::num(rec.req_id as f64)));
+        }
+        events.push(Json::obj(vec![
+            ("name", Json::Str(rec.kind.name().into())),
+            ("cat", Json::Str(rec.kind.category().into())),
+            ("ph", Json::Str("X".into())),
+            ("ts", Json::num(rec.start_us as f64)),
+            ("dur", Json::num(rec.dur_us.max(1) as f64)),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(rec.lane.min(worker_lanes) as f64)),
+            ("args", Json::obj(args)),
+        ]));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+    .to_string()
+}
+
+/// Drain `sink` and render the result (the `trace-dump` verb body).
+pub fn dump(sink: &TraceSink) -> String {
+    render(&sink.drain(), sink.net_lane())
+}
+
+/// `true` when `kind` names a per-stage model span (used by tests and
+/// the exemplar renderer).
+pub fn is_stage(kind: SpanKind) -> bool {
+    matches!(
+        kind,
+        SpanKind::StageEmbed
+            | SpanKind::StageQkv
+            | SpanKind::StageAttn
+            | SpanKind::StageMlp
+            | SpanKind::StageReadout
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_is_valid_json_with_expected_events() {
+        let records = vec![
+            SpanRecord {
+                kind: SpanKind::QueueWait,
+                lane: 0,
+                req_id: 7,
+                start_us: 10,
+                dur_us: 5,
+                aux: 2,
+            },
+            SpanRecord {
+                kind: SpanKind::StageAttn,
+                lane: 0,
+                req_id: 0,
+                start_us: 15,
+                dur_us: 0, // zero-length spans render with dur >= 1
+                aux: 2,
+            },
+        ];
+        let text = render(&records, 1);
+        let doc = Json::parse(&text).expect("valid JSON");
+        let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        // 2 thread_name metadata events (worker-0 + frontend) + 2 spans
+        assert_eq!(events.len(), 4);
+        let span = &events[2];
+        assert_eq!(span.get("name").and_then(Json::as_str), Some("queue_wait"));
+        assert_eq!(span.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(span.get("ts").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(span.get("args").and_then(|a| a.get("req")).and_then(Json::as_f64), Some(7.0));
+        let stage = &events[3];
+        assert_eq!(stage.get("cat").and_then(Json::as_str), Some("model"));
+        assert_eq!(stage.get("dur").and_then(Json::as_f64), Some(1.0));
+        assert!(stage.get("args").and_then(|a| a.get("req")).is_none(), "batch-scoped span");
+    }
+}

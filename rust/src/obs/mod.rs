@@ -1,0 +1,188 @@
+//! Observability: request-lifecycle tracing and metrics exposition.
+//!
+//! The serving stack's latency story (DESIGN.md §2b-§3) was previously
+//! visible only as coarse per-target `LogHistogram`s; offline
+//! `bench-native` runs could attribute time per pipeline stage, but live
+//! traffic through the pool and the TCP front-end was a black box.  This
+//! module closes that gap:
+//!
+//! * [`TraceCtx`] rides inside every `ClassifyRequest` and carries the
+//!   wall-clock anchors (frame accept, admission) that downstream spans
+//!   are measured against.
+//! * [`TraceSink`] owns one fixed-size, lock-free [`SpanRing`] per pool
+//!   worker plus a shared front-end lane; producers (net reader, demux,
+//!   workers) write [`SpanRecord`]s with two atomic stores and zero heap
+//!   allocation — the same std-only discipline as `util::par`.
+//! * [`chrome`] drains the rings into Chrome trace-event JSON
+//!   (`chrome://tracing` / Perfetto load it directly).
+//! * [`prom`] renders Prometheus text-format exposition; the metric
+//!   *content* lives in `coordinator::metrics`, this module owns the
+//!   format (families, labels, log-bucketed cumulative histograms).
+//!
+//! Tracing never perturbs compute: span producers read `Instant::now()`
+//! and store integers.  The fixed-seed bit-exactness contract
+//! (DESIGN.md §2b) therefore holds with tracing on or off, and
+//! `tests/integration_obs.rs` pins it.
+
+pub mod chrome;
+pub mod prom;
+pub mod ring;
+
+pub use ring::{SpanRing, TraceSink, RING_CAPACITY};
+
+use std::time::Instant;
+
+/// What a span measures.  The discriminant is the on-ring encoding
+/// (stable within a process; rings never cross the wire raw — they are
+/// rendered to JSON by [`chrome::render`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// TCP front-end: frame bytes arrived → request admitted to the
+    /// router (parse + validate + enqueue).  Per request.
+    FrameDecode = 0,
+    /// Admission → extraction into a batch by a worker.  Per request.
+    QueueWait = 1,
+    /// One batch occupying a worker: extraction → last reply sent.
+    Batch = 2,
+    /// The model forward call inside a batch (all rows).
+    ModelForward = 3,
+    /// Rate coding + spiking patch embedding (CPU-time attribution,
+    /// summed over rows/steps — see `chrome` docs).
+    StageEmbed = 4,
+    /// Q/K/V projections and their LIF sheets.
+    StageQkv = 5,
+    /// The stochastic attention core.
+    StageAttn = 6,
+    /// The spiking MLP block.
+    StageMlp = 7,
+    /// Spike-count pooling + classifier head.
+    StageReadout = 8,
+    /// TCP front-end: reply serialized + written back.  Per request.
+    ReplySend = 9,
+}
+
+impl SpanKind {
+    /// Stable span name used in trace dumps and docs.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::FrameDecode => "frame_decode",
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::Batch => "batch",
+            SpanKind::ModelForward => "model_forward",
+            SpanKind::StageEmbed => "stage_embed",
+            SpanKind::StageQkv => "stage_qkv",
+            SpanKind::StageAttn => "stage_attn",
+            SpanKind::StageMlp => "stage_mlp",
+            SpanKind::StageReadout => "stage_readout",
+            SpanKind::ReplySend => "reply_send",
+        }
+    }
+
+    /// Chrome trace-event category (groups spans in the viewer UI).
+    pub fn category(self) -> &'static str {
+        match self {
+            SpanKind::FrameDecode | SpanKind::ReplySend => "net",
+            SpanKind::QueueWait => "queue",
+            SpanKind::Batch => "batch",
+            _ => "model",
+        }
+    }
+
+    /// Inverse of the `repr(u8)` encoding; `None` for corrupt bytes
+    /// (a torn ring slot that slipped past the seqlock check).
+    pub fn from_u8(v: u8) -> Option<SpanKind> {
+        Some(match v {
+            0 => SpanKind::FrameDecode,
+            1 => SpanKind::QueueWait,
+            2 => SpanKind::Batch,
+            3 => SpanKind::ModelForward,
+            4 => SpanKind::StageEmbed,
+            5 => SpanKind::StageQkv,
+            6 => SpanKind::StageAttn,
+            7 => SpanKind::StageMlp,
+            8 => SpanKind::StageReadout,
+            9 => SpanKind::ReplySend,
+            _ => return None,
+        })
+    }
+}
+
+/// One completed span, decoded from a ring slot.
+///
+/// `start_us` is measured from the owning [`TraceSink`]'s epoch (the
+/// coordinator's start), so all lanes share one timeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanRecord {
+    /// What was measured.
+    pub kind: SpanKind,
+    /// Ring lane that produced the span: worker id, or
+    /// [`TraceSink::net_lane`] for the front-end.
+    pub lane: u32,
+    /// Coordinator-assigned request id (`0` = batch-scoped, no single
+    /// request owns the span).
+    pub req_id: u64,
+    /// Microseconds since the sink epoch.
+    pub start_us: u64,
+    /// Span duration in microseconds.
+    pub dur_us: u64,
+    /// Kind-specific payload: batch size for queue/batch/model spans,
+    /// `steps_used` ceiling for `ModelForward`, 0 otherwise.
+    pub aux: u64,
+}
+
+/// Per-request trace context, created at admission and carried inside
+/// `ClassifyRequest` through router → batch → worker → reply.
+///
+/// It holds only wall-clock anchors: spans are *derived* from these by
+/// whichever pipeline stage observes the end of an interval (the worker
+/// emits `queue_wait` by subtracting `submitted_at` from its extraction
+/// time, the coordinator emits `frame_decode` from `accepted_at`, ...).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceCtx {
+    /// When the TCP reader pulled the request's frame off the socket.
+    /// `None` for in-process submissions (no network leg).
+    pub accepted_at: Option<Instant>,
+    /// Admission instant (`Coordinator::submit*`) — the latency clock
+    /// and the `queue_wait` span both start here.
+    pub submitted_at: Instant,
+}
+
+impl TraceCtx {
+    /// Context for an in-process submission (no network accept leg).
+    pub fn in_process() -> Self {
+        TraceCtx { accepted_at: None, submitted_at: Instant::now() }
+    }
+
+    /// Context for a request that arrived over the wire at `accepted_at`.
+    pub fn accepted(accepted_at: Instant) -> Self {
+        TraceCtx { accepted_at: Some(accepted_at), submitted_at: Instant::now() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_kind_u8_roundtrip() {
+        for v in 0u8..=9 {
+            let k = SpanKind::from_u8(v).expect("0..=9 are valid kinds");
+            assert_eq!(k as u8, v);
+            assert!(!k.name().is_empty());
+            assert!(!k.category().is_empty());
+        }
+        assert_eq!(SpanKind::from_u8(10), None);
+        assert_eq!(SpanKind::from_u8(255), None);
+    }
+
+    #[test]
+    fn trace_ctx_constructors() {
+        let a = TraceCtx::in_process();
+        assert!(a.accepted_at.is_none());
+        let t0 = Instant::now();
+        let b = TraceCtx::accepted(t0);
+        assert_eq!(b.accepted_at, Some(t0));
+        assert!(b.submitted_at >= t0);
+    }
+}

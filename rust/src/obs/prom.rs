@@ -1,0 +1,178 @@
+//! Prometheus text-format (version 0.0.4) rendering.
+//!
+//! This module owns only the *format*: metric families (`# HELP` /
+//! `# TYPE` emitted exactly once per name), label escaping, value
+//! formatting (`+Inf` spelling), and log-bucketed cumulative histograms.
+//! Which metrics exist — and their values — is decided by
+//! `coordinator::metrics::Metrics::render_prometheus`.
+//!
+//! Invariants the CI smoke asserts on the output: every `# TYPE` line is
+//! followed by at least one sample of that family (callers must emit a
+//! family only when they have samples — [`PromWriter::family`] is
+//! deliberately separate from [`PromWriter::sample`] so empty families
+//! are simply skipped), and no family name is declared twice.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Incremental Prometheus text-exposition builder.
+#[derive(Default)]
+pub struct PromWriter {
+    out: String,
+    families: BTreeMap<String, &'static str>,
+}
+
+impl PromWriter {
+    pub fn new() -> Self {
+        PromWriter::default()
+    }
+
+    /// Declare a metric family (`# HELP` + `# TYPE`).  Idempotent for a
+    /// repeated `(name, kind)`; a kind conflict is a programming error.
+    pub fn family(&mut self, name: &str, kind: &'static str, help: &str) {
+        if let Some(prev) = self.families.get(name) {
+            assert_eq!(*prev, kind, "metric family {name} declared as {prev} and {kind}");
+            return;
+        }
+        self.families.insert(name.to_string(), kind);
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    /// One sample line: `name{labels} value`.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        self.push_labels(labels);
+        let _ = writeln!(self.out, " {}", fmt_value(value));
+    }
+
+    /// A full cumulative histogram from pre-aggregated `(upper_bound,
+    /// cumulative_count)` pairs (ascending bounds, last pair's count ==
+    /// total): emits `_bucket{le=...}` lines, the `le="+Inf"` bucket,
+    /// `_sum`, and `_count`.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        cumulative: &[(f64, u64)],
+        sum: f64,
+        count: u64,
+    ) {
+        let bucket = format!("{name}_bucket");
+        for &(le, c) in cumulative {
+            self.out.push_str(&bucket);
+            self.push_labels_with(labels, Some(&fmt_value(le)));
+            let _ = writeln!(self.out, " {c}");
+        }
+        self.out.push_str(&bucket);
+        self.push_labels_with(labels, Some("+Inf"));
+        let _ = writeln!(self.out, " {count}");
+        self.sample(&format!("{name}_sum"), labels, sum);
+        self.out.push_str(&format!("{name}_count"));
+        self.push_labels(labels);
+        let _ = writeln!(self.out, " {count}");
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+
+    fn push_labels(&mut self, labels: &[(&str, &str)]) {
+        self.push_labels_with(labels, None);
+    }
+
+    fn push_labels_with(&mut self, labels: &[(&str, &str)], le: Option<&str>) {
+        if labels.is_empty() && le.is_none() {
+            return;
+        }
+        self.out.push('{');
+        let mut first = true;
+        for (k, v) in labels {
+            if !first {
+                self.out.push(',');
+            }
+            first = false;
+            let _ = write!(self.out, "{k}=\"{}\"", escape_label(v));
+        }
+        if let Some(le) = le {
+            if !first {
+                self.out.push(',');
+            }
+            let _ = write!(self.out, "le=\"{le}\"");
+        }
+        self.out.push('}');
+    }
+}
+
+/// Prometheus value spelling: finite values via Rust's shortest-roundtrip
+/// float formatting, infinities as `+Inf`/`-Inf`, NaN as `NaN`.
+pub fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Escape a label value per the exposition format (backslash, quote,
+/// newline).
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn families_render_once_and_samples_carry_labels() {
+        let mut w = PromWriter::new();
+        w.family("ssa_requests_total", "counter", "Requests completed.");
+        w.sample("ssa_requests_total", &[("target", "ssa_t4")], 12.0);
+        w.family("ssa_requests_total", "counter", "Requests completed."); // idempotent
+        w.sample("ssa_requests_total", &[("target", "ann")], 3.0);
+        w.family("ssa_queue_depth", "gauge", "Queued requests.");
+        w.sample("ssa_queue_depth", &[], 0.0);
+        let text = w.finish();
+        assert_eq!(text.matches("# TYPE ssa_requests_total counter").count(), 1);
+        assert!(text.contains("ssa_requests_total{target=\"ssa_t4\"} 12"));
+        assert!(text.contains("ssa_requests_total{target=\"ann\"} 3"));
+        assert!(text.contains("\nssa_queue_depth 0\n"));
+    }
+
+    #[test]
+    fn histogram_emits_cumulative_buckets_sum_count() {
+        let mut w = PromWriter::new();
+        w.family("lat_us", "histogram", "Latency.");
+        w.histogram("lat_us", &[("target", "ann")], &[(1.0, 2), (4.0, 5)], 12.5, 5);
+        let text = w.finish();
+        assert!(text.contains("lat_us_bucket{target=\"ann\",le=\"1\"} 2"));
+        assert!(text.contains("lat_us_bucket{target=\"ann\",le=\"4\"} 5"));
+        assert!(text.contains("lat_us_bucket{target=\"ann\",le=\"+Inf\"} 5"));
+        assert!(text.contains("lat_us_sum{target=\"ann\"} 12.5"));
+        assert!(text.contains("lat_us_count{target=\"ann\"} 5"));
+    }
+
+    #[test]
+    fn value_and_label_spelling() {
+        assert_eq!(fmt_value(1.0), "1");
+        assert_eq!(fmt_value(0.25), "0.25");
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(f64::NEG_INFINITY), "-Inf");
+        assert_eq!(fmt_value(f64::NAN), "NaN");
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

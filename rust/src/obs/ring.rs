@@ -1,0 +1,390 @@
+//! Lock-free fixed-size span rings and the per-coordinator [`TraceSink`].
+//!
+//! Hot-path contract (the same discipline as `util::par`): writing a span
+//! is a handful of atomic stores into a pre-allocated slot — no heap
+//! allocation, no mutex, no syscall.  Each slot is a seqlock: the writer
+//! claims a globally ordered index with one `fetch_add`, marks the slot
+//! busy (odd sequence), stores the payload words, then publishes (even
+//! sequence).  A drain validates the sequence before and after reading a
+//! slot and simply skips records that were overwritten mid-read, so a
+//! full ring *loses old spans* (counted, never blocking) rather than
+//! stalling a worker.
+//!
+//! Memory-ordering sketch (the standard seqlock pattern): the busy store
+//! is an `AcqRel` swap so payload stores cannot be hoisted above it; the
+//! publish store is `Release` so payload stores cannot sink below it; the
+//! reader brackets its payload loads with an `Acquire` load and an
+//! `Acquire` fence before re-checking the sequence.
+
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+use super::{SpanKind, SpanRecord};
+
+/// Spans retained per lane before the oldest are overwritten.  4096
+/// records × 6 words = 192 KiB per lane — big enough to hold several
+/// seconds of busy traffic, small enough to allocate per worker eagerly.
+pub const RING_CAPACITY: usize = 4096;
+
+/// Payload words per slot: `req_id`, packed `kind|lane`, `start_us`,
+/// `dur_us`, `aux`.
+const WORDS: usize = 5;
+
+struct Slot {
+    /// Seqlock: `2*idx + 1` while the claimant of write index `idx` is
+    /// storing, `2*idx + 2` once published.  Starts at 0 (never valid).
+    seq: AtomicU64,
+    words: [AtomicU64; WORDS],
+}
+
+impl Slot {
+    fn new() -> Self {
+        Slot { seq: AtomicU64::new(0), words: [const { AtomicU64::new(0) }; WORDS] }
+    }
+}
+
+/// One fixed-size multi-producer span ring (one per [`TraceSink`] lane).
+pub struct SpanRing {
+    slots: Box<[Slot]>,
+    /// Total spans ever claimed on this ring (monotonic).
+    claim: AtomicU64,
+    /// Watermark: spans already returned by a drain.
+    drained: AtomicU64,
+    /// Spans overwritten (or torn mid-drain) before a drain saw them.
+    lost: AtomicU64,
+}
+
+impl SpanRing {
+    fn new() -> Self {
+        SpanRing {
+            slots: (0..RING_CAPACITY).map(|_| Slot::new()).collect(),
+            claim: AtomicU64::new(0),
+            drained: AtomicU64::new(0),
+            lost: AtomicU64::new(0),
+        }
+    }
+
+    /// Write one record.  Wait-free for producers: a full ring overwrites
+    /// its oldest slot.
+    pub fn push(&self, rec: &SpanRecord) {
+        let idx = self.claim.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(idx as usize) % RING_CAPACITY];
+        // Busy-mark with AcqRel so the payload stores below cannot be
+        // reordered above it (see module docs).
+        slot.seq.swap(2 * idx + 1, Ordering::AcqRel);
+        slot.words[0].store(rec.req_id, Ordering::Relaxed);
+        slot.words[1].store(rec.kind as u64 | ((rec.lane as u64) << 8), Ordering::Relaxed);
+        slot.words[2].store(rec.start_us, Ordering::Relaxed);
+        slot.words[3].store(rec.dur_us, Ordering::Relaxed);
+        slot.words[4].store(rec.aux, Ordering::Relaxed);
+        slot.seq.store(2 * idx + 2, Ordering::Release);
+    }
+
+    /// Spans ever written to this ring.
+    pub fn written(&self) -> u64 {
+        self.claim.load(Ordering::Relaxed)
+    }
+
+    /// Spans lost to overwrite before a drain collected them.
+    pub fn lost(&self) -> u64 {
+        self.lost.load(Ordering::Relaxed)
+    }
+
+    /// Collect every span published since the previous drain, in write
+    /// order.  Concurrent producers keep running; a slot overwritten
+    /// while being read is skipped and counted as lost.
+    pub fn drain(&self, out: &mut Vec<SpanRecord>) {
+        let upto = self.claim.load(Ordering::Acquire);
+        let mark = self.drained.swap(upto, Ordering::Relaxed);
+        let from = mark.max(upto.saturating_sub(RING_CAPACITY as u64));
+        if from > mark {
+            self.lost.fetch_add(from - mark, Ordering::Relaxed);
+        }
+        for idx in from..upto {
+            match self.read_slot(idx) {
+                Some(rec) => out.push(rec),
+                None => {
+                    self.lost.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    /// Seqlock read of write index `idx`; `None` if the slot no longer
+    /// (or not yet) holds that generation.
+    fn read_slot(&self, idx: u64) -> Option<SpanRecord> {
+        let want = 2 * idx + 2;
+        let slot = &self.slots[(idx as usize) % RING_CAPACITY];
+        if slot.seq.load(Ordering::Acquire) != want {
+            return None;
+        }
+        let w0 = slot.words[0].load(Ordering::Relaxed);
+        let w1 = slot.words[1].load(Ordering::Relaxed);
+        let w2 = slot.words[2].load(Ordering::Relaxed);
+        let w3 = slot.words[3].load(Ordering::Relaxed);
+        let w4 = slot.words[4].load(Ordering::Relaxed);
+        fence(Ordering::Acquire);
+        if slot.seq.load(Ordering::Relaxed) != want {
+            return None;
+        }
+        Some(SpanRecord {
+            kind: SpanKind::from_u8((w1 & 0xff) as u8)?,
+            lane: (w1 >> 8) as u32,
+            req_id: w0,
+            start_us: w2,
+            dur_us: w3,
+            aux: w4,
+        })
+    }
+}
+
+/// The coordinator's tracing hub: one [`SpanRing`] per pool worker plus a
+/// shared front-end lane, a common epoch, and the on/off switch
+/// (`serve --trace off` / `CoordinatorConfig::trace(false)`).
+pub struct TraceSink {
+    rings: Vec<SpanRing>,
+    epoch: Instant,
+    enabled: AtomicBool,
+}
+
+impl TraceSink {
+    /// A sink with `workers` worker lanes and one front-end lane.
+    pub fn new(workers: usize, enabled: bool) -> Self {
+        TraceSink {
+            rings: (0..workers.max(1) + 1).map(|_| SpanRing::new()).collect(),
+            epoch: Instant::now(),
+            enabled: AtomicBool::new(enabled),
+        }
+    }
+
+    /// Is span recording on?  Producers check this once per span (and
+    /// skip the timed model path entirely when off, so `--trace off`
+    /// measures a true zero-tracing baseline).
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Flip recording at runtime (tests and the bench harness).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// The shared lane for non-worker producers (net reader, demux,
+    /// coordinator admission).
+    pub fn net_lane(&self) -> u32 {
+        (self.rings.len() - 1) as u32
+    }
+
+    /// Microseconds from the sink epoch to `t` (0 if `t` precedes it).
+    pub fn since_us(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Record a span covering `[start, end]` on `lane`.  No-op when
+    /// tracing is off; out-of-range lanes clamp to the front-end lane.
+    pub fn record(
+        &self,
+        lane: u32,
+        kind: SpanKind,
+        req_id: u64,
+        start: Instant,
+        end: Instant,
+        aux: u64,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        let rec = SpanRecord {
+            kind,
+            lane,
+            req_id,
+            start_us: self.since_us(start),
+            dur_us: end.saturating_duration_since(start).as_micros() as u64,
+            aux,
+        };
+        self.ring(lane).push(&rec);
+    }
+
+    /// Record a span from an explicit epoch-relative start and a
+    /// duration already measured in microseconds (the per-stage model
+    /// timings arrive this way).
+    pub fn record_us(
+        &self,
+        lane: u32,
+        kind: SpanKind,
+        req_id: u64,
+        start_us: u64,
+        dur_us: u64,
+        aux: u64,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        let rec = SpanRecord { kind, lane, req_id, start_us, dur_us, aux };
+        self.ring(lane).push(&rec);
+    }
+
+    fn ring(&self, lane: u32) -> &SpanRing {
+        let i = (lane as usize).min(self.rings.len() - 1);
+        &self.rings[i]
+    }
+
+    /// Drain every lane: spans published since the previous drain, lane
+    /// by lane in write order.
+    pub fn drain(&self) -> Vec<SpanRecord> {
+        let mut out = Vec::new();
+        for ring in &self.rings {
+            ring.drain(&mut out);
+        }
+        out
+    }
+
+    /// Total spans written across lanes (telemetry counter).
+    pub fn spans_written(&self) -> u64 {
+        self.rings.iter().map(SpanRing::written).sum()
+    }
+
+    /// Total spans lost to ring overwrite across lanes.
+    pub fn spans_lost(&self) -> u64 {
+        self.rings.iter().map(SpanRing::lost).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn rec(lane: u32, req_id: u64, start_us: u64) -> SpanRecord {
+        SpanRecord { kind: SpanKind::QueueWait, lane, req_id, start_us, dur_us: 1, aux: 0 }
+    }
+
+    #[test]
+    fn push_then_drain_roundtrips_in_order() {
+        let ring = SpanRing::new();
+        for i in 0..10 {
+            ring.push(&rec(3, i, i * 100));
+        }
+        let mut got = Vec::new();
+        ring.drain(&mut got);
+        assert_eq!(got.len(), 10);
+        for (i, r) in got.iter().enumerate() {
+            assert_eq!(r.req_id, i as u64);
+            assert_eq!(r.start_us, i as u64 * 100);
+            assert_eq!(r.lane, 3);
+        }
+        // a second drain sees nothing new
+        let mut again = Vec::new();
+        ring.drain(&mut again);
+        assert!(again.is_empty());
+        assert_eq!(ring.lost(), 0);
+    }
+
+    #[test]
+    fn overflow_keeps_newest_and_counts_lost() {
+        let ring = SpanRing::new();
+        let n = RING_CAPACITY as u64 + 100;
+        for i in 0..n {
+            ring.push(&rec(0, i, i));
+        }
+        let mut got = Vec::new();
+        ring.drain(&mut got);
+        assert_eq!(got.len(), RING_CAPACITY);
+        assert_eq!(got.first().unwrap().req_id, 100);
+        assert_eq!(got.last().unwrap().req_id, n - 1);
+        assert_eq!(ring.lost(), 100);
+    }
+
+    /// The satellite-4 concurrency pin: many producers hammer one ring;
+    /// nothing panics, no record is torn across producers, and each
+    /// producer's spans come back in its own submission order (the
+    /// `fetch_add` claim preserves per-thread program order).
+    #[test]
+    fn concurrent_producers_no_loss_and_per_producer_order() {
+        let ring = SpanRing::new();
+        let producers = 8u64;
+        let per = 400u64; // 8*400 = 3200 < RING_CAPACITY: nothing overwritten
+        thread::scope(|s| {
+            for p in 0..producers {
+                let ring = &ring;
+                s.spawn(move || {
+                    for i in 0..per {
+                        // start_us encodes (producer, seq) so tearing
+                        // across producers would be detectable
+                        ring.push(&rec(p as u32, p * 1_000_000 + i, i));
+                    }
+                });
+            }
+        });
+        let mut got = Vec::new();
+        ring.drain(&mut got);
+        assert_eq!(got.len(), (producers * per) as usize, "no lost writes below capacity");
+        assert_eq!(ring.lost(), 0);
+        let mut last_seq = vec![None::<u64>; producers as usize];
+        for r in &got {
+            let p = r.lane as usize;
+            let seq = r.req_id % 1_000_000;
+            assert_eq!(r.req_id / 1_000_000, r.lane as u64, "torn record");
+            assert_eq!(r.start_us, seq, "payload words belong to one write");
+            if let Some(prev) = last_seq[p] {
+                assert!(seq > prev, "producer {p} spans out of order: {prev} then {seq}");
+            }
+            last_seq[p] = Some(seq);
+        }
+        for (p, seen) in last_seq.iter().enumerate() {
+            assert_eq!(*seen, Some(per - 1), "producer {p} spans missing");
+        }
+    }
+
+    #[test]
+    fn concurrent_drain_never_yields_torn_records() {
+        // Writers wrap the ring many times while a reader drains in a
+        // loop: every record the reader accepts must be internally
+        // consistent (the seqlock re-check catches mid-overwrite reads).
+        let ring = SpanRing::new();
+        let writers = 4u64;
+        let per = 4 * RING_CAPACITY as u64;
+        thread::scope(|s| {
+            for p in 0..writers {
+                let ring = &ring;
+                s.spawn(move || {
+                    for i in 0..per {
+                        ring.push(&rec(p as u32, p * 10_000_000 + i, i));
+                    }
+                });
+            }
+            let ring = &ring;
+            s.spawn(move || {
+                let mut got = Vec::new();
+                for _ in 0..50 {
+                    got.clear();
+                    ring.drain(&mut got);
+                    for r in &got {
+                        assert_eq!(r.req_id / 10_000_000, r.lane as u64, "torn record");
+                        assert_eq!(r.start_us, r.req_id % 10_000_000, "torn record");
+                    }
+                    thread::yield_now();
+                }
+            });
+        });
+        assert_eq!(ring.written(), writers * per);
+    }
+
+    #[test]
+    fn sink_routes_lanes_and_respects_enabled() {
+        let sink = TraceSink::new(2, false);
+        let t0 = Instant::now();
+        sink.record(0, SpanKind::Batch, 1, t0, t0, 4);
+        assert_eq!(sink.spans_written(), 0, "disabled sink records nothing");
+        sink.set_enabled(true);
+        sink.record(0, SpanKind::Batch, 1, t0, t0, 4);
+        sink.record(1, SpanKind::Batch, 2, t0, t0, 4);
+        sink.record(sink.net_lane(), SpanKind::FrameDecode, 3, t0, t0, 0);
+        sink.record(99, SpanKind::ReplySend, 4, t0, t0, 0); // clamps to net lane
+        assert_eq!(sink.net_lane(), 2);
+        let spans = sink.drain();
+        assert_eq!(spans.len(), 4);
+        assert_eq!(sink.spans_written(), 4);
+        assert_eq!(sink.spans_lost(), 0);
+    }
+}

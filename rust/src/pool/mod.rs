@@ -31,6 +31,7 @@ use anyhow::{Context, Result};
 use crate::config::BackendKind;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
+use crate::obs::TraceSink;
 use crate::runtime::Manifest;
 
 /// Pool sizing + per-worker startup configuration.
@@ -71,6 +72,7 @@ impl WorkerPool {
         manifest: &Manifest,
         router: &Arc<Router>,
         metrics: &Arc<Metrics>,
+        trace: &Arc<TraceSink>,
     ) -> Result<Self> {
         let workers = effective_workers(cfg.backend, cfg.workers);
         if workers != cfg.workers {
@@ -106,6 +108,7 @@ impl WorkerPool {
                 manifest: manifest.clone(),
                 router: Arc::clone(router),
                 metrics: Arc::clone(metrics),
+                trace: Arc::clone(trace),
                 preload: cfg.preload.clone(),
                 backend: cfg.backend,
                 batch_seed: Arc::clone(&batch_seed),

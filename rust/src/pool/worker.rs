@@ -15,12 +15,14 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::anytime::{margin_of, InferOutcome};
+use crate::anytime::{margin_of, ExitPolicy, InferOutcome};
+use crate::attention::block::StageTimings;
 use crate::attention::model::image_seed;
 use crate::config::BackendKind;
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{Exemplar, Metrics};
 use crate::coordinator::request::{ClassifyRequest, ClassifyResponse, SeedPolicy};
 use crate::coordinator::router::Router;
+use crate::obs::{SpanKind, TraceSink};
 use crate::runtime::{create_backend_intra, LoadedVariant, Manifest};
 
 /// Everything one worker needs, moved into its thread at spawn.
@@ -29,6 +31,7 @@ pub(crate) struct WorkerContext {
     pub manifest: Manifest,
     pub router: Arc<Router>,
     pub metrics: Arc<Metrics>,
+    pub trace: Arc<TraceSink>,
     pub preload: Vec<String>,
     pub backend: BackendKind,
     /// Shared PerBatch/Ensemble seed counter (per-pool, not per-worker,
@@ -93,8 +96,7 @@ pub(crate) fn run(ctx: WorkerContext, ready: mpsc::Sender<Result<()>>) {
         // a failed batch still charges busy time, but its requests were
         // never answered — count 0 served so per-worker request totals
         // always agree with the per-target totals
-        let served = match serve_batch(model, &batch, &ctx.metrics, &key, max_batch, &ctx.batch_seed)
-        {
+        let served = match serve_batch(model, &batch, &key, max_batch, &ctx) {
             Ok(()) => batch.len(),
             Err(e) => {
                 crate::log_error!("worker {}: serving batch on {key}: {e:#}", ctx.worker_id);
@@ -111,11 +113,14 @@ pub(crate) fn run(ctx: WorkerContext, ready: mpsc::Sender<Result<()>>) {
 fn serve_batch(
     model: &dyn LoadedVariant,
     batch: &[ClassifyRequest],
-    metrics: &Metrics,
     key: &str,
     max_batch: usize,
-    batch_seed: &AtomicU32,
+    ctx: &WorkerContext,
 ) -> Result<()> {
+    let metrics: &Metrics = &ctx.metrics;
+    let batch_seed: &AtomicU32 = &ctx.batch_seed;
+    let trace: &TraceSink = &ctx.trace;
+    let lane = ctx.worker_id as u32;
     let model_batch = model.batch();
     anyhow::ensure!(
         batch.len() <= model_batch,
@@ -164,8 +169,30 @@ fn serve_batch(
         }
     };
 
-    // run (ensemble averages logits across seeds)
+    // queue-wait spans close the moment the forward pass begins
+    let tracing = trace.enabled();
+    let fwd_start = Instant::now();
+    if tracing {
+        for r in batch {
+            trace.record(
+                lane,
+                SpanKind::QueueWait,
+                r.id,
+                r.trace.submitted_at,
+                fwd_start,
+                batch.len() as u64,
+            );
+        }
+    }
+
+    // run (ensemble averages logits across seeds).  When tracing is on,
+    // single-seed paths route through the *timed* anytime twins — which
+    // are bit-identical to the untimed calls (pinned by the tracing
+    // on/off integration test) — and the stage breakdown comes back for
+    // the span rings.  When tracing is off the pre-tracing code runs
+    // unchanged, so `--trace off` is a true zero-tracing baseline.
     let classes = model.variant().output_shape[1];
+    let mut stages: Option<StageTimings> = None;
     let outcomes: Vec<InferOutcome> = if exit.is_full() {
         // exact path: unchanged arithmetic from before the anytime seam —
         // this match is the bit-exactness spine the `full`-policy tests pin
@@ -175,7 +202,23 @@ fn serve_batch(
             // would use (row 0 of `s`), so the result for (image, Fixed(s))
             // is bit-identical under any batch placement or worker count.
             SeedPolicy::Fixed(s) if model.supports_row_seeds() => {
-                model.infer_rows(&images, &vec![image_seed(s, 0); rows])?
+                let row_seeds = vec![image_seed(s, 0); rows];
+                if tracing {
+                    let (outs, tm) =
+                        model.infer_rows_anytime_timed(&images, &row_seeds, &ExitPolicy::Full)?;
+                    stages = tm;
+                    outs.into_iter().flat_map(|o| o.logits).collect()
+                } else {
+                    model.infer_rows(&images, &row_seeds)?
+                }
+            }
+            _ if tracing && seeds.len() == 1 => {
+                // single-seed accumulation is `0.0 + l / 1.0` — bitwise
+                // `l` — so the timed outcomes' logits reproduce it exactly
+                let (outs, tm) =
+                    model.infer_anytime_timed(&images, seeds[0], &ExitPolicy::Full)?;
+                stages = tm;
+                outs.into_iter().flat_map(|o| o.logits).collect()
             }
             _ => {
                 let mut acc = vec![0.0f32; rows * classes];
@@ -205,10 +248,28 @@ fn serve_batch(
             // request's exit step (and logits) are independent of batch
             // placement and worker count
             SeedPolicy::Fixed(s) if model.supports_row_seeds() => {
-                model.infer_rows_anytime(&images, &vec![image_seed(s, 0); rows], &exit)?
+                let row_seeds = vec![image_seed(s, 0); rows];
+                if tracing {
+                    let (outs, tm) = model.infer_rows_anytime_timed(&images, &row_seeds, &exit)?;
+                    stages = tm;
+                    outs
+                } else {
+                    model.infer_rows_anytime(&images, &row_seeds, &exit)?
+                }
             }
-            SeedPolicy::Fixed(s) => model.infer_anytime(&images, s, &exit)?,
-            SeedPolicy::PerBatch => model.infer_anytime(&images, seed_reported, &exit)?,
+            SeedPolicy::Fixed(_) | SeedPolicy::PerBatch => {
+                let seed = match policy {
+                    SeedPolicy::Fixed(s) => s,
+                    _ => seed_reported,
+                };
+                if tracing {
+                    let (outs, tm) = model.infer_anytime_timed(&images, seed, &exit)?;
+                    stages = tm;
+                    outs
+                } else {
+                    model.infer_anytime(&images, seed, &exit)?
+                }
+            }
             // rejected at submit; refuse here too in case a future entry
             // point forgets — averaging passes that exited at different
             // steps has no well-defined semantics
@@ -223,16 +284,51 @@ fn serve_batch(
         outcomes.len(),
         batch.len()
     );
+    let fwd_end = Instant::now();
+    if tracing {
+        let head = batch[0].id;
+        let n = batch.len() as u64;
+        trace.record(lane, SpanKind::ModelForward, head, fwd_start, fwd_end, n);
+        if let Some(tm) = &stages {
+            // stage spans are CPU-time attribution summed across rows,
+            // laid end to end from the forward start (they can exceed
+            // the batch's wall time on multithreaded batches)
+            let mut cursor = trace.since_us(fwd_start);
+            let stage_spans = [
+                (SpanKind::StageEmbed, tm.embed_us),
+                (SpanKind::StageQkv, tm.qkv_us),
+                (SpanKind::StageAttn, tm.attn_us),
+                (SpanKind::StageMlp, tm.mlp_us),
+                (SpanKind::StageReadout, tm.readout_us),
+            ];
+            for (kind, dur_us) in stage_spans {
+                let d = dur_us.max(0.0) as u64;
+                trace.record_us(lane, kind, head, cursor, d, n);
+                cursor = cursor.saturating_add(d);
+            }
+        }
+    }
 
     // reply per request (zip drops the padding rows, if any)
     let now = Instant::now();
     let mut lats = Vec::with_capacity(batch.len());
     let mut steps = Vec::with_capacity(batch.len());
-    for (req, out) in batch.iter().zip(&outcomes) {
+    let mut margins = Vec::with_capacity(batch.len());
+    let mut slowest: Option<(usize, f64)> = None;
+    for (i, (req, out)) in batch.iter().zip(&outcomes).enumerate() {
         let class = crate::util::argmax(&out.logits).unwrap_or(0);
-        let latency_us = now.duration_since(req.submitted_at).as_secs_f64() * 1e6;
+        let latency_us =
+            now.duration_since(req.trace.submitted_at).as_secs_f64() * 1e6;
         lats.push(latency_us);
         steps.push(out.steps_used as f64);
+        margins.push(out.margin as f64);
+        let is_slower = match slowest {
+            Some((_, worst)) => latency_us > worst,
+            None => true,
+        };
+        if is_slower {
+            slowest = Some((i, latency_us));
+        }
         let _ = req.reply.send(ClassifyResponse {
             id: req.id,
             class,
@@ -244,6 +340,25 @@ fn serve_batch(
             confidence: out.margin,
         });
     }
-    metrics.record_batch(key, batch.len(), max_batch, &lats, &steps);
+    if tracing {
+        let n = batch.len() as u64;
+        trace.record(lane, SpanKind::Batch, batch[0].id, fwd_start, Instant::now(), n);
+    }
+    metrics.record_batch(key, batch.len(), max_batch, &lats, &steps, &margins);
+    if let Some((i, latency_us)) = slowest {
+        let req = &batch[i];
+        metrics.record_exemplar(Exemplar {
+            id: req.id,
+            target: key.to_string(),
+            latency_us,
+            queue_us: fwd_start
+                .saturating_duration_since(req.trace.submitted_at)
+                .as_secs_f64()
+                * 1e6,
+            steps_used: outcomes[i].steps_used,
+            batch_size: batch.len(),
+            stages,
+        });
+    }
     Ok(())
 }

@@ -18,6 +18,7 @@
 use anyhow::Result;
 
 use crate::anytime::{margin_of, ExitPolicy, InferOutcome};
+use crate::attention::block::StageTimings;
 use crate::config::BackendKind;
 
 use super::manifest::{Manifest, Variant};
@@ -110,6 +111,32 @@ pub trait LoadedVariant {
         );
         let logits = self.infer_rows(images, row_seeds)?;
         Ok(full_outcomes(logits, self.variant()))
+    }
+
+    /// [`Self::infer_anytime`] with an optional per-stage wall-clock
+    /// breakdown (embed/qkv/attn/mlp/readout, summed across rows) for
+    /// the serving tracer.  Timing must never perturb the arithmetic:
+    /// outcomes are bit-identical to the untimed call.  The default
+    /// delegates untimed and reports `None`, so engines without stage
+    /// attribution (XLA runs one fused graph) keep working.
+    fn infer_anytime_timed(
+        &self,
+        images: &[f32],
+        seed: u32,
+        policy: &ExitPolicy,
+    ) -> Result<(Vec<InferOutcome>, Option<StageTimings>)> {
+        Ok((self.infer_anytime(images, seed, policy)?, None))
+    }
+
+    /// Timed twin of [`Self::infer_rows_anytime`]; same contract as
+    /// [`Self::infer_anytime_timed`].
+    fn infer_rows_anytime_timed(
+        &self,
+        images: &[f32],
+        row_seeds: &[u64],
+        policy: &ExitPolicy,
+    ) -> Result<(Vec<InferOutcome>, Option<StageTimings>)> {
+        Ok((self.infer_rows_anytime(images, row_seeds, policy)?, None))
     }
 
     /// Argmax class per batch row (total-order; never panics on NaN).

@@ -13,6 +13,7 @@
 use anyhow::{Context, Result};
 
 use crate::anytime::{ExitPolicy, InferOutcome};
+use crate::attention::block::StageTimings;
 use crate::attention::model::{Arch, ModelGeometry, NativeModel};
 use crate::config::{LifConfig, PrngSharing};
 
@@ -260,5 +261,44 @@ impl LoadedVariant for NativeVariant {
             self.variant.batch
         );
         self.model.infer_rows_anytime(images, row_seeds.len(), row_seeds, policy)
+    }
+
+    fn infer_anytime_timed(
+        &self,
+        images: &[f32],
+        seed: u32,
+        policy: &ExitPolicy,
+    ) -> Result<(Vec<InferOutcome>, Option<StageTimings>)> {
+        let px = self.model.geometry().image_size.pow(2);
+        anyhow::ensure!(
+            px > 0 && images.len() % px == 0,
+            "image buffer of {} f32s is not a whole number of {px}-pixel images",
+            images.len()
+        );
+        let rows = images.len() / px;
+        anyhow::ensure!(
+            rows <= self.variant.batch,
+            "{rows} rows exceed variant batch {}",
+            self.variant.batch
+        );
+        let (outcomes, tm) = self.model.infer_anytime_timed(images, rows, seed, policy)?;
+        Ok((outcomes, Some(tm)))
+    }
+
+    fn infer_rows_anytime_timed(
+        &self,
+        images: &[f32],
+        row_seeds: &[u64],
+        policy: &ExitPolicy,
+    ) -> Result<(Vec<InferOutcome>, Option<StageTimings>)> {
+        anyhow::ensure!(
+            row_seeds.len() <= self.variant.batch,
+            "{} rows exceed variant batch {}",
+            row_seeds.len(),
+            self.variant.batch
+        );
+        let (outcomes, tm) =
+            self.model.infer_rows_anytime_timed(images, row_seeds.len(), row_seeds, policy)?;
+        Ok((outcomes, Some(tm)))
     }
 }

@@ -1,7 +1,13 @@
 //! Tiny leveled logger (offline image has no `env_logger`).
 //!
-//! Controlled by `SSA_LOG` = `error|warn|info|debug|trace` (default `info`).
+//! Controlled by `SSA_LOG` = `error|warn|info|debug|trace` (default
+//! `info`) and `SSA_LOG_FORMAT` = `human|json` (default `human`).  The
+//! JSON format emits one object per line — `ts` (seconds since logger
+//! init), `level`, `module`, `msg`, and `req` (the coordinator request
+//! id) when the emitting thread is inside a [`RequestSpan`] — so log
+//! shippers can join serving logs against trace spans by request id.
 
+use std::cell::Cell;
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
@@ -17,8 +23,23 @@ pub enum Level {
     Trace = 4,
 }
 
+/// Line layout: the classic human-oriented format, or one JSON object
+/// per line (`SSA_LOG_FORMAT=json`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Format {
+    Human = 0,
+    Json = 1,
+}
+
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static FORMAT: AtomicU8 = AtomicU8::new(Format::Human as u8);
 static START: OnceLock<Instant> = OnceLock::new();
+
+thread_local! {
+    /// Request id the current thread is serving (0 = none).
+    static CURRENT_REQ: Cell<u64> = const { Cell::new(0) };
+}
 
 fn start() -> Instant {
     *START.get_or_init(Instant::now)
@@ -33,6 +54,9 @@ pub fn init_from_env() {
         _ => Level::Info,
     };
     set_level(lvl);
+    if std::env::var("SSA_LOG_FORMAT").as_deref() == Ok("json") {
+        set_format(Format::Json);
+    }
     start(); // pin t=0 to logger init
 }
 
@@ -40,8 +64,37 @@ pub fn set_level(lvl: Level) {
     LEVEL.store(lvl as u8, Ordering::Relaxed);
 }
 
+pub fn set_format(fmt: Format) {
+    FORMAT.store(fmt as u8, Ordering::Relaxed);
+}
+
 pub fn enabled(lvl: Level) -> bool {
     lvl as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// RAII marker: log lines emitted by this thread while the guard lives
+/// carry `req` (JSON format) — see [`request_span`].
+pub struct RequestSpan {
+    prev: u64,
+}
+
+/// Mark the current thread as serving request `id` until the returned
+/// guard drops.  Spans nest (the previous id is restored on drop).
+pub fn request_span(id: u64) -> RequestSpan {
+    let prev = CURRENT_REQ.with(|c| c.replace(id));
+    RequestSpan { prev }
+}
+
+/// The request id the current thread is serving, if any.
+pub fn current_request() -> Option<u64> {
+    let id = CURRENT_REQ.with(Cell::get);
+    (id != 0).then_some(id)
+}
+
+impl Drop for RequestSpan {
+    fn drop(&mut self) {
+        CURRENT_REQ.with(|c| c.set(self.prev));
+    }
 }
 
 pub fn log(lvl: Level, module: &str, msg: std::fmt::Arguments<'_>) {
@@ -49,15 +102,47 @@ pub fn log(lvl: Level, module: &str, msg: std::fmt::Arguments<'_>) {
         return;
     }
     let t = start().elapsed().as_secs_f64();
-    let tag = match lvl {
-        Level::Error => "ERROR",
-        Level::Warn => "WARN ",
-        Level::Info => "INFO ",
-        Level::Debug => "DEBUG",
-        Level::Trace => "TRACE",
+    match FORMAT.load(Ordering::Relaxed) {
+        f if f == Format::Json as u8 => {
+            let line = json_line(t, lvl, module, &msg.to_string(), current_request());
+            let mut err = std::io::stderr().lock();
+            let _ = writeln!(err, "{line}");
+        }
+        _ => {
+            let tag = match lvl {
+                Level::Error => "ERROR",
+                Level::Warn => "WARN ",
+                Level::Info => "INFO ",
+                Level::Debug => "DEBUG",
+                Level::Trace => "TRACE",
+            };
+            let mut err = std::io::stderr().lock();
+            let _ = writeln!(err, "[{t:9.3}s {tag} {module}] {msg}");
+        }
+    }
+}
+
+/// One structured log line (split out so tests can pin the shape without
+/// capturing stderr).
+fn json_line(t: f64, lvl: Level, module: &str, msg: &str, req: Option<u64>) -> String {
+    use crate::util::json::Json;
+    let level = match lvl {
+        Level::Error => "error",
+        Level::Warn => "warn",
+        Level::Info => "info",
+        Level::Debug => "debug",
+        Level::Trace => "trace",
     };
-    let mut err = std::io::stderr().lock();
-    let _ = writeln!(err, "[{t:9.3}s {tag} {module}] {msg}");
+    let mut pairs = vec![
+        ("ts", Json::num((t * 1000.0).round() / 1000.0)),
+        ("level", Json::str(level)),
+        ("module", Json::str(module)),
+        ("msg", Json::str(msg)),
+    ];
+    if let Some(id) = req {
+        pairs.push(("req", Json::num(id as f64)));
+    }
+    Json::obj(pairs).to_string()
 }
 
 #[macro_export]
@@ -91,6 +176,7 @@ macro_rules! log_error {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::json::Json;
 
     #[test]
     fn level_gating() {
@@ -99,5 +185,35 @@ mod tests {
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
         set_level(Level::Info);
+    }
+
+    #[test]
+    fn request_span_nests_and_restores() {
+        assert_eq!(current_request(), None);
+        {
+            let _outer = request_span(7);
+            assert_eq!(current_request(), Some(7));
+            {
+                let _inner = request_span(9);
+                assert_eq!(current_request(), Some(9));
+            }
+            assert_eq!(current_request(), Some(7));
+        }
+        assert_eq!(current_request(), None);
+    }
+
+    #[test]
+    fn json_lines_parse_and_carry_fields() {
+        let line = json_line(1.2345, Level::Warn, "ssa::pool::worker", "batch \"x\" failed", None);
+        let doc = Json::parse(&line).expect("valid JSON log line");
+        assert_eq!(doc.get("level").and_then(Json::as_str), Some("warn"));
+        assert_eq!(doc.get("module").and_then(Json::as_str), Some("ssa::pool::worker"));
+        assert_eq!(doc.get("msg").and_then(Json::as_str), Some("batch \"x\" failed"));
+        assert!(doc.get("req").is_none());
+        assert!((doc.get("ts").and_then(Json::as_f64).unwrap() - 1.234).abs() < 1e-9);
+
+        let line = json_line(0.5, Level::Info, "m", "served", Some(42));
+        let doc = Json::parse(&line).expect("valid JSON log line");
+        assert_eq!(doc.get("req").and_then(Json::as_u64), Some(42));
     }
 }

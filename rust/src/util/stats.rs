@@ -174,6 +174,36 @@ impl LogHistogram {
         self.max
     }
 
+    /// Exact sum of every recorded sample (the Prometheus `_sum` series).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Cumulative bucket counts at octave granularity — `(upper_bound,
+    /// cumulative_count)` pairs with bounds `2^0, 2^1, …` — for
+    /// Prometheus histogram exposition (`le` labels).  The sub-µs bucket
+    /// folds into the first pair; emission stops at the first octave
+    /// that already covers every sample, so quiet histograms stay short.
+    /// Samples past the top octave appear only in the implicit `+Inf`
+    /// bucket (the total count). Empty when no samples were recorded.
+    pub fn octave_cumulative(&self) -> Vec<(f64, u64)> {
+        if self.count == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for octave in 0..OCTAVES {
+            // octave `j` ends at bucket index 8*j (upper bound 2^j);
+            // bucket 0 (sub-µs) belongs to every prefix.
+            let hi = BUCKETS_PER_OCTAVE * octave;
+            let cum: u64 = self.counts[..=hi].iter().sum();
+            out.push((2f64.powi(octave as i32), cum));
+            if cum == self.count {
+                break;
+            }
+        }
+        out
+    }
+
     /// Fold another histogram into this one (merging per-thread stats).
     pub fn merge(&mut self, other: &LogHistogram) {
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
@@ -374,6 +404,91 @@ mod tests {
         assert!((s.p50 - 2.0).abs() / 2.0 < 0.05, "median exits early: {}", s.p50);
         assert_eq!(s.p95, 8.0, "tail clamps to the exact observed max");
         assert_eq!(s.max, 8.0);
+    }
+
+    /// Property: an empty histogram is all-zero everywhere a caller can
+    /// observe it (quantiles, min/max/mean/sum, octave exposition).
+    #[test]
+    fn prop_empty_histogram_is_zero_everywhere() {
+        let h = LogHistogram::new();
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(p), 0.0);
+        }
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.sum(), 0.0);
+        assert!(h.octave_cumulative().is_empty(), "no le buckets without samples");
+    }
+
+    /// Property: with a single sample, every quantile is exactly that
+    /// sample — the [min, max] clamp removes all bucket error.
+    #[test]
+    fn prop_single_sample_quantiles_are_exact() {
+        let mut v = 0.1f64;
+        while v < 1e13 {
+            let mut h = LogHistogram::new();
+            h.record(v);
+            for p in [0.0, 25.0, 50.0, 99.0, 100.0] {
+                assert_eq!(h.percentile(p), v, "p{p} of single sample {v}");
+            }
+            assert_eq!(h.min(), v);
+            assert_eq!(h.max(), v);
+            assert_eq!(h.sum(), v);
+            v *= 7.3;
+        }
+    }
+
+    /// Property: samples beyond the top octave all saturate into the
+    /// overflow bucket, yet quantiles stay inside the exact observed
+    /// range and remain monotone in `p`.
+    #[test]
+    fn prop_saturating_bucket_stays_in_observed_range() {
+        let mut h = LogHistogram::new();
+        let lo = 1e13; // ~2^43.2 µs: past the 2^40 top octave
+        let hi = 1e18;
+        for i in 0..100 {
+            h.record(lo + (hi - lo) * (i as f64 / 99.0));
+        }
+        assert_eq!(h.count(), 100);
+        let mut prev = 0.0f64;
+        for p in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            let q = h.percentile(p);
+            assert!((lo..=hi).contains(&q), "p{p}={q} escapes [{lo}, {hi}]");
+            assert!(q >= prev, "quantiles must be monotone in p");
+            prev = q;
+        }
+        // the saturated samples are past every finite octave bound: they
+        // surface only through the +Inf bucket (total count)
+        let octaves = h.octave_cumulative();
+        assert_eq!(octaves.len(), OCTAVES);
+        assert_eq!(octaves.last().unwrap().1, 0, "no finite le bucket holds them");
+    }
+
+    /// Property: quantiles are monotone in `p` and octave cumulative
+    /// counts are monotone in the bound, for arbitrary sample streams.
+    #[test]
+    fn prop_quantiles_and_octaves_monotone() {
+        let mut h = LogHistogram::new();
+        let mut x = 1u64;
+        for _ in 0..2000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            h.record((x % 1_000_000) as f64 / 7.0);
+        }
+        let mut prev = f64::NEG_INFINITY;
+        for p in 0..=100 {
+            let q = h.percentile(p as f64);
+            assert!(q >= prev, "p{p}: {q} < {prev}");
+            prev = q;
+        }
+        let oct = h.octave_cumulative();
+        assert!(!oct.is_empty());
+        for w in oct.windows(2) {
+            assert!(w[1].0 > w[0].0, "le bounds strictly increase");
+            assert!(w[1].1 >= w[0].1, "cumulative counts never decrease");
+        }
+        assert_eq!(oct.last().unwrap().1, h.count(), "last octave covers everything");
     }
 
     #[test]

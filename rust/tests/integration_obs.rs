@@ -1,0 +1,201 @@
+//! Observability integration: the tracing pipeline end to end against a
+//! live pool.  Pins the three contracts `rust/src/obs` ships under:
+//!
+//! 1. Tracing never moves a logit bit — fixed-seed results are
+//!    byte-identical with `--trace on` vs `--trace off`, for exact and
+//!    early-exit requests alike.
+//! 2. The Prometheus exposition is well-formed (every `# TYPE` family
+//!    has samples, no duplicate families) and covers every target of a
+//!    mixed load run.
+//! 3. `trace-dump` produces valid Chrome trace-event JSON carrying
+//!    queue-wait, batch, and per-stage model spans for served requests.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use ssa_repro::anytime::ExitPolicy;
+use ssa_repro::config::BackendKind;
+use ssa_repro::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, SeedPolicy, Target,
+};
+use ssa_repro::loadgen::{self, SyntheticSpec};
+use ssa_repro::util::json::Json;
+
+const IMAGE: usize = 16;
+const PX: usize = IMAGE * IMAGE;
+
+fn artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ssa-obs-it-{}-{tag}", std::process::id()));
+    let spec = SyntheticSpec {
+        d_model: 16,
+        n_heads: 2,
+        d_mlp: 32,
+        n_layers: 1,
+        dataset_n: 16,
+        ..SyntheticSpec::default()
+    };
+    loadgen::write_artifacts(&dir, &spec).expect("synthesize artifacts");
+    dir
+}
+
+fn start(dir: PathBuf, workers: usize, trace: bool) -> Coordinator {
+    let mut cfg = CoordinatorConfig::new(dir)
+        .with_backend(BackendKind::Native)
+        .with_workers(workers)
+        .with_trace(trace);
+    cfg.policy = BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(3) };
+    cfg.preload = vec!["ssa_t4".into()];
+    Coordinator::start(cfg).expect("coordinator must start")
+}
+
+fn image(i: usize) -> Vec<f32> {
+    (0..PX).map(|p| ((i * 31 + p * 7) % 97) as f32 / 96.0).collect()
+}
+
+// --- contract 1: tracing is bit-exact ----------------------------------------
+
+#[test]
+fn fixed_seed_results_bit_identical_tracing_on_vs_off() {
+    let dir = artifacts("bit-exact");
+    // (class, logits, steps_used, confidence) per request, exact + margin
+    let run = |trace: bool| -> Vec<(usize, Vec<f32>, usize, f32)> {
+        let coord = start(dir.clone(), 2, trace);
+        let mut out = Vec::new();
+        for i in 0..12 {
+            let exit = if i % 2 == 0 {
+                ExitPolicy::Full
+            } else {
+                ExitPolicy::parse("margin:0.5:2").unwrap()
+            };
+            let r = coord
+                .classify_anytime(Target::ssa(4), image(i), SeedPolicy::Fixed(77), exit)
+                .expect("classify");
+            out.push((r.class, r.logits, r.steps_used, r.confidence));
+        }
+        coord.shutdown();
+        out
+    };
+    assert_eq!(
+        run(true),
+        run(false),
+        "fixed-seed responses must be byte-identical with tracing on vs off"
+    );
+}
+
+// --- contract 2: Prometheus exposition ---------------------------------------
+
+#[test]
+fn prometheus_exposition_is_well_formed_and_covers_mixed_run_targets() {
+    let coord = start(artifacts("prom"), 2, true);
+    let targets = [Target::ssa(4), Target::ann(), Target::spikformer(4)];
+    for i in 0..18 {
+        coord
+            .classify(targets[i % targets.len()].clone(), image(i), SeedPolicy::PerBatch)
+            .expect("classify");
+    }
+    let text = coord.metrics_prometheus();
+    coord.shutdown();
+
+    // every # TYPE family has at least one sample, and no family repeats
+    let mut families: Vec<&str> = Vec::new();
+    for line in text.lines().filter(|l| l.starts_with("# TYPE ")) {
+        let name = line.split_whitespace().nth(2).expect("# TYPE NAME KIND");
+        assert!(!families.contains(&name), "duplicate family {name}");
+        families.push(name);
+        let has_sample = text.lines().any(|l| {
+            l.starts_with(&format!("{name} ")) || l.starts_with(&format!("{name}{{"))
+        });
+        assert!(has_sample, "family {name} declared but never sampled");
+    }
+    assert!(!families.is_empty(), "exposition must declare families");
+
+    for key in ["ssa_t4", "ann", "spikformer_t4"] {
+        assert!(
+            text.contains(&format!("ssa_requests_total{{target=\"{key}\"}}")),
+            "target {key} missing from exposition:\n{text}"
+        );
+    }
+    assert!(text.contains("ssa_queue_depth "), "queue depth gauge present");
+    assert!(text.contains("ssa_queue_oldest_age_us "), "oldest-age gauge present");
+    assert!(text.contains("ssa_request_latency_us_bucket{"), "latency histogram present");
+    assert!(text.contains("ssa_steps_used_bucket{"), "steps-used histogram present");
+    assert!(text.contains("ssa_confidence_margin_mean{"), "margin gauge present");
+    assert!(text.contains("ssa_worker_utilization_ratio{"), "worker gauges present");
+    assert!(text.contains("ssa_trace_spans_written_total "), "span counters present");
+}
+
+// --- contract 3: Chrome trace dump -------------------------------------------
+
+#[test]
+fn trace_dump_is_valid_chrome_json_with_lifecycle_spans() {
+    let coord = start(artifacts("chrome"), 2, true);
+    let mut ids = Vec::new();
+    for i in 0..12 {
+        let r = coord
+            .classify(Target::ssa(4), image(i), SeedPolicy::Fixed(9))
+            .expect("classify");
+        ids.push(r.id);
+    }
+    let dump = coord.trace_dump_json();
+    coord.shutdown();
+
+    let doc = Json::parse(&dump).expect("trace dump must be valid JSON");
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("Chrome trace JSON has a traceEvents array");
+    let spans: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .collect();
+    assert!(!spans.is_empty(), "served requests must leave spans");
+    for e in &spans {
+        assert!(e.get("ts").and_then(Json::as_f64).is_some());
+        assert!(e.get("dur").and_then(Json::as_f64).unwrap_or(0.0) >= 1.0);
+    }
+    let named = |n: &str| -> usize {
+        spans.iter().filter(|e| e.get("name").and_then(Json::as_str) == Some(n)).count()
+    };
+    // every request waited in the queue; batches carry forward + stages
+    assert_eq!(named("queue_wait"), ids.len(), "one queue_wait span per request");
+    assert!(named("batch") > 0, "batch spans recorded");
+    assert!(named("model_forward") > 0, "model forward spans recorded");
+    for stage in ["stage_embed", "stage_qkv", "stage_attn", "stage_mlp", "stage_readout"] {
+        assert_eq!(
+            named(stage),
+            named("model_forward"),
+            "each traced batch carries a {stage} attribution span"
+        );
+    }
+    // queue_wait spans carry the request id of every request we sent
+    let span_reqs: Vec<u64> = spans
+        .iter()
+        .filter(|e| e.get("name").and_then(Json::as_str) == Some("queue_wait"))
+        .filter_map(|e| e.get("args").and_then(|a| a.get("req")).and_then(Json::as_f64))
+        .map(|v| v as u64)
+        .collect();
+    for id in &ids {
+        assert!(span_reqs.contains(id), "request {id} missing a queue_wait span");
+    }
+}
+
+/// `--trace off` is a true zero-tracing baseline: nothing is recorded,
+/// and the dump renders an empty (but still valid) trace document.
+#[test]
+fn trace_off_records_nothing() {
+    let coord = start(artifacts("trace-off"), 1, false);
+    for i in 0..6 {
+        coord.classify(Target::ssa(4), image(i), SeedPolicy::PerBatch).expect("classify");
+    }
+    let dump = coord.trace_dump_json();
+    coord.shutdown();
+    let doc = Json::parse(&dump).expect("empty trace still parses");
+    let spans = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents present")
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .count();
+    assert_eq!(spans, 0, "--trace off must not record spans");
+}

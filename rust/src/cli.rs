@@ -125,11 +125,13 @@ USAGE:
                         [--intra-threads N] [--simd auto|scalar]
                         [--ensemble K] [--max-batch B] [--max-delay-ms D]
                         [--listen HOST:PORT] [--max-inflight N]
+                        [--brownout SPEC] [--fault SPEC]
                         [--trace on|off]
   ssa-repro classify-remote --addr HOST:PORT
                         [--target ssa_t4] [--n N] [--seed S]
                         [--seed-policy perbatch|fixed:N|ensemble:K]
                         [--exit full|margin:TH[:MIN]|deadline:B]
+                        [--deadline-ms D] [--priority P] [--retry]
                         [--metrics] [--prometheus] [--trace-dump FILE]
                         [--shutdown]
   ssa-repro serve-bench [--artifacts DIR | --synthetic]
@@ -138,6 +140,7 @@ USAGE:
                         [--concurrency C | --rps R] [--duration SECS]
                         [--mix \"ssa_t4*3,ann@fixed:7!margin:0.5\"]
                         [--seed-policy perbatch|fixed:N|ensemble:K]
+                        [--deadline-ms D] [--priority P] [--retry]
                         [--max-batch B] [--max-delay-ms D] [--seed S]
                         [--remote HOST:PORT] [--trace on|off|both]
                         [--out BENCH_serving.json]
@@ -214,6 +217,42 @@ Observability (DESIGN.md \"Observability\" section):
                    Chrome trace-event JSON at FILE (load it via
                    chrome://tracing or https://ui.perfetto.dev);
                    draining consumes the spans
+
+Overload & fault tolerance (DESIGN.md \"Overload & fault tolerance\"):
+  --deadline-ms D  per-request deadline (classify-remote / serve-bench):
+                   requests still queued D ms after admission are shed
+                   with a typed `deadline_exceeded` error instead of
+                   occupying a worker; the queue dispatches
+                   earliest-deadline-first within a priority level
+  --priority P     request priority 0-255 (default 0); higher priorities
+                   dispatch first, deadlines break ties within a level
+  --retry          (remote paths) use the reconnecting client: broken
+                   connections are re-dialed with jittered exponential
+                   backoff, and fixed-seed requests — bit-deterministic,
+                   therefore idempotent — are retried on retryable
+                   errors (overloaded / internal / unavailable);
+                   perbatch and ensemble requests never retry
+  serve --brownout SPEC
+                   anytime brownout: under sustained queue pressure the
+                   coordinator clamps exit policies toward a degraded
+                   cap so the pool trades steps (accuracy) for latency,
+                   and marks affected replies `degraded`.  SPEC is
+                   comma-separated k=v pairs: `depth=N` (required; enter
+                   at queue depth N), `low=N` (leave at or below;
+                   default depth/2 — hysteresis), `age-ms=MS` /
+                   `age-low-ms=MS` (oldest-request age trigger), and
+                   `exit=POLICY` (the clamp, --exit grammar; default
+                   margin:0.25+deadline:2).  Off by default: without
+                   the flag nothing is ever clamped.
+  serve --fault SPEC
+                   chaos fault injection (testing only; also honoured
+                   from the SSA_FAULT environment variable when the flag
+                   is absent): `panic:P,delay:MS:P,drop_conn:P,\
+corrupt_frame:P` — each component optional.  panic/delay hit workers
+                   mid-batch (supervised: the batch fails typed, the
+                   backend rebuilds, ssa_worker_restarts_total counts
+                   it); drop_conn/corrupt_frame hit the TCP server
+                   before dispatch.  Draws are deterministic per seed.
 
 Anytime inference (early exit over SNN time steps; DESIGN.md 2d):
   --exit POLICY    stop integrating time steps per image once POLICY
@@ -304,6 +343,8 @@ pub const KNOWN_FLAGS: &[(&str, &[&str])] = &[
             "max-delay-ms",
             "listen",
             "max-inflight",
+            "brownout",
+            "fault",
             "synthetic",
             "trace",
         ],
@@ -317,6 +358,9 @@ pub const KNOWN_FLAGS: &[(&str, &[&str])] = &[
             "seed",
             "seed-policy",
             "exit",
+            "deadline-ms",
+            "priority",
+            "retry",
             "metrics",
             "prometheus",
             "trace-dump",
@@ -336,6 +380,9 @@ pub const KNOWN_FLAGS: &[(&str, &[&str])] = &[
             "duration",
             "mix",
             "seed-policy",
+            "deadline-ms",
+            "priority",
+            "retry",
             "max-batch",
             "max-delay-ms",
             "seed",
@@ -359,7 +406,8 @@ pub const KNOWN_FLAGS: &[(&str, &[&str])] = &[
 /// The registered names that are genuinely boolean (presence-only).
 /// Every other name in [`KNOWN_FLAGS`] takes a value, and
 /// [`check_known_flags`] rejects it when the value is missing.
-pub const BOOLEAN_FLAGS: &[&str] = &["synthetic", "trace", "metrics", "prometheus", "shutdown"];
+pub const BOOLEAN_FLAGS: &[&str] =
+    &["synthetic", "trace", "metrics", "prometheus", "shutdown", "retry"];
 
 /// Reject options no subcommand documents — a typo like `--worker 4`
 /// must fail loudly instead of silently falling back to a default — and
@@ -476,15 +524,18 @@ mod tests {
             "serve --artifacts a --backend native --requests 4 --target ssa_t10 \
              --workers 2 --intra-threads 2 --simd auto --ensemble 2 --max-batch 4 \
              --max-delay-ms 2",
-            "serve --listen 127.0.0.1:0 --synthetic --max-inflight 64 --trace off",
+            "serve --listen 127.0.0.1:0 --synthetic --max-inflight 64 --trace off \
+             --brownout depth=32,low=8 --fault panic:0.05,drop_conn:0.02",
             "classify-remote --addr 127.0.0.1:7878 --target ssa_t4 \
              --seed-policy fixed:7 --exit margin:0.5:2 --n 2 --seed 9 \
+             --deadline-ms 50 --priority 3 --retry \
              --metrics --prometheus --trace-dump t.json --shutdown",
             "serve-bench --synthetic --workers 1,4 --intra-threads 2 --concurrency 16 \
              --duration 1 --mix ssa_t4 --seed-policy perbatch --max-batch 2 \
              --max-delay-ms 5 --seed 7 --trace both --out b.json",
-            "serve-bench --artifacts a --backend native --rps 100 --duration 1",
-            "serve-bench --remote 127.0.0.1:7878 --concurrency 4 --duration 1",
+            "serve-bench --artifacts a --backend native --rps 100 --duration 1 \
+             --deadline-ms 25 --priority 1",
+            "serve-bench --remote 127.0.0.1:7878 --concurrency 4 --duration 1 --retry",
             "bench-native --budget 0.5 --warmup 0.1 --batch 4 --layers 1 --t 4 \
              --seed 3 --intra-threads 2 --simd scalar --out n.json",
             "sweep-anytime --synthetic --target ssa_t4 --n 16 \

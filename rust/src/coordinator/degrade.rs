@@ -1,0 +1,489 @@
+//! Overload degradation (brownout) and per-target circuit breaking.
+//!
+//! Two small controllers sit on the admission path:
+//!
+//! * [`DegradeController`] — the **brownout** knob.  SNN compute scales
+//!   with time steps, so under queue pressure the coordinator can shed
+//!   *time steps* before shedding *requests*: above configurable
+//!   depth/age thresholds it clamps incoming requests' [`ExitPolicy`]
+//!   toward tighter margin/deadline exits, and restores full precision
+//!   under hysteresis once the queue drains.  Off by default — the
+//!   `Full`-pinned bit-exactness contract is untouched unless the
+//!   operator opts in with `serve --brownout`.
+//! * [`CircuitBreaker`] — per-target failure isolation.  After K
+//!   consecutive batch failures on one target the breaker opens and
+//!   admission answers [`ServeError::Unavailable`] immediately instead
+//!   of queueing doomed work; after a cooldown one half-open probe is
+//!   admitted, and a success closes the breaker.
+//!
+//! Both are deliberately lock-light: the brownout fast path is one
+//! relaxed atomic load when disabled, and the breaker takes a short
+//! mutex only on admission and batch completion.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::anytime::ExitPolicy;
+
+use super::router::QueueSnapshot;
+
+/// Brownout configuration — thresholds plus the clamp policy.
+///
+/// Parsed from the `--brownout` spec grammar: comma-separated `k=v`
+/// pairs, e.g. `depth=64,low=16,age-ms=50,age-low-ms=10,exit=margin:0.25+deadline:2`.
+/// Only `depth` is required; the low-water marks default to half their
+/// high-water counterparts (hysteresis), and the clamp policy defaults
+/// to `margin:0.25+deadline:2`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DegradeConfig {
+    /// Enter brownout at queue depth >= this.
+    pub depth_high: usize,
+    /// Leave brownout at queue depth <= this (must be < `depth_high`).
+    pub depth_low: usize,
+    /// Enter brownout when the oldest queued request is older than this
+    /// (microseconds; 0 disables the age trigger).
+    pub age_high_us: u64,
+    /// Leave brownout only once oldest age is back at or below this.
+    pub age_low_us: u64,
+    /// The exit policy incoming requests are clamped *toward* while
+    /// degraded.  Requests whose own policy is already tighter keep it.
+    pub clamp: ExitPolicy,
+}
+
+impl DegradeConfig {
+    /// Parse the `--brownout` spec (see type docs for the grammar).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut depth_high = None;
+        let mut depth_low = None;
+        let mut age_high_ms = 0u64;
+        let mut age_low_ms = None;
+        let mut clamp = ExitPolicy::MarginOrDeadline { threshold: 0.25, min_steps: 1, budget: 2 };
+        for pair in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let pair = pair.trim();
+            let (k, v) = pair
+                .split_once('=')
+                .with_context(|| format!("brownout clause {pair:?}: expected k=v"))?;
+            match k {
+                "depth" => depth_high = Some(v.parse().context("brownout depth")?),
+                "low" => depth_low = Some(v.parse().context("brownout low")?),
+                "age-ms" => age_high_ms = v.parse().context("brownout age-ms")?,
+                "age-low-ms" => age_low_ms = Some(v.parse().context("brownout age-low-ms")?),
+                "exit" => clamp = ExitPolicy::parse(v).context("brownout exit policy")?,
+                _ => bail!(
+                    "unknown brownout key {k:?} \
+                     (expected depth, low, age-ms, age-low-ms, or exit)"
+                ),
+            }
+        }
+        let depth_high: usize =
+            depth_high.context("brownout spec needs at least depth=N")?;
+        if depth_high == 0 {
+            bail!("brownout depth must be >= 1");
+        }
+        if clamp.is_full() {
+            bail!("brownout exit policy must be an early-exit policy, not `full`");
+        }
+        let depth_low = depth_low.unwrap_or(depth_high / 2);
+        if depth_low >= depth_high {
+            bail!("brownout low ({depth_low}) must be below depth ({depth_high})");
+        }
+        let age_high_us = age_high_ms * 1000;
+        let age_low_us = age_low_ms.map(|ms| ms * 1000).unwrap_or(age_high_us / 2);
+        Ok(Self { depth_high, depth_low, age_high_us, age_low_us, clamp })
+    }
+}
+
+/// Hysteresis state machine over the router's queue gauges, plus the
+/// policy clamp applied while browned out.
+#[derive(Debug)]
+pub struct DegradeController {
+    cfg: DegradeConfig,
+    active: AtomicBool,
+    /// Count of inactive->active transitions (brownout episodes).
+    transitions: AtomicU64,
+    /// Requests whose exit policy this controller actually tightened.
+    degraded_total: AtomicU64,
+    /// Rate-limits the O(depth) queue scan: one sample per interval.
+    last_sample: Mutex<Instant>,
+}
+
+/// Minimum spacing between queue-gauge samples.  Pressure changes on
+/// the scale of fill windows (milliseconds), so sampling faster only
+/// burns router lock time.
+const SAMPLE_EVERY: Duration = Duration::from_millis(5);
+
+impl DegradeController {
+    pub fn new(cfg: DegradeConfig) -> Self {
+        Self {
+            cfg,
+            active: AtomicBool::new(false),
+            transitions: AtomicU64::new(0),
+            degraded_total: AtomicU64::new(0),
+            last_sample: Mutex::new(Instant::now() - SAMPLE_EVERY),
+        }
+    }
+
+    pub fn config(&self) -> &DegradeConfig {
+        &self.cfg
+    }
+
+    /// Whether brownout is currently engaged.
+    pub fn is_active(&self) -> bool {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    /// Brownout episodes entered so far.
+    pub fn transitions_total(&self) -> u64 {
+        self.transitions.load(Ordering::Relaxed)
+    }
+
+    /// Requests whose policy was actually tightened.
+    pub fn degraded_total(&self) -> u64 {
+        self.degraded_total.load(Ordering::Relaxed)
+    }
+
+    /// Sample the queue gauges (rate-limited) and update the hysteresis
+    /// state.  `snapshot` is only invoked when a sample is due, so the
+    /// common admission path skips the router lock entirely.
+    pub fn observe_with(&self, snapshot: impl FnOnce() -> QueueSnapshot) {
+        {
+            let mut last = self.last_sample.lock().unwrap();
+            if last.elapsed() < SAMPLE_EVERY {
+                return;
+            }
+            *last = Instant::now();
+        }
+        let snap = snapshot();
+        self.observe(snap);
+    }
+
+    /// Update the hysteresis state from a queue snapshot (un-rate-limited
+    /// core, used directly by tests).
+    pub fn observe(&self, snap: QueueSnapshot) {
+        let over = snap.depth >= self.cfg.depth_high
+            || (self.cfg.age_high_us > 0 && snap.oldest_age_us >= self.cfg.age_high_us);
+        let under = snap.depth <= self.cfg.depth_low
+            && (self.cfg.age_high_us == 0 || snap.oldest_age_us <= self.cfg.age_low_us);
+        if over && !self.active.swap(true, Ordering::Relaxed) {
+            self.transitions.fetch_add(1, Ordering::Relaxed);
+            crate::log_warn!(
+                "brownout ON: queue depth {} (oldest {:.1} ms) — clamping exits toward {}",
+                snap.depth,
+                snap.oldest_age_us as f64 / 1000.0,
+                self.cfg.clamp
+            );
+        } else if under && self.active.swap(false, Ordering::Relaxed) {
+            crate::log_info!(
+                "brownout OFF: queue depth {} — full precision restored",
+                snap.depth
+            );
+        }
+    }
+
+    /// Apply the brownout clamp to an incoming request's policy.
+    /// Returns the (possibly tightened) policy and whether it changed.
+    ///
+    /// "Tighter" composes per mechanism: margin thresholds move up to
+    /// the clamp's (exit *sooner*), step budgets move down, and missing
+    /// mechanisms are added.  A request already tighter than the clamp
+    /// is untouched; requests that cannot legally early-exit (the
+    /// ensemble path) are never clamped — the caller skips them.
+    pub fn clamp(&self, exit: ExitPolicy) -> (ExitPolicy, bool) {
+        if !self.is_active() {
+            return (exit, false);
+        }
+        let clamped = tighten(exit, self.cfg.clamp);
+        let changed = clamped != exit;
+        if changed {
+            self.degraded_total.fetch_add(1, Ordering::Relaxed);
+        }
+        (clamped, changed)
+    }
+}
+
+/// Combine a request policy with the brownout clamp, keeping whichever
+/// bound is tighter for each mechanism.
+fn tighten(req: ExitPolicy, clamp: ExitPolicy) -> ExitPolicy {
+    let (req_th, req_min, req_budget) = bounds(req);
+    let (cl_th, cl_min, cl_budget) = bounds(clamp);
+    // margin: exit sooner = higher threshold; keep the request's
+    // min_steps floor (a caller-requested quality floor) when present
+    let threshold = match (req_th, cl_th) {
+        (Some(r), Some(c)) => Some(r.max(c)),
+        (a, b) => a.or(b),
+    };
+    let min_steps = match (req_th, cl_th) {
+        (Some(_), _) => req_min,
+        (None, Some(_)) => cl_min,
+        (None, None) => 1,
+    };
+    // deadline: exit sooner = smaller step budget
+    let budget = match (req_budget, cl_budget) {
+        (Some(r), Some(c)) => Some(r.min(c)),
+        (a, b) => a.or(b),
+    };
+    match (threshold, budget) {
+        (Some(threshold), Some(budget)) => {
+            ExitPolicy::MarginOrDeadline { threshold, min_steps, budget }
+        }
+        (Some(threshold), None) => ExitPolicy::Margin { threshold, min_steps },
+        (None, Some(budget)) => ExitPolicy::Deadline { budget },
+        (None, None) => req,
+    }
+}
+
+/// Decompose a policy into (margin threshold, margin min_steps, step
+/// budget) — `None` marks an absent mechanism.
+fn bounds(p: ExitPolicy) -> (Option<f32>, usize, Option<usize>) {
+    match p {
+        ExitPolicy::Full => (None, 1, None),
+        ExitPolicy::Margin { threshold, min_steps } => (Some(threshold), min_steps, None),
+        ExitPolicy::Deadline { budget } => (None, 1, Some(budget)),
+        ExitPolicy::MarginOrDeadline { threshold, min_steps, budget } => {
+            (Some(threshold), min_steps, Some(budget))
+        }
+    }
+}
+
+/// Per-target circuit breaker: closed (normal) -> open after
+/// `failure_threshold` consecutive failures -> half-open one probe
+/// after `cooldown` -> closed on probe success / reopen on failure.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    /// Consecutive failures that open the breaker.
+    failure_threshold: u32,
+    /// How long an open breaker rejects before admitting a probe.
+    cooldown: Duration,
+    by_target: Mutex<HashMap<String, BreakerState>>,
+    /// Closed->open transitions, cumulative across targets.
+    opened_total: AtomicU64,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct BreakerState {
+    consecutive_failures: u32,
+    /// `Some` while open; the instant a half-open probe may pass.
+    open_until: Option<Instant>,
+    /// A half-open probe is in flight; further requests stay rejected
+    /// until it reports back.
+    probing: bool,
+}
+
+/// Defaults chosen so ordinary operation never trips the breaker:
+/// sporadic failures reset on any success, and eight consecutive
+/// batch failures on one target means the target is truly sick.
+pub const DEFAULT_FAILURE_THRESHOLD: u32 = 8;
+pub const DEFAULT_COOLDOWN: Duration = Duration::from_millis(250);
+
+impl Default for CircuitBreaker {
+    fn default() -> Self {
+        Self::new(DEFAULT_FAILURE_THRESHOLD, DEFAULT_COOLDOWN)
+    }
+}
+
+impl CircuitBreaker {
+    pub fn new(failure_threshold: u32, cooldown: Duration) -> Self {
+        Self {
+            failure_threshold: failure_threshold.max(1),
+            cooldown,
+            by_target: Mutex::new(HashMap::new()),
+            opened_total: AtomicU64::new(0),
+        }
+    }
+
+    /// Admission check.  `Ok` admits (possibly as the half-open probe);
+    /// `Err` means the breaker is open for this target.
+    pub fn admit(&self, target_key: &str) -> std::result::Result<(), ()> {
+        let mut m = self.by_target.lock().unwrap();
+        let Some(st) = m.get_mut(target_key) else { return Ok(()) };
+        match st.open_until {
+            None => Ok(()),
+            Some(until) => {
+                if st.probing || Instant::now() < until {
+                    Err(())
+                } else {
+                    st.probing = true; // this request is the probe
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// A batch for `target_key` completed successfully: close the
+    /// breaker and forget the failure streak.
+    pub fn record_success(&self, target_key: &str) {
+        let mut m = self.by_target.lock().unwrap();
+        if let Some(st) = m.get_mut(target_key) {
+            *st = BreakerState::default();
+        }
+    }
+
+    /// A batch for `target_key` failed (panic or serve error).
+    pub fn record_failure(&self, target_key: &str) {
+        let mut m = self.by_target.lock().unwrap();
+        let st = m.entry(target_key.to_string()).or_default();
+        st.consecutive_failures = st.consecutive_failures.saturating_add(1);
+        let was_open = st.open_until.is_some();
+        if st.consecutive_failures >= self.failure_threshold || st.probing {
+            st.open_until = Some(Instant::now() + self.cooldown);
+            st.probing = false;
+            if !was_open {
+                self.opened_total.fetch_add(1, Ordering::Relaxed);
+                crate::log_warn!(
+                    "circuit breaker OPEN for {target_key} after {} consecutive failures",
+                    st.consecutive_failures
+                );
+            }
+        }
+    }
+
+    /// Targets whose breaker is currently open.
+    pub fn open_count(&self) -> usize {
+        let m = self.by_target.lock().unwrap();
+        m.values().filter(|st| st.open_until.is_some()).count()
+    }
+
+    /// Cumulative closed->open transitions.
+    pub fn opened_total(&self) -> u64 {
+        self.opened_total.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(depth: usize, age_us: u64) -> QueueSnapshot {
+        QueueSnapshot { depth, oldest_age_us: age_us, shed_total: 0 }
+    }
+
+    #[test]
+    fn degrade_config_parses_and_validates() {
+        let c = DegradeConfig::parse("depth=64").unwrap();
+        assert_eq!(c.depth_high, 64);
+        assert_eq!(c.depth_low, 32);
+        assert_eq!(c.age_high_us, 0);
+        assert!(!c.clamp.is_full());
+        let c = DegradeConfig::parse(
+            "depth=10,low=2,age-ms=50,age-low-ms=5,exit=margin:0.5+deadline:3",
+        )
+        .unwrap();
+        assert_eq!(c.depth_low, 2);
+        assert_eq!(c.age_high_us, 50_000);
+        assert_eq!(c.age_low_us, 5_000);
+        assert_eq!(
+            c.clamp,
+            ExitPolicy::MarginOrDeadline { threshold: 0.5, min_steps: 1, budget: 3 }
+        );
+        assert!(DegradeConfig::parse("").is_err()); // depth required
+        assert!(DegradeConfig::parse("depth=4,low=4").is_err());
+        assert!(DegradeConfig::parse("depth=4,exit=full").is_err());
+        assert!(DegradeConfig::parse("depth=4,frobnicate=1").is_err());
+    }
+
+    #[test]
+    fn hysteresis_enters_high_and_leaves_low() {
+        let d = DegradeController::new(DegradeConfig::parse("depth=10,low=3").unwrap());
+        assert!(!d.is_active());
+        d.observe(snap(9, 0));
+        assert!(!d.is_active());
+        d.observe(snap(10, 0));
+        assert!(d.is_active());
+        assert_eq!(d.transitions_total(), 1);
+        // between low and high: stays active (hysteresis)
+        d.observe(snap(5, 0));
+        assert!(d.is_active());
+        d.observe(snap(3, 0));
+        assert!(!d.is_active());
+        // re-entering counts a new episode
+        d.observe(snap(50, 0));
+        assert!(d.is_active());
+        assert_eq!(d.transitions_total(), 2);
+    }
+
+    #[test]
+    fn age_trigger_engages_brownout() {
+        let d = DegradeController::new(
+            DegradeConfig::parse("depth=1000,age-ms=10").unwrap(),
+        );
+        d.observe(snap(1, 20_000));
+        assert!(d.is_active());
+        d.observe(snap(1, 1_000));
+        assert!(!d.is_active());
+    }
+
+    #[test]
+    fn clamp_tightens_only_while_active_and_counts() {
+        let cfg = DegradeConfig::parse("depth=1,exit=margin:0.5+deadline:2").unwrap();
+        let d = DegradeController::new(cfg);
+        // inactive: identity
+        assert_eq!(d.clamp(ExitPolicy::Full), (ExitPolicy::Full, false));
+        d.observe(snap(10, 0));
+        // Full -> the clamp policy itself
+        let (p, changed) = d.clamp(ExitPolicy::Full);
+        assert!(changed);
+        assert_eq!(
+            p,
+            ExitPolicy::MarginOrDeadline { threshold: 0.5, min_steps: 1, budget: 2 }
+        );
+        // a looser margin tightens up, keeping the caller's min_steps
+        let (p, _) = d.clamp(ExitPolicy::Margin { threshold: 0.1, min_steps: 3 });
+        assert_eq!(
+            p,
+            ExitPolicy::MarginOrDeadline { threshold: 0.5, min_steps: 3, budget: 2 }
+        );
+        // an already-tighter policy is unchanged
+        let tight = ExitPolicy::MarginOrDeadline { threshold: 0.9, min_steps: 1, budget: 1 };
+        assert_eq!(d.clamp(tight), (tight, false));
+        assert_eq!(d.degraded_total(), 2);
+    }
+
+    #[test]
+    fn breaker_opens_after_k_failures_probes_and_recloses() {
+        let b = CircuitBreaker::new(3, Duration::from_millis(20));
+        assert!(b.admit("ssa_t4").is_ok());
+        b.record_failure("ssa_t4");
+        b.record_failure("ssa_t4");
+        assert!(b.admit("ssa_t4").is_ok(), "still closed below threshold");
+        b.record_failure("ssa_t4");
+        assert!(b.admit("ssa_t4").is_err(), "open after 3 consecutive failures");
+        assert_eq!(b.open_count(), 1);
+        assert_eq!(b.opened_total(), 1);
+        // other targets unaffected
+        assert!(b.admit("ann").is_ok());
+        // cooldown elapses: exactly one half-open probe passes
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(b.admit("ssa_t4").is_ok(), "half-open probe admitted");
+        assert!(b.admit("ssa_t4").is_err(), "only one probe at a time");
+        b.record_success("ssa_t4");
+        assert!(b.admit("ssa_t4").is_ok(), "probe success closes the breaker");
+        assert_eq!(b.open_count(), 0);
+    }
+
+    #[test]
+    fn failed_probe_reopens() {
+        let b = CircuitBreaker::new(1, Duration::from_millis(10));
+        b.record_failure("ssa_t4");
+        assert!(b.admit("ssa_t4").is_err());
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(b.admit("ssa_t4").is_ok());
+        b.record_failure("ssa_t4"); // probe failed
+        assert!(b.admit("ssa_t4").is_err(), "reopened for a fresh cooldown");
+        assert_eq!(b.opened_total(), 1, "reopen extends the same episode");
+    }
+
+    #[test]
+    fn success_resets_the_failure_streak() {
+        let b = CircuitBreaker::new(3, Duration::from_millis(10));
+        for _ in 0..10 {
+            b.record_failure("ann");
+            b.record_success("ann");
+        }
+        assert!(b.admit("ann").is_ok());
+        assert_eq!(b.opened_total(), 0);
+    }
+}

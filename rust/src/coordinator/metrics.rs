@@ -8,6 +8,7 @@
 //! bound — a leak for any long-lived coordinator).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -75,6 +76,37 @@ pub struct Metrics {
     by_worker: Mutex<HashMap<usize, WorkerMetrics>>,
     /// Top-[`EXEMPLAR_K`] slowest requests this window, latency-descending.
     slow: Mutex<Vec<Exemplar>>,
+    /// Worker backends rebuilt after a panic (`catch_unwind` supervision).
+    /// Lifetime counters, deliberately not reset by [`Self::reset_window`]:
+    /// they answer "has this process ever been hurt", not "how fast".
+    worker_restarts: AtomicU64,
+    /// Idle/dead client connections reaped by the net server's read
+    /// deadline.
+    conns_reaped: AtomicU64,
+}
+
+/// Point-in-time view of the resilience machinery (deadline shedding,
+/// brownout, circuit breaker, worker supervision, connection reaping),
+/// assembled by `Coordinator::resilience_snapshot` and rendered into the
+/// Prometheus exposition and `BENCH_serving.json`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResilienceSnapshot {
+    /// Requests shed with `DeadlineExceeded` before reaching a worker.
+    pub shed_total: u64,
+    /// Requests whose exit policy brownout actually tightened.
+    pub degraded_total: u64,
+    /// Whether brownout is engaged right now.
+    pub brownout_active: bool,
+    /// Brownout episodes entered since startup.
+    pub brownout_transitions: u64,
+    /// Targets whose circuit breaker is currently open.
+    pub breaker_open: u64,
+    /// Closed->open breaker transitions since startup.
+    pub breaker_transitions: u64,
+    /// Worker backends rebuilt after a panic.
+    pub worker_restarts: u64,
+    /// Dead client connections reaped by the server's read deadline.
+    pub conns_reaped: u64,
 }
 
 /// A rendered snapshot for one target.
@@ -112,7 +144,27 @@ impl Metrics {
             by_target: Mutex::new(HashMap::new()),
             by_worker: Mutex::new(HashMap::new()),
             slow: Mutex::new(Vec::new()),
+            worker_restarts: AtomicU64::new(0),
+            conns_reaped: AtomicU64::new(0),
         }
+    }
+
+    /// A pool worker rebuilt its backend after a panic.
+    pub fn record_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn worker_restarts(&self) -> u64 {
+        self.worker_restarts.load(Ordering::Relaxed)
+    }
+
+    /// The net server reaped a dead/idle client connection.
+    pub fn record_conn_reaped(&self) {
+        self.conns_reaped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn conns_reaped(&self) -> u64 {
+        self.conns_reaped.load(Ordering::Relaxed)
     }
 
     /// Restart the measurement window: zero every per-target and
@@ -331,6 +383,24 @@ impl Metrics {
         spans_written: u64,
         spans_lost: u64,
     ) -> String {
+        self.render_prometheus_with(
+            queue,
+            spans_written,
+            spans_lost,
+            &ResilienceSnapshot::default(),
+        )
+    }
+
+    /// [`Self::render_prometheus`] plus the resilience counters.  The
+    /// resilience families are always declared *with* a sample (zero
+    /// when nothing has happened), preserving the exposition invariant.
+    pub fn render_prometheus_with(
+        &self,
+        queue: Option<QueueSnapshot>,
+        spans_written: u64,
+        spans_lost: u64,
+        res: &ResilienceSnapshot,
+    ) -> String {
         let elapsed = self.started.lock().unwrap().elapsed().as_secs_f64();
         let mut w = PromWriter::new();
         w.family(
@@ -495,6 +565,54 @@ impl Metrics {
             "Trace spans overwritten before a drain (ring overflow).",
         );
         w.sample("ssa_trace_spans_dropped_total", &[], spans_lost as f64);
+        w.family(
+            "ssa_requests_shed_total",
+            "counter",
+            "Requests shed with deadline_exceeded before reaching a worker.",
+        );
+        w.sample("ssa_requests_shed_total", &[], res.shed_total as f64);
+        w.family(
+            "ssa_requests_degraded_total",
+            "counter",
+            "Requests whose exit policy was tightened by brownout.",
+        );
+        w.sample("ssa_requests_degraded_total", &[], res.degraded_total as f64);
+        w.family(
+            "ssa_brownout_active",
+            "gauge",
+            "1 while the brownout controller is clamping exit policies.",
+        );
+        w.sample("ssa_brownout_active", &[], if res.brownout_active { 1.0 } else { 0.0 });
+        w.family(
+            "ssa_brownout_transitions_total",
+            "counter",
+            "Brownout episodes entered since startup.",
+        );
+        w.sample("ssa_brownout_transitions_total", &[], res.brownout_transitions as f64);
+        w.family(
+            "ssa_breaker_open_targets",
+            "gauge",
+            "Targets whose circuit breaker is currently open.",
+        );
+        w.sample("ssa_breaker_open_targets", &[], res.breaker_open as f64);
+        w.family(
+            "ssa_breaker_transitions_total",
+            "counter",
+            "Circuit-breaker closed->open transitions since startup.",
+        );
+        w.sample("ssa_breaker_transitions_total", &[], res.breaker_transitions as f64);
+        w.family(
+            "ssa_worker_restarts_total",
+            "counter",
+            "Worker backends rebuilt after a panic (catch_unwind supervision).",
+        );
+        w.sample("ssa_worker_restarts_total", &[], res.worker_restarts as f64);
+        w.family(
+            "ssa_connections_reaped_total",
+            "counter",
+            "Dead client connections reaped by the server's read deadline.",
+        );
+        w.sample("ssa_connections_reaped_total", &[], res.conns_reaped as f64);
         w.finish()
     }
 }
@@ -632,8 +750,18 @@ mod tests {
         m.record_error("ann");
         m.register_worker(0);
         m.record_worker(0, 8, 1_000.0);
-        let q = QueueSnapshot { depth: 3, oldest_age_us: 1234 };
-        let text = m.render_prometheus(Some(q), 42, 1);
+        let q = QueueSnapshot { depth: 3, oldest_age_us: 1234, shed_total: 0 };
+        let res = ResilienceSnapshot {
+            shed_total: 5,
+            degraded_total: 2,
+            brownout_active: true,
+            brownout_transitions: 1,
+            breaker_open: 1,
+            breaker_transitions: 3,
+            worker_restarts: 4,
+            conns_reaped: 6,
+        };
+        let text = m.render_prometheus_with(Some(q), 42, 1, &res);
 
         // every # TYPE family has at least one sample and appears once
         let mut families = std::collections::HashSet::new();
@@ -662,6 +790,14 @@ mod tests {
         assert!(text.contains("ssa_worker_batches_total{worker=\"0\"} 1"));
         assert!(text.contains("ssa_trace_spans_written_total 42"));
         assert!(text.contains("ssa_trace_spans_dropped_total 1"));
+        assert!(text.contains("ssa_requests_shed_total 5"));
+        assert!(text.contains("ssa_requests_degraded_total 2"));
+        assert!(text.contains("ssa_brownout_active 1"));
+        assert!(text.contains("ssa_brownout_transitions_total 1"));
+        assert!(text.contains("ssa_breaker_open_targets 1"));
+        assert!(text.contains("ssa_breaker_transitions_total 3"));
+        assert!(text.contains("ssa_worker_restarts_total 4"));
+        assert!(text.contains("ssa_connections_reaped_total 6"));
         // histogram buckets are cumulative and end at the total count
         let buckets: Vec<u64> = text
             .lines()

@@ -8,13 +8,15 @@
 //! request/response vocabulary defined in [`request`].
 
 pub mod batcher;
+pub mod degrade;
 pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use metrics::{Metrics, TargetReport, WorkerReport};
+pub use degrade::{CircuitBreaker, DegradeConfig, DegradeController};
+pub use metrics::{Metrics, ResilienceSnapshot, TargetReport, WorkerReport};
 pub use request::{ClassifyRequest, ClassifyResponse, SeedPolicy, ServeError, Target};
 pub use router::Router;
-pub use server::{Coordinator, CoordinatorConfig};
+pub use server::{Coordinator, CoordinatorConfig, SubmitOptions};

@@ -8,6 +8,7 @@
 //! vocabulary of the in-process submit API.
 
 use std::sync::mpsc;
+use std::time::Instant;
 
 use crate::anytime::ExitPolicy;
 use crate::obs::TraceCtx;
@@ -131,6 +132,20 @@ pub struct ClassifyRequest {
     /// submit) or a channel shared by a whole connection (network
     /// front-end, which demuxes by [`ClassifyRequest::id`]).
     pub reply: mpsc::Sender<ClassifyResponse>,
+    /// Absolute completion deadline.  A request still queued past this
+    /// instant is shed by the router with [`ServeError::DeadlineExceeded`]
+    /// instead of wasting worker time on an answer nobody is waiting
+    /// for.  `None` (the default) keeps today's run-to-completion
+    /// behavior.
+    pub deadline: Option<Instant>,
+    /// Scheduling priority: higher values are served first.  Requests of
+    /// equal priority order earliest-deadline-first, then by arrival.
+    /// The default `0` preserves pure FIFO for undifferentiated traffic.
+    pub priority: u8,
+    /// True when the brownout controller tightened this request's
+    /// [`ExitPolicy`] at admission; echoed in
+    /// [`ClassifyResponse::degraded`].
+    pub degraded: bool,
 }
 
 /// The answer.
@@ -159,6 +174,37 @@ pub struct ClassifyResponse {
     /// statistic the margin exit rule thresholds, reported so callers can
     /// calibrate thresholds from live traffic.  Always finite.
     pub confidence: f32,
+    /// True when brownout tightened this request's exit policy at
+    /// admission — the answer may have run fewer time steps than asked.
+    pub degraded: bool,
+    /// `Some` when the serving stack could not produce an answer for
+    /// this request: the typed failure to surface to the caller.  The
+    /// response is then an error envelope — `logits` is empty, `class`
+    /// is meaningless.  Carrying failures *through* the reply channel
+    /// (rather than dropping the sender) is what guarantees every
+    /// submitted request gets a typed reply, even when its worker
+    /// panics or its deadline expires in the queue.
+    pub error: Option<ServeError>,
+}
+
+impl ClassifyResponse {
+    /// An error envelope for `id`: the typed failure ships through the
+    /// same reply channel as a success, so per-connection demux (and
+    /// blocking in-process callers) see exactly one reply per request.
+    pub fn failure(id: u64, error: ServeError) -> Self {
+        Self {
+            id,
+            class: 0,
+            logits: Vec::new(),
+            latency_us: 0.0,
+            batch_size: 0,
+            seed: 0,
+            steps_used: 0,
+            confidence: 0.0,
+            degraded: false,
+            error: Some(error),
+        }
+    }
 }
 
 /// Errors surfaced to the caller.
@@ -191,6 +237,17 @@ pub enum ServeError {
     /// (a pool worker failed the batch).  Unlike [`ServeError::Overloaded`]
     /// this is not the caller's fault and not load-dependent.
     Internal(String),
+    /// The request's deadline expired while it was still queued: the
+    /// router shed it before any worker spent time on it.  The caller
+    /// asked for an answer by a point in time and that point has passed —
+    /// retrying with the same deadline is pointless; retry with a fresh
+    /// one or none.
+    DeadlineExceeded,
+    /// The per-target circuit breaker is open after repeated consecutive
+    /// failures: the target is refusing traffic while the pool recovers.
+    /// Back off and retry — a half-open probe will close the breaker once
+    /// the target serves successfully again.  Payload is the target key.
+    Unavailable(String),
 }
 
 impl ServeError {
@@ -204,6 +261,8 @@ impl ServeError {
             ServeError::Overloaded => "overloaded",
             ServeError::BadRequest(_) => "bad_request",
             ServeError::Internal(_) => "internal",
+            ServeError::DeadlineExceeded => "deadline_exceeded",
+            ServeError::Unavailable(_) => "unavailable",
         }
     }
 
@@ -224,6 +283,8 @@ impl ServeError {
             }
             "overloaded" => ServeError::Overloaded,
             "internal" => ServeError::Internal(detail.to_string()),
+            "deadline_exceeded" => ServeError::DeadlineExceeded,
+            "unavailable" => ServeError::Unavailable(detail.to_string()),
             _ => ServeError::BadRequest(detail.to_string()),
         }
     }
@@ -232,11 +293,29 @@ impl ServeError {
     /// the variant's payload (parsed back by [`ServeError::from_code`]).
     pub fn detail(&self) -> String {
         match self {
-            ServeError::Shutdown | ServeError::Overloaded => String::new(),
-            ServeError::UnknownTarget(t) => t.clone(),
+            ServeError::Shutdown | ServeError::Overloaded | ServeError::DeadlineExceeded => {
+                String::new()
+            }
+            ServeError::UnknownTarget(t) | ServeError::Unavailable(t) => t.clone(),
             ServeError::BadImage { got, want } => format!("{got}/{want}"),
             ServeError::BadRequest(m) | ServeError::Internal(m) => m.clone(),
         }
+    }
+
+    /// True for failures a client may safely retry *for deterministic
+    /// (`Fixed`-seed) requests*: transient server-side conditions where
+    /// a second attempt can succeed and — by the fixed-seed bit-exactness
+    /// contract — returns the identical answer if it does.  Caller-fault
+    /// errors (`BadImage`, `BadRequest`, `UnknownTarget`) and
+    /// `DeadlineExceeded` (the deadline has passed) are not retryable.
+    pub fn is_retryable(&self) -> bool {
+        matches!(
+            self,
+            ServeError::Overloaded
+                | ServeError::Internal(_)
+                | ServeError::Unavailable(_)
+                | ServeError::Shutdown
+        )
     }
 }
 
@@ -251,6 +330,12 @@ impl std::fmt::Display for ServeError {
             ServeError::Overloaded => write!(f, "server overloaded (in-flight budget exhausted)"),
             ServeError::BadRequest(m) => write!(f, "bad request: {m}"),
             ServeError::Internal(m) => write!(f, "internal server error: {m}"),
+            ServeError::DeadlineExceeded => {
+                write!(f, "deadline exceeded before the request reached a worker")
+            }
+            ServeError::Unavailable(t) => {
+                write!(f, "target {t:?} unavailable (circuit breaker open)")
+            }
         }
     }
 }
@@ -289,6 +374,8 @@ mod tests {
             ServeError::Overloaded,
             ServeError::BadRequest("no op".into()),
             ServeError::Internal("worker dropped the batch".into()),
+            ServeError::DeadlineExceeded,
+            ServeError::Unavailable("ssa_t10".into()),
         ];
         for e in errs {
             assert_eq!(ServeError::from_code(e.code(), &e.detail()), e);

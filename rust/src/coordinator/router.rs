@@ -16,13 +16,14 @@
 //! immediately instead of waiting out another target's delay bound.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
 use crate::anytime::ExitPolicy;
 
 use super::batcher::BatchPolicy;
-use super::request::{ClassifyRequest, SeedPolicy, Target};
+use super::request::{ClassifyRequest, ClassifyResponse, SeedPolicy, ServeError, Target};
 
 /// Maps a target to its artifact-manifest variant key.
 pub fn variant_key(t: &Target) -> String {
@@ -33,9 +34,38 @@ pub fn variant_key(t: &Target) -> String {
     }
 }
 
+/// A queued request plus its arrival sequence number — the final
+/// scheduling tiebreak, so FIFO order survives even when two requests
+/// share an `Instant` on a coarse clock.
+struct Queued {
+    seq: u64,
+    req: ClassifyRequest,
+}
+
+impl Queued {
+    /// Scheduling key, ascending = served first: higher priority first,
+    /// then earliest deadline (no deadline sorts after every deadline of
+    /// the same priority), then arrival order.  `now` is any fixed
+    /// instant shared by one comparison pass — deadline-free requests
+    /// borrow it so their ordering falls through to `seq`.
+    ///
+    /// For default traffic (priority 0, no deadline) every component
+    /// except `seq` is constant, so scheduling reduces to pure FIFO —
+    /// the pre-deadline behavior, pinned by the router tests.
+    fn sched_key(&self, now: Instant) -> (u8, bool, Instant, u64) {
+        (
+            u8::MAX - self.req.priority,
+            self.req.deadline.is_none(),
+            self.req.deadline.unwrap_or(now),
+            self.seq,
+        )
+    }
+}
+
 #[derive(Default)]
 struct State {
-    q: VecDeque<ClassifyRequest>,
+    q: VecDeque<Queued>,
+    next_seq: u64,
     closed: bool,
     /// (target, seed-policy, exit-policy) groups some worker is currently
     /// fill-waiting on; siblings skip these when anchoring a head.
@@ -64,11 +94,19 @@ pub struct Router {
     state: Mutex<State>,
     cv: Condvar,
     policy: BatchPolicy,
+    /// Requests shed with `DeadlineExceeded` before reaching a worker
+    /// (cumulative; surfaced via [`QueueSnapshot::shed_total`]).
+    shed: AtomicU64,
 }
 
 impl Router {
     pub fn new(policy: BatchPolicy) -> Self {
-        Self { state: Mutex::new(State::default()), cv: Condvar::new(), policy }
+        Self {
+            state: Mutex::new(State::default()),
+            cv: Condvar::new(),
+            policy,
+            shed: AtomicU64::new(0),
+        }
     }
 
     pub fn policy(&self) -> BatchPolicy {
@@ -80,7 +118,9 @@ impl Router {
         if s.closed {
             return false;
         }
-        s.q.push_back(req);
+        let seq = s.next_seq;
+        s.next_seq += 1;
+        s.q.push_back(Queued { seq, req });
         // notify_all, not notify_one: the one woken waiter may be a
         // sibling mid-fill-window for a *different* claimed group that
         // goes straight back to sleep — every idle worker must get the
@@ -102,13 +142,27 @@ impl Router {
     pub fn next_batch(&self) -> Option<(String, Vec<ClassifyRequest>)> {
         let mut s = self.state.lock().unwrap();
         'find: loop {
-            // anchor the oldest request whose group no sibling is filling
+            // anchor the most urgent request (highest priority, then
+            // earliest deadline, then arrival) whose group no sibling is
+            // filling; for deadline-free traffic this is the oldest.
+            // Expired requests are shed first so a dead deadline can
+            // never anchor (or pad) a batch.
             let head = loop {
+                self.shed_expired(&mut s, Instant::now());
+                let now = Instant::now();
                 let pick = s
                     .q
                     .iter()
-                    .find(|r| !s.is_claimed(&r.target, r.seed_policy, r.exit))
-                    .map(|r| (r.target.clone(), r.seed_policy, r.exit, r.trace.submitted_at));
+                    .filter(|q| !s.is_claimed(&q.req.target, q.req.seed_policy, q.req.exit))
+                    .min_by_key(|q| q.sched_key(now))
+                    .map(|q| {
+                        (
+                            q.req.target.clone(),
+                            q.req.seed_policy,
+                            q.req.exit,
+                            q.req.trace.submitted_at,
+                        )
+                    });
                 if let Some(h) = pick {
                     break h;
                 }
@@ -134,8 +188,10 @@ impl Router {
                 let matching = s
                     .q
                     .iter()
-                    .filter(|r| {
-                        r.target == target && r.seed_policy == policy && r.exit == exit
+                    .filter(|q| {
+                        q.req.target == target
+                            && q.req.seed_policy == policy
+                            && q.req.exit == exit
                     })
                     .take(self.policy.max_batch)
                     .count();
@@ -143,7 +199,8 @@ impl Router {
                     break;
                 }
                 if matching == 0 {
-                    // unreachable while we hold the claim — defensive
+                    // reachable when every queued member of the claimed
+                    // group expired and was shed — re-anchor
                     s.unclaim(&target, policy, exit);
                     continue 'find;
                 }
@@ -158,30 +215,65 @@ impl Router {
                 }
             }
 
-            // extract up to max_batch matching requests, preserving order
-            let mut batch = Vec::new();
+            // shed anything that expired during the fill window, then
+            // extract up to max_batch matching requests earliest-deadline
+            // first (stable: arrival order breaks ties, so deadline-free
+            // groups extract in FIFO order exactly as before)
+            let now = Instant::now();
+            self.shed_expired(&mut s, now);
+            let mut matched = Vec::new();
             let mut rest = VecDeque::with_capacity(s.q.len());
-            while let Some(r) = s.q.pop_front() {
-                if r.target == target
-                    && r.seed_policy == policy
-                    && r.exit == exit
-                    && batch.len() < self.policy.max_batch
-                {
-                    batch.push(r);
+            while let Some(q) = s.q.pop_front() {
+                if q.req.target == target && q.req.seed_policy == policy && q.req.exit == exit {
+                    matched.push(q);
                 } else {
-                    rest.push_back(r);
+                    rest.push_back(q);
                 }
             }
+            matched.sort_by_key(|q| q.sched_key(now));
+            let batch: Vec<ClassifyRequest> = matched
+                .drain(..matched.len().min(self.policy.max_batch))
+                .map(|q| q.req)
+                .collect();
+            // group leftovers beyond max_batch go back in the queue; the
+            // anchor scan is key-ordered, not position-ordered, so their
+            // position only needs to preserve in-group relative order
+            rest.extend(matched);
             s.q = rest;
             s.unclaim(&target, policy, exit);
             // leftovers of this group (beyond max_batch) are anchorable
             // again, and close-drain waiters must recheck
             self.cv.notify_all();
             if batch.is_empty() {
-                continue 'find; // defensive: claim makes this unreachable
+                continue 'find; // the whole claimed group expired mid-fill
             }
             return Some((key, batch));
         }
+    }
+
+    /// Remove every queued request whose deadline has passed, answering
+    /// each with a typed [`ServeError::DeadlineExceeded`] envelope.  Runs
+    /// under the state lock; the reply send is a non-blocking channel
+    /// push.  No-op (single O(depth) scan) when nothing carries a
+    /// deadline — the default traffic class pays nothing.
+    fn shed_expired(&self, s: &mut State, now: Instant) {
+        let shed = &self.shed;
+        s.q.retain(|q| match q.req.deadline {
+            Some(d) if d <= now => {
+                let _ = q
+                    .req
+                    .reply
+                    .send(ClassifyResponse::failure(q.req.id, ServeError::DeadlineExceeded));
+                shed.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+            _ => true,
+        });
+    }
+
+    /// Cumulative count of requests shed with `DeadlineExceeded`.
+    pub fn shed_total(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
     }
 
     pub fn close(&self) {
@@ -207,10 +299,14 @@ impl Router {
         let oldest_age_us = s
             .q
             .iter()
-            .map(|r| now.saturating_duration_since(r.trace.submitted_at).as_micros() as u64)
+            .map(|q| now.saturating_duration_since(q.req.trace.submitted_at).as_micros() as u64)
             .max()
             .unwrap_or(0);
-        QueueSnapshot { depth: s.q.len(), oldest_age_us }
+        QueueSnapshot {
+            depth: s.q.len(),
+            oldest_age_us,
+            shed_total: self.shed.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -222,6 +318,8 @@ pub struct QueueSnapshot {
     pub depth: usize,
     /// Age in microseconds of the oldest queued request (0 when empty).
     pub oldest_age_us: u64,
+    /// Cumulative requests shed with `DeadlineExceeded` before dispatch.
+    pub shed_total: u64,
 }
 
 #[cfg(test)]
@@ -254,7 +352,93 @@ mod tests {
             exit,
             trace: crate::obs::TraceCtx::in_process(),
             reply: tx,
+            deadline: None,
+            priority: 0,
+            degraded: false,
         }
+    }
+
+    /// A deadlined request plus its reply receiver (to observe shedding).
+    fn req_with_deadline(
+        id: u64,
+        target: Target,
+        deadline: Option<Duration>,
+        priority: u8,
+    ) -> (ClassifyRequest, mpsc::Receiver<crate::coordinator::ClassifyResponse>) {
+        let (tx, rx) = mpsc::channel();
+        let req = ClassifyRequest {
+            id,
+            target,
+            image: vec![0.0; 4],
+            seed_policy: SeedPolicy::PerBatch,
+            exit: ExitPolicy::Full,
+            trace: crate::obs::TraceCtx::in_process(),
+            reply: tx,
+            deadline: deadline.map(|d| Instant::now() + d),
+            priority,
+            degraded: false,
+        };
+        (req, rx)
+    }
+
+    #[test]
+    fn mixed_deadlines_batch_earliest_first() {
+        let r = Router::new(BatchPolicy { max_batch: 2, max_delay: Duration::from_millis(1) });
+        let far = Some(Duration::from_secs(60));
+        let near = Some(Duration::from_secs(10));
+        let (a, _ra) = req_with_deadline(1, Target::ssa(10), far, 0);
+        let (b, _rb) = req_with_deadline(2, Target::ssa(10), near, 0);
+        let (c, _rc) = req_with_deadline(3, Target::ssa(10), None, 0);
+        r.push(a);
+        r.push(b);
+        r.push(c);
+        // EDF: the near deadline anchors and fills first, the far one
+        // next, the deadline-free request last
+        let (_, b1) = r.next_batch().unwrap();
+        assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 1]);
+        let (_, b2) = r.next_batch().unwrap();
+        assert_eq!(b2.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3]);
+    }
+
+    #[test]
+    fn higher_priority_is_served_before_earlier_arrivals() {
+        let r = Router::new(BatchPolicy { max_batch: 1, max_delay: Duration::from_millis(1) });
+        let (lo, _rl) = req_with_deadline(1, Target::ssa(10), None, 0);
+        let (hi, _rh) = req_with_deadline(2, Target::ssa(10), None, 3);
+        r.push(lo);
+        r.push(hi);
+        assert_eq!(r.next_batch().unwrap().1[0].id, 2);
+        assert_eq!(r.next_batch().unwrap().1[0].id, 1);
+    }
+
+    #[test]
+    fn expired_requests_are_shed_with_deadline_exceeded_before_dispatch() {
+        let r = Router::new(BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(1) });
+        let (dead, dead_rx) = req_with_deadline(1, Target::ssa(10), Some(Duration::ZERO), 0);
+        let (live, _live_rx) = req_with_deadline(2, Target::ssa(10), Some(Duration::from_secs(60)), 0);
+        r.push(dead);
+        r.push(live);
+        std::thread::sleep(Duration::from_millis(2));
+        let (_, batch) = r.next_batch().unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2], "expired request must never reach a worker");
+        let shed = dead_rx.recv().expect("shed request still gets a typed reply");
+        assert_eq!(shed.id, 1);
+        assert_eq!(shed.error, Some(crate::coordinator::ServeError::DeadlineExceeded));
+        assert_eq!(r.shed_total(), 1);
+        assert_eq!(r.queue_snapshot().shed_total, 1);
+    }
+
+    #[test]
+    fn no_deadline_traffic_preserves_fifo() {
+        // same shape as groups_same_target_and_preserves_others, but
+        // asserted explicitly against the deadline-aware scheduler
+        let r = Router::new(BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(1) });
+        for id in 0..6 {
+            r.push(req(id, Target::ssa(10)));
+        }
+        let (_, batch) = r.next_batch().unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(r.shed_total(), 0);
     }
 
     #[test]

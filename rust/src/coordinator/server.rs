@@ -11,7 +11,7 @@
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -20,9 +20,11 @@ use crate::config::BackendKind;
 use crate::obs::{SpanKind, TraceCtx, TraceSink};
 use crate::pool::{PoolConfig, WorkerPool};
 use crate::runtime::Manifest;
+use crate::util::fault::{FaultInjector, FaultPlan};
 
 use super::batcher::BatchPolicy;
-use super::metrics::Metrics;
+use super::degrade::{CircuitBreaker, DegradeConfig, DegradeController};
+use super::metrics::{Metrics, ResilienceSnapshot};
 use super::request::{ClassifyRequest, ClassifyResponse, SeedPolicy, ServeError, Target};
 use super::router::{variant_key, Router};
 
@@ -52,6 +54,14 @@ pub struct CoordinatorConfig {
     /// and lock-free ring writes per request, and never perturbs model
     /// arithmetic (the bit-exactness contract is pinned by test).
     pub trace: bool,
+    /// Brownout degradation (`--brownout`): under queue pressure, clamp
+    /// incoming exit policies toward tighter early exits.  `None`
+    /// (default) disables brownout entirely — the bit-exactness pins
+    /// rely on this default.
+    pub brownout: Option<DegradeConfig>,
+    /// Chaos fault injection (`--fault` / `SSA_FAULT`).  `None`
+    /// (default) injects nothing and adds no request-path work.
+    pub fault: Option<FaultPlan>,
 }
 
 impl CoordinatorConfig {
@@ -65,6 +75,8 @@ impl CoordinatorConfig {
             workers: 1,
             intra_threads: 1,
             trace: true,
+            brownout: None,
+            fault: None,
         }
     }
 
@@ -87,6 +99,16 @@ impl CoordinatorConfig {
         self.trace = trace;
         self
     }
+
+    pub fn with_brownout(mut self, brownout: Option<DegradeConfig>) -> Self {
+        self.brownout = brownout;
+        self
+    }
+
+    pub fn with_fault(mut self, fault: Option<FaultPlan>) -> Self {
+        self.fault = fault;
+        self
+    }
 }
 
 /// Handle to a running coordinator.
@@ -97,7 +119,28 @@ pub struct Coordinator {
     manifest: Manifest,
     backend: BackendKind,
     next_id: AtomicU64,
+    degrade: Option<Arc<DegradeController>>,
+    breaker: Arc<CircuitBreaker>,
+    fault: Option<Arc<FaultInjector>>,
     pool: WorkerPool,
+}
+
+/// Per-request submit knobs beyond the target/seed-policy pair.
+/// `Default` reproduces the plain `submit` behavior exactly: full
+/// precision, no deadline, baseline priority.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOptions {
+    /// Anytime early-exit policy (default [`ExitPolicy::Full`]).
+    pub exit: ExitPolicy,
+    /// Relative completion deadline; the router sheds the request with
+    /// [`ServeError::DeadlineExceeded`] if it is still queued when this
+    /// much time has passed since admission.
+    pub deadline: Option<Duration>,
+    /// Scheduling priority (higher served first; default 0).
+    pub priority: u8,
+    /// Network accept instant (TCP front-end only) — see
+    /// [`Coordinator::submit_with_reply_accepted`].
+    pub accepted_at: Option<Instant>,
 }
 
 impl Coordinator {
@@ -112,6 +155,12 @@ impl Coordinator {
             crate::pool::effective_workers(cfg.backend, cfg.workers),
             cfg.trace,
         ));
+        let degrade = cfg.brownout.clone().map(|d| Arc::new(DegradeController::new(d)));
+        let breaker = Arc::new(CircuitBreaker::default());
+        let fault = cfg
+            .fault
+            .filter(|p| p.is_active())
+            .map(|p| Arc::new(FaultInjector::new(p, 0xC4A0_5EED)));
         let pool = WorkerPool::start(
             &PoolConfig {
                 workers: cfg.workers,
@@ -124,6 +173,8 @@ impl Coordinator {
             &router,
             &metrics,
             &trace,
+            &breaker,
+            fault.as_ref(),
         )?;
         Ok(Self {
             router,
@@ -132,6 +183,9 @@ impl Coordinator {
             manifest,
             backend: cfg.backend,
             next_id: AtomicU64::new(1),
+            degrade,
+            breaker,
+            fault,
             pool,
         })
     }
@@ -205,13 +259,35 @@ impl Coordinator {
         reply: mpsc::Sender<ClassifyResponse>,
         accepted_at: Option<Instant>,
     ) -> Result<u64, ServeError> {
+        self.submit_with_opts(
+            target,
+            image,
+            seed_policy,
+            SubmitOptions { exit, accepted_at, ..SubmitOptions::default() },
+            reply,
+        )
+    }
+
+    /// The full admission funnel: geometry and policy validation, the
+    /// per-target circuit breaker, the brownout clamp, then the router
+    /// push.  Every other submit entry point delegates here.
+    pub fn submit_with_opts(
+        &self,
+        target: Target,
+        image: Vec<f32>,
+        seed_policy: SeedPolicy,
+        opts: SubmitOptions,
+        reply: mpsc::Sender<ClassifyResponse>,
+    ) -> Result<u64, ServeError> {
         let want = self.manifest.image_size * self.manifest.image_size;
         if image.len() != want {
             return Err(ServeError::BadImage { got: image.len(), want });
         }
+        let mut exit = opts.exit;
         // averaging ensemble passes that exit at different steps has no
         // well-defined semantics — refuse at admission, not in the worker
-        if matches!(seed_policy, SeedPolicy::Ensemble(_)) && !exit.is_full() {
+        let ensemble = matches!(seed_policy, SeedPolicy::Ensemble(_));
+        if ensemble && !exit.is_full() {
             return Err(ServeError::BadRequest(
                 "ensemble seed policies cannot combine with early-exit policies".into(),
             ));
@@ -220,14 +296,44 @@ impl Coordinator {
         if self.manifest.variant(&key).is_err() {
             return Err(ServeError::UnknownTarget(key));
         }
+        // circuit breaker: a target drowning in consecutive failures
+        // refuses new work immediately instead of queueing doomed batches
+        if self.breaker.admit(&key).is_err() {
+            return Err(ServeError::Unavailable(key));
+        }
+        // brownout: under queue pressure shed *time steps* before
+        // shedding requests — clamp the exit policy toward the
+        // configured tighter one (never for ensemble requests, whose
+        // early exit is rejected above)
+        let mut degraded = false;
+        if let Some(d) = &self.degrade {
+            d.observe_with(|| self.router.queue_snapshot());
+            if !ensemble {
+                let (clamped, changed) = d.clamp(exit);
+                exit = clamped;
+                degraded = changed;
+            }
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let mut trace = TraceCtx::in_process();
-        if let Some(t) = accepted_at {
+        if let Some(t) = opts.accepted_at {
             trace = TraceCtx::accepted(t);
             let lane = self.trace.net_lane();
             self.trace.record(lane, SpanKind::FrameDecode, id, t, trace.submitted_at, 0);
         }
-        let req = ClassifyRequest { id, target, image, seed_policy, exit, trace, reply };
+        let deadline = opts.deadline.map(|d| trace.submitted_at + d);
+        let req = ClassifyRequest {
+            id,
+            target,
+            image,
+            seed_policy,
+            exit,
+            trace,
+            reply,
+            deadline,
+            priority: opts.priority,
+            degraded,
+        };
         if !self.router.push(req) {
             return Err(ServeError::Shutdown);
         }
@@ -255,7 +361,11 @@ impl Coordinator {
         let rx = self
             .submit_anytime(target, image, seed_policy, exit)
             .map_err(anyhow::Error::from)?;
-        rx.recv().context("worker pool dropped the request")
+        let resp = rx.recv().context("worker pool dropped the request")?;
+        if let Some(e) = resp.error {
+            return Err(anyhow::Error::from(e));
+        }
+        Ok(resp)
     }
 
     pub fn metrics_report(&self) -> String {
@@ -263,13 +373,36 @@ impl Coordinator {
     }
 
     /// Prometheus text-format exposition: the full registry plus the
-    /// router's live queue gauges and the trace sink's span counters.
+    /// router's live queue gauges, the trace sink's span counters, and
+    /// the resilience counters (shedding, brownout, breaker, restarts).
     pub fn metrics_prometheus(&self) -> String {
-        self.metrics.render_prometheus(
+        self.metrics.render_prometheus_with(
             Some(self.router.queue_snapshot()),
             self.trace.spans_written(),
             self.trace.spans_lost(),
+            &self.resilience_snapshot(),
         )
+    }
+
+    /// Point-in-time view of the resilience machinery, feeding both the
+    /// Prometheus exposition and the `BENCH_serving.json` report.
+    pub fn resilience_snapshot(&self) -> ResilienceSnapshot {
+        ResilienceSnapshot {
+            shed_total: self.router.shed_total(),
+            degraded_total: self.degrade.as_ref().map_or(0, |d| d.degraded_total()),
+            brownout_active: self.degrade.as_ref().is_some_and(|d| d.is_active()),
+            brownout_transitions: self.degrade.as_ref().map_or(0, |d| d.transitions_total()),
+            breaker_open: self.breaker.open_count() as u64,
+            breaker_transitions: self.breaker.opened_total(),
+            worker_restarts: self.metrics.worker_restarts(),
+            conns_reaped: self.metrics.conns_reaped(),
+        }
+    }
+
+    /// The chaos fault injector, when one is configured (`--fault` /
+    /// `SSA_FAULT`).  The network front-end shares it for its seam.
+    pub fn fault_injector(&self) -> Option<&Arc<FaultInjector>> {
+        self.fault.as_ref()
     }
 
     /// Drain the span rings into Chrome trace-event JSON

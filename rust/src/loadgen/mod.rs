@@ -21,7 +21,7 @@ pub mod synthetic;
 
 pub use arrival::{PoissonArrivals, WeightedPick};
 pub use report::{BenchReport, BenchRun};
-pub use runner::{run, ImageSource, LoadSpec, LoadTarget, PendingResponse, RunStats};
+pub use runner::{run, ImageSource, LoadOpts, LoadSpec, LoadTarget, PendingResponse, RunStats};
 pub use synthetic::{write_artifacts, SyntheticSpec};
 
 use anyhow::{bail, Result};

@@ -9,7 +9,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{TargetReport, WorkerReport};
+use crate::coordinator::{ResilienceSnapshot, TargetReport, WorkerReport};
 use crate::util::json::Json;
 use crate::util::stats::{LatencySummary, StepsSummary};
 
@@ -29,6 +29,10 @@ pub struct BenchRun {
     pub steps: Option<StepsSummary>,
     pub targets: Vec<TargetReport>,
     pub worker_util: Vec<WorkerReport>,
+    /// Server-side resilience counters at the end of the run (shed,
+    /// brownout, breaker, restarts).  `None` when the server's snapshot
+    /// was unavailable (remote runs against servers predating it).
+    pub resilience: Option<ResilienceSnapshot>,
 }
 
 impl BenchRun {
@@ -48,12 +52,18 @@ impl BenchRun {
         } else {
             Some(StepsSummary::from_histogram(&stats.steps))
         };
-        Self { workers, trace: true, stats, latency, steps, targets, worker_util }
+        Self { workers, trace: true, stats, latency, steps, targets, worker_util, resilience: None }
     }
 
     /// Tag the run with its tracing setting (defaults to `true`).
     pub fn with_trace(mut self, on: bool) -> Self {
         self.trace = on;
+        self
+    }
+
+    /// Attach the server's end-of-run resilience counters.
+    pub fn with_resilience(mut self, snap: Option<ResilienceSnapshot>) -> Self {
+        self.resilience = snap;
         self
     }
 
@@ -108,18 +118,36 @@ impl BenchRun {
                 ])
             })
             .collect();
+        let resilience = match &self.resilience {
+            None => Json::Null,
+            Some(r) => Json::obj(vec![
+                ("shed_total", Json::num(r.shed_total as f64)),
+                ("degraded_total", Json::num(r.degraded_total as f64)),
+                ("brownout_active", Json::from(r.brownout_active)),
+                ("brownout_transitions", Json::num(r.brownout_transitions as f64)),
+                ("breaker_open", Json::num(r.breaker_open as f64)),
+                ("breaker_transitions", Json::num(r.breaker_transitions as f64)),
+                ("worker_restarts", Json::num(r.worker_restarts as f64)),
+                ("conns_reaped", Json::num(r.conns_reaped as f64)),
+            ]),
+        };
         Json::obj(vec![
             ("workers", Json::from(self.workers)),
             ("trace", Json::from(self.trace)),
             ("offered", Json::num(self.stats.offered as f64)),
             ("ok", Json::num(self.stats.ok as f64)),
             ("errors", Json::num(self.stats.errors as f64)),
+            ("shed", Json::num(self.stats.shed as f64)),
+            ("unavailable", Json::num(self.stats.unavailable as f64)),
+            ("degraded", Json::num(self.stats.degraded as f64)),
+            ("retried", Json::num(self.stats.retried as f64)),
             ("wall_s", Json::num(self.stats.wall.as_secs_f64())),
             ("throughput_rps", Json::num(self.throughput_rps())),
             ("latency_us", latency),
             ("steps_used", steps),
             ("targets", Json::Arr(targets)),
             ("worker_util", Json::Arr(workers)),
+            ("resilience", resilience),
         ])
     }
 }
@@ -287,6 +315,21 @@ impl BenchReport {
             if let Some(st) = &r.steps {
                 s.push_str(&format!("  steps mean={:.2} p95={:.0}", st.mean, st.p95));
             }
+            let rs = &r.stats;
+            if rs.shed + rs.unavailable + rs.degraded + rs.retried > 0 {
+                s.push_str(&format!(
+                    "  shed={} unavail={} degraded={} retried={}",
+                    rs.shed, rs.unavailable, rs.degraded, rs.retried
+                ));
+            }
+            if let Some(res) = &r.resilience {
+                if res.worker_restarts + res.breaker_transitions > 0 {
+                    s.push_str(&format!(
+                        "  restarts={} breaker_trips={}",
+                        res.worker_restarts, res.breaker_transitions
+                    ));
+                }
+            }
             s.push('\n');
         }
         if let Some(x) = self.speedup() {
@@ -331,6 +374,7 @@ mod tests {
             wall: Duration::from_millis(wall_ms),
             latency,
             steps,
+            ..RunStats::default()
         }
     }
 
@@ -400,5 +444,35 @@ mod tests {
         assert!(parsed.get("speedup_last_vs_first").and_then(Json::as_f64).is_some());
         assert!(r.render().contains("speedup"));
         assert!(r.render().contains("steps mean="));
+        // resilience keys are always present (zero / null when unused)
+        assert!(runs[0].get("shed").and_then(Json::as_f64).is_some());
+        assert!(runs[0].get("retried").and_then(Json::as_f64).is_some());
+        assert!(matches!(runs[0].get("resilience"), Some(Json::Null)));
+    }
+
+    /// A run tagged with a server resilience snapshot serializes it.
+    #[test]
+    fn resilience_snapshot_serializes_when_attached() {
+        let mut r = report();
+        r.runs[0] = BenchRun::new(1, stats(100, 1000), vec![], vec![]).with_resilience(Some(
+            ResilienceSnapshot {
+                shed_total: 7,
+                degraded_total: 3,
+                brownout_active: true,
+                brownout_transitions: 2,
+                breaker_open: 1,
+                breaker_transitions: 4,
+                worker_restarts: 5,
+                conns_reaped: 6,
+            },
+        ));
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        let res = parsed.get("runs").and_then(Json::as_arr).unwrap()[0]
+            .get("resilience")
+            .expect("resilience key");
+        assert_eq!(res.get("shed_total").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(res.get("worker_restarts").and_then(Json::as_f64), Some(5.0));
+        assert_eq!(res.get("brownout_active").and_then(Json::as_bool), Some(true));
+        assert!(r.render().contains("restarts=5 breaker_trips=4"));
     }
 }

@@ -16,8 +16,10 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::anytime::ExitPolicy;
-use crate::coordinator::{ClassifyResponse, Coordinator, SeedPolicy, Target};
-use crate::net::NetClient;
+use crate::coordinator::{
+    ClassifyResponse, Coordinator, SeedPolicy, ServeError, SubmitOptions, Target,
+};
+use crate::net::{NetClient, ReconnectingClient};
 use crate::runtime::Dataset;
 use crate::util::rng::Xoshiro256;
 use crate::util::stats::LogHistogram;
@@ -34,15 +36,46 @@ pub enum PendingResponse {
 }
 
 impl PendingResponse {
-    /// Block for the answer; `None` means the request was dropped or
-    /// refused (serve error, worker failure, connection loss) — load
-    /// drivers count it as an error either way.
+    /// Block for the answer.  `None` means the transport died (reply
+    /// channel or connection gone); `Some` carries either a result or a
+    /// typed failure in [`ClassifyResponse::error`] — so load drivers
+    /// can tell a shed deadline or an open breaker from a generic error.
     pub fn wait(self) -> Option<ClassifyResponse> {
         match self {
             PendingResponse::Local(rx) => rx.recv().ok(),
-            PendingResponse::Remote(p) => p.wait().ok(),
+            PendingResponse::Remote(p) => {
+                let id = p.id();
+                match p.wait_detailed() {
+                    Ok(Ok((r, rtt_us))) => Some(ClassifyResponse {
+                        id,
+                        class: r.class,
+                        logits: r.logits,
+                        latency_us: rtt_us,
+                        batch_size: r.batch_size,
+                        seed: r.seed,
+                        steps_used: r.steps_used,
+                        confidence: r.confidence,
+                        degraded: r.degraded,
+                        error: None,
+                    }),
+                    // typed refusal → same envelope shape the in-process
+                    // path delivers
+                    Ok(Err(e)) => Some(ClassifyResponse::failure(id, e)),
+                    Err(_) => None,
+                }
+            }
         }
     }
+}
+
+/// Per-request load knobs shared by every request of a run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadOpts {
+    /// Completion deadline handed to the server (overload legs use tight
+    /// deadlines to measure shed-before-dispatch behavior).
+    pub deadline_ms: Option<u64>,
+    /// Scheduling priority (higher served first).
+    pub priority: u8,
 }
 
 /// What the load drivers need from a serving target.  Implementations
@@ -58,6 +91,7 @@ pub trait LoadTarget: Sync {
         image: Vec<f32>,
         seed_policy: SeedPolicy,
         exit: ExitPolicy,
+        opts: LoadOpts,
     ) -> Result<PendingResponse>;
 
     /// Submit and block — the closed-loop primitive.
@@ -67,8 +101,9 @@ pub trait LoadTarget: Sync {
         image: Vec<f32>,
         seed_policy: SeedPolicy,
         exit: ExitPolicy,
+        opts: LoadOpts,
     ) -> Result<ClassifyResponse> {
-        self.submit_load(target, image, seed_policy, exit)?
+        self.submit_load(target, image, seed_policy, exit, opts)?
             .wait()
             .context("request dropped before a reply arrived")
     }
@@ -90,11 +125,23 @@ impl LoadTarget for Coordinator {
         image: Vec<f32>,
         seed_policy: SeedPolicy,
         exit: ExitPolicy,
+        opts: LoadOpts,
     ) -> Result<PendingResponse> {
-        Ok(PendingResponse::Local(
-            self.submit_anytime(target, image, seed_policy, exit)
-                .map_err(anyhow::Error::from)?,
-        ))
+        let (tx, rx) = mpsc::channel();
+        self.submit_with_opts(
+            target,
+            image,
+            seed_policy,
+            SubmitOptions {
+                exit,
+                deadline: opts.deadline_ms.map(Duration::from_millis),
+                priority: opts.priority,
+                accepted_at: None,
+            },
+            tx,
+        )
+        .map_err(anyhow::Error::from)?;
+        Ok(PendingResponse::Local(rx))
     }
 
     fn begin_window(&self) {
@@ -116,8 +163,55 @@ impl LoadTarget for NetClient {
         image: Vec<f32>,
         seed_policy: SeedPolicy,
         exit: ExitPolicy,
+        opts: LoadOpts,
     ) -> Result<PendingResponse> {
-        Ok(PendingResponse::Remote(self.submit_anytime(target, &image, seed_policy, exit)?))
+        Ok(PendingResponse::Remote(self.submit_opts(
+            target,
+            &image,
+            seed_policy,
+            exit,
+            opts.deadline_ms,
+            opts.priority,
+        )?))
+    }
+}
+
+impl LoadTarget for ReconnectingClient {
+    fn transport(&self) -> String {
+        format!("tcp://{} (retrying)", self.addr())
+    }
+
+    /// Open-loop submits ride the current live connection without replay
+    /// (a lost reply in open-loop mode counts as an error; replaying it
+    /// would double-charge the server).  Reconnection still applies.
+    fn submit_load(
+        &self,
+        target: Target,
+        image: Vec<f32>,
+        seed_policy: SeedPolicy,
+        exit: ExitPolicy,
+        opts: LoadOpts,
+    ) -> Result<PendingResponse> {
+        Ok(PendingResponse::Remote(self.current_client()?.submit_opts(
+            target,
+            &image,
+            seed_policy,
+            exit,
+            opts.deadline_ms,
+            opts.priority,
+        )?))
+    }
+
+    /// Closed-loop requests get the full reconnect + safe-replay path.
+    fn classify_load(
+        &self,
+        target: Target,
+        image: Vec<f32>,
+        seed_policy: SeedPolicy,
+        exit: ExitPolicy,
+        opts: LoadOpts,
+    ) -> Result<ClassifyResponse> {
+        self.classify_opts(target, &image, seed_policy, exit, opts.deadline_ms, opts.priority)
     }
 }
 
@@ -166,6 +260,8 @@ pub struct LoadSpec {
     pub scenario: Scenario,
     /// Master seed for arrivals / mix / image choice (replayable runs).
     pub seed: u64,
+    /// Per-request resilience knobs applied to every request of the run.
+    pub opts: LoadOpts,
 }
 
 /// Client-side counters for one run.
@@ -175,8 +271,19 @@ pub struct RunStats {
     pub offered: u64,
     /// Requests that received an answer.
     pub ok: u64,
-    /// Submit rejections plus dropped replies.
+    /// Submit rejections plus dropped replies (excluding the typed
+    /// categories broken out below).
     pub errors: u64,
+    /// Requests the server shed with `deadline_exceeded`.
+    pub shed: u64,
+    /// Requests refused with `unavailable` (open circuit breaker).
+    pub unavailable: u64,
+    /// Answered requests whose exit policy the brownout controller
+    /// tightened (they also count in `ok`).
+    pub degraded: u64,
+    /// Requests the client replayed after a failure (reconnecting
+    /// clients only; filled in by the driver from client counters).
+    pub retried: u64,
     /// First submit to last reply.
     pub wall: Duration,
     /// End-to-end (submit → reply) latency, as reported in responses.
@@ -192,10 +299,31 @@ impl RunStats {
         self.ok as f64 / self.wall.as_secs_f64().max(1e-9)
     }
 
+    /// Fold one answered (or typed-failed) response into the counters.
+    fn record_response(&mut self, resp: &ClassifyResponse) {
+        match &resp.error {
+            None => {
+                self.ok += 1;
+                if resp.degraded {
+                    self.degraded += 1;
+                }
+                self.latency.record(resp.latency_us);
+                self.steps.record(resp.steps_used as f64);
+            }
+            Some(ServeError::DeadlineExceeded) => self.shed += 1,
+            Some(ServeError::Unavailable(_)) => self.unavailable += 1,
+            Some(_) => self.errors += 1,
+        }
+    }
+
     fn absorb(&mut self, other: RunStats) {
         self.offered += other.offered;
         self.ok += other.ok;
         self.errors += other.errors;
+        self.shed += other.shed;
+        self.unavailable += other.unavailable;
+        self.degraded += other.degraded;
+        self.retried += other.retried;
         self.latency.merge(&other.latency);
         self.steps.merge(&other.steps);
     }
@@ -247,12 +375,9 @@ fn run_closed<T: LoadTarget + ?Sized>(
                             images.image(idx).to_vec(),
                             e.seed_policy,
                             e.exit,
+                            spec.opts,
                         ) {
-                            Ok(resp) => {
-                                st.ok += 1;
-                                st.latency.record(resp.latency_us);
-                                st.steps.record(resp.steps_used as f64);
-                            }
+                            Ok(resp) => st.record_response(&resp),
                             Err(_) => st.errors += 1,
                         }
                     }
@@ -286,21 +411,14 @@ fn run_open<T: LoadTarget + ?Sized>(
         // collector drains replies concurrently so the pacer never blocks
         // on service completions (that would close the loop)
         let collector = s.spawn(move || {
-            let mut ok = 0u64;
-            let mut errors = 0u64;
-            let mut hist = LogHistogram::new();
-            let mut steps = LogHistogram::new();
+            let mut st = RunStats::default();
             while let Ok(pending) = rx.recv() {
                 match pending.wait() {
-                    Some(resp) => {
-                        ok += 1;
-                        hist.record(resp.latency_us);
-                        steps.record(resp.steps_used as f64);
-                    }
-                    None => errors += 1, // dropped or refused reply
+                    Some(resp) => st.record_response(&resp),
+                    None => st.errors += 1, // transport died mid-flight
                 }
             }
-            (ok, errors, hist, steps)
+            st
         });
 
         loop {
@@ -322,6 +440,7 @@ fn run_open<T: LoadTarget + ?Sized>(
                 images.image(idx).to_vec(),
                 e.seed_policy,
                 e.exit,
+                spec.opts,
             ) {
                 Ok(pending) => {
                     let _ = tx.send(pending);
@@ -330,11 +449,7 @@ fn run_open<T: LoadTarget + ?Sized>(
             }
         }
         drop(tx); // pacer done; collector drains the in-flight tail
-        let (ok, errors, hist, steps) = collector.join().expect("collector panicked");
-        stats.ok = ok;
-        stats.errors += errors;
-        stats.latency = hist;
-        stats.steps = steps;
+        stats.absorb(collector.join().expect("collector panicked"));
     });
     stats.wall = t0.elapsed();
     Ok(stats)

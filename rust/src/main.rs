@@ -9,16 +9,19 @@ use anyhow::{bail, Context, Result};
 use ssa_repro::anytime::ExitPolicy;
 use ssa_repro::cli::{check_known_flags, Args, USAGE};
 use ssa_repro::config::{AttnConfig, BackendKind, PrngSharing};
-use ssa_repro::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, SeedPolicy, Target};
+use ssa_repro::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, DegradeConfig, SeedPolicy, Target,
+};
 use ssa_repro::coordinator::router::variant_key;
 use ssa_repro::experiments::{figures, headline, sweep_anytime, table1, table2, table3};
 use ssa_repro::hw::{simulate, SpikeStreams};
 use ssa_repro::loadgen::{
-    self, ArrivalMode, BenchReport, BenchRun, ImageSource, LoadSpec, LoadTarget, Scenario,
-    SyntheticSpec,
+    self, ArrivalMode, BenchReport, BenchRun, ImageSource, LoadOpts, LoadSpec, LoadTarget,
+    Scenario, SyntheticSpec,
 };
-use ssa_repro::net::{NetClient, NetServer, NetServerConfig};
+use ssa_repro::net::{NetClient, NetServer, NetServerConfig, ReconnectingClient};
 use ssa_repro::runtime::{Dataset, Manifest};
+use ssa_repro::util::fault::FaultPlan;
 
 fn main() {
     ssa_repro::util::logging::init_from_env();
@@ -104,6 +107,30 @@ fn trace_flag(args: &Args) -> Result<bool> {
     }
 }
 
+/// `--deadline-ms D` / `--priority P` (classify-remote, serve-bench):
+/// the per-request resilience knobs, defaulting to "none" so runs
+/// without the flags behave exactly as before they existed.
+fn load_opts(args: &Args) -> Result<LoadOpts> {
+    let deadline_ms = match args.opt("deadline-ms") {
+        None => None,
+        Some(s) => Some(
+            s.parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("invalid --deadline-ms {s:?}: {e}"))?,
+        ),
+    };
+    Ok(LoadOpts { deadline_ms, priority: args.opt_parse("priority", 0u8)? })
+}
+
+/// `serve --fault SPEC`, falling back to the `SSA_FAULT` environment
+/// variable when the flag is absent (so CI can arm chaos on a stock
+/// command line).
+fn fault_plan(args: &Args) -> Result<Option<FaultPlan>> {
+    match args.opt("fault") {
+        Some(s) => Ok(Some(FaultPlan::parse(s)?)),
+        None => FaultPlan::from_env(),
+    }
+}
+
 /// `serve-bench --trace on|off|both`: the tracing legs to run per worker
 /// count.  The default `both` measures each worker count twice so the
 /// report can quantify the tracing overhead as an on-vs-off delta.
@@ -146,11 +173,21 @@ fn serve(args: &Args) -> Result<()> {
 
     let target = Target::parse(&target_s)?;
     let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(max_delay_ms) };
+    let brownout = match args.opt("brownout") {
+        None => None,
+        Some(s) => Some(DegradeConfig::parse(s)?),
+    };
+    let fault = fault_plan(args)?;
+    if let Some(f) = &fault {
+        println!("chaos fault plan armed: {f:?}");
+    }
     let mut cfg = CoordinatorConfig::new(dir)
         .with_backend(backend)
         .with_workers(workers)
         .with_intra_threads(intra_threads)
-        .with_trace(trace_flag(args)?);
+        .with_trace(trace_flag(args)?)
+        .with_brownout(brownout)
+        .with_fault(fault);
     cfg.policy = policy;
     cfg.preload = vec![target_s.clone()];
 
@@ -254,14 +291,49 @@ fn classify_remote(args: &Args) -> Result<()> {
         None => info.targets.first().cloned().context("server reports no servable targets")?,
     };
     let target = Target::parse(&target_s)?;
+    let opts = load_opts(args)?;
+    // --retry swaps in the reconnecting client: broken connections are
+    // re-dialed and fixed-seed (idempotent) requests replayed
+    let retrying = if args.flag("retry") { Some(ReconnectingClient::new(addr)) } else { None };
     // same deterministic pseudo-image pool the load generator draws from
     let images =
         ImageSource::synthetic(info.image_size, n.max(1), args.opt_parse("seed", 0xC1A5u64)?);
     for i in 0..n {
-        let resp = client.classify_anytime(target.clone(), images.image(i), seed_policy, exit)?;
+        let resp = match &retrying {
+            Some(rc) => rc.classify_opts(
+                target.clone(),
+                images.image(i),
+                seed_policy,
+                exit,
+                opts.deadline_ms,
+                opts.priority,
+            )?,
+            None => client
+                .submit_opts(
+                    target.clone(),
+                    images.image(i),
+                    seed_policy,
+                    exit,
+                    opts.deadline_ms,
+                    opts.priority,
+                )?
+                .wait()?,
+        };
         println!(
-            "[{i}] {target_s} -> class {} (seed {}, batch {}, steps {}, rtt {:.0} us)",
-            resp.class, resp.seed, resp.batch_size, resp.steps_used, resp.latency_us
+            "[{i}] {target_s} -> class {} (seed {}, batch {}, steps {}, rtt {:.0} us{})",
+            resp.class,
+            resp.seed,
+            resp.batch_size,
+            resp.steps_used,
+            resp.latency_us,
+            if resp.degraded { ", degraded" } else { "" }
+        );
+    }
+    if let Some(rc) = &retrying {
+        println!(
+            "client resilience: {} request(s) retried, {} reconnect(s)",
+            rc.retries_total(),
+            rc.reconnects_total()
         );
     }
     if args.flag("metrics") {
@@ -310,8 +382,14 @@ fn serve_bench(args: &Args) -> Result<()> {
 
     let default_policy = loadgen::parse_seed_policy(&args.opt_or("seed-policy", "perbatch"))?;
     let scenario = Scenario::parse(&args.opt_or("mix", "ssa_t4"), default_policy)?;
-    let spec = LoadSpec { mode, duration, scenario: scenario.clone(), seed };
+    let spec =
+        LoadSpec { mode, duration, scenario: scenario.clone(), seed, opts: load_opts(args)? };
     let out = PathBuf::from(args.opt_or("out", "BENCH_serving.json"));
+    anyhow::ensure!(
+        !args.flag("retry") || args.opt("remote").is_some(),
+        "--retry wraps the remote connection and needs --remote ADDR \
+         (in-process runs have no connection to lose)"
+    );
 
     let report = if let Some(remote) = args.opt("remote") {
         serve_bench_remote(args, remote, &spec)?
@@ -352,11 +430,19 @@ fn serve_bench_remote(args: &Args, remote: &str, spec: &LoadSpec) -> Result<Benc
         );
     }
     let images = ImageSource::synthetic(info.image_size, 64, spec.seed ^ 0x1A6E);
+    // --retry drives the run through the reconnecting client so the
+    // bench survives chaos-injected connection drops; the ping/metrics
+    // connection above stays plain either way
+    let retrying = if args.flag("retry") { Some(ReconnectingClient::new(remote)) } else { None };
+    let transport = match &retrying {
+        Some(rc) => rc.transport(),
+        None => client.transport(),
+    };
     let mut report = BenchReport {
         scenario: spec.scenario.name.clone(),
         mode: spec.mode.describe(),
         backend: info.backend.clone(),
-        transport: client.transport(),
+        transport: transport.clone(),
         duration_s: spec.duration.as_secs_f64(),
         runs: Vec::new(),
     };
@@ -364,10 +450,19 @@ fn serve_bench_remote(args: &Args, remote: &str, spec: &LoadSpec) -> Result<Benc
         "serve-bench: {} for {:.1}s against {} ({} worker(s) remote) ...",
         spec.mode.describe(),
         spec.duration.as_secs_f64(),
-        client.transport(),
+        transport,
         info.workers
     );
-    let stats = loadgen::run(&client, spec, &images)?;
+    let stats = match &retrying {
+        Some(rc) => {
+            let mut stats = loadgen::run(rc, spec, &images)?;
+            // the runner can't see inside the client; fold its replay
+            // counter into the report here
+            stats.retried = rc.retries_total();
+            stats
+        }
+        None => loadgen::run(&client, spec, &images)?,
+    };
     report.runs.push(BenchRun::new(info.workers, stats, Vec::new(), Vec::new()));
     // the server's own telemetry is one metrics op away; unlike the
     // in-process path there is no reset op, so these counters cover the
@@ -452,7 +547,8 @@ fn serve_bench_local(args: &Args, spec: &LoadSpec) -> Result<BenchReport> {
                     coord.metrics().report(),
                     coord.metrics().worker_report(),
                 )
-                .with_trace(trace_on),
+                .with_trace(trace_on)
+                .with_resilience(Some(coord.resilience_snapshot())),
             );
             coord.shutdown();
         }

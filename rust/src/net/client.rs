@@ -15,20 +15,25 @@
 //! latency — network numbers, not server numbers.
 
 use std::collections::HashMap;
-use std::net::{Shutdown, TcpStream};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::anytime::ExitPolicy;
 use crate::coordinator::{ClassifyResponse, SeedPolicy, ServeError, Target};
 use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
 
 use super::conn;
 use super::protocol::{RemoteClassify, Reply, Request, ServerInfo};
+
+/// How long a client waits for the TCP connect to complete before
+/// treating the server as unreachable.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// A submitted classify request whose reply has not been awaited yet.
 pub struct PendingReply {
@@ -76,6 +81,8 @@ impl PendingReply {
                 seed: r.seed,
                 steps_used: r.steps_used,
                 confidence: r.confidence,
+                degraded: r.degraded,
+                error: None,
             }),
             Err(e) => Err(anyhow::Error::from(e)),
         }
@@ -107,7 +114,15 @@ impl NetClient {
     /// Connect with an explicit frame cap (must be at least the server's
     /// reply sizes; clients fuzzing the server use small caps).
     pub fn connect_with(addr: &str, max_frame: usize) -> Result<Self> {
-        let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        // bounded connect: an unreachable server fails in CONNECT_TIMEOUT
+        // instead of the OS default (which can be minutes)
+        let sock_addr = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr}"))?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("{addr} resolved to no addresses"))?;
+        let stream = TcpStream::connect_timeout(&sock_addr, CONNECT_TIMEOUT)
+            .with_context(|| format!("connecting to {addr}"))?;
         stream.set_nodelay(true).ok();
         let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| addr.to_string());
         let write = Mutex::new(stream.try_clone().context("cloning stream write half")?);
@@ -222,6 +237,22 @@ impl NetClient {
         seed_policy: SeedPolicy,
         exit: ExitPolicy,
     ) -> Result<PendingReply> {
+        self.submit_opts(target, image, seed_policy, exit, None, 0)
+    }
+
+    /// Submit with the full per-request knob set: anytime exit policy,
+    /// optional completion deadline, and scheduling priority.  The
+    /// defaults (`None`, `0`) serialize to the exact pre-resilience wire
+    /// frame.
+    pub fn submit_opts(
+        &self,
+        target: Target,
+        image: &[f32],
+        seed_policy: SeedPolicy,
+        exit: ExitPolicy,
+        deadline_ms: Option<u64>,
+        priority: u8,
+    ) -> Result<PendingReply> {
         let id = self.fresh_id();
         let sent_at = Instant::now();
         let rx = self.send(&Request::Classify {
@@ -229,6 +260,8 @@ impl NetClient {
             target,
             seed_policy,
             exit,
+            deadline_ms,
+            priority,
             image: image.to_vec(),
         })?;
         Ok(PendingReply { id, rx, sent_at })
@@ -310,6 +343,198 @@ impl Drop for NetClient {
         let _ = self.stream.shutdown(Shutdown::Both);
         if let Some(h) = self.reader.take() {
             let _ = h.join();
+        }
+    }
+}
+
+/// Retry/backoff knobs for [`ReconnectingClient`].
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Attempts beyond the first (0 disables retry entirely).
+    pub max_retries: usize,
+    /// First backoff; doubles per attempt.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_max: Duration,
+}
+
+impl Default for RetryPolicy {
+    /// 3 retries, 50 ms → 1 s exponential backoff.
+    fn default() -> Self {
+        Self {
+            max_retries: 3,
+            backoff_base: Duration::from_millis(50),
+            backoff_max: Duration::from_secs(1),
+        }
+    }
+}
+
+/// A [`NetClient`] wrapper that survives dropped connections: it
+/// reconnects with jittered exponential backoff and retries **only
+/// requests that are safe to replay**.
+///
+/// Retry safety comes from the serving system's determinism contract: a
+/// `Fixed(s)`-seed classify is a pure function of `(target, image, s)`
+/// on engines with per-row seed support, so replaying it — even if the
+/// first copy actually executed and its reply was lost — returns the
+/// bit-identical answer.  `PerBatch`/`Ensemble` requests consume fresh
+/// seeds per execution and are **not** retried; neither are typed
+/// caller-fault refusals (`bad_request`, `bad_image`, ...) or
+/// `deadline_exceeded` (the budget is already spent).
+pub struct ReconnectingClient {
+    addr: String,
+    max_frame: usize,
+    retry: RetryPolicy,
+    inner: Mutex<Option<Arc<NetClient>>>,
+    /// Jitter source — deterministic per client, which keeps chaos tests
+    /// replayable.
+    rng: Mutex<Xoshiro256>,
+    retries_total: AtomicU64,
+    reconnects_total: AtomicU64,
+}
+
+impl ReconnectingClient {
+    /// Wrap `addr` with the default [`RetryPolicy`].  Does not connect
+    /// yet — the first call does (so construction never fails).
+    pub fn new(addr: impl Into<String>) -> Self {
+        Self::with_policy(addr, conn::DEFAULT_MAX_FRAME, RetryPolicy::default())
+    }
+
+    pub fn with_policy(addr: impl Into<String>, max_frame: usize, retry: RetryPolicy) -> Self {
+        let addr = addr.into();
+        let seed = 0x5EED_0000 ^ addr.len() as u64;
+        Self {
+            addr,
+            max_frame,
+            retry,
+            inner: Mutex::new(None),
+            rng: Mutex::new(Xoshiro256::new(seed)),
+            retries_total: AtomicU64::new(0),
+            reconnects_total: AtomicU64::new(0),
+        }
+    }
+
+    /// The server address this client targets.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// The live connection, (re)establishing it if needed — public so
+    /// pipelined callers can submit on the current stream directly.
+    pub fn current_client(&self) -> Result<Arc<NetClient>> {
+        self.client()
+    }
+
+    /// Requests replayed after a failure, over this client's lifetime.
+    pub fn retries_total(&self) -> u64 {
+        self.retries_total.load(Ordering::Relaxed)
+    }
+
+    /// Connections re-established, over this client's lifetime.
+    pub fn reconnects_total(&self) -> u64 {
+        self.reconnects_total.load(Ordering::Relaxed)
+    }
+
+    /// Jittered exponential backoff for retry attempt `attempt` (0-based).
+    fn backoff(&self, attempt: usize) -> Duration {
+        let exp = self
+            .retry
+            .backoff_base
+            .saturating_mul(1u32 << attempt.min(16) as u32)
+            .min(self.retry.backoff_max);
+        // 50%-150% jitter so a fleet of retrying clients de-synchronizes
+        let jitter = 0.5 + self.rng.lock().unwrap().next_f64();
+        exp.mul_f64(jitter)
+    }
+
+    /// The live connection, (re)establishing it if needed.
+    fn client(&self) -> Result<Arc<NetClient>> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(c) = g.as_ref() {
+            if c.alive.load(Ordering::Acquire) {
+                return Ok(Arc::clone(c));
+            }
+            self.reconnects_total.fetch_add(1, Ordering::Relaxed);
+        }
+        let c = Arc::new(NetClient::connect_with(&self.addr, self.max_frame)?);
+        *g = Some(Arc::clone(&c));
+        Ok(c)
+    }
+
+    /// Drop the cached connection so the next call reconnects.
+    fn invalidate(&self, dead: &Arc<NetClient>) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(cur) = g.as_ref() {
+            if Arc::ptr_eq(cur, dead) {
+                *g = None;
+            }
+        }
+    }
+
+    /// Classify with reconnect + safe retry.  Blocks for the reply;
+    /// returns the server's typed error as `Err` like
+    /// [`PendingReply::wait`].
+    pub fn classify_opts(
+        &self,
+        target: Target,
+        image: &[f32],
+        seed_policy: SeedPolicy,
+        exit: ExitPolicy,
+        deadline_ms: Option<u64>,
+        priority: u8,
+    ) -> Result<ClassifyResponse> {
+        // replaying is only safe when re-execution is bit-deterministic
+        let idempotent = matches!(seed_policy, SeedPolicy::Fixed(_));
+        let mut attempt = 0usize;
+        loop {
+            let outcome = self.client().and_then(|c| {
+                match c.submit_opts(target, image, seed_policy, exit, deadline_ms, priority) {
+                    // transport death at send or mid-wait: reconnect
+                    // before the next attempt
+                    Ok(pending) => pending.wait_detailed().map_err(|e| {
+                        self.invalidate(&c);
+                        e
+                    }),
+                    Err(e) => {
+                        self.invalidate(&c);
+                        Err(e)
+                    }
+                }
+            });
+            let err: anyhow::Error = match outcome {
+                Ok(Ok((r, rtt_us))) => {
+                    return Ok(ClassifyResponse {
+                        id: 0,
+                        class: r.class,
+                        logits: r.logits,
+                        latency_us: rtt_us,
+                        batch_size: r.batch_size,
+                        seed: r.seed,
+                        steps_used: r.steps_used,
+                        confidence: r.confidence,
+                        degraded: r.degraded,
+                        error: None,
+                    })
+                }
+                // typed refusal: retry only transient classes, and only
+                // for replay-safe requests
+                Ok(Err(e)) if idempotent && e.is_retryable() => anyhow::Error::from(e),
+                Ok(Err(e)) => return Err(anyhow::Error::from(e)),
+                // transport/connect error: the request may or may not
+                // have executed — replay only when that is safe
+                Err(e) if idempotent => e,
+                Err(e) => return Err(e),
+            };
+            if attempt >= self.retry.max_retries {
+                return Err(err.context(format!(
+                    "request failed after {} attempt(s) to {}",
+                    attempt + 1,
+                    self.addr
+                )));
+            }
+            std::thread::sleep(self.backoff(attempt));
+            attempt += 1;
+            self.retries_total.fetch_add(1, Ordering::Relaxed);
         }
     }
 }

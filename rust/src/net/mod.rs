@@ -33,6 +33,6 @@ pub mod conn;
 pub mod protocol;
 pub mod server;
 
-pub use client::{NetClient, PendingReply};
+pub use client::{NetClient, PendingReply, ReconnectingClient, RetryPolicy};
 pub use protocol::{RemoteClassify, Reply, Request, ServerInfo};
 pub use server::{NetServer, NetServerConfig};

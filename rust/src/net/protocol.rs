@@ -40,6 +40,14 @@ pub enum Request {
         /// servers keep working) and the server defaults an absent field
         /// to `full` (old clients keep today's exact behavior).
         exit: ExitPolicy,
+        /// Relative completion deadline in milliseconds; the server
+        /// sheds the request with `deadline_exceeded` if it is still
+        /// queued when the budget runs out.  Optional both ways like
+        /// `exit`: omitted when `None`, absent decodes as `None`.
+        deadline_ms: Option<u64>,
+        /// Scheduling priority (higher served first).  Omitted from the
+        /// wire when 0, absent decodes as 0.
+        priority: u8,
         /// Row-major `[S, S]` pixels in [0,1].
         image: Vec<f32>,
     },
@@ -88,7 +96,7 @@ impl Request {
     /// Serialize to the wire JSON object.
     pub fn to_json(&self) -> Json {
         match self {
-            Request::Classify { id, target, seed_policy, exit, image } => {
+            Request::Classify { id, target, seed_policy, exit, deadline_ms, priority, image } => {
                 let mut fields = vec![
                     ("op", Json::str("classify")),
                     ("id", Json::num(*id as f64)),
@@ -99,6 +107,14 @@ impl Request {
                 // byte-compatible with servers predating the field
                 if !exit.is_full() {
                     fields.push(("exit", Json::str(exit.to_string())));
+                }
+                // same interop rule for the resilience knobs: defaults
+                // leave the frame byte-identical to the old grammar
+                if let Some(d) = deadline_ms {
+                    fields.push(("deadline_ms", Json::num(*d as f64)));
+                }
+                if *priority != 0 {
+                    fields.push(("priority", Json::num(*priority as f64)));
                 }
                 fields.push((
                     "image",
@@ -156,6 +172,23 @@ impl Request {
                         ExitPolicy::parse(s).map_err(|e| bad(&format!("classify: {e:#}")))?
                     }
                 };
+                // absent → no deadline / baseline priority (old clients)
+                let deadline_ms = match j.get("deadline_ms") {
+                    None => None,
+                    Some(v) => Some(
+                        v.as_u64().ok_or_else(|| {
+                            bad("classify: `deadline_ms` must be a non-negative integer")
+                        })?,
+                    ),
+                };
+                let priority = match j.get("priority") {
+                    None => 0,
+                    Some(v) => v
+                        .as_u64()
+                        .filter(|&p| p <= u8::MAX as u64)
+                        .ok_or_else(|| bad("classify: `priority` must be an integer in 0..=255"))?
+                        as u8,
+                };
                 let image = j
                     .get("image")
                     .and_then(Json::as_arr)
@@ -164,7 +197,7 @@ impl Request {
                     .map(|p| p.as_f64().map(|v| v as f32))
                     .collect::<Option<Vec<f32>>>()
                     .ok_or_else(|| bad("classify: non-numeric pixel in `image`"))?;
-                Ok(Request::Classify { id, target, seed_policy, exit, image })
+                Ok(Request::Classify { id, target, seed_policy, exit, deadline_ms, priority, image })
             }
             "metrics" => Ok(Request::Metrics { id }),
             "metrics_prom" => Ok(Request::MetricsProm { id }),
@@ -203,6 +236,10 @@ pub struct RemoteClassify {
     /// [`ClassifyResponse::confidence`]).  Decodes as `0.0` from replies
     /// of servers predating the field.
     pub confidence: f32,
+    /// `true` when the server's brownout controller tightened this
+    /// request's exit policy (see [`ClassifyResponse::degraded`]).
+    /// Decodes as `false` from replies of servers predating the field.
+    pub degraded: bool,
 }
 
 impl RemoteClassify {
@@ -216,6 +253,7 @@ impl RemoteClassify {
             seed: r.seed,
             steps_used: r.steps_used,
             confidence: r.confidence,
+            degraded: r.degraded,
         }
     }
 }
@@ -304,21 +342,31 @@ impl Reply {
     /// Serialize to the wire JSON object.
     pub fn to_json(&self) -> Json {
         match self {
-            Reply::Classify { id, response } => Json::obj(vec![
-                ("ok", Json::from(true)),
-                ("op", Json::str("classify")),
-                ("id", Json::num(*id as f64)),
-                ("class", Json::from(response.class)),
-                (
-                    "logits",
-                    Json::Arr(response.logits.iter().map(|&l| Json::num(l as f64)).collect()),
-                ),
-                ("server_latency_us", Json::num(response.server_latency_us)),
-                ("batch_size", Json::from(response.batch_size)),
-                ("seed", Json::num(response.seed as f64)),
-                ("steps_used", Json::from(response.steps_used)),
-                ("confidence", Json::num(response.confidence as f64)),
-            ]),
+            Reply::Classify { id, response } => {
+                let mut fields = vec![
+                    ("ok", Json::from(true)),
+                    ("op", Json::str("classify")),
+                    ("id", Json::num(*id as f64)),
+                    ("class", Json::from(response.class)),
+                    (
+                        "logits",
+                        Json::Arr(
+                            response.logits.iter().map(|&l| Json::num(l as f64)).collect(),
+                        ),
+                    ),
+                    ("server_latency_us", Json::num(response.server_latency_us)),
+                    ("batch_size", Json::from(response.batch_size)),
+                    ("seed", Json::num(response.seed as f64)),
+                    ("steps_used", Json::from(response.steps_used)),
+                    ("confidence", Json::num(response.confidence as f64)),
+                ];
+                // emitted only when set, so non-degraded replies stay
+                // byte-identical to the pre-brownout grammar
+                if response.degraded {
+                    fields.push(("degraded", Json::from(true)));
+                }
+                Json::obj(fields)
+            }
             Reply::Metrics { id, report } => Json::obj(vec![
                 ("ok", Json::from(true)),
                 ("op", Json::str("metrics")),
@@ -396,6 +444,8 @@ impl Reply {
                     j.get("steps_used").and_then(Json::as_u64).unwrap_or(0) as usize;
                 let confidence =
                     j.get("confidence").and_then(Json::as_f64).unwrap_or(0.0) as f32;
+                let degraded =
+                    j.get("degraded").and_then(Json::as_bool).unwrap_or(false);
                 Ok(Reply::Classify {
                     id,
                     response: RemoteClassify {
@@ -406,6 +456,7 @@ impl Reply {
                         seed: seed as u32,
                         steps_used,
                         confidence,
+                        degraded,
                     },
                 })
             }
@@ -462,6 +513,8 @@ mod tests {
             target: Target::ssa(4),
             seed_policy: SeedPolicy::Fixed(42),
             exit: ExitPolicy::Full,
+            deadline_ms: None,
+            priority: 0,
             image: vec![0.0, 0.25, 1.0, 0.125],
         });
         roundtrip_request(Request::Classify {
@@ -469,6 +522,8 @@ mod tests {
             target: Target::ssa(4),
             seed_policy: SeedPolicy::Fixed(42),
             exit: ExitPolicy::Margin { threshold: 0.5, min_steps: 2 },
+            deadline_ms: Some(25),
+            priority: 3,
             image: vec![0.0, 0.25],
         });
         roundtrip_request(Request::Classify {
@@ -476,6 +531,8 @@ mod tests {
             target: Target::spikformer(4),
             seed_policy: SeedPolicy::PerBatch,
             exit: ExitPolicy::MarginOrDeadline { threshold: 0.25, min_steps: 1, budget: 3 },
+            deadline_ms: None,
+            priority: 255,
             image: vec![1.0],
         });
         roundtrip_request(Request::Metrics { id: 1 });
@@ -494,15 +551,42 @@ mod tests {
             target: Target::ssa(4),
             seed_policy: SeedPolicy::Fixed(42),
             exit: ExitPolicy::Full,
+            deadline_ms: None,
+            priority: 0,
             image: vec![0.5],
         };
         let text = req.to_json().to_string();
         assert!(!text.contains("exit"), "full policy must not serialize: {text}");
+        assert!(!text.contains("deadline_ms"), "no deadline must not serialize: {text}");
+        assert!(!text.contains("priority"), "priority 0 must not serialize: {text}");
         let old_client_frame =
             r#"{"op":"classify","id":3,"target":"ssa_t4","image":[0.5]}"#;
         let back = Request::parse(&Json::parse(old_client_frame).unwrap()).unwrap();
-        let Request::Classify { exit, .. } = back else { panic!("wrong op") };
+        let Request::Classify { exit, deadline_ms, priority, .. } = back else {
+            panic!("wrong op")
+        };
         assert_eq!(exit, ExitPolicy::Full);
+        assert_eq!(deadline_ms, None);
+        assert_eq!(priority, 0);
+    }
+
+    /// Out-of-range resilience knobs are typed `bad_request` failures,
+    /// not silent truncations.
+    #[test]
+    fn invalid_deadline_or_priority_is_bad_request() {
+        for bad in [
+            r#"{"op":"classify","id":1,"target":"ssa_t4","deadline_ms":-5,"image":[0.5]}"#,
+            r#"{"op":"classify","id":1,"target":"ssa_t4","deadline_ms":"soon","image":[0.5]}"#,
+            r#"{"op":"classify","id":1,"target":"ssa_t4","priority":256,"image":[0.5]}"#,
+            r#"{"op":"classify","id":1,"target":"ssa_t4","priority":-1,"image":[0.5]}"#,
+        ] {
+            let err = Request::parse(&Json::parse(bad).unwrap()).unwrap_err();
+            assert_eq!(
+                std::mem::discriminant(&err),
+                std::mem::discriminant(&ServeError::BadRequest(String::new())),
+                "{bad} must parse-fail as BadRequest, got {err:?}"
+            );
+        }
     }
 
     #[test]
@@ -517,6 +601,20 @@ mod tests {
                 seed: 42,
                 steps_used: 3,
                 confidence: 1.25,
+                degraded: false,
+            },
+        });
+        roundtrip_reply(Reply::Classify {
+            id: 8,
+            response: RemoteClassify {
+                class: 1,
+                logits: vec![0.5, 1.0],
+                server_latency_us: 10.0,
+                batch_size: 1,
+                seed: 7,
+                steps_used: 2,
+                confidence: 0.5,
+                degraded: true,
             },
         });
         roundtrip_reply(Reply::Metrics { id: 1, report: "=== metrics ===\n".into() });
@@ -555,6 +653,7 @@ mod tests {
         let Reply::Classify { response, .. } = rep else { panic!("wrong op") };
         assert_eq!(response.steps_used, 0);
         assert_eq!(response.confidence, 0.0);
+        assert!(!response.degraded, "absent `degraded` must decode as false");
     }
 
     /// Pixels and logits must survive the wire bit-identically: f32 → f64
@@ -577,6 +676,8 @@ mod tests {
             target: Target::ann(),
             seed_policy: SeedPolicy::PerBatch,
             exit: ExitPolicy::Full,
+            deadline_ms: None,
+            priority: 0,
             image: vals.clone(),
         };
         let back = Request::parse(&Json::parse(&req.to_json().to_string()).unwrap()).unwrap();

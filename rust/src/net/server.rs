@@ -32,6 +32,7 @@
 //! unanswered.
 
 use std::collections::HashMap;
+use std::io::{self, Read};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -40,13 +41,25 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::anytime::ExitPolicy;
-use crate::coordinator::{ClassifyResponse, Coordinator, SeedPolicy, ServeError, Target};
+use crate::coordinator::{
+    ClassifyResponse, Coordinator, SeedPolicy, ServeError, SubmitOptions, Target,
+};
 use crate::obs::{SpanKind, TraceSink};
+use crate::util::fault::FaultInjector;
 use crate::util::json::Json;
 
 use super::conn;
 use super::protocol::{recover_id, RemoteClassify, Reply, Request, ServerInfo};
+
+/// Socket read-timeout granularity: how often a blocked reader wakes to
+/// check the idle deadline (and the shutdown flag indirectly, via the
+/// half-close that shutdown performs).
+const READ_POLL: Duration = Duration::from_millis(500);
+
+/// Hard cap on finishing a frame once its first byte has arrived.  A
+/// peer that stalls mid-frame leaves the stream desynchronized, so past
+/// this the connection is dropped rather than waited on.
+const MID_FRAME_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Network front-end configuration.
 #[derive(Clone, Debug)]
@@ -60,17 +73,32 @@ pub struct NetServerConfig {
     /// Frame-size cap in bytes, both directions
     /// ([`conn::DEFAULT_MAX_FRAME`] by default).
     pub max_frame: usize,
+    /// Reap a connection that has been idle (no frame started) this
+    /// long — dead peers stop pinning reader/demux threads and admission
+    /// bookkeeping forever.  `None` disables reaping.
+    pub idle_timeout: Option<Duration>,
 }
 
 impl NetServerConfig {
-    /// Defaults: 256 in-flight requests, 8 MiB frames.
+    /// Defaults: 256 in-flight requests, 8 MiB frames, 120 s idle reap.
     pub fn new(addr: impl Into<String>) -> Self {
-        Self { addr: addr.into(), max_inflight: 256, max_frame: conn::DEFAULT_MAX_FRAME }
+        Self {
+            addr: addr.into(),
+            max_inflight: 256,
+            max_frame: conn::DEFAULT_MAX_FRAME,
+            idle_timeout: Some(Duration::from_secs(120)),
+        }
     }
 
     /// Override the admission budget.
     pub fn with_max_inflight(mut self, max_inflight: usize) -> Self {
         self.max_inflight = max_inflight;
+        self
+    }
+
+    /// Override (or disable) the idle-connection reap deadline.
+    pub fn with_idle_timeout(mut self, idle_timeout: Option<Duration>) -> Self {
+        self.idle_timeout = idle_timeout;
         self
     }
 }
@@ -86,6 +114,9 @@ struct ConnShared {
     shutdown_tx: mpsc::Sender<()>,
     max_inflight: usize,
     max_frame: usize,
+    idle_timeout: Option<Duration>,
+    /// Chaos fault injector, inherited from the coordinator (`--fault`).
+    fault: Option<Arc<FaultInjector>>,
 }
 
 /// One live connection's join handles plus a stream clone the server
@@ -120,12 +151,14 @@ impl NetServer {
         let conns: Arc<Mutex<Vec<ConnHandle>>> = Arc::new(Mutex::new(Vec::new()));
         let (shutdown_tx, shutdown_rx) = mpsc::channel();
         let shared = ConnShared {
+            fault: coord.fault_injector().cloned(),
             coord: Arc::clone(&coord),
             inflight: Arc::clone(&inflight),
             shutdown: Arc::clone(&shutdown),
             shutdown_tx,
             max_inflight: cfg.max_inflight,
             max_frame: cfg.max_frame,
+            idle_timeout: cfg.idle_timeout,
         };
         let conns2 = Arc::clone(&conns);
         let accept = std::thread::Builder::new()
@@ -248,6 +281,10 @@ fn spawn_conn(stream: TcpStream, shared: ConnShared) -> Result<ConnHandle> {
     stream.set_nodelay(true).ok();
     // a client that stops reading must not wedge the demux thread forever
     stream.set_write_timeout(Some(Duration::from_secs(30))).ok();
+    // reads poll so the reader can enforce the idle deadline itself
+    if shared.idle_timeout.is_some() {
+        stream.set_read_timeout(Some(READ_POLL)).ok();
+    }
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
     let registry_stream = stream.try_clone().context("cloning stream for the registry")?;
     let write_half = Arc::new(Mutex::new(
@@ -288,6 +325,92 @@ fn write_reply(w: &Mutex<TcpStream>, reply: &Reply, max_frame: usize) -> std::io
     conn::write_json(&mut *g, &reply.to_json(), max_frame)
 }
 
+/// What one attempt to read a frame produced.
+enum ReadOutcome {
+    Frame(Vec<u8>),
+    /// Clean EOF at a frame boundary.
+    Eof,
+    /// No frame started within the idle deadline — reap the connection.
+    IdleExpired,
+    /// The stream is no longer trustworthy (framing error, mid-frame
+    /// stall, transport error).
+    Failed(io::Error),
+}
+
+/// Like [`conn::read_frame`], but distinguishes "idle at a frame
+/// boundary" (reap-eligible) from "stalled inside a frame" (broken).
+/// Requires the socket read timeout to be set to [`READ_POLL`].
+fn read_frame_idle(stream: &mut TcpStream, max_frame: usize, idle: Duration) -> ReadOutcome {
+    let mut header = [0u8; conn::HEADER_LEN];
+    let mut got = 0;
+    let idle_start = Instant::now();
+    // frame boundary: a read timeout here only ticks the idle clock
+    while got == 0 {
+        match stream.read(&mut header[..]) {
+            Ok(0) => return ReadOutcome::Eof,
+            Ok(n) => got = n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                if idle_start.elapsed() >= idle {
+                    return ReadOutcome::IdleExpired;
+                }
+            }
+            Err(e) => return ReadOutcome::Failed(e),
+        }
+    }
+    // mid-frame: finish under a hard completion deadline
+    let deadline = Instant::now() + MID_FRAME_TIMEOUT;
+    if let Err(e) = read_exact_deadline(stream, &mut header[got..], deadline) {
+        return ReadOutcome::Failed(e);
+    }
+    let len = u32::from_be_bytes(header) as usize;
+    if len > max_frame {
+        return ReadOutcome::Failed(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("oversized frame: peer announced {len} bytes (cap {max_frame})"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    if let Err(e) = read_exact_deadline(stream, &mut payload, deadline) {
+        return ReadOutcome::Failed(e);
+    }
+    ReadOutcome::Frame(payload)
+}
+
+/// `read_exact` over a polling socket, failing once `deadline` passes.
+fn read_exact_deadline(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    deadline: Instant,
+) -> io::Result<()> {
+    let mut got = 0;
+    while got < buf.len() {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "EOF inside a frame"))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                if Instant::now() >= deadline {
+                    return Err(io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        "connection stalled mid-frame",
+                    ));
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
 fn reader_loop(
     mut stream: TcpStream,
     shared: ConnShared,
@@ -297,12 +420,25 @@ fn reader_loop(
     peer: &str,
 ) {
     loop {
-        let frame = match conn::read_frame(&mut stream, shared.max_frame) {
+        let outcome = match shared.idle_timeout {
+            Some(idle) => read_frame_idle(&mut stream, shared.max_frame, idle),
+            None => match conn::read_frame(&mut stream, shared.max_frame) {
+                Ok(Some(f)) => ReadOutcome::Frame(f),
+                Ok(None) => ReadOutcome::Eof,
+                Err(e) => ReadOutcome::Failed(e),
+            },
+        };
+        let frame = match outcome {
             // the accept instant anchors the frame_decode span: bytes on
             // the wire → admitted request
-            Ok(Some(f)) => (Instant::now(), f),
-            Ok(None) => break, // clean EOF
-            Err(e) => {
+            ReadOutcome::Frame(f) => (Instant::now(), f),
+            ReadOutcome::Eof => break, // clean EOF
+            ReadOutcome::IdleExpired => {
+                shared.coord.metrics().record_conn_reaped();
+                crate::log_info!("net: reaping idle connection from {peer}");
+                break;
+            }
+            ReadOutcome::Failed(e) => {
                 // oversized or truncated frame: the stream position is no
                 // longer trustworthy — answer once, then drop the
                 // connection
@@ -349,19 +485,46 @@ fn reader_loop(
                 continue;
             }
         };
+        // chaos seams (`--fault` / SSA_FAULT), classify ops only so
+        // liveness probes and shutdown stay reliable under chaos runs
+        if let (Some(f), Request::Classify { .. }) = (&shared.fault, &req) {
+            if f.corrupt_frame() {
+                // a desynchronized stream cannot be recovered: emit
+                // garbage, then sever, exactly like a real corruption
+                crate::log_warn!("net: chaos: corrupting a frame for {peer} and dropping");
+                let mut g = write_half.lock().unwrap();
+                let _ = conn::write_frame(
+                    &mut *g,
+                    b"\xff\xfe chaos: corrupted frame",
+                    shared.max_frame,
+                );
+                drop(g);
+                break;
+            }
+            if f.drop_conn() {
+                crate::log_warn!("net: chaos: dropping connection from {peer}");
+                break;
+            }
+        }
         let write_ok = match req {
-            Request::Classify { id, target, seed_policy, exit, image } => handle_classify(
-                &shared,
-                &write_half,
-                &resp_tx,
-                &pending,
-                id,
-                target,
-                seed_policy,
-                exit,
-                image,
-                accepted,
-            ),
+            Request::Classify { id, target, seed_policy, exit, deadline_ms, priority, image } => {
+                handle_classify(
+                    &shared,
+                    &write_half,
+                    &resp_tx,
+                    &pending,
+                    id,
+                    target,
+                    seed_policy,
+                    SubmitOptions {
+                        exit,
+                        deadline: deadline_ms.map(Duration::from_millis),
+                        priority,
+                        accepted_at: Some(accepted),
+                    },
+                    image,
+                )
+            }
             Request::Metrics { id } => write_reply(
                 &write_half,
                 &Reply::Metrics { id, report: shared.coord.metrics_report() },
@@ -411,9 +574,8 @@ fn handle_classify(
     id: u64,
     target: Target,
     seed_policy: SeedPolicy,
-    exit: ExitPolicy,
+    opts: SubmitOptions,
     image: Vec<f32>,
-    accepted: Instant,
 ) -> std::io::Result<()> {
     if shared.shutdown.load(Ordering::Acquire) {
         return write_reply(
@@ -434,14 +596,7 @@ fn handle_classify(
     // hold the pending lock across submit so the demux cannot observe a
     // completion before its id mapping exists
     let mut p = pending.lock().unwrap();
-    match shared.coord.submit_with_reply_accepted(
-        target,
-        image,
-        seed_policy,
-        exit,
-        resp_tx.clone(),
-        Some(accepted),
-    ) {
+    match shared.coord.submit_with_opts(target, image, seed_policy, opts, resp_tx.clone()) {
         Ok(server_id) => {
             p.insert(server_id, id);
             let _span = crate::util::logging::request_span(server_id);
@@ -474,9 +629,14 @@ fn demux_loop(
         if dead {
             continue;
         }
-        let reply = Reply::Classify {
-            id: client_id,
-            response: RemoteClassify::from_response(&resp),
+        // failed requests (shed, panicked worker, open breaker) carry a
+        // typed error envelope — forward it as a wire error reply
+        let reply = match &resp.error {
+            Some(error) => Reply::Error { id: client_id, error: error.clone() },
+            None => Reply::Classify {
+                id: client_id,
+                response: RemoteClassify::from_response(&resp),
+            },
         };
         let send_start = Instant::now();
         let wrote = write_reply(&write_half, &reply, max_frame);

@@ -29,10 +29,12 @@ use std::thread::JoinHandle;
 use anyhow::{Context, Result};
 
 use crate::config::BackendKind;
+use crate::coordinator::degrade::CircuitBreaker;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
 use crate::obs::TraceSink;
 use crate::runtime::Manifest;
+use crate::util::fault::FaultInjector;
 
 /// Pool sizing + per-worker startup configuration.
 #[derive(Clone, Debug)]
@@ -73,6 +75,8 @@ impl WorkerPool {
         router: &Arc<Router>,
         metrics: &Arc<Metrics>,
         trace: &Arc<TraceSink>,
+        breaker: &Arc<CircuitBreaker>,
+        fault: Option<&Arc<FaultInjector>>,
     ) -> Result<Self> {
         let workers = effective_workers(cfg.backend, cfg.workers);
         if workers != cfg.workers {
@@ -113,6 +117,8 @@ impl WorkerPool {
                 backend: cfg.backend,
                 batch_seed: Arc::clone(&batch_seed),
                 intra_threads,
+                breaker: Arc::clone(breaker),
+                fault: fault.map(Arc::clone),
             };
             match std::thread::Builder::new()
                 .name(format!("ssa-worker-{worker_id}"))

@@ -9,6 +9,7 @@
 //! PerBatch/Ensemble seed counter (an `AtomicU32`).
 
 use std::collections::HashMap;
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
@@ -19,11 +20,13 @@ use crate::anytime::{margin_of, ExitPolicy, InferOutcome};
 use crate::attention::block::StageTimings;
 use crate::attention::model::image_seed;
 use crate::config::BackendKind;
+use crate::coordinator::degrade::CircuitBreaker;
 use crate::coordinator::metrics::{Exemplar, Metrics};
-use crate::coordinator::request::{ClassifyRequest, ClassifyResponse, SeedPolicy};
+use crate::coordinator::request::{ClassifyRequest, ClassifyResponse, SeedPolicy, ServeError};
 use crate::coordinator::router::Router;
 use crate::obs::{SpanKind, TraceSink};
-use crate::runtime::{create_backend_intra, LoadedVariant, Manifest};
+use crate::runtime::{create_backend_intra, InferenceBackend, LoadedVariant, Manifest};
+use crate::util::fault::FaultInjector;
 
 /// Everything one worker needs, moved into its thread at spawn.
 pub(crate) struct WorkerContext {
@@ -40,37 +43,75 @@ pub(crate) struct WorkerContext {
     /// Intra-request thread budget for this worker's backend (already
     /// negotiated against the core count by the pool).
     pub intra_threads: usize,
+    /// Per-target circuit breaker shared with admission: consecutive
+    /// batch failures open it, a served batch closes it.
+    pub breaker: Arc<CircuitBreaker>,
+    /// Chaos fault injector (`--fault` / `SSA_FAULT`); `None` in normal
+    /// operation.
+    pub fault: Option<Arc<FaultInjector>>,
+}
+
+/// A worker's engine state: its private backend instance plus the
+/// replica cache.  Rebuilt wholesale by the supervisor after a panic —
+/// a panicking forward pass may have left either in an undefined state.
+type Engine = (Box<dyn InferenceBackend>, HashMap<String, Box<dyn LoadedVariant>>);
+
+/// Construct the backend and preload replicas (startup and post-panic
+/// rebuild share this path).
+fn build_engine(ctx: &WorkerContext) -> Result<Engine> {
+    let backend = create_backend_intra(ctx.backend, ctx.intra_threads)?;
+    let mut replicas: HashMap<String, Box<dyn LoadedVariant>> = HashMap::new();
+    for key in &ctx.preload {
+        let m = ctx.manifest.variant(key).and_then(|v| backend.load(&ctx.manifest, v))?;
+        replicas.insert(key.clone(), m);
+    }
+    Ok((backend, replicas))
+}
+
+/// Answer every request of a failed batch with a typed error envelope.
+/// This — not a dropped sender — is how callers learn their fate, so
+/// "every submitted request gets a typed reply" holds even across
+/// panics.
+fn fail_batch(batch: &[ClassifyRequest], error: &ServeError) {
+    for r in batch {
+        let _ = r.reply.send(ClassifyResponse::failure(r.id, error.clone()));
+    }
+}
+
+/// Best-effort panic payload extraction for the error detail.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// Worker body: construct the backend *inside* the thread, preload
 /// replicas, signal readiness, then drain the router until it closes.
+/// Batches are served under `catch_unwind` supervision: a panic fails
+/// its batch with typed `Internal` replies and tears the engine down
+/// for rebuild on the next batch, instead of silently killing the
+/// replica.
 pub(crate) fn run(ctx: WorkerContext, ready: mpsc::Sender<Result<()>>) {
-    let backend = match create_backend_intra(ctx.backend, ctx.intra_threads) {
-        Ok(b) => b,
+    let mut engine: Option<Engine> = match build_engine(&ctx) {
+        Ok(e) => Some(e),
         Err(e) => {
             let _ = ready.send(Err(e));
             return;
         }
     };
-    let mut replicas: HashMap<String, Box<dyn LoadedVariant>> = HashMap::new();
-    for key in &ctx.preload {
-        match ctx.manifest.variant(key).and_then(|v| backend.load(&ctx.manifest, v)) {
-            Ok(m) => {
-                replicas.insert(key.clone(), m);
-            }
-            Err(e) => {
-                let _ = ready.send(Err(e));
-                return;
-            }
-        }
-    }
     ctx.metrics.register_worker(ctx.worker_id);
-    crate::log_info!(
-        "pool worker {}: {} backend up, {} replica(s) preloaded",
-        ctx.worker_id,
-        backend.name(),
-        replicas.len()
-    );
+    if let Some((backend, replicas)) = &engine {
+        crate::log_info!(
+            "pool worker {}: {} backend up, {} replica(s) preloaded",
+            ctx.worker_id,
+            backend.name(),
+            replicas.len()
+        );
+    }
     let _ = ready.send(Ok(()));
 
     let max_batch = ctx.router.policy().max_batch;
@@ -78,6 +119,39 @@ pub(crate) fn run(ctx: WorkerContext, ready: mpsc::Sender<Result<()>>) {
         if batch.is_empty() {
             continue; // the router never emits these; guard serve_batch anyway
         }
+        let t0 = Instant::now();
+        // supervisor: rebuild the engine a previous panic tore down.
+        // Rebuilding per batch (not once) means a persistently failing
+        // environment keeps answering typed errors instead of wedging.
+        if engine.is_none() {
+            match build_engine(&ctx) {
+                Ok(e) => {
+                    engine = Some(e);
+                    ctx.metrics.record_worker_restart();
+                    crate::log_warn!(
+                        "pool worker {}: backend rebuilt after panic",
+                        ctx.worker_id
+                    );
+                }
+                Err(e) => {
+                    crate::log_error!(
+                        "worker {}: backend rebuild failed: {e:#}",
+                        ctx.worker_id
+                    );
+                    ctx.metrics.record_error(&key);
+                    ctx.breaker.record_failure(&key);
+                    fail_batch(
+                        &batch,
+                        &ServeError::Internal("worker backend rebuild failed".into()),
+                    );
+                    ctx.metrics
+                        .record_worker(ctx.worker_id, 0, t0.elapsed().as_secs_f64() * 1e6);
+                    continue;
+                }
+            }
+        }
+        let (backend, replicas) =
+            engine.as_mut().expect("engine rebuilt or present above");
         // lazy-load this worker's replica on first use
         if !replicas.contains_key(&key) {
             match ctx.manifest.variant(&key).and_then(|v| backend.load(&ctx.manifest, v)) {
@@ -87,20 +161,59 @@ pub(crate) fn run(ctx: WorkerContext, ready: mpsc::Sender<Result<()>>) {
                 Err(e) => {
                     crate::log_error!("worker {}: loading variant {key}: {e:#}", ctx.worker_id);
                     ctx.metrics.record_error(&key);
-                    continue; // reply senders drop -> callers see RecvError
+                    ctx.breaker.record_failure(&key);
+                    fail_batch(
+                        &batch,
+                        &ServeError::Internal(format!("loading variant {key} failed")),
+                    );
+                    ctx.metrics
+                        .record_worker(ctx.worker_id, 0, t0.elapsed().as_secs_f64() * 1e6);
+                    continue;
                 }
             }
         }
-        let model = replicas[&key].as_ref();
-        let t0 = Instant::now();
         // a failed batch still charges busy time, but its requests were
-        // never answered — count 0 served so per-worker request totals
-        // always agree with the per-target totals
-        let served = match serve_batch(model, &batch, &key, max_batch, &ctx) {
-            Ok(()) => batch.len(),
-            Err(e) => {
+        // answered with error envelopes — count 0 served so per-worker
+        // request totals always agree with the per-target totals
+        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            if let Some(f) = &ctx.fault {
+                f.before_batch();
+            }
+            let model = replicas
+                .get(&key)
+                .ok_or_else(|| anyhow::anyhow!("replica {key} vanished after load"))?;
+            serve_batch(model.as_ref(), &batch, &key, max_batch, &ctx)
+        }));
+        let served = match outcome {
+            Ok(Ok(())) => {
+                ctx.breaker.record_success(&key);
+                batch.len()
+            }
+            Ok(Err(e)) => {
                 crate::log_error!("worker {}: serving batch on {key}: {e:#}", ctx.worker_id);
                 ctx.metrics.record_error(&key);
+                ctx.breaker.record_failure(&key);
+                fail_batch(
+                    &batch,
+                    &ServeError::Internal(format!("worker failed the batch: {e:#}")),
+                );
+                0
+            }
+            Err(panic) => {
+                let msg = panic_message(panic.as_ref());
+                crate::log_error!(
+                    "worker {}: PANIC serving batch on {key}: {msg}",
+                    ctx.worker_id
+                );
+                ctx.metrics.record_error(&key);
+                ctx.breaker.record_failure(&key);
+                fail_batch(
+                    &batch,
+                    &ServeError::Internal(format!("worker panicked serving the batch: {msg}")),
+                );
+                // the panic may have corrupted backend or replica state:
+                // drop everything, rebuild before the next batch
+                engine = None;
                 0
             }
         };
@@ -122,6 +235,7 @@ fn serve_batch(
     let trace: &TraceSink = &ctx.trace;
     let lane = ctx.worker_id as u32;
     let model_batch = model.batch();
+    anyhow::ensure!(!batch.is_empty(), "empty batch reached serve_batch");
     anyhow::ensure!(
         batch.len() <= model_batch,
         "batch {} exceeds model batch {model_batch}",
@@ -151,8 +265,16 @@ fn serve_batch(
         anyhow::ensure!(r.image.len() == px, "ragged image sizes in batch");
         images.extend_from_slice(&r.image);
     }
-    for _ in batch.len()..rows {
-        images.extend_from_slice(&batch.last().unwrap().image);
+    if rows > batch.len() {
+        // `batch[0]` accesses above already require a non-empty batch;
+        // state it once so padding never reaches for a missing last row
+        let pad = &batch
+            .last()
+            .ok_or_else(|| anyhow::anyhow!("empty batch reached padding"))?
+            .image;
+        for _ in batch.len()..rows {
+            images.extend_from_slice(pad);
+        }
     }
 
     // allocate seeds from the pool-shared counter
@@ -338,6 +460,8 @@ fn serve_batch(
             seed: seed_reported,
             steps_used: out.steps_used,
             confidence: out.margin,
+            degraded: req.degraded,
+            error: None,
         });
     }
     if tracing {

@@ -1,0 +1,229 @@
+//! Fault injection for the chaos harness.
+//!
+//! A [`FaultPlan`] names the failure modes to inject and their
+//! probabilities; a [`FaultInjector`] wraps a plan with a deterministic
+//! PRNG and is consulted at the two seams where real production faults
+//! enter the stack:
+//!
+//! * **worker seam** (`pool::worker`): `panic` kills the serving closure
+//!   mid-batch (exercising `catch_unwind` supervision and the circuit
+//!   breaker), `delay` stalls a batch (exercising deadline shedding and
+//!   client timeouts);
+//! * **net-server seam** (`net::server`): `drop_conn` severs the client
+//!   connection instead of writing a reply (exercising orphan fail-over
+//!   and client reconnect), `corrupt_frame` writes an undecodable frame
+//!   then severs (a torn write — exercising the client's framing-error
+//!   path).
+//!
+//! Injection is **off unless configured** — via `serve --fault SPEC` or
+//! the `SSA_FAULT` environment variable — and the production request
+//! path never consults an injector when no plan is active, so the
+//! chaos machinery costs nothing in normal operation.  Draws are
+//! deterministic given the injector seed, keeping chaos tests
+//! reproducible.
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::rng::Xoshiro256;
+
+/// Environment variable consulted when `--fault` is not given.
+pub const FAULT_ENV: &str = "SSA_FAULT";
+
+/// Which faults to inject, and how often.  Parsed from the spec grammar
+/// `panic:P,delay:MS:P,drop_conn:P,corrupt_frame:P` — any subset of
+/// clauses, comma-separated, probabilities in `[0, 1]`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Probability a worker panics instead of serving a batch.
+    pub panic_p: f64,
+    /// Probability a worker stalls `delay_ms` before serving a batch.
+    pub delay_p: f64,
+    /// Stall length for `delay` faults, milliseconds.
+    pub delay_ms: u64,
+    /// Probability the server severs a connection instead of replying.
+    pub drop_conn_p: f64,
+    /// Probability the server corrupts a reply frame (then severs — a
+    /// desynced stream is unrecoverable by design).
+    pub corrupt_frame_p: f64,
+}
+
+impl FaultPlan {
+    /// Parse the spec grammar, e.g. `panic:0.05,drop_conn:0.02` or
+    /// `delay:20:0.1,corrupt_frame:0.01`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(',').filter(|c| !c.trim().is_empty()) {
+            let clause = clause.trim();
+            let mut parts = clause.split(':');
+            let kind = parts.next().unwrap_or("");
+            match kind {
+                "panic" | "drop_conn" | "corrupt_frame" => {
+                    let p = parse_prob(parts.next(), clause)?;
+                    if parts.next().is_some() {
+                        bail!("fault clause {clause:?}: expected `{kind}:P`");
+                    }
+                    match kind {
+                        "panic" => plan.panic_p = p,
+                        "drop_conn" => plan.drop_conn_p = p,
+                        _ => plan.corrupt_frame_p = p,
+                    }
+                }
+                "delay" => {
+                    let ms: u64 = parts
+                        .next()
+                        .with_context(|| format!("fault clause {clause:?}: missing MS"))?
+                        .parse()
+                        .with_context(|| format!("fault clause {clause:?}: bad MS"))?;
+                    let p = parse_prob(parts.next(), clause)?;
+                    if parts.next().is_some() {
+                        bail!("fault clause {clause:?}: expected `delay:MS:P`");
+                    }
+                    plan.delay_ms = ms;
+                    plan.delay_p = p;
+                }
+                _ => bail!(
+                    "unknown fault kind {kind:?} in {clause:?} \
+                     (expected panic, delay, drop_conn, or corrupt_frame)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Read the plan from the `SSA_FAULT` environment variable; `None`
+    /// when unset or empty, `Err` when set but unparseable.
+    pub fn from_env() -> Result<Option<Self>> {
+        match std::env::var(FAULT_ENV) {
+            Ok(v) if !v.trim().is_empty() => {
+                let plan = Self::parse(&v)
+                    .with_context(|| format!("parsing {FAULT_ENV}={v:?}"))?;
+                Ok(plan.is_active().then_some(plan))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// True when any fault has a nonzero probability.
+    pub fn is_active(&self) -> bool {
+        self.panic_p > 0.0
+            || self.delay_p > 0.0
+            || self.drop_conn_p > 0.0
+            || self.corrupt_frame_p > 0.0
+    }
+}
+
+fn parse_prob(field: Option<&str>, clause: &str) -> Result<f64> {
+    let p: f64 = field
+        .with_context(|| format!("fault clause {clause:?}: missing probability"))?
+        .parse()
+        .with_context(|| format!("fault clause {clause:?}: bad probability"))?;
+    if !(0.0..=1.0).contains(&p) {
+        bail!("fault clause {clause:?}: probability {p} outside [0, 1]");
+    }
+    Ok(p)
+}
+
+/// A [`FaultPlan`] plus a deterministic PRNG for the Bernoulli draws.
+/// Shared (`Arc`) across workers and connections; the mutex guards a
+/// single generator so the fault sequence is a function of the seed
+/// alone, which keeps chaos tests replayable.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    rng: Mutex<Xoshiro256>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan, seed: u64) -> Self {
+        Self { plan, rng: Mutex::new(Xoshiro256::new(seed)) }
+    }
+
+    pub fn plan(&self) -> FaultPlan {
+        self.plan
+    }
+
+    fn roll(&self, p: f64) -> bool {
+        p > 0.0 && self.rng.lock().unwrap().bernoulli(p)
+    }
+
+    /// Worker seam: maybe stall, then maybe panic.  Called once per
+    /// batch, *inside* the `catch_unwind` supervision scope.
+    pub fn before_batch(&self) {
+        if self.roll(self.plan.delay_p) {
+            std::thread::sleep(std::time::Duration::from_millis(self.plan.delay_ms));
+        }
+        if self.roll(self.plan.panic_p) {
+            panic!("injected fault: worker panic (chaos harness)");
+        }
+    }
+
+    /// Net seam: sever this connection instead of writing the reply?
+    pub fn drop_conn(&self) -> bool {
+        self.roll(self.plan.drop_conn_p)
+    }
+
+    /// Net seam: corrupt the next reply frame (and then sever)?
+    pub fn corrupt_frame(&self) -> bool {
+        self.roll(self.plan.corrupt_frame_p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let p = FaultPlan::parse("panic:0.05,delay:20:0.1,drop_conn:0.02,corrupt_frame:0.01")
+            .unwrap();
+        assert_eq!(
+            p,
+            FaultPlan {
+                panic_p: 0.05,
+                delay_p: 0.1,
+                delay_ms: 20,
+                drop_conn_p: 0.02,
+                corrupt_frame_p: 0.01,
+            }
+        );
+        assert!(p.is_active());
+    }
+
+    #[test]
+    fn empty_and_partial_specs() {
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+        assert!(!FaultPlan::parse("").unwrap().is_active());
+        let p = FaultPlan::parse("panic:1").unwrap();
+        assert_eq!(p.panic_p, 1.0);
+        assert_eq!(p.drop_conn_p, 0.0);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(FaultPlan::parse("panic").is_err());
+        assert!(FaultPlan::parse("panic:2.0").is_err());
+        assert!(FaultPlan::parse("panic:-0.1").is_err());
+        assert!(FaultPlan::parse("delay:0.5").is_err());
+        assert!(FaultPlan::parse("delay:10:0.5:9").is_err());
+        assert!(FaultPlan::parse("explode:0.5").is_err());
+    }
+
+    #[test]
+    fn injector_draws_are_deterministic_for_a_seed() {
+        let plan = FaultPlan::parse("drop_conn:0.5").unwrap();
+        let a = FaultInjector::new(plan, 7);
+        let b = FaultInjector::new(plan, 7);
+        let seq_a: Vec<bool> = (0..64).map(|_| a.drop_conn()).collect();
+        let seq_b: Vec<bool> = (0..64).map(|_| b.drop_conn()).collect();
+        assert_eq!(seq_a, seq_b);
+        assert!(seq_a.iter().any(|&x| x) && seq_a.iter().any(|&x| !x));
+    }
+
+    #[test]
+    fn inactive_plan_never_fires() {
+        let inj = FaultInjector::new(FaultPlan::default(), 1);
+        assert!((0..100).all(|_| !inj.drop_conn() && !inj.corrupt_frame()));
+    }
+}

@@ -4,6 +4,7 @@
 //! parallel-for, and a tiny logger.
 
 pub mod bitpack;
+pub mod fault;
 pub mod json;
 pub mod logging;
 pub mod par;

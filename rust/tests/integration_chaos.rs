@@ -1,0 +1,290 @@
+//! Chaos-harness integration: fault injection at the worker and network
+//! seams, driven end to end through the public serving APIs.
+//!
+//! Pins the PR-9 resilience contracts:
+//!
+//! * worker panics are supervised — every submitted request still gets
+//!   exactly one typed reply, the backend rebuilds, and post-restart
+//!   fixed-seed results are bit-identical to a fault-free run;
+//! * expired deadlines shed with a typed `deadline_exceeded` envelope
+//!   before any worker spends time on them;
+//! * brownout clamps exit policies under real queue pressure and marks
+//!   the affected replies `degraded`;
+//! * a `ReconnectingClient` rides out chaos-severed connections and
+//!   retries idempotent (fixed-seed) requests to the bit-identical
+//!   answer.
+//!
+//! Artifacts are synthesized by `loadgen::synthetic` — no Python, no
+//! XLA.  Fault draws are deterministic (seeded PRNG), so these tests
+//! replay the same fault sequence every run.
+
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use ssa_repro::anytime::ExitPolicy;
+use ssa_repro::config::BackendKind;
+use ssa_repro::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, DegradeConfig, SeedPolicy, ServeError,
+    SubmitOptions, Target,
+};
+use ssa_repro::loadgen::{self, SyntheticSpec};
+use ssa_repro::net::{NetServer, NetServerConfig, ReconnectingClient, RetryPolicy};
+use ssa_repro::util::fault::FaultPlan;
+
+const IMAGE: usize = 16;
+const PX: usize = IMAGE * IMAGE;
+
+/// Small-but-real geometry: 16x16 images, 1 encoder layer, T=4.
+fn artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ssa-chaos-it-{}-{tag}", std::process::id()));
+    let spec = SyntheticSpec {
+        d_model: 16,
+        n_heads: 2,
+        d_mlp: 32,
+        n_layers: 1,
+        dataset_n: 16,
+        ..SyntheticSpec::default()
+    };
+    loadgen::write_artifacts(&dir, &spec).expect("synthesize artifacts");
+    dir
+}
+
+fn config(dir: PathBuf, max_batch: usize, delay_ms: u64) -> CoordinatorConfig {
+    let mut cfg = CoordinatorConfig::new(dir)
+        .with_backend(BackendKind::Native)
+        .with_workers(1);
+    cfg.policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(delay_ms) };
+    cfg.preload = vec!["ssa_t4".into()];
+    cfg
+}
+
+fn image(i: usize) -> Vec<f32> {
+    (0..PX).map(|p| ((i * 31 + p * 7) % 97) as f32 / 96.0).collect()
+}
+
+fn bits(logits: &[f32]) -> Vec<u32> {
+    logits.iter().map(|l| l.to_bits()).collect()
+}
+
+/// Fault-free fixed-seed logits for images `0..n` — the determinism
+/// baseline the chaos runs are compared against.
+fn baseline_logits(dir: PathBuf, n: usize) -> Vec<Vec<u32>> {
+    let coord = Coordinator::start(config(dir, 4, 2)).expect("baseline coordinator");
+    let out = (0..n)
+        .map(|i| {
+            let resp = coord
+                .classify(Target::ssa(4), image(i), SeedPolicy::Fixed(77))
+                .expect("baseline classify");
+            bits(&resp.logits)
+        })
+        .collect();
+    coord.shutdown();
+    out
+}
+
+/// Worker seam: with `panic` faults armed, every submitted request still
+/// resolves to exactly one typed reply (success or `internal`), the
+/// supervisor rebuilds the backend (counted in `worker_restarts`), and
+/// every successful reply is bit-identical to the fault-free baseline —
+/// a restarted engine is indistinguishable from a fresh one.
+#[test]
+fn worker_panics_are_supervised_with_zero_lost_replies() {
+    const N: usize = 32;
+    let dir = artifacts("panic");
+    let baseline = baseline_logits(dir.clone(), N);
+
+    let cfg = config(dir, 4, 2)
+        .with_fault(Some(FaultPlan::parse("panic:0.5").expect("plan")));
+    let coord = Coordinator::start(cfg).expect("chaos coordinator");
+
+    // submit everything up front so panics hit multi-request batches
+    let rxs: Vec<_> = (0..N)
+        .map(|i| {
+            (i, coord.submit(Target::ssa(4), image(i), SeedPolicy::Fixed(77)).expect("submit"))
+        })
+        .collect();
+    let mut ok = 0usize;
+    let mut internal = 0usize;
+    for (i, rx) in rxs {
+        // the zero-lost contract: a reply always arrives, even when the
+        // serving closure panicked mid-batch
+        let resp = rx.recv().unwrap_or_else(|_| panic!("request {i} lost its reply"));
+        match &resp.error {
+            None => {
+                assert_eq!(
+                    bits(&resp.logits),
+                    baseline[i],
+                    "post-restart Fixed(77) logits for image {i} must be bit-identical \
+                     to the fault-free baseline"
+                );
+                ok += 1;
+            }
+            Some(ServeError::Internal(msg)) => {
+                assert!(
+                    msg.contains("panic"),
+                    "injected panics must surface as typed panic internals, got {msg:?}"
+                );
+                internal += 1;
+            }
+            Some(other) => panic!("request {i}: unexpected error class {other:?}"),
+        }
+    }
+    assert!(internal > 0, "panic:0.5 over {N} requests must fail at least one batch");
+    assert!(ok > 0, "panic:0.5 over {N} requests must still serve at least one batch");
+
+    // recovery: keep poking until a batch survives the coin flips — the
+    // rebuilt engine must actually serve again.  The spacing rides out a
+    // circuit breaker that an unlucky panic streak may have opened (its
+    // half-open probe needs the cooldown to elapse).
+    let recovered = (0..100).any(|_| {
+        let ok = coord.classify(Target::ssa(4), image(0), SeedPolicy::Fixed(77)).is_ok();
+        if !ok {
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        ok
+    });
+    assert!(recovered, "the pool must keep serving after injected panics");
+
+    let snap = coord.resilience_snapshot();
+    assert!(
+        snap.worker_restarts > 0,
+        "panics must be followed by supervised backend rebuilds, snapshot: {snap:?}"
+    );
+    let prom = coord.metrics_prometheus();
+    assert!(
+        prom.contains("ssa_worker_restarts_total"),
+        "restart counter missing from the Prometheus exposition"
+    );
+    coord.shutdown();
+}
+
+/// Deadline seam: a request whose deadline has already passed is shed by
+/// the router with a typed `deadline_exceeded` envelope before any
+/// worker touches it, and the shed counter advances.
+#[test]
+fn expired_deadlines_shed_with_typed_envelopes() {
+    let dir = artifacts("deadline");
+    let coord = Coordinator::start(config(dir, 4, 2)).expect("coordinator");
+
+    let (tx, rx) = mpsc::channel();
+    let opts = SubmitOptions { deadline: Some(Duration::ZERO), ..SubmitOptions::default() };
+    coord
+        .submit_with_opts(Target::ssa(4), image(0), SeedPolicy::Fixed(77), opts, tx)
+        .expect("admission accepts; the router sheds");
+    let resp = rx.recv().expect("shed request still gets a reply");
+    assert_eq!(resp.error, Some(ServeError::DeadlineExceeded));
+
+    // the pool is undamaged: normal traffic keeps flowing afterwards
+    let resp = coord
+        .classify(Target::ssa(4), image(1), SeedPolicy::Fixed(77))
+        .expect("deadline-free requests still serve");
+    assert!(resp.error.is_none());
+
+    let snap = coord.resilience_snapshot();
+    assert!(snap.shed_total >= 1, "shed counter must advance, snapshot: {snap:?}");
+    assert!(coord.metrics_prometheus().contains("ssa_requests_shed_total"));
+    coord.shutdown();
+}
+
+/// Brownout seam: with every batch stalled by an injected delay and a
+/// depth-1 brownout armed, sustained submissions must trip the
+/// controller — later replies come back `degraded` with their exit
+/// clamped (steps_used below the full T=4) while the earliest,
+/// pre-pressure replies stay exact.
+#[test]
+fn brownout_clamps_exits_under_queue_pressure() {
+    const N: usize = 24;
+    let dir = artifacts("brownout");
+    let cfg = config(dir, 1, 1)
+        .with_brownout(Some(DegradeConfig::parse("depth=1").expect("brownout spec")))
+        .with_fault(Some(FaultPlan::parse("delay:20:1").expect("plan")));
+    let coord = Coordinator::start(cfg).expect("coordinator");
+
+    let mut rxs = Vec::new();
+    for i in 0..N {
+        rxs.push(coord.submit(Target::ssa(4), image(i), SeedPolicy::PerBatch).expect("submit"));
+        // space the submissions past the controller's sample interval so
+        // the queue the stalled worker leaves behind is actually observed
+        std::thread::sleep(Duration::from_millis(6));
+    }
+    let responses: Vec<_> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().expect("reply"))
+        .collect();
+    let degraded: Vec<_> = responses.iter().filter(|r| r.degraded).collect();
+    assert!(
+        !degraded.is_empty(),
+        "a depth-1 brownout behind a 20ms-per-batch stall must clamp some of {N} requests"
+    );
+    for r in &degraded {
+        assert!(r.error.is_none(), "degraded replies are successes, not errors");
+        assert!(
+            r.steps_used < 4,
+            "clamped requests must exit early (steps_used {} of T=4)",
+            r.steps_used
+        );
+    }
+
+    let snap = coord.resilience_snapshot();
+    assert!(snap.brownout_transitions >= 1, "brownout never engaged, snapshot: {snap:?}");
+    assert_eq!(snap.degraded_total, degraded.len() as u64);
+    coord.shutdown();
+}
+
+/// Network seam: with connection-severing faults armed server-side, a
+/// `ReconnectingClient` re-dials and replays fixed-seed requests until
+/// every classify succeeds — bit-identical to the fault-free baseline —
+/// while a plain request stream would have died with the first drop.
+#[test]
+fn reconnecting_client_rides_out_severed_connections() {
+    const N: usize = 12;
+    let dir = artifacts("netchaos");
+    let baseline = baseline_logits(dir.clone(), N);
+
+    let cfg = config(dir, 4, 2)
+        .with_fault(Some(FaultPlan::parse("drop_conn:0.4,corrupt_frame:0.1").expect("plan")));
+    let coord = Arc::new(Coordinator::start(cfg).expect("coordinator"));
+    let server = NetServer::start(
+        Arc::clone(&coord),
+        NetServerConfig::new("127.0.0.1:0").with_max_inflight(64),
+    )
+    .expect("server");
+    let addr = server.local_addr().to_string();
+
+    // tight backoff + generous attempt budget keeps the test fast while
+    // pushing the odds of exhausting retries to effectively zero
+    let rc = ReconnectingClient::with_policy(
+        &addr,
+        ssa_repro::net::conn::DEFAULT_MAX_FRAME,
+        RetryPolicy {
+            max_retries: 10,
+            backoff_base: Duration::from_millis(1),
+            backoff_max: Duration::from_millis(8),
+        },
+    );
+    for i in 0..N {
+        let resp = rc
+            .classify_opts(Target::ssa(4), &image(i), SeedPolicy::Fixed(77), ExitPolicy::Full, None, 0)
+            .unwrap_or_else(|e| panic!("image {i} failed through the retrying client: {e:#}"));
+        assert_eq!(
+            bits(&resp.logits),
+            baseline[i],
+            "retried Fixed(77) logits for image {i} must be bit-identical to the baseline"
+        );
+    }
+    assert!(
+        rc.reconnects_total() > 0,
+        "drop_conn:0.4 over {N} requests must sever at least one connection \
+         (reconnects {}, retries {})",
+        rc.reconnects_total(),
+        rc.retries_total()
+    );
+    assert!(rc.retries_total() > 0, "severed in-flight requests must be replayed");
+
+    drop(rc);
+    server.shutdown();
+    if let Ok(c) = Arc::try_unwrap(coord) {
+        c.shutdown();
+    }
+}

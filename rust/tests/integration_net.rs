@@ -19,7 +19,9 @@ use ssa_repro::config::BackendKind;
 use ssa_repro::coordinator::{
     BatchPolicy, Coordinator, CoordinatorConfig, SeedPolicy, ServeError, Target,
 };
-use ssa_repro::loadgen::{self, ArrivalMode, ImageSource, LoadSpec, Scenario, SyntheticSpec};
+use ssa_repro::loadgen::{
+    self, ArrivalMode, ImageSource, LoadOpts, LoadSpec, Scenario, SyntheticSpec,
+};
 use ssa_repro::net::{conn, NetClient, NetServer, NetServerConfig};
 use ssa_repro::util::json::Json;
 
@@ -385,6 +387,7 @@ fn loadgen_remote_and_metrics_over_the_wire() {
         duration: Duration::from_millis(300),
         scenario: Scenario::uniform(Target::ssa(4), SeedPolicy::PerBatch),
         seed: 42,
+        opts: LoadOpts::default(),
     };
     let images = ImageSource::synthetic(IMAGE, 16, 7);
     let stats = loadgen::run(&client, &spec, &images).expect("remote loadgen run");

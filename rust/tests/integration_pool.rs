@@ -17,7 +17,8 @@ use ssa_repro::coordinator::{
     BatchPolicy, Coordinator, CoordinatorConfig, SeedPolicy, Target,
 };
 use ssa_repro::loadgen::{
-    self, ArrivalMode, BenchReport, BenchRun, ImageSource, LoadSpec, Scenario, SyntheticSpec,
+    self, ArrivalMode, BenchReport, BenchRun, ImageSource, LoadOpts, LoadSpec, Scenario,
+    SyntheticSpec,
 };
 use ssa_repro::util::json::Json;
 
@@ -197,6 +198,7 @@ fn closed_loop_loadgen_drives_live_pool() {
         duration: Duration::from_millis(300),
         scenario,
         seed: 42,
+        opts: LoadOpts::default(),
     };
     let images = ImageSource::synthetic(IMAGE, 16, 7);
     let stats = loadgen::run(&coord, &spec, &images).expect("loadgen run");
@@ -238,6 +240,7 @@ fn open_loop_loadgen_sustains_poisson_arrivals() {
         duration: Duration::from_millis(300),
         scenario: Scenario::uniform(Target::ssa(4), SeedPolicy::PerBatch),
         seed: 9,
+        opts: LoadOpts::default(),
     };
     let images = ImageSource::synthetic(IMAGE, 16, 8);
     let stats = loadgen::run(&coord, &spec, &images).expect("loadgen run");

@@ -196,6 +196,18 @@ impl NativeModel {
         self.intra_threads
     }
 
+    /// Heap bytes of the bound weight tensors — what one resident copy of
+    /// this model costs the shared weight store (scratch and per-request
+    /// state are excluded; they live with the worker, not the store).
+    pub fn weight_bytes(&self) -> usize {
+        let t = |t: &Tensor| t.data().len() * std::mem::size_of::<f32>();
+        let mut n = t(&self.embed_w) + t(&self.embed_pos) + t(&self.head_w);
+        for l in &self.layers {
+            n += t(&l.wq) + t(&l.wk) + t(&l.wv) + t(&l.wo) + t(&l.w1) + t(&l.w2);
+        }
+        n
+    }
+
     /// Split the intra-request thread budget between batch rows and
     /// attention heads: rows first (the coarser, better-scaling axis),
     /// remaining capacity to the per-head fan-out.  The product

@@ -126,6 +126,7 @@ USAGE:
                         [--ensemble K] [--max-batch B] [--max-delay-ms D]
                         [--listen HOST:PORT] [--max-inflight N]
                         [--brownout SPEC] [--fault SPEC]
+                        [--weight-budget-mb MB]
                         [--trace on|off]
   ssa-repro classify-remote --addr HOST:PORT
                         [--target ssa_t4] [--n N] [--seed S]
@@ -133,7 +134,7 @@ USAGE:
                         [--exit full|margin:TH[:MIN]|deadline:B]
                         [--deadline-ms D] [--priority P] [--retry]
                         [--metrics] [--prometheus] [--trace-dump FILE]
-                        [--shutdown]
+                        [--reload DIR] [--logits] [--shutdown]
   ssa-repro serve-bench [--artifacts DIR | --synthetic]
                         [--backend native|xla] [--workers N[,M,...]]
                         [--intra-threads N]
@@ -160,10 +161,20 @@ USAGE:
                         [--backend native|xla]
 
 Serving (see rust/DESIGN.md):
-  --workers N      replica-pool size: N threads, each owning a private
-                   replica of every served variant (native backend; the
-                   xla backend is pinned to 1 worker).  Fixed-seed
-                   results are bit-identical for any worker count.
+  --workers N      replica-pool size: N threads pulling batches from the
+                   shared queue (native backend; the xla backend is
+                   pinned to 1 worker).  Workers share one immutable
+                   copy of each variant's weights through the
+                   coordinator's weight store, so resident weight memory
+                   does not grow with N.  Fixed-seed results are
+                   bit-identical for any worker count.
+  --weight-budget-mb MB
+                   byte budget for resident shared weights: once the
+                   store holds more than MB MiB it evicts the least
+                   recently used idle variant (variants serving
+                   in-flight batches are pinned and never evicted;
+                   evicted variants reload from disk on next use,
+                   bit-identically).  Unset = never evict.
   --intra-threads N
                    per-worker intra-request parallelism (native backend):
                    each request is split across its batch rows and then
@@ -197,6 +208,16 @@ Network serving (DESIGN.md section 3 specifies the wire protocol):
                    (default target: the server's first), print round-trip
                    latencies; --metrics fetches the server's plaintext
                    metrics report, --shutdown requests a graceful drain
+  --logits         (classify-remote) print each reply's full logit
+                   vector (shortest-round-trip decimals, so two prints
+                   are textually equal iff the logits are bit-identical
+                   — the hook CI's reload smoke diffs across a swap)
+  --reload DIR     (classify-remote) ask the server to atomically swap
+                   its served weights to the artifacts directory DIR
+                   (a path on the *server's* filesystem) and print the
+                   new weight-store generation; in-flight batches drain
+                   on the old weights, every later request serves from
+                   the new ones
 
 Observability (DESIGN.md \"Observability\" section):
   --trace on|off   request-lifecycle tracing (serve / serve-bench;
@@ -345,6 +366,7 @@ pub const KNOWN_FLAGS: &[(&str, &[&str])] = &[
             "max-inflight",
             "brownout",
             "fault",
+            "weight-budget-mb",
             "synthetic",
             "trace",
         ],
@@ -364,6 +386,8 @@ pub const KNOWN_FLAGS: &[(&str, &[&str])] = &[
             "metrics",
             "prometheus",
             "trace-dump",
+            "reload",
+            "logits",
             "shutdown",
         ],
     ),
@@ -407,7 +431,7 @@ pub const KNOWN_FLAGS: &[(&str, &[&str])] = &[
 /// Every other name in [`KNOWN_FLAGS`] takes a value, and
 /// [`check_known_flags`] rejects it when the value is missing.
 pub const BOOLEAN_FLAGS: &[&str] =
-    &["synthetic", "trace", "metrics", "prometheus", "shutdown", "retry"];
+    &["synthetic", "trace", "metrics", "prometheus", "shutdown", "retry", "logits"];
 
 /// Reject options no subcommand documents — a typo like `--worker 4`
 /// must fail loudly instead of silently falling back to a default — and
@@ -525,11 +549,13 @@ mod tests {
              --workers 2 --intra-threads 2 --simd auto --ensemble 2 --max-batch 4 \
              --max-delay-ms 2",
             "serve --listen 127.0.0.1:0 --synthetic --max-inflight 64 --trace off \
-             --brownout depth=32,low=8 --fault panic:0.05,drop_conn:0.02",
+             --brownout depth=32,low=8 --fault panic:0.05,drop_conn:0.02 \
+             --weight-budget-mb 64",
             "classify-remote --addr 127.0.0.1:7878 --target ssa_t4 \
              --seed-policy fixed:7 --exit margin:0.5:2 --n 2 --seed 9 \
              --deadline-ms 50 --priority 3 --retry \
-             --metrics --prometheus --trace-dump t.json --shutdown",
+             --metrics --prometheus --trace-dump t.json --reload /tmp/v2 --logits \
+             --shutdown",
             "serve-bench --synthetic --workers 1,4 --intra-threads 2 --concurrency 16 \
              --duration 1 --mix ssa_t4 --seed-policy perbatch --max-batch 2 \
              --max-delay-ms 5 --seed 7 --trace both --out b.json",
@@ -563,6 +589,8 @@ mod tests {
     #[test]
     fn value_options_missing_their_value_are_rejected() {
         assert!(check_known_flags(&parse("serve-bench --remote")).is_err());
+        assert!(check_known_flags(&parse("classify-remote --addr h:1 --reload")).is_err());
+        assert!(check_known_flags(&parse("serve --synthetic --weight-budget-mb")).is_err());
         assert!(check_known_flags(&parse("serve --synthetic --listen")).is_err());
         assert!(check_known_flags(&parse("serve-bench --duration --synthetic")).is_err());
         // genuine booleans keep working bare

@@ -14,6 +14,7 @@ use std::time::Instant;
 
 use crate::attention::block::StageTimings;
 use crate::obs::prom::PromWriter;
+use crate::runtime::WeightStoreSnapshot;
 use crate::util::stats::{LatencySummary, LogHistogram, StepsSummary};
 
 use super::router::QueueSnapshot;
@@ -388,18 +389,21 @@ impl Metrics {
             spans_written,
             spans_lost,
             &ResilienceSnapshot::default(),
+            &WeightStoreSnapshot::default(),
         )
     }
 
-    /// [`Self::render_prometheus`] plus the resilience counters.  The
-    /// resilience families are always declared *with* a sample (zero
-    /// when nothing has happened), preserving the exposition invariant.
+    /// [`Self::render_prometheus`] plus the resilience counters and the
+    /// weight-store gauges.  These families are always declared *with*
+    /// a sample (zero when nothing has happened), preserving the
+    /// exposition invariant.
     pub fn render_prometheus_with(
         &self,
         queue: Option<QueueSnapshot>,
         spans_written: u64,
         spans_lost: u64,
         res: &ResilienceSnapshot,
+        store: &WeightStoreSnapshot,
     ) -> String {
         let elapsed = self.started.lock().unwrap().elapsed().as_secs_f64();
         let mut w = PromWriter::new();
@@ -613,6 +617,36 @@ impl Metrics {
             "Dead client connections reaped by the server's read deadline.",
         );
         w.sample("ssa_connections_reaped_total", &[], res.conns_reaped as f64);
+        w.family(
+            "ssa_weight_generation",
+            "gauge",
+            "Weight-store generation currently served (bumped by every reload).",
+        );
+        w.sample("ssa_weight_generation", &[], store.generation as f64);
+        w.family(
+            "ssa_weight_bytes_resident",
+            "gauge",
+            "Bytes of shared model weights resident in the store (one copy per variant, independent of worker count).",
+        );
+        w.sample("ssa_weight_bytes_resident", &[], store.resident_bytes as f64);
+        w.family(
+            "ssa_weight_variants_resident",
+            "gauge",
+            "Model variants currently resident in the shared weight store.",
+        );
+        w.sample("ssa_weight_variants_resident", &[], store.resident_variants as f64);
+        w.family(
+            "ssa_variant_evictions_total",
+            "counter",
+            "Variants evicted from the weight store under the byte budget.",
+        );
+        w.sample("ssa_variant_evictions_total", &[], store.evictions_total as f64);
+        w.family(
+            "ssa_weight_swaps_total",
+            "counter",
+            "Artifact-directory reload swaps applied since startup.",
+        );
+        w.sample("ssa_weight_swaps_total", &[], store.swaps_total as f64);
         w.finish()
     }
 }
@@ -761,7 +795,14 @@ mod tests {
             worker_restarts: 4,
             conns_reaped: 6,
         };
-        let text = m.render_prometheus_with(Some(q), 42, 1, &res);
+        let store = WeightStoreSnapshot {
+            generation: 2,
+            resident_bytes: 4096,
+            resident_variants: 3,
+            evictions_total: 7,
+            swaps_total: 1,
+        };
+        let text = m.render_prometheus_with(Some(q), 42, 1, &res, &store);
 
         // every # TYPE family has at least one sample and appears once
         let mut families = std::collections::HashSet::new();
@@ -798,6 +839,11 @@ mod tests {
         assert!(text.contains("ssa_breaker_transitions_total 3"));
         assert!(text.contains("ssa_worker_restarts_total 4"));
         assert!(text.contains("ssa_connections_reaped_total 6"));
+        assert!(text.contains("ssa_weight_generation 2"));
+        assert!(text.contains("ssa_weight_bytes_resident 4096"));
+        assert!(text.contains("ssa_weight_variants_resident 3"));
+        assert!(text.contains("ssa_variant_evictions_total 7"));
+        assert!(text.contains("ssa_weight_swaps_total 1"));
         // histogram buckets are cumulative and end at the total count
         let buckets: Vec<u64> = text
             .lines()

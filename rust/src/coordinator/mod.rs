@@ -1,7 +1,8 @@
 //! L3 serving coordinator — the system shell around the compiled spiking
 //! models: target-aware router, dynamic batcher, a replica worker pool
-//! (each worker owns its backend state — see [`crate::pool`]),
-//! seed-ensemble execution, and serving metrics.  Python never runs here.
+//! (workers share one immutable [`crate::runtime::WeightStore`] and own
+//! only per-worker scratch — see [`crate::pool`]), seed-ensemble
+//! execution, and serving metrics.  Python never runs here.
 //!
 //! The coordinator itself is transport-free; [`crate::net`] exposes the
 //! [`Coordinator::submit`] API over TCP (`serve --listen`), reusing the

@@ -177,6 +177,10 @@ pub struct ClassifyResponse {
     /// True when brownout tightened this request's exit policy at
     /// admission — the answer may have run fewer time steps than asked.
     pub degraded: bool,
+    /// Weight-store generation of the model that served this request
+    /// (starts at 1, bumped by every `reload`).  `0` in failure
+    /// envelopes, where no weights were consulted.
+    pub generation: u64,
     /// `Some` when the serving stack could not produce an answer for
     /// this request: the typed failure to surface to the caller.  The
     /// response is then an error envelope — `logits` is empty, `class`
@@ -202,6 +206,7 @@ impl ClassifyResponse {
             steps_used: 0,
             confidence: 0.0,
             degraded: false,
+            generation: 0,
             error: Some(error),
         }
     }

@@ -7,8 +7,14 @@
 //! are `Rc`-based and `!Send`; the native engine simply doesn't care).
 //! `--workers N` scales the native engine across cores; the XLA engine is
 //! pinned to one worker by `pool::effective_workers`.
+//!
+//! Model weights live in one coordinator-owned
+//! [`crate::runtime::WeightStore`]: immutable, `Arc`-shared, loaded once
+//! per variant regardless of worker count, and hot-swappable as a unit
+//! via [`Coordinator::reload`] (generation-tagged — in-flight batches
+//! drain on the old generation while new batches pick up the new one).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -19,7 +25,7 @@ use crate::anytime::ExitPolicy;
 use crate::config::BackendKind;
 use crate::obs::{SpanKind, TraceCtx, TraceSink};
 use crate::pool::{PoolConfig, WorkerPool};
-use crate::runtime::Manifest;
+use crate::runtime::{Manifest, WeightStore, WeightStoreSnapshot};
 use crate::util::fault::{FaultInjector, FaultPlan};
 
 use super::batcher::BatchPolicy;
@@ -62,6 +68,11 @@ pub struct CoordinatorConfig {
     /// Chaos fault injection (`--fault` / `SSA_FAULT`).  `None`
     /// (default) injects nothing and adds no request-path work.
     pub fault: Option<FaultPlan>,
+    /// Byte budget for resident shared weights (`--weight-budget-mb`).
+    /// `None` (default) never evicts; `Some(mb)` lets the weight store
+    /// evict least-recently-used idle variants once resident bytes
+    /// exceed the budget (in-flight variants are pinned and survive).
+    pub weight_budget_mb: Option<usize>,
 }
 
 impl CoordinatorConfig {
@@ -77,6 +88,7 @@ impl CoordinatorConfig {
             trace: true,
             brownout: None,
             fault: None,
+            weight_budget_mb: None,
         }
     }
 
@@ -109,6 +121,11 @@ impl CoordinatorConfig {
         self.fault = fault;
         self
     }
+
+    pub fn with_weight_budget_mb(mut self, budget_mb: Option<usize>) -> Self {
+        self.weight_budget_mb = budget_mb;
+        self
+    }
 }
 
 /// Handle to a running coordinator.
@@ -116,7 +133,7 @@ pub struct Coordinator {
     router: Arc<Router>,
     metrics: Arc<Metrics>,
     trace: Arc<TraceSink>,
-    manifest: Manifest,
+    store: Arc<WeightStore>,
     backend: BackendKind,
     next_id: AtomicU64,
     degrade: Option<Arc<DegradeController>>,
@@ -144,9 +161,11 @@ pub struct SubmitOptions {
 }
 
 impl Coordinator {
-    /// Load the manifest, spawn the worker pool, return the handle.
+    /// Load the manifest, build the shared weight store, spawn the
+    /// worker pool, return the handle.
     pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let store = Arc::new(WeightStore::new(manifest, cfg.weight_budget_mb));
         let router = Arc::new(Router::new(cfg.policy));
         let metrics = Arc::new(Metrics::new());
         // one span ring per worker plus the frontend lane, sized against
@@ -169,7 +188,7 @@ impl Coordinator {
                 initial_batch_seed: cfg.initial_batch_seed,
                 intra_threads: cfg.intra_threads,
             },
-            &manifest,
+            &store,
             &router,
             &metrics,
             &trace,
@@ -180,7 +199,7 @@ impl Coordinator {
             router,
             metrics,
             trace,
-            manifest,
+            store,
             backend: cfg.backend,
             next_id: AtomicU64::new(1),
             degrade,
@@ -190,8 +209,41 @@ impl Coordinator {
         })
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+    /// Snapshot of the manifest currently being served.  Reload swaps
+    /// the store's manifest atomically, so callers hold a consistent
+    /// view for as long as they keep the `Arc` — but a fresh call after
+    /// a `reload` observes the new generation's manifest.
+    pub fn manifest(&self) -> Arc<Manifest> {
+        self.store.manifest()
+    }
+
+    /// Atomically swap in a new artifacts directory.  The manifest is
+    /// loaded and validated *before* the swap: a broken directory leaves
+    /// the currently-served generation untouched.  In-flight batches
+    /// finish on the old generation's weights (their `Arc`s keep those
+    /// resident); every batch fetched after the swap serves the new one.
+    /// Returns the new generation number.
+    pub fn reload(&self, dir: &Path) -> Result<u64> {
+        let manifest = Manifest::load(dir)
+            .with_context(|| format!("reloading artifacts from {}", dir.display()))?;
+        let generation = self.store.swap(manifest);
+        crate::log_info!(
+            "coordinator: reloaded artifacts from {} (generation {generation})",
+            dir.display()
+        );
+        Ok(generation)
+    }
+
+    /// The weight-store generation currently being served.
+    pub fn generation(&self) -> u64 {
+        self.store.generation()
+    }
+
+    /// Point-in-time counters of the shared weight store (resident
+    /// bytes/variants, evictions, swaps), feeding the Prometheus
+    /// exposition and the `BENCH_serving.json` report.
+    pub fn weight_store_snapshot(&self) -> WeightStoreSnapshot {
+        self.store.snapshot()
     }
 
     pub fn backend(&self) -> BackendKind {
@@ -279,7 +331,10 @@ impl Coordinator {
         opts: SubmitOptions,
         reply: mpsc::Sender<ClassifyResponse>,
     ) -> Result<u64, ServeError> {
-        let want = self.manifest.image_size * self.manifest.image_size;
+        // one manifest snapshot for the whole admission check, so a
+        // concurrent reload cannot split validation across generations
+        let manifest = self.store.manifest();
+        let want = manifest.image_size * manifest.image_size;
         if image.len() != want {
             return Err(ServeError::BadImage { got: image.len(), want });
         }
@@ -293,7 +348,7 @@ impl Coordinator {
             ));
         }
         let key = variant_key(&target);
-        if self.manifest.variant(&key).is_err() {
+        if manifest.variant(&key).is_err() {
             return Err(ServeError::UnknownTarget(key));
         }
         // circuit breaker: a target drowning in consecutive failures
@@ -373,14 +428,16 @@ impl Coordinator {
     }
 
     /// Prometheus text-format exposition: the full registry plus the
-    /// router's live queue gauges, the trace sink's span counters, and
-    /// the resilience counters (shedding, brownout, breaker, restarts).
+    /// router's live queue gauges, the trace sink's span counters, the
+    /// resilience counters (shedding, brownout, breaker, restarts), and
+    /// the weight-store gauges (resident bytes, evictions, swaps).
     pub fn metrics_prometheus(&self) -> String {
         self.metrics.render_prometheus_with(
             Some(self.router.queue_snapshot()),
             self.trace.spans_written(),
             self.trace.spans_lost(),
             &self.resilience_snapshot(),
+            &self.weight_store_snapshot(),
         )
     }
 

@@ -10,6 +10,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::coordinator::{ResilienceSnapshot, TargetReport, WorkerReport};
+use crate::runtime::WeightStoreSnapshot;
 use crate::util::json::Json;
 use crate::util::stats::{LatencySummary, StepsSummary};
 
@@ -33,6 +34,11 @@ pub struct BenchRun {
     /// brownout, breaker, restarts).  `None` when the server's snapshot
     /// was unavailable (remote runs against servers predating it).
     pub resilience: Option<ResilienceSnapshot>,
+    /// Server-side weight-store counters at the end of the run.  The
+    /// headline is `resident_bytes`: one shared copy per variant, so it
+    /// stays flat as the worker count grows.  `None` when the server's
+    /// snapshot was unavailable (remote runs).
+    pub weight_store: Option<WeightStoreSnapshot>,
 }
 
 impl BenchRun {
@@ -52,7 +58,17 @@ impl BenchRun {
         } else {
             Some(StepsSummary::from_histogram(&stats.steps))
         };
-        Self { workers, trace: true, stats, latency, steps, targets, worker_util, resilience: None }
+        Self {
+            workers,
+            trace: true,
+            stats,
+            latency,
+            steps,
+            targets,
+            worker_util,
+            resilience: None,
+            weight_store: None,
+        }
     }
 
     /// Tag the run with its tracing setting (defaults to `true`).
@@ -64,6 +80,12 @@ impl BenchRun {
     /// Attach the server's end-of-run resilience counters.
     pub fn with_resilience(mut self, snap: Option<ResilienceSnapshot>) -> Self {
         self.resilience = snap;
+        self
+    }
+
+    /// Attach the server's end-of-run weight-store counters.
+    pub fn with_weight_store(mut self, snap: Option<WeightStoreSnapshot>) -> Self {
+        self.weight_store = snap;
         self
     }
 
@@ -131,6 +153,16 @@ impl BenchRun {
                 ("conns_reaped", Json::num(r.conns_reaped as f64)),
             ]),
         };
+        let weight_store = match &self.weight_store {
+            None => Json::Null,
+            Some(w) => Json::obj(vec![
+                ("generation", Json::num(w.generation as f64)),
+                ("resident_bytes", Json::num(w.resident_bytes as f64)),
+                ("resident_variants", Json::num(w.resident_variants as f64)),
+                ("evictions_total", Json::num(w.evictions_total as f64)),
+                ("swaps_total", Json::num(w.swaps_total as f64)),
+            ]),
+        };
         Json::obj(vec![
             ("workers", Json::from(self.workers)),
             ("trace", Json::from(self.trace)),
@@ -148,6 +180,7 @@ impl BenchRun {
             ("targets", Json::Arr(targets)),
             ("worker_util", Json::Arr(workers)),
             ("resilience", resilience),
+            ("weight_store", weight_store),
         ])
     }
 }
@@ -330,6 +363,14 @@ impl BenchReport {
                     ));
                 }
             }
+            if let Some(w) = &r.weight_store {
+                s.push_str(&format!(
+                    "  weights={:.1}MiB/{} variants gen={}",
+                    w.resident_bytes as f64 / (1024.0 * 1024.0),
+                    w.resident_variants,
+                    w.generation
+                ));
+            }
             s.push('\n');
         }
         if let Some(x) = self.speedup() {
@@ -448,6 +489,7 @@ mod tests {
         assert!(runs[0].get("shed").and_then(Json::as_f64).is_some());
         assert!(runs[0].get("retried").and_then(Json::as_f64).is_some());
         assert!(matches!(runs[0].get("resilience"), Some(Json::Null)));
+        assert!(matches!(runs[0].get("weight_store"), Some(Json::Null)));
     }
 
     /// A run tagged with a server resilience snapshot serializes it.
@@ -474,5 +516,34 @@ mod tests {
         assert_eq!(res.get("worker_restarts").and_then(Json::as_f64), Some(5.0));
         assert_eq!(res.get("brownout_active").and_then(Json::as_bool), Some(true));
         assert!(r.render().contains("restarts=5 breaker_trips=4"));
+    }
+
+    /// A run tagged with a weight-store snapshot serializes the shared
+    /// residency counters; the headline `resident_bytes` lands in both
+    /// the JSON artifact and the rendered summary.
+    #[test]
+    fn weight_store_snapshot_serializes_when_attached() {
+        let mut r = report();
+        r.runs[1] = BenchRun::new(4, stats(320, 1000), vec![], vec![]).with_weight_store(Some(
+            WeightStoreSnapshot {
+                generation: 2,
+                resident_bytes: 3 * 1024 * 1024,
+                resident_variants: 2,
+                evictions_total: 1,
+                swaps_total: 1,
+            },
+        ));
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        let runs = parsed.get("runs").and_then(Json::as_arr).unwrap();
+        assert!(matches!(runs[0].get("weight_store"), Some(Json::Null)));
+        let w = runs[1].get("weight_store").expect("weight_store key");
+        assert_eq!(w.get("generation").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(
+            w.get("resident_bytes").and_then(Json::as_f64),
+            Some((3 * 1024 * 1024) as f64)
+        );
+        assert_eq!(w.get("resident_variants").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(w.get("swaps_total").and_then(Json::as_f64), Some(1.0));
+        assert!(r.render().contains("weights=3.0MiB/2 variants gen=2"));
     }
 }

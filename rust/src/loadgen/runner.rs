@@ -56,6 +56,7 @@ impl PendingResponse {
                         steps_used: r.steps_used,
                         confidence: r.confidence,
                         degraded: r.degraded,
+                        generation: r.generation,
                         error: None,
                     }),
                     // typed refusal → same envelope shape the in-process

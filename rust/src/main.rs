@@ -181,13 +181,21 @@ fn serve(args: &Args) -> Result<()> {
     if let Some(f) = &fault {
         println!("chaos fault plan armed: {f:?}");
     }
+    let weight_budget_mb = match args.opt("weight-budget-mb") {
+        None => None,
+        Some(s) => Some(
+            s.parse::<usize>()
+                .map_err(|e| anyhow::anyhow!("invalid --weight-budget-mb {s:?}: {e}"))?,
+        ),
+    };
     let mut cfg = CoordinatorConfig::new(dir)
         .with_backend(backend)
         .with_workers(workers)
         .with_intra_threads(intra_threads)
         .with_trace(trace_flag(args)?)
         .with_brownout(brownout)
-        .with_fault(fault);
+        .with_fault(fault)
+        .with_weight_budget_mb(weight_budget_mb);
     cfg.policy = policy;
     cfg.preload = vec![target_s.clone()];
 
@@ -320,14 +328,18 @@ fn classify_remote(args: &Args) -> Result<()> {
                 .wait()?,
         };
         println!(
-            "[{i}] {target_s} -> class {} (seed {}, batch {}, steps {}, rtt {:.0} us{})",
+            "[{i}] {target_s} -> class {} (seed {}, batch {}, steps {}, gen {}, rtt {:.0} us{})",
             resp.class,
             resp.seed,
             resp.batch_size,
             resp.steps_used,
+            resp.generation,
             resp.latency_us,
             if resp.degraded { ", degraded" } else { "" }
         );
+        if args.flag("logits") {
+            println!("[{i}] logits {:?}", resp.logits);
+        }
     }
     if let Some(rc) = &retrying {
         println!(
@@ -348,6 +360,10 @@ fn classify_remote(args: &Args) -> Result<()> {
         std::fs::write(path, &trace)
             .with_context(|| format!("writing trace dump {path:?}"))?;
         println!("wrote {path} ({} bytes of Chrome trace-event JSON)", trace.len());
+    }
+    if let Some(dir) = args.opt("reload") {
+        let generation = client.reload(dir)?;
+        println!("server reloaded artifacts from {dir} (generation {generation})");
     }
     if args.flag("shutdown") {
         client.shutdown_server()?;
@@ -548,7 +564,8 @@ fn serve_bench_local(args: &Args, spec: &LoadSpec) -> Result<BenchReport> {
                     coord.metrics().worker_report(),
                 )
                 .with_trace(trace_on)
-                .with_resilience(Some(coord.resilience_snapshot())),
+                .with_resilience(Some(coord.resilience_snapshot()))
+                .with_weight_store(Some(coord.weight_store_snapshot())),
             );
             coord.shutdown();
         }

@@ -82,6 +82,7 @@ impl PendingReply {
                 steps_used: r.steps_used,
                 confidence: r.confidence,
                 degraded: r.degraded,
+                generation: r.generation,
                 error: None,
             }),
             Err(e) => Err(anyhow::Error::from(e)),
@@ -328,6 +329,17 @@ impl NetClient {
         }
     }
 
+    /// Ask the server to atomically swap its served weights to `dir`
+    /// (a *server-local* artifacts directory).  Returns the new
+    /// weight-store generation.
+    pub fn reload(&self, dir: &str) -> Result<u64> {
+        match self.call(Request::Reload { id: self.fresh_id(), dir: dir.to_string() })? {
+            Reply::Reloaded { generation, .. } => Ok(generation),
+            Reply::Error { error, .. } => Err(anyhow::Error::from(error)),
+            other => anyhow::bail!("protocol violation: unexpected reload reply {other:?}"),
+        }
+    }
+
     /// Ask the server to drain and exit; returns once acknowledged.
     pub fn shutdown_server(&self) -> Result<()> {
         match self.call(Request::Shutdown { id: self.fresh_id() })? {
@@ -513,6 +525,7 @@ impl ReconnectingClient {
                         steps_used: r.steps_used,
                         confidence: r.confidence,
                         degraded: r.degraded,
+                        generation: r.generation,
                         error: None,
                     })
                 }

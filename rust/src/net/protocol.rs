@@ -73,6 +73,15 @@ pub enum Request {
         /// Client-chosen correlation id.
         id: u64,
     },
+    /// Atomically swap the served weights to a new artifacts directory
+    /// (a *server-local* path).  The reply carries the new weight-store
+    /// generation; in-flight batches drain on the old one.
+    Reload {
+        /// Client-chosen correlation id.
+        id: u64,
+        /// Artifacts directory path, resolved on the server's filesystem.
+        dir: String,
+    },
     /// Ask the server to drain in-flight requests and exit.
     Shutdown {
         /// Client-chosen correlation id.
@@ -89,6 +98,7 @@ impl Request {
             | Request::MetricsProm { id }
             | Request::TraceDump { id }
             | Request::Ping { id }
+            | Request::Reload { id, .. }
             | Request::Shutdown { id } => *id,
         }
     }
@@ -136,6 +146,11 @@ impl Request {
             Request::Ping { id } => {
                 Json::obj(vec![("op", Json::str("ping")), ("id", Json::num(*id as f64))])
             }
+            Request::Reload { id, dir } => Json::obj(vec![
+                ("op", Json::str("reload")),
+                ("id", Json::num(*id as f64)),
+                ("dir", Json::str(dir)),
+            ]),
             Request::Shutdown { id } => {
                 Json::obj(vec![("op", Json::str("shutdown")), ("id", Json::num(*id as f64))])
             }
@@ -203,6 +218,13 @@ impl Request {
             "metrics_prom" => Ok(Request::MetricsProm { id }),
             "trace_dump" => Ok(Request::TraceDump { id }),
             "ping" => Ok(Request::Ping { id }),
+            "reload" => {
+                let dir = j
+                    .get("dir")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| bad("reload: missing string `dir`"))?;
+                Ok(Request::Reload { id, dir: dir.to_string() })
+            }
             "shutdown" => Ok(Request::Shutdown { id }),
             other => Err(bad(&format!("unknown op {other:?}"))),
         }
@@ -240,6 +262,10 @@ pub struct RemoteClassify {
     /// request's exit policy (see [`ClassifyResponse::degraded`]).
     /// Decodes as `false` from replies of servers predating the field.
     pub degraded: bool,
+    /// Weight-store generation that served this request (see
+    /// [`ClassifyResponse::generation`]).  Decodes as `0` from replies
+    /// of servers predating the weight store.
+    pub generation: u64,
 }
 
 impl RemoteClassify {
@@ -254,6 +280,7 @@ impl RemoteClassify {
             steps_used: r.steps_used,
             confidence: r.confidence,
             degraded: r.degraded,
+            generation: r.generation,
         }
     }
 }
@@ -311,6 +338,14 @@ pub enum Reply {
         /// Server facts a client needs before classifying.
         info: ServerInfo,
     },
+    /// Reload applied; the served weights now come from the new
+    /// artifacts directory.
+    Reloaded {
+        /// Echo of the request id.
+        id: u64,
+        /// The weight-store generation after the swap.
+        generation: u64,
+    },
     /// Shutdown acknowledged; the server drains and closes after this.
     ShuttingDown {
         /// Echo of the request id.
@@ -334,6 +369,7 @@ impl Reply {
             | Reply::MetricsProm { id, .. }
             | Reply::TraceDump { id, .. }
             | Reply::Pong { id, .. }
+            | Reply::Reloaded { id, .. }
             | Reply::ShuttingDown { id }
             | Reply::Error { id, .. } => *id,
         }
@@ -359,6 +395,7 @@ impl Reply {
                     ("seed", Json::num(response.seed as f64)),
                     ("steps_used", Json::from(response.steps_used)),
                     ("confidence", Json::num(response.confidence as f64)),
+                    ("generation", Json::num(response.generation as f64)),
                 ];
                 // emitted only when set, so non-degraded replies stay
                 // byte-identical to the pre-brownout grammar
@@ -393,6 +430,12 @@ impl Reply {
                 ("workers", Json::from(info.workers)),
                 ("image_size", Json::from(info.image_size)),
                 ("targets", Json::Arr(info.targets.iter().map(Json::str).collect())),
+            ]),
+            Reply::Reloaded { id, generation } => Json::obj(vec![
+                ("ok", Json::from(true)),
+                ("op", Json::str("reload")),
+                ("id", Json::num(*id as f64)),
+                ("generation", Json::num(*generation as f64)),
             ]),
             Reply::ShuttingDown { id } => Json::obj(vec![
                 ("ok", Json::from(true)),
@@ -446,6 +489,7 @@ impl Reply {
                     j.get("confidence").and_then(Json::as_f64).unwrap_or(0.0) as f32;
                 let degraded =
                     j.get("degraded").and_then(Json::as_bool).unwrap_or(false);
+                let generation = j.get("generation").and_then(Json::as_u64).unwrap_or(0);
                 Ok(Reply::Classify {
                     id,
                     response: RemoteClassify {
@@ -457,6 +501,7 @@ impl Reply {
                         steps_used,
                         confidence,
                         degraded,
+                        generation,
                     },
                 })
             }
@@ -481,6 +526,10 @@ impl Reply {
                         .filter_map(|t| t.as_str().map(str::to_string))
                         .collect(),
                 },
+            }),
+            "reload" => Ok(Reply::Reloaded {
+                id,
+                generation: j.get("generation").and_then(Json::as_u64).unwrap_or(0),
             }),
             "shutdown" => Ok(Reply::ShuttingDown { id }),
             other => anyhow::bail!("unknown reply op {other:?}"),
@@ -539,6 +588,7 @@ mod tests {
         roundtrip_request(Request::MetricsProm { id: 4 });
         roundtrip_request(Request::TraceDump { id: 5 });
         roundtrip_request(Request::Ping { id: 2 });
+        roundtrip_request(Request::Reload { id: 6, dir: "/tmp/artifacts_v2".into() });
         roundtrip_request(Request::Shutdown { id: 3 });
     }
 
@@ -602,6 +652,7 @@ mod tests {
                 steps_used: 3,
                 confidence: 1.25,
                 degraded: false,
+                generation: 1,
             },
         });
         roundtrip_reply(Reply::Classify {
@@ -615,6 +666,7 @@ mod tests {
                 steps_used: 2,
                 confidence: 0.5,
                 degraded: true,
+                generation: 3,
             },
         });
         roundtrip_reply(Reply::Metrics { id: 1, report: "=== metrics ===\n".into() });
@@ -635,6 +687,7 @@ mod tests {
                 targets: vec!["ssa_t4".into(), "ann".into()],
             },
         });
+        roundtrip_reply(Reply::Reloaded { id: 6, generation: 2 });
         roundtrip_reply(Reply::ShuttingDown { id: 3 });
         roundtrip_reply(Reply::Error { id: 9, error: ServeError::Overloaded });
         roundtrip_reply(Reply::Error {
@@ -654,6 +707,19 @@ mod tests {
         assert_eq!(response.steps_used, 0);
         assert_eq!(response.confidence, 0.0);
         assert!(!response.degraded, "absent `degraded` must decode as false");
+        assert_eq!(response.generation, 0, "absent `generation` must decode as 0");
+    }
+
+    /// A reload frame without `dir` is a typed `bad_request`, not a
+    /// parse panic.
+    #[test]
+    fn reload_without_dir_is_bad_request() {
+        let err = Request::parse(&Json::parse(r#"{"op":"reload","id":1}"#).unwrap())
+            .unwrap_err();
+        assert_eq!(
+            std::mem::discriminant(&err),
+            std::mem::discriminant(&ServeError::BadRequest(String::new())),
+        );
     }
 
     /// Pixels and logits must survive the wire bit-identically: f32 → f64

@@ -545,6 +545,19 @@ fn reader_loop(
                 &Reply::Pong { id, info: server_info(&shared.coord) },
                 shared.max_frame,
             ),
+            Request::Reload { id, dir } => {
+                crate::log_info!("net: reload to {dir:?} requested by {peer}");
+                let reply = match shared.coord.reload(std::path::Path::new(&dir)) {
+                    Ok(generation) => Reply::Reloaded { id, generation },
+                    // the old generation keeps serving: surface the load
+                    // failure to the caller as a typed error
+                    Err(e) => Reply::Error {
+                        id,
+                        error: ServeError::BadRequest(format!("reload failed: {e:#}")),
+                    },
+                };
+                write_reply(&write_half, &reply, shared.max_frame)
+            }
             Request::Shutdown { id } => {
                 crate::log_info!("net: shutdown requested by {peer}");
                 let r = write_reply(&write_half, &Reply::ShuttingDown { id }, shared.max_frame);
@@ -681,10 +694,13 @@ fn demux_loop(
 }
 
 fn server_info(coord: &Coordinator) -> ServerInfo {
+    // one manifest snapshot, so a concurrent reload cannot mix the
+    // image size of one generation with the targets of another
+    let manifest = coord.manifest();
     ServerInfo {
         backend: coord.backend().name().to_string(),
         workers: coord.workers(),
-        image_size: coord.manifest().image_size,
-        targets: coord.manifest().variants.iter().map(|v| v.name.clone()).collect(),
+        image_size: manifest.image_size,
+        targets: manifest.variants.iter().map(|v| v.name.clone()).collect(),
     }
 }

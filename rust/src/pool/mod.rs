@@ -1,13 +1,16 @@
-//! Multi-worker replica pool.
+//! Multi-worker pool over the shared weight store.
 //!
 //! The coordinator used to drain every batch on a single inference
 //! thread — a constraint inherited from PJRT's `Rc`-based `!Send`
-//! handles.  The pool generalizes that design instead of fighting it:
-//! `N` worker threads each construct their *own* backend instance and
-//! own an independent replica of every variant they serve, pulling
-//! batches from the shared [`Router`] queue.  No model state crosses a
-//! thread boundary, so the backend traits stay `!Send`-friendly and the
-//! native engine scales across cores with no locking on the hot path.
+//! handles.  The pool spawns `N` worker threads that all pull batches
+//! from the shared [`Router`] queue and fetch their model variants from
+//! the coordinator's [`WeightStore`]: weights are immutable after load,
+//! so one `Arc`-shared copy per variant serves every worker and
+//! resident weight memory is independent of `--workers`.  Each worker
+//! privately owns only *scratch* — its backend instance (per-request
+//! membranes/PRNG/arenas are built per call) and, on engines without
+//! shared-store support (XLA), a generation-tagged private replica
+//! cache.
 //!
 //! Invariants:
 //! * `effective_workers` clamps the pool to the engine's capability —
@@ -17,6 +20,8 @@
 //!   two workers ever assign the same "fresh" seed.
 //! * `Fixed(s)` requests are bit-identical for any worker count on
 //!   engines with per-row seed support (see `worker::serve_batch`).
+//! * Panic supervision rebuilds only the worker's scratch; the store's
+//!   shared weights stay resident and are never re-read from disk.
 //! * Shutdown is graceful: closing the router lets every worker drain
 //!   the remaining queue before [`WorkerPool::join`] returns.
 
@@ -33,7 +38,7 @@ use crate::coordinator::degrade::CircuitBreaker;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
 use crate::obs::TraceSink;
-use crate::runtime::Manifest;
+use crate::runtime::WeightStore;
 use crate::util::fault::FaultInjector;
 
 /// Pool sizing + per-worker startup configuration.
@@ -71,7 +76,7 @@ impl WorkerPool {
     /// returned — no half-alive pool escapes.
     pub fn start(
         cfg: &PoolConfig,
-        manifest: &Manifest,
+        store: &Arc<WeightStore>,
         router: &Arc<Router>,
         metrics: &Arc<Metrics>,
         trace: &Arc<TraceSink>,
@@ -109,7 +114,7 @@ impl WorkerPool {
             let (tx, rx) = mpsc::channel::<Result<()>>();
             let ctx = worker::WorkerContext {
                 worker_id,
-                manifest: manifest.clone(),
+                store: Arc::clone(store),
                 router: Arc::clone(router),
                 metrics: Arc::clone(metrics),
                 trace: Arc::clone(trace),

@@ -1,12 +1,16 @@
 //! The per-worker drain loop.
 //!
-//! Each worker thread owns an *independent* execution engine plus its own
-//! replica cache of loaded variants — nothing model-related is shared, so
-//! the `InferenceBackend` / `LoadedVariant` traits never need `Send`
-//! (PJRT handles are `Rc`-based) and native replicas scale across cores
-//! with zero lock traffic on the inference path.  The only cross-worker
-//! state is the router queue, the metrics registry, and the
-//! PerBatch/Ensemble seed counter (an `AtomicU32`).
+//! Model weights are **shared**: every worker fetches its variants from
+//! the coordinator's [`WeightStore`] (`Arc`-cloned per batch), so
+//! `--workers N` holds one copy of each model.  What each worker *owns*
+//! is [`ScratchState`]: its private backend instance (whose loaded
+//! models carry only immutable weights — per-request LIF membranes,
+//! PRNG banks, and scratch arenas are built per call) and, for engines
+//! without shared-store support (XLA's `Rc`-based handles), a private
+//! generation-tagged replica cache.  Cross-worker state is the router
+//! queue, the metrics registry, the weight store, and the
+//! PerBatch/Ensemble seed counter (an `AtomicU32`); none of it sits on
+//! the inference hot path beyond one store lock per batch.
 
 use std::collections::HashMap;
 use std::panic::AssertUnwindSafe;
@@ -25,13 +29,17 @@ use crate::coordinator::metrics::{Exemplar, Metrics};
 use crate::coordinator::request::{ClassifyRequest, ClassifyResponse, SeedPolicy, ServeError};
 use crate::coordinator::router::Router;
 use crate::obs::{SpanKind, TraceSink};
-use crate::runtime::{create_backend_intra, InferenceBackend, LoadedVariant, Manifest};
+use crate::runtime::{
+    create_backend_intra, InferenceBackend, LoadedVariant, SharedVariant, WeightStore,
+};
 use crate::util::fault::FaultInjector;
 
 /// Everything one worker needs, moved into its thread at spawn.
 pub(crate) struct WorkerContext {
     pub worker_id: usize,
-    pub manifest: Manifest,
+    /// The coordinator's shared weight store: manifest + one resident
+    /// copy of each loaded variant, generation-tagged for `reload`.
+    pub store: Arc<WeightStore>,
     pub router: Arc<Router>,
     pub metrics: Arc<Metrics>,
     pub trace: Arc<TraceSink>,
@@ -51,21 +59,39 @@ pub(crate) struct WorkerContext {
     pub fault: Option<Arc<FaultInjector>>,
 }
 
-/// A worker's engine state: its private backend instance plus the
-/// replica cache.  Rebuilt wholesale by the supervisor after a panic —
-/// a panicking forward pass may have left either in an undefined state.
-type Engine = (Box<dyn InferenceBackend>, HashMap<String, Box<dyn LoadedVariant>>);
+/// The worker-private half of the old "engine" state: the backend
+/// instance plus, for engines that cannot share weights (XLA), a private
+/// replica cache tagged with the store generation it was loaded under.
+/// This is what the supervisor rebuilds after a panic — the shared
+/// weight store holds only immutable tensors behind `Arc`s, so a
+/// panicking forward pass cannot corrupt it and weights are **not**
+/// re-read from disk on restart.
+struct ScratchState {
+    backend: Box<dyn InferenceBackend>,
+    /// Private replicas for non-shared engines; empty on shared engines.
+    private: HashMap<String, Box<dyn LoadedVariant>>,
+    /// Store generation `private` was loaded under; a `reload` swap
+    /// invalidates the cache wholesale.
+    private_generation: u64,
+}
 
-/// Construct the backend and preload replicas (startup and post-panic
-/// rebuild share this path).
-fn build_engine(ctx: &WorkerContext) -> Result<Engine> {
+/// Construct the backend and warm the preloads (startup and post-panic
+/// rebuild share this path).  On a shared-store engine the preload walk
+/// goes through [`WeightStore::get_or_load`] — the first worker reads
+/// the disk, siblings (and post-panic rebuilds) hit the cache.
+fn build_scratch(ctx: &WorkerContext) -> Result<ScratchState> {
     let backend = create_backend_intra(ctx.backend, ctx.intra_threads)?;
-    let mut replicas: HashMap<String, Box<dyn LoadedVariant>> = HashMap::new();
+    let mut private: HashMap<String, Box<dyn LoadedVariant>> = HashMap::new();
+    let (manifest, generation) = ctx.store.current();
     for key in &ctx.preload {
-        let m = ctx.manifest.variant(key).and_then(|v| backend.load(&ctx.manifest, v))?;
-        replicas.insert(key.clone(), m);
+        if backend.supports_shared() {
+            ctx.store.get_or_load(backend.as_ref(), key)?;
+        } else {
+            let m = manifest.variant(key).and_then(|v| backend.load(&manifest, v))?;
+            private.insert(key.clone(), m);
+        }
     }
-    Ok((backend, replicas))
+    Ok(ScratchState { backend, private, private_generation: generation })
 }
 
 /// Answer every request of a failed batch with a typed error envelope.
@@ -89,27 +115,28 @@ fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-/// Worker body: construct the backend *inside* the thread, preload
-/// replicas, signal readiness, then drain the router until it closes.
+/// Worker body: construct the backend *inside* the thread, warm the
+/// preloads, signal readiness, then drain the router until it closes.
 /// Batches are served under `catch_unwind` supervision: a panic fails
-/// its batch with typed `Internal` replies and tears the engine down
-/// for rebuild on the next batch, instead of silently killing the
-/// replica.
+/// its batch with typed `Internal` replies and tears the *scratch*
+/// state down for rebuild on the next batch — the shared weight store
+/// is immutable, so restarts never re-read weights from disk.
 pub(crate) fn run(ctx: WorkerContext, ready: mpsc::Sender<Result<()>>) {
-    let mut engine: Option<Engine> = match build_engine(&ctx) {
-        Ok(e) => Some(e),
+    let mut scratch: Option<ScratchState> = match build_scratch(&ctx) {
+        Ok(s) => Some(s),
         Err(e) => {
             let _ = ready.send(Err(e));
             return;
         }
     };
     ctx.metrics.register_worker(ctx.worker_id);
-    if let Some((backend, replicas)) = &engine {
+    if let Some(s) = &scratch {
         crate::log_info!(
-            "pool worker {}: {} backend up, {} replica(s) preloaded",
+            "pool worker {}: {} backend up ({} weights, generation {})",
             ctx.worker_id,
-            backend.name(),
-            replicas.len()
+            s.backend.name(),
+            if s.backend.supports_shared() { "shared" } else { "private" },
+            s.private_generation
         );
     }
     let _ = ready.send(Ok(()));
@@ -120,22 +147,22 @@ pub(crate) fn run(ctx: WorkerContext, ready: mpsc::Sender<Result<()>>) {
             continue; // the router never emits these; guard serve_batch anyway
         }
         let t0 = Instant::now();
-        // supervisor: rebuild the engine a previous panic tore down.
+        // supervisor: rebuild the scratch a previous panic tore down.
         // Rebuilding per batch (not once) means a persistently failing
         // environment keeps answering typed errors instead of wedging.
-        if engine.is_none() {
-            match build_engine(&ctx) {
-                Ok(e) => {
-                    engine = Some(e);
+        if scratch.is_none() {
+            match build_scratch(&ctx) {
+                Ok(s) => {
+                    scratch = Some(s);
                     ctx.metrics.record_worker_restart();
                     crate::log_warn!(
-                        "pool worker {}: backend rebuilt after panic",
+                        "pool worker {}: scratch rebuilt after panic (shared weights intact)",
                         ctx.worker_id
                     );
                 }
                 Err(e) => {
                     crate::log_error!(
-                        "worker {}: backend rebuild failed: {e:#}",
+                        "worker {}: scratch rebuild failed: {e:#}",
                         ctx.worker_id
                     );
                     ctx.metrics.record_error(&key);
@@ -150,14 +177,17 @@ pub(crate) fn run(ctx: WorkerContext, ready: mpsc::Sender<Result<()>>) {
                 }
             }
         }
-        let (backend, replicas) =
-            engine.as_mut().expect("engine rebuilt or present above");
-        // lazy-load this worker's replica on first use
-        if !replicas.contains_key(&key) {
-            match ctx.manifest.variant(&key).and_then(|v| backend.load(&ctx.manifest, v)) {
-                Ok(m) => {
-                    replicas.insert(key.clone(), m);
-                }
+        let s = scratch.as_mut().expect("scratch rebuilt or present above");
+        // resolve the variant: shared engines clone the store's Arc (the
+        // clone is what pins the variant against eviction and keeps an
+        // old generation alive across a concurrent reload); non-shared
+        // engines keep a private generation-tagged replica cache
+        let (shared_model, generation): (Option<SharedVariant>, u64) = if s
+            .backend
+            .supports_shared()
+        {
+            match ctx.store.get_or_load(s.backend.as_ref(), &key) {
+                Ok((m, g)) => (Some(m), g),
                 Err(e) => {
                     crate::log_error!("worker {}: loading variant {key}: {e:#}", ctx.worker_id);
                     ctx.metrics.record_error(&key);
@@ -171,7 +201,38 @@ pub(crate) fn run(ctx: WorkerContext, ready: mpsc::Sender<Result<()>>) {
                     continue;
                 }
             }
-        }
+        } else {
+            let (manifest, generation) = ctx.store.current();
+            if s.private_generation != generation {
+                // a reload swapped the manifest: every private replica is
+                // stale, reload lazily from the new artifacts dir
+                s.private.clear();
+                s.private_generation = generation;
+            }
+            if !s.private.contains_key(&key) {
+                match manifest.variant(&key).and_then(|v| s.backend.load(&manifest, v)) {
+                    Ok(m) => {
+                        s.private.insert(key.clone(), m);
+                    }
+                    Err(e) => {
+                        crate::log_error!(
+                            "worker {}: loading variant {key}: {e:#}",
+                            ctx.worker_id
+                        );
+                        ctx.metrics.record_error(&key);
+                        ctx.breaker.record_failure(&key);
+                        fail_batch(
+                            &batch,
+                            &ServeError::Internal(format!("loading variant {key} failed")),
+                        );
+                        ctx.metrics
+                            .record_worker(ctx.worker_id, 0, t0.elapsed().as_secs_f64() * 1e6);
+                        continue;
+                    }
+                }
+            }
+            (None, generation)
+        };
         // a failed batch still charges busy time, but its requests were
         // answered with error envelopes — count 0 served so per-worker
         // request totals always agree with the per-target totals
@@ -179,10 +240,15 @@ pub(crate) fn run(ctx: WorkerContext, ready: mpsc::Sender<Result<()>>) {
             if let Some(f) = &ctx.fault {
                 f.before_batch();
             }
-            let model = replicas
-                .get(&key)
-                .ok_or_else(|| anyhow::anyhow!("replica {key} vanished after load"))?;
-            serve_batch(model.as_ref(), &batch, &key, max_batch, &ctx)
+            let model: &dyn LoadedVariant = match &shared_model {
+                Some(m) => m.as_ref(),
+                None => s
+                    .private
+                    .get(&key)
+                    .ok_or_else(|| anyhow::anyhow!("replica {key} vanished after load"))?
+                    .as_ref(),
+            };
+            serve_batch(model, &batch, &key, max_batch, generation, &ctx)
         }));
         let served = match outcome {
             Ok(Ok(())) => {
@@ -211,9 +277,10 @@ pub(crate) fn run(ctx: WorkerContext, ready: mpsc::Sender<Result<()>>) {
                     &batch,
                     &ServeError::Internal(format!("worker panicked serving the batch: {msg}")),
                 );
-                // the panic may have corrupted backend or replica state:
-                // drop everything, rebuild before the next batch
-                engine = None;
+                // the panic may have corrupted backend or private-replica
+                // state: drop the scratch, rebuild before the next batch
+                // (the shared store's immutable weights stay resident)
+                scratch = None;
                 0
             }
         };
@@ -228,6 +295,7 @@ fn serve_batch(
     batch: &[ClassifyRequest],
     key: &str,
     max_batch: usize,
+    generation: u64,
     ctx: &WorkerContext,
 ) -> Result<()> {
     let metrics: &Metrics = &ctx.metrics;
@@ -461,6 +529,7 @@ fn serve_batch(
             steps_used: out.steps_used,
             confidence: out.margin,
             degraded: req.degraded,
+            generation,
             error: None,
         });
     }

@@ -11,9 +11,15 @@
 //! * `XlaBackend` (feature `xla`) — compiles the AOT'd HLO-text artifacts
 //!   through PJRT and stages weights to device buffers.
 //!
-//! Neither trait requires `Send`: PJRT handles are `Rc`-based, so the
-//! coordinator constructs its backend *inside* the single inference
-//! thread, exactly as before.
+//! Neither trait *requires* `Send`: PJRT handles are `Rc`-based, so the
+//! XLA engine constructs everything inside its single worker thread.
+//! Backends whose loaded variants *are* `Send + Sync` (the native engine:
+//! immutable tensors, per-request scratch) opt into the shared weight
+//! store by overriding [`InferenceBackend::supports_shared`] /
+//! [`InferenceBackend::load_shared`] — one `Arc`-shared copy of each
+//! variant serves every pool worker (see [`crate::runtime::store`]).
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -22,6 +28,10 @@ use crate::attention::block::StageTimings;
 use crate::config::BackendKind;
 
 use super::manifest::{Manifest, Variant};
+
+/// A loaded variant shareable across pool workers: one immutable copy,
+/// `Arc`-cloned per batch by the [`crate::runtime::store::WeightStore`].
+pub type SharedVariant = Arc<dyn LoadedVariant + Send + Sync>;
 
 /// An execution engine that can materialize manifest variants.
 pub trait InferenceBackend {
@@ -32,6 +42,27 @@ pub trait InferenceBackend {
     /// artifact-wide geometry (image size, patch size, class count) that
     /// the variant entry alone does not carry.
     fn load(&self, manifest: &Manifest, variant: &Variant) -> Result<Box<dyn LoadedVariant>>;
+
+    /// True when [`Self::load_shared`] works — i.e. this engine's loaded
+    /// variants are immutable-after-load and `Send + Sync`, so one copy
+    /// can serve every pool worker.  Default `false`: engines with
+    /// thread-affine handles (XLA's `Rc`-based PJRT buffers) keep the
+    /// private-replica-per-worker model.
+    fn supports_shared(&self) -> bool {
+        false
+    }
+
+    /// [`Self::load`], but returning an `Arc` the weight store can share
+    /// across workers.  Only meaningful when [`Self::supports_shared`];
+    /// the default errors loudly rather than pretending.
+    fn load_shared(&self, manifest: &Manifest, variant: &Variant) -> Result<SharedVariant> {
+        let _ = (manifest, variant);
+        anyhow::bail!(
+            "the {} backend does not support the shared weight store \
+             (its loaded variants are not Send + Sync)",
+            self.name()
+        )
+    }
 }
 
 /// A loaded, servable model variant.
@@ -137,6 +168,15 @@ pub trait LoadedVariant {
         policy: &ExitPolicy,
     ) -> Result<(Vec<InferOutcome>, Option<StageTimings>)> {
         Ok((self.infer_rows_anytime(images, row_seeds, policy)?, None))
+    }
+
+    /// Resident bytes of this variant's weight tensors, reported to the
+    /// weight store's byte-budget LRU and the `ssa_weight_bytes_resident`
+    /// gauge.  Default 0 (engines that stage weights off-heap — XLA
+    /// device buffers — account for nothing here); the native engine sums
+    /// its f32 tensors.
+    fn weight_bytes(&self) -> usize {
+        0
     }
 
     /// Argmax class per batch row (total-order; never panics on NaN).

@@ -10,12 +10,16 @@ pub mod dataset;
 pub mod executable;
 pub mod manifest;
 pub mod native;
+pub mod store;
 pub mod weights;
 
-pub use backend::{create_backend, create_backend_intra, InferenceBackend, LoadedVariant};
+pub use backend::{
+    create_backend, create_backend_intra, InferenceBackend, LoadedVariant, SharedVariant,
+};
 pub use dataset::{Dataset, Golden};
 #[cfg(feature = "xla")]
 pub use executable::{LoadedModel, Runtime, XlaBackend};
 pub use manifest::{Manifest, ModelHints, Variant};
 pub use native::{NativeBackend, NativeVariant};
+pub use store::{WeightStore, WeightStoreSnapshot};
 pub use weights::Weights;

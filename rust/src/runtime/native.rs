@@ -17,7 +17,7 @@ use crate::attention::block::StageTimings;
 use crate::attention::model::{Arch, ModelGeometry, NativeModel};
 use crate::config::{LifConfig, PrngSharing};
 
-use super::backend::{InferenceBackend, LoadedVariant};
+use super::backend::{InferenceBackend, LoadedVariant, SharedVariant};
 use super::manifest::{Manifest, ModelHints, Variant};
 use super::weights::Weights;
 
@@ -54,12 +54,10 @@ impl Default for NativeBackend {
     }
 }
 
-impl InferenceBackend for NativeBackend {
-    fn name(&self) -> &'static str {
-        "native"
-    }
-
-    fn load(&self, manifest: &Manifest, variant: &Variant) -> Result<Box<dyn LoadedVariant>> {
+impl NativeBackend {
+    /// The one load path both trait entry points share: read the weights
+    /// file, resolve geometry, bind the model.
+    fn load_variant(&self, manifest: &Manifest, variant: &Variant) -> Result<NativeVariant> {
         let weights = Weights::load(&variant.weights)?;
         let arch = Arch::parse(&variant.arch)
             .with_context(|| format!("native backend, variant {}", variant.name))?;
@@ -78,7 +76,28 @@ impl InferenceBackend for NativeBackend {
             variant.batch,
             model.intra_threads()
         );
-        Ok(Box::new(NativeVariant { variant: variant.clone(), model }))
+        Ok(NativeVariant { variant: variant.clone(), model })
+    }
+}
+
+impl InferenceBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn load(&self, manifest: &Manifest, variant: &Variant) -> Result<Box<dyn LoadedVariant>> {
+        Ok(Box::new(self.load_variant(manifest, variant)?))
+    }
+
+    /// [`NativeVariant`] holds only immutable tensors (all per-request
+    /// state — LIF membranes, PRNG banks, scratch arenas — is built per
+    /// call), so one copy serves every pool worker.
+    fn supports_shared(&self) -> bool {
+        true
+    }
+
+    fn load_shared(&self, manifest: &Manifest, variant: &Variant) -> Result<SharedVariant> {
+        Ok(std::sync::Arc::new(self.load_variant(manifest, variant)?))
     }
 }
 
@@ -223,6 +242,10 @@ impl LoadedVariant for NativeVariant {
             self.variant.batch
         );
         self.model.infer_rows(images, row_seeds.len(), row_seeds)
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.model.weight_bytes()
     }
 
     /// The native step loop supports every [`ExitPolicy`]: each row exits

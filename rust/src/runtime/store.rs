@@ -1,0 +1,516 @@
+//! The shared immutable weight store.
+//!
+//! Loaded weights are immutable after load, so they belong to the
+//! *coordinator*, not to any worker: one [`WeightStore`] holds one
+//! `Arc`-shared copy of each resident variant and every pool worker
+//! clones the `Arc` per batch — `--workers N` costs one copy of each
+//! model, not `N` (per-worker state keeps only mutable scratch; see
+//! `crate::pool`).  On top of the cache sit two serving features:
+//!
+//! * **byte-budget LRU eviction** (`--weight-budget-mb`): when resident
+//!   weight bytes exceed the budget, least-recently-used variants are
+//!   dropped — except variants currently pinned by an in-flight batch
+//!   (their `Arc` strong count is > 1), which are never evicted;
+//! * **generation-tagged hot swap** ([`WeightStore::swap`], the `reload`
+//!   admin verb): a new artifacts directory replaces the manifest and
+//!   empties the cache atomically under one lock, bumping the generation
+//!   counter.  In-flight batches keep serving on the old generation's
+//!   `Arc`s (dropped when the last batch finishes); the next fetch per
+//!   variant lazily loads from the new directory.
+//!
+//! Concurrent loads are single-flighted: the first fetcher of a missing
+//! variant inserts a `Loading` marker and reads the disk *outside* the
+//! lock; siblings wait on the condvar instead of re-reading the same
+//! weights file N times.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::backend::{InferenceBackend, SharedVariant};
+use super::manifest::Manifest;
+
+/// Point-in-time store telemetry, embedded in the Prometheus exposition
+/// (`ssa_weight_*` families) and `BENCH_serving.json`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WeightStoreSnapshot {
+    /// Current manifest generation (starts at 1, +1 per `reload`).
+    pub generation: u64,
+    /// Bytes of weight tensors resident in the store — one copy per
+    /// variant regardless of worker count.
+    pub resident_bytes: u64,
+    /// Variants currently resident.
+    pub resident_variants: u64,
+    /// Cumulative variants evicted by the byte budget.
+    pub evictions_total: u64,
+    /// Cumulative generation swaps (`reload` verbs served).
+    pub swaps_total: u64,
+}
+
+enum Entry {
+    /// Some fetcher is reading this variant from disk (outside the lock);
+    /// siblings wait on the condvar.
+    Loading,
+    Ready(Resident),
+}
+
+struct Resident {
+    variant: SharedVariant,
+    bytes: u64,
+    /// Logical LRU clock value of the last fetch (monotonic per store).
+    last_used: u64,
+}
+
+struct StoreState {
+    generation: u64,
+    manifest: Arc<Manifest>,
+    entries: HashMap<String, Entry>,
+    /// Logical LRU clock, bumped per fetch — no wall clock needed.
+    tick: u64,
+}
+
+/// One `Arc`-shared immutable copy of every loaded variant.
+pub struct WeightStore {
+    state: Mutex<StoreState>,
+    cv: Condvar,
+    /// Byte budget for resident weights (`None` = unbounded).
+    budget_bytes: Option<u64>,
+    evictions: AtomicU64,
+    swaps: AtomicU64,
+}
+
+impl WeightStore {
+    pub fn new(manifest: Manifest, budget_mb: Option<usize>) -> Self {
+        Self {
+            state: Mutex::new(StoreState {
+                generation: 1,
+                manifest: Arc::new(manifest),
+                entries: HashMap::new(),
+                tick: 0,
+            }),
+            cv: Condvar::new(),
+            budget_bytes: budget_mb.map(|mb| mb as u64 * 1024 * 1024),
+            evictions: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+        }
+    }
+
+    /// The current manifest and its generation, as one consistent pair.
+    pub fn current(&self) -> (Arc<Manifest>, u64) {
+        let s = self.state.lock().unwrap();
+        (Arc::clone(&s.manifest), s.generation)
+    }
+
+    pub fn manifest(&self) -> Arc<Manifest> {
+        self.current().0
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.state.lock().unwrap().generation
+    }
+
+    /// Fetch `key`, loading it through `backend.load_shared` on a miss.
+    /// Returns the variant plus the generation it belongs to — the caller
+    /// holds the `Arc` for the duration of the batch, which is exactly
+    /// what pins the variant against eviction and keeps an old generation
+    /// alive across a concurrent [`Self::swap`].
+    ///
+    /// Disk IO happens outside the store lock; concurrent fetchers of the
+    /// same key wait instead of loading twice.  If a swap lands while a
+    /// load is in flight, the stale result is discarded and the fetch
+    /// retries against the new manifest.
+    pub fn get_or_load(
+        &self,
+        backend: &dyn InferenceBackend,
+        key: &str,
+    ) -> Result<(SharedVariant, u64)> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            match s.entries.get(key) {
+                Some(Entry::Ready(_)) => {
+                    s.tick += 1;
+                    let tick = s.tick;
+                    let generation = s.generation;
+                    let Some(Entry::Ready(r)) = s.entries.get_mut(key) else { unreachable!() };
+                    r.last_used = tick;
+                    return Ok((Arc::clone(&r.variant), generation));
+                }
+                Some(Entry::Loading) => {
+                    // another fetcher owns the disk read; wait for it to
+                    // publish (or fail, or a swap to clear the marker)
+                    s = self.cv.wait(s).unwrap();
+                    continue;
+                }
+                None => {}
+            }
+
+            // miss: become the loader for this key under this generation
+            let generation = s.generation;
+            let manifest = Arc::clone(&s.manifest);
+            s.entries.insert(key.to_string(), Entry::Loading);
+            drop(s);
+
+            let loaded = manifest
+                .variant(key)
+                .and_then(|v| backend.load_shared(&manifest, v))
+                .with_context(|| format!("loading variant {key:?} into the weight store"));
+
+            s = self.state.lock().unwrap();
+            if s.generation != generation {
+                // a swap cleared our marker while we read the old
+                // directory; drop the stale weights and retry fresh
+                self.cv.notify_all();
+                continue;
+            }
+            match loaded {
+                Err(e) => {
+                    s.entries.remove(key);
+                    self.cv.notify_all();
+                    return Err(e);
+                }
+                Ok(variant) => {
+                    s.tick += 1;
+                    let tick = s.tick;
+                    let bytes = variant.weight_bytes() as u64;
+                    let out = Arc::clone(&variant);
+                    s.entries
+                        .insert(key.to_string(), Entry::Ready(Resident {
+                            variant,
+                            bytes,
+                            last_used: tick,
+                        }));
+                    self.evict_over_budget(&mut s);
+                    self.cv.notify_all();
+                    return Ok((out, s.generation));
+                }
+            }
+        }
+    }
+
+    /// While over budget, drop the least-recently-used resident variant
+    /// whose `Arc` nobody else holds.  Pinned variants (in-flight batches
+    /// hold a clone, so `strong_count > 1`) are never evicted — the store
+    /// may transiently exceed its budget rather than yank weights out
+    /// from under a running batch.
+    fn evict_over_budget(&self, s: &mut StoreState) {
+        let Some(budget) = self.budget_bytes else { return };
+        loop {
+            let resident: u64 = s
+                .entries
+                .values()
+                .map(|e| match e {
+                    Entry::Ready(r) => r.bytes,
+                    Entry::Loading => 0,
+                })
+                .sum();
+            if resident <= budget {
+                return;
+            }
+            let victim = s
+                .entries
+                .iter()
+                .filter_map(|(k, e)| match e {
+                    Entry::Ready(r) if Arc::strong_count(&r.variant) == 1 => {
+                        Some((r.last_used, k.clone()))
+                    }
+                    _ => None,
+                })
+                .min();
+            match victim {
+                Some((_, key)) => {
+                    s.entries.remove(&key);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => return, // everything resident is pinned
+            }
+        }
+    }
+
+    /// Atomically swap in a new manifest (the `reload` verb): bump the
+    /// generation, replace the manifest, empty the cache.  In-flight
+    /// batches hold `Arc` clones, so old weights stay alive exactly until
+    /// the last such batch drains; new fetches load lazily from the new
+    /// directory.  Returns the new generation.
+    pub fn swap(&self, manifest: Manifest) -> u64 {
+        let mut s = self.state.lock().unwrap();
+        s.generation += 1;
+        s.manifest = Arc::new(manifest);
+        s.entries.clear();
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        // wake Loading waiters: their marker is gone, they re-anchor on
+        // the new generation
+        self.cv.notify_all();
+        s.generation
+    }
+
+    pub fn snapshot(&self) -> WeightStoreSnapshot {
+        let s = self.state.lock().unwrap();
+        let (mut bytes, mut n) = (0u64, 0u64);
+        for e in s.entries.values() {
+            if let Entry::Ready(r) = e {
+                bytes += r.bytes;
+                n += 1;
+            }
+        }
+        WeightStoreSnapshot {
+            generation: s.generation,
+            resident_bytes: bytes,
+            resident_variants: n,
+            evictions_total: self.evictions.load(Ordering::Relaxed),
+            swaps_total: self.swaps.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::LoadedVariant;
+    use crate::runtime::manifest::Variant;
+    use crate::util::json::Json;
+    use anyhow::Result;
+    use std::path::Path;
+    use std::sync::atomic::AtomicUsize;
+
+    /// A manifest with three 1 KiB variants (`a`, `b`, `c`) — no files on
+    /// disk; the mock backend below never touches the filesystem.
+    fn manifest() -> Manifest {
+        let variant = |name: &str| {
+            format!(
+                r#"{{"name": "{name}", "arch": "ssa", "time_steps": 4, "batch": 8,
+                     "hlo": "x", "weights": "x", "param_names": [],
+                     "inputs": [], "output": {{"shape": [8, 10], "dtype": "f32"}}}}"#
+            )
+        };
+        let text = format!(
+            r#"{{"version": 1, "image_size": 16, "patch_size": 4, "n_classes": 10,
+                 "golden_seed": 42, "dataset": {{"test": "d.bin", "n": 4}},
+                 "variants": [{}, {}, {}]}}"#,
+            variant("a"),
+            variant("b"),
+            variant("c"),
+        );
+        Manifest::from_json(Path::new("/nonexistent"), &Json::parse(&text).unwrap()).unwrap()
+    }
+
+    const MOCK_BYTES: usize = 1024;
+
+    struct MockVariant {
+        variant: Variant,
+    }
+
+    impl LoadedVariant for MockVariant {
+        fn variant(&self) -> &Variant {
+            &self.variant
+        }
+
+        fn infer(&self, _images: &[f32], _seed: u32) -> Result<Vec<f32>> {
+            Ok(vec![0.0; 10])
+        }
+
+        fn weight_bytes(&self) -> usize {
+            MOCK_BYTES
+        }
+    }
+
+    /// Counts loads so tests can assert single-flight and re-admission.
+    struct MockBackend {
+        loads: AtomicUsize,
+    }
+
+    impl MockBackend {
+        fn new() -> Self {
+            Self { loads: AtomicUsize::new(0) }
+        }
+
+        fn loads(&self) -> usize {
+            self.loads.load(Ordering::SeqCst)
+        }
+    }
+
+    impl InferenceBackend for MockBackend {
+        fn name(&self) -> &'static str {
+            "mock"
+        }
+
+        fn load(&self, _m: &Manifest, variant: &Variant) -> Result<Box<dyn LoadedVariant>> {
+            self.loads.fetch_add(1, Ordering::SeqCst);
+            Ok(Box::new(MockVariant { variant: variant.clone() }))
+        }
+
+        fn supports_shared(&self) -> bool {
+            true
+        }
+
+        fn load_shared(&self, _m: &Manifest, variant: &Variant) -> Result<SharedVariant> {
+            self.loads.fetch_add(1, Ordering::SeqCst);
+            Ok(Arc::new(MockVariant { variant: variant.clone() }))
+        }
+    }
+
+    /// Budget of exactly two variants: no eviction at the boundary.
+    fn two_variant_budget_store() -> WeightStore {
+        // new() takes whole MiB, so build the budget directly in bytes
+        let mut store = WeightStore::new(manifest(), None);
+        store.budget_bytes = Some(2 * MOCK_BYTES as u64);
+        store
+    }
+
+    #[test]
+    fn hit_returns_same_arc_without_reloading() {
+        let store = WeightStore::new(manifest(), None);
+        let be = MockBackend::new();
+        let (v1, g1) = store.get_or_load(&be, "a").unwrap();
+        let (v2, g2) = store.get_or_load(&be, "a").unwrap();
+        assert_eq!(be.loads(), 1, "second fetch must hit the cache");
+        assert!(Arc::ptr_eq(&v1, &v2), "both fetchers share one copy");
+        assert_eq!((g1, g2), (1, 1));
+        assert_eq!(store.snapshot().resident_bytes, MOCK_BYTES as u64);
+        assert_eq!(store.snapshot().resident_variants, 1);
+    }
+
+    #[test]
+    fn unknown_variant_errors_and_leaves_no_marker() {
+        let store = WeightStore::new(manifest(), None);
+        let be = MockBackend::new();
+        assert!(store.get_or_load(&be, "nope").is_err());
+        // the failed load must not wedge later fetchers behind a stale
+        // Loading marker
+        assert!(store.get_or_load(&be, "a").is_ok());
+    }
+
+    #[test]
+    fn eviction_respects_budget_boundary() {
+        let store = two_variant_budget_store();
+        let be = MockBackend::new();
+        // exactly at budget: nothing evicts
+        drop(store.get_or_load(&be, "a").unwrap());
+        drop(store.get_or_load(&be, "b").unwrap());
+        let snap = store.snapshot();
+        assert_eq!(snap.resident_variants, 2);
+        assert_eq!(snap.evictions_total, 0, "at-budget must not evict");
+        // one byte over (a third variant): the LRU one goes
+        drop(store.get_or_load(&be, "c").unwrap());
+        let snap = store.snapshot();
+        assert_eq!(snap.resident_variants, 2);
+        assert_eq!(snap.evictions_total, 1);
+        assert!(snap.resident_bytes <= 2 * MOCK_BYTES as u64);
+    }
+
+    #[test]
+    fn lru_order_picks_least_recently_used_victim() {
+        let store = two_variant_budget_store();
+        let be = MockBackend::new();
+        drop(store.get_or_load(&be, "a").unwrap());
+        drop(store.get_or_load(&be, "b").unwrap());
+        // touch `a` so `b` is now least recently used
+        drop(store.get_or_load(&be, "a").unwrap());
+        drop(store.get_or_load(&be, "c").unwrap());
+        assert_eq!(be.loads(), 3);
+        // `a` must still be resident (no fourth load)...
+        drop(store.get_or_load(&be, "a").unwrap());
+        assert_eq!(be.loads(), 3, "recently-used variant must survive eviction");
+        // ...so it was `b` that got evicted: re-fetching reloads it
+        drop(store.get_or_load(&be, "b").unwrap());
+        assert_eq!(be.loads(), 4, "evicted variant must reload on re-admission");
+    }
+
+    #[test]
+    fn pinned_in_flight_variants_are_never_evicted() {
+        let store = two_variant_budget_store();
+        let be = MockBackend::new();
+        // hold both resident variants like in-flight batches would
+        let (pin_a, _) = store.get_or_load(&be, "a").unwrap();
+        let (pin_b, _) = store.get_or_load(&be, "b").unwrap();
+        drop(store.get_or_load(&be, "c").unwrap());
+        let snap = store.snapshot();
+        assert_eq!(
+            snap.evictions_total, 1,
+            "only the unpinned newcomer `c` is evictable"
+        );
+        // both pinned variants must still serve from cache
+        drop(store.get_or_load(&be, "a").unwrap());
+        drop(store.get_or_load(&be, "b").unwrap());
+        assert_eq!(be.loads(), 3, "pinned variants must never be reloaded");
+        drop((pin_a, pin_b));
+    }
+
+    #[test]
+    fn all_pinned_store_exceeds_budget_rather_than_evicting() {
+        let store = two_variant_budget_store();
+        let be = MockBackend::new();
+        let pins: Vec<_> = ["a", "b", "c"]
+            .iter()
+            .map(|k| store.get_or_load(&be, k).unwrap().0)
+            .collect();
+        let snap = store.snapshot();
+        assert_eq!(snap.resident_variants, 3);
+        assert_eq!(snap.evictions_total, 0, "pinned weights must not be yanked");
+        assert!(snap.resident_bytes > 2 * MOCK_BYTES as u64);
+        drop(pins);
+    }
+
+    #[test]
+    fn re_admission_after_eviction_reloads_cleanly() {
+        let store = two_variant_budget_store();
+        let be = MockBackend::new();
+        drop(store.get_or_load(&be, "a").unwrap());
+        drop(store.get_or_load(&be, "b").unwrap());
+        drop(store.get_or_load(&be, "c").unwrap()); // evicts `a` (LRU)
+        let (v, g) = store.get_or_load(&be, "a").unwrap();
+        assert_eq!(g, 1, "re-admission stays in the same generation");
+        assert_eq!(v.variant().name, "a");
+        assert_eq!(store.snapshot().resident_variants, 2);
+    }
+
+    #[test]
+    fn swap_bumps_generation_and_clears_cache() {
+        let store = WeightStore::new(manifest(), None);
+        let be = MockBackend::new();
+        let (old, g1) = store.get_or_load(&be, "a").unwrap();
+        assert_eq!(g1, 1);
+        let g2 = store.swap(manifest());
+        assert_eq!(g2, 2);
+        let snap = store.snapshot();
+        assert_eq!(snap.generation, 2);
+        assert_eq!(snap.swaps_total, 1);
+        assert_eq!(snap.resident_variants, 0, "swap empties the cache");
+        // the in-flight Arc keeps the old generation's weights alive
+        assert_eq!(old.variant().name, "a");
+        // the next fetch loads fresh under the new generation
+        let (fresh, g3) = store.get_or_load(&be, "a").unwrap();
+        assert_eq!(g3, 2);
+        assert!(!Arc::ptr_eq(&old, &fresh), "post-swap fetch must not reuse old weights");
+        assert_eq!(be.loads(), 2);
+    }
+
+    #[test]
+    fn concurrent_fetchers_single_flight_one_load() {
+        let store = Arc::new(WeightStore::new(manifest(), None));
+        let be = Arc::new(MockBackend::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let (store, be) = (Arc::clone(&store), Arc::clone(&be));
+            handles.push(std::thread::spawn(move || {
+                store.get_or_load(be.as_ref(), "a").unwrap().1
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 1);
+        }
+        assert_eq!(be.loads(), 1, "8 concurrent fetchers, one disk read");
+    }
+
+    #[test]
+    fn snapshot_default_is_zeroed() {
+        assert_eq!(WeightStoreSnapshot::default(), WeightStoreSnapshot {
+            generation: 0,
+            resident_bytes: 0,
+            resident_variants: 0,
+            evictions_total: 0,
+            swaps_total: 0,
+        });
+    }
+}

@@ -70,7 +70,9 @@ fn image(i: usize) -> Vec<f32> {
 #[test]
 fn fixed_seed_results_bit_identical_across_worker_counts() {
     let dir = artifacts("determinism");
-    let run = |workers: usize| -> Vec<Vec<f32>> {
+    // Returns (logits, resident weight bytes): the shared-store contract
+    // is that the first is identical and the second is flat across N.
+    let run = |workers: usize| -> (Vec<Vec<f32>>, u64) {
         let coord = start(dir.clone(), workers, 4, 5);
         assert_eq!(coord.workers(), workers);
         // submit everything up front so batch composition genuinely races
@@ -82,16 +84,34 @@ fn fixed_seed_results_bit_identical_across_worker_counts() {
                     .expect("submit")
             })
             .collect();
-        let out = rxs.into_iter().map(|rx| rx.recv().expect("reply").logits).collect();
+        let out = rxs
+            .into_iter()
+            .map(|rx| {
+                let r = rx.recv().expect("reply");
+                assert_eq!(r.generation, 1, "fresh store serves generation 1");
+                r.logits
+            })
+            .collect();
+        let resident = coord.weight_store_snapshot().resident_bytes;
         coord.shutdown();
-        out
+        (out, resident)
     };
-    let single = run(1);
-    let pooled = run(4);
+    let (single, bytes_1) = run(1);
+    let (dual, bytes_2) = run(2);
+    let (pooled, bytes_4) = run(4);
+    assert_eq!(
+        single, dual,
+        "Fixed(77) logits must be bit-identical for --workers 1 vs --workers 2"
+    );
     assert_eq!(
         single, pooled,
         "Fixed(77) logits must be bit-identical for --workers 1 vs --workers 4"
     );
+    // One shared copy per variant: growing the pool must not grow the
+    // resident weight footprint by a single byte.
+    assert!(bytes_1 > 0, "loaded variant must report nonzero weight bytes");
+    assert_eq!(bytes_1, bytes_2, "resident weight bytes independent of worker count");
+    assert_eq!(bytes_1, bytes_4, "resident weight bytes independent of worker count");
 }
 
 #[test]

@@ -1,0 +1,204 @@
+//! Hot-swap (`reload`) integration: generation-tagged artifact swaps on
+//! a live pool.  Pins the three load-bearing contracts:
+//!
+//! 1. a no-op reload (same artifacts dir) is bit-invisible — fixed-seed
+//!    logits are identical before and after, only the generation moves;
+//! 2. a real swap (different weights) changes the serving generation and
+//!    the results, while a broken reload leaves the old generation
+//!    serving untouched;
+//! 3. reload-under-load loses nothing: closed-loop traffic across
+//!    repeated swaps sees every request answered, every reply tagged
+//!    with a generation that existed, and post-swap traffic served from
+//!    the newest generation.
+//!
+//! Artifacts are synthesized by `loadgen::synthetic` — no Python, no XLA.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use ssa_repro::config::BackendKind;
+use ssa_repro::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, SeedPolicy, Target,
+};
+use ssa_repro::loadgen::{self, SyntheticSpec};
+
+const IMAGE: usize = 16;
+const PX: usize = IMAGE * IMAGE;
+
+/// Synthesize a small artifacts dir; `weight_seed` varies the weights so
+/// two dirs can hold genuinely different models of the same geometry.
+fn artifacts(tag: &str, weight_seed: u64) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("ssa-reload-it-{}-{tag}", std::process::id()));
+    let spec = SyntheticSpec {
+        d_model: 16,
+        n_heads: 2,
+        d_mlp: 32,
+        n_layers: 1,
+        dataset_n: 16,
+        seed: weight_seed,
+        ..SyntheticSpec::default()
+    };
+    loadgen::write_artifacts(&dir, &spec).expect("synthesize artifacts");
+    dir
+}
+
+fn start(dir: PathBuf, workers: usize) -> Coordinator {
+    let mut cfg = CoordinatorConfig::new(dir)
+        .with_backend(BackendKind::Native)
+        .with_workers(workers);
+    cfg.policy = BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(2) };
+    cfg.preload = vec!["ssa_t4".into()];
+    Coordinator::start(cfg).expect("coordinator must start")
+}
+
+fn image(i: usize) -> Vec<f32> {
+    (0..PX).map(|p| ((i * 31 + p * 7) % 97) as f32 / 96.0).collect()
+}
+
+// --- no-op reload is bit-invisible (satellite) -------------------------------
+
+#[test]
+fn noop_reload_of_same_artifacts_is_bit_identical() {
+    let dir = artifacts("noop", 0xBE4C_11AD);
+    let coord = start(dir.clone(), 2);
+    let classify_all = || -> Vec<(Vec<f32>, u64)> {
+        (0..8)
+            .map(|i| {
+                let r = coord
+                    .classify(Target::ssa(4), image(i), SeedPolicy::Fixed(77))
+                    .expect("classify");
+                (r.logits, r.generation)
+            })
+            .collect()
+    };
+    let before = classify_all();
+    assert!(before.iter().all(|(_, g)| *g == 1), "fresh store serves generation 1");
+    assert_eq!(coord.generation(), 1);
+
+    let generation = coord.reload(&dir).expect("no-op reload must succeed");
+    assert_eq!(generation, 2, "reload bumps the generation");
+    assert_eq!(coord.generation(), 2);
+    assert_eq!(coord.weight_store_snapshot().swaps_total, 1);
+
+    let after = classify_all();
+    assert!(after.iter().all(|(_, g)| *g == 2), "post-swap replies carry generation 2");
+    let logits = |v: &[(Vec<f32>, u64)]| -> Vec<Vec<f32>> {
+        v.iter().map(|(l, _)| l.clone()).collect()
+    };
+    assert_eq!(
+        logits(&before),
+        logits(&after),
+        "reloading the same artifacts dir must not move a single logit bit"
+    );
+    coord.shutdown();
+}
+
+// --- real swap changes the model; broken swap changes nothing ---------------
+
+#[test]
+fn swap_to_different_weights_serves_the_new_model() {
+    let v1 = artifacts("swap-v1", 0xBE4C_11AD);
+    let v2 = artifacts("swap-v2", 0x5EED_0002);
+    let coord = start(v1.clone(), 2);
+    let run = || coord.classify(Target::ssa(4), image(3), SeedPolicy::Fixed(7)).unwrap();
+
+    let old = run();
+    assert_eq!(old.generation, 1);
+
+    // a broken reload must be rejected and leave the old model serving
+    let missing = std::env::temp_dir().join("ssa-reload-it-definitely-missing");
+    assert!(coord.reload(&missing).is_err(), "reload of a missing dir must fail");
+    assert_eq!(coord.generation(), 1, "failed reload must not bump the generation");
+    let still_old = run();
+    assert_eq!(still_old.generation, 1);
+    assert_eq!(old.logits, still_old.logits, "failed reload must not perturb serving");
+
+    // a real swap: new weights, new generation, new results
+    assert_eq!(coord.reload(&v2).expect("swap to v2"), 2);
+    let new = run();
+    assert_eq!(new.generation, 2);
+    assert_ne!(
+        old.logits, new.logits,
+        "differently-seeded weights must produce different fixed-seed logits"
+    );
+
+    // swapping back restores the original model bit-for-bit
+    assert_eq!(coord.reload(&v1).expect("swap back to v1"), 3);
+    let back = run();
+    assert_eq!(back.generation, 3);
+    assert_eq!(old.logits, back.logits, "same artifacts => same bits, any generation");
+    coord.shutdown();
+}
+
+// --- reload under load: zero lost replies, valid generations (satellite) ----
+
+#[test]
+fn repeated_reloads_under_load_lose_no_replies() {
+    let dir = artifacts("under-load", 0xBE4C_11AD);
+    let coord = Arc::new(start(dir.clone(), 4));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // closed-loop clients hammering the pool while the swaps land
+    let mut clients = Vec::new();
+    for t in 0..4usize {
+        let c = Arc::clone(&coord);
+        let stop = Arc::clone(&stop);
+        clients.push(std::thread::spawn(move || {
+            let mut generations = Vec::new();
+            let mut i = 0usize;
+            while !stop.load(Ordering::Relaxed) || i < 8 {
+                let r = c
+                    .classify(Target::ssa(4), image(t * 64 + i), SeedPolicy::PerBatch)
+                    .expect("classify must keep succeeding across swaps");
+                assert_eq!(r.logits.len(), 10);
+                assert!(r.logits.iter().all(|v| v.is_finite()));
+                generations.push(r.generation);
+                i += 1;
+            }
+            generations
+        }));
+    }
+
+    // land several swaps while the traffic runs (same dir: the swap
+    // machinery is what's under test, not the weights)
+    let swaps = 5u64;
+    for _ in 0..swaps {
+        std::thread::sleep(Duration::from_millis(20));
+        coord.reload(&dir).expect("reload under load");
+    }
+    let final_generation = coord.generation();
+    assert_eq!(final_generation, 1 + swaps);
+    stop.store(true, Ordering::Relaxed);
+
+    let mut total = 0usize;
+    for h in clients {
+        let generations = h.join().expect("client thread must not panic");
+        total += generations.len();
+        for g in &generations {
+            assert!(
+                (1..=final_generation).contains(g),
+                "reply tagged with generation {g} which never existed (final {final_generation})"
+            );
+        }
+    }
+    assert!(total >= 32, "clients must have driven real traffic, got {total}");
+
+    // a request submitted strictly after the last swap must be served
+    // from the newest generation — the next batch re-fetches the store
+    let r = coord.classify(Target::ssa(4), image(0), SeedPolicy::PerBatch).unwrap();
+    assert_eq!(
+        r.generation, final_generation,
+        "post-swap traffic must be served from the newest generation"
+    );
+
+    let snap = coord.weight_store_snapshot();
+    assert_eq!(snap.swaps_total, swaps);
+    assert_eq!(snap.generation, final_generation);
+    assert!(snap.resident_bytes > 0, "the serving variant is resident post-swap");
+
+    let coord = Arc::try_unwrap(coord).unwrap_or_else(|_| panic!("coordinator still shared"));
+    coord.shutdown();
+}

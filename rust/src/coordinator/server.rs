@@ -218,14 +218,34 @@ impl Coordinator {
     }
 
     /// Atomically swap in a new artifacts directory.  The manifest is
-    /// loaded and validated *before* the swap: a broken directory leaves
-    /// the currently-served generation untouched.  In-flight batches
-    /// finish on the old generation's weights (their `Arc`s keep those
-    /// resident); every batch fetched after the swap serves the new one.
-    /// Returns the new generation number.
+    /// loaded and validated *before* the swap: a broken directory — or
+    /// one whose geometry (`image_size`/`n_classes`) differs from the
+    /// running generation — leaves the currently-served generation
+    /// untouched.  Geometry must match because requests are admitted and
+    /// length-validated against the manifest visible at submit time;
+    /// swapping in a different geometry would hand workers queued pixel
+    /// buffers of the wrong size.  In-flight batches finish on the old
+    /// generation's weights (their `Arc`s keep those resident); every
+    /// batch fetched after the swap serves the new one.  Returns the new
+    /// generation number.
     pub fn reload(&self, dir: &Path) -> Result<u64> {
         let manifest = Manifest::load(dir)
             .with_context(|| format!("reloading artifacts from {}", dir.display()))?;
+        let current = self.store.manifest();
+        if manifest.image_size != current.image_size || manifest.n_classes != current.n_classes {
+            anyhow::bail!(
+                "reload rejected: {} serves {}x{} images / {} classes but the running \
+                 generation serves {}x{} / {} — geometry must match so queued requests \
+                 admitted under the old manifest stay valid",
+                dir.display(),
+                manifest.image_size,
+                manifest.image_size,
+                manifest.n_classes,
+                current.image_size,
+                current.image_size,
+                current.n_classes,
+            );
+        }
         let generation = self.store.swap(manifest);
         crate::log_info!(
             "coordinator: reloaded artifacts from {} (generation {generation})",

@@ -7,10 +7,13 @@
 //! model, not `N` (per-worker state keeps only mutable scratch; see
 //! `crate::pool`).  On top of the cache sit two serving features:
 //!
-//! * **byte-budget LRU eviction** (`--weight-budget-mb`): when resident
-//!   weight bytes exceed the budget, least-recently-used variants are
-//!   dropped — except variants currently pinned by an in-flight batch
-//!   (their `Arc` strong count is > 1), which are never evicted;
+//! * **byte-budget LRU eviction** (`--weight-budget-mb`): every fetch
+//!   that finds resident weight bytes over the budget drops
+//!   least-recently-used variants — except variants currently pinned by
+//!   an in-flight batch (their `Arc` strong count is > 1), which are
+//!   never evicted; a store whose every resident variant is pinned
+//!   transiently exceeds its budget and sheds on the next fetch after a
+//!   pin drops;
 //! * **generation-tagged hot swap** ([`WeightStore::swap`], the `reload`
 //!   admin verb): a new artifacts directory replaces the manifest and
 //!   empties the cache atomically under one lock, bumping the generation
@@ -69,6 +72,9 @@ struct StoreState {
     entries: HashMap<String, Entry>,
     /// Logical LRU clock, bumped per fetch — no wall clock needed.
     tick: u64,
+    /// Running sum of `Resident::bytes` — adjusted on insert/evict/swap
+    /// so the budget check never rescans the map.
+    resident_bytes: u64,
 }
 
 /// One `Arc`-shared immutable copy of every loaded variant.
@@ -89,6 +95,7 @@ impl WeightStore {
                 manifest: Arc::new(manifest),
                 entries: HashMap::new(),
                 tick: 0,
+                resident_bytes: 0,
             }),
             cv: Condvar::new(),
             budget_bytes: budget_mb.map(|mb| mb as u64 * 1024 * 1024),
@@ -128,14 +135,17 @@ impl WeightStore {
     ) -> Result<(SharedVariant, u64)> {
         let mut s = self.state.lock().unwrap();
         loop {
-            match s.entries.get(key) {
-                Some(Entry::Ready(_)) => {
-                    s.tick += 1;
-                    let tick = s.tick;
-                    let generation = s.generation;
-                    let Some(Entry::Ready(r)) = s.entries.get_mut(key) else { unreachable!() };
-                    r.last_used = tick;
-                    return Ok((Arc::clone(&r.variant), generation));
+            let st = &mut *s;
+            match st.entries.get_mut(key) {
+                Some(Entry::Ready(r)) => {
+                    st.tick += 1;
+                    r.last_used = st.tick;
+                    let out = Arc::clone(&r.variant);
+                    let generation = st.generation;
+                    // enforce the budget on hits too: a variant unpinned
+                    // since the last fetch becomes evictable here
+                    self.evict_over_budget(st);
+                    return Ok((out, generation));
                 }
                 Some(Entry::Loading) => {
                     // another fetcher owns the disk read; wait for it to
@@ -175,6 +185,7 @@ impl WeightStore {
                     let tick = s.tick;
                     let bytes = variant.weight_bytes() as u64;
                     let out = Arc::clone(&variant);
+                    s.resident_bytes += bytes;
                     s.entries
                         .insert(key.to_string(), Entry::Ready(Resident {
                             variant,
@@ -191,23 +202,16 @@ impl WeightStore {
 
     /// While over budget, drop the least-recently-used resident variant
     /// whose `Arc` nobody else holds.  Pinned variants (in-flight batches
-    /// hold a clone, so `strong_count > 1`) are never evicted — the store
-    /// may transiently exceed its budget rather than yank weights out
-    /// from under a running batch.
+    /// hold a clone, so `strong_count > 1`) are never evicted — and the
+    /// variant being fetched right now is always pinned by the caller's
+    /// clone, so a fresh load never evicts itself.  When everything
+    /// resident is pinned the store transiently exceeds its budget rather
+    /// than yank weights out from under a running batch; the overshoot is
+    /// shed by the first fetch after a pin drops (this runs on hits as
+    /// well as loads).
     fn evict_over_budget(&self, s: &mut StoreState) {
         let Some(budget) = self.budget_bytes else { return };
-        loop {
-            let resident: u64 = s
-                .entries
-                .values()
-                .map(|e| match e {
-                    Entry::Ready(r) => r.bytes,
-                    Entry::Loading => 0,
-                })
-                .sum();
-            if resident <= budget {
-                return;
-            }
+        while s.resident_bytes > budget {
             let victim = s
                 .entries
                 .iter()
@@ -220,7 +224,9 @@ impl WeightStore {
                 .min();
             match victim {
                 Some((_, key)) => {
-                    s.entries.remove(&key);
+                    if let Some(Entry::Ready(r)) = s.entries.remove(&key) {
+                        s.resident_bytes -= r.bytes;
+                    }
                     self.evictions.fetch_add(1, Ordering::Relaxed);
                 }
                 None => return, // everything resident is pinned
@@ -238,6 +244,7 @@ impl WeightStore {
         s.generation += 1;
         s.manifest = Arc::new(manifest);
         s.entries.clear();
+        s.resident_bytes = 0;
         self.swaps.fetch_add(1, Ordering::Relaxed);
         // wake Loading waiters: their marker is gone, they re-anchor on
         // the new generation
@@ -247,16 +254,14 @@ impl WeightStore {
 
     pub fn snapshot(&self) -> WeightStoreSnapshot {
         let s = self.state.lock().unwrap();
-        let (mut bytes, mut n) = (0u64, 0u64);
-        for e in s.entries.values() {
-            if let Entry::Ready(r) = e {
-                bytes += r.bytes;
-                n += 1;
-            }
-        }
+        let n = s
+            .entries
+            .values()
+            .filter(|e| matches!(e, Entry::Ready(_)))
+            .count() as u64;
         WeightStoreSnapshot {
             generation: s.generation,
-            resident_bytes: bytes,
+            resident_bytes: s.resident_bytes,
             resident_variants: n,
             evictions_total: self.evictions.load(Ordering::Relaxed),
             swaps_total: self.swaps.load(Ordering::Relaxed),
@@ -424,16 +429,25 @@ mod tests {
         // hold both resident variants like in-flight batches would
         let (pin_a, _) = store.get_or_load(&be, "a").unwrap();
         let (pin_b, _) = store.get_or_load(&be, "b").unwrap();
+        // `c` pushes the store over budget, but `a`/`b` are pinned and
+        // `c` itself is pinned by the caller's clone for the duration of
+        // the fetch: nothing is evictable, the store transiently exceeds
+        // its budget
         drop(store.get_or_load(&be, "c").unwrap());
         let snap = store.snapshot();
-        assert_eq!(
-            snap.evictions_total, 1,
-            "only the unpinned newcomer `c` is evictable"
-        );
-        // both pinned variants must still serve from cache
+        assert_eq!(snap.evictions_total, 0, "pinned variants must not be evicted");
+        assert_eq!(snap.resident_variants, 3);
+        assert!(snap.resident_bytes > 2 * MOCK_BYTES as u64);
+        // the caller's clone of `c` is gone, so the next fetch sheds the
+        // overshoot by evicting `c` — the only unpinned variant — while
+        // both pinned variants keep serving from cache
         drop(store.get_or_load(&be, "a").unwrap());
         drop(store.get_or_load(&be, "b").unwrap());
         assert_eq!(be.loads(), 3, "pinned variants must never be reloaded");
+        let snap = store.snapshot();
+        assert_eq!(snap.evictions_total, 1, "only the unpinned `c` is evictable");
+        assert_eq!(snap.resident_variants, 2);
+        assert!(snap.resident_bytes <= 2 * MOCK_BYTES as u64);
         drop((pin_a, pin_b));
     }
 

@@ -133,6 +133,49 @@ fn swap_to_different_weights_serves_the_new_model() {
     coord.shutdown();
 }
 
+// --- geometry-incompatible swap is rejected ---------------------------------
+
+#[test]
+fn reload_with_mismatched_geometry_is_rejected() {
+    let v1 = artifacts("geom-v1", 0xBE4C_11AD);
+    let coord = start(v1, 2);
+    let run = || coord.classify(Target::ssa(4), image(3), SeedPolicy::Fixed(7)).unwrap();
+    let old = run();
+
+    // same pipeline, different image_size/n_classes: requests admitted
+    // and length-validated against the running manifest would reach the
+    // new model with wrong-sized pixel buffers, so the swap must refuse
+    let odd_dir = std::env::temp_dir()
+        .join(format!("ssa-reload-it-{}-geom-odd", std::process::id()));
+    let spec = SyntheticSpec {
+        image_size: 8,
+        patch_size: 4,
+        n_classes: 6,
+        d_model: 16,
+        n_heads: 2,
+        d_mlp: 32,
+        n_layers: 1,
+        dataset_n: 16,
+        seed: 0x0DD_5EED,
+        ..SyntheticSpec::default()
+    };
+    loadgen::write_artifacts(&odd_dir, &spec).expect("synthesize odd-geometry artifacts");
+
+    let err = coord
+        .reload(&odd_dir)
+        .expect_err("a geometry-incompatible reload must be rejected");
+    assert!(
+        err.to_string().contains("geometry"),
+        "rejection must name the geometry mismatch, got: {err:#}"
+    );
+    assert_eq!(coord.generation(), 1, "rejected reload must not bump the generation");
+    assert_eq!(coord.weight_store_snapshot().swaps_total, 0);
+    let still = run();
+    assert_eq!(still.generation, 1);
+    assert_eq!(old.logits, still.logits, "rejected reload must not perturb serving");
+    coord.shutdown();
+}
+
 // --- reload under load: zero lost replies, valid generations (satellite) ----
 
 #[test]
